@@ -1,0 +1,84 @@
+//! E1 + E2 — regenerate the paper's Figure 1a and Figure 1b
+//! (MNIST MLP, ternary alphabet, GPFQ vs MSQ across C_alpha ∈ {1..10},
+//! then accuracy as layers are quantized successively at the best C_alpha).
+//!
+//! Run with `cargo bench --bench bench_fig1_mnist`.  Emits
+//! `results/fig1a_mnist.csv` and `results/fig1b_mnist.csv`.
+//!
+//! Expected shape (paper): GPFQ stays near the analog accuracy over a wide
+//! band of C_alpha while MSQ swings wildly; in Fig 1b GPFQ recovers after
+//! intermediate-layer dips (error correction), MSQ does not.
+
+use gpfq::config::preset_mnist;
+use gpfq::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
+use gpfq::coordinator::sweep::{sweep, SweepConfig};
+use gpfq::data::synth::{generate, mnist_like_spec};
+use gpfq::eval::metrics::accuracy;
+use gpfq::eval::report::acc;
+use gpfq::train::train;
+use gpfq::util::bench::Table;
+use std::time::Instant;
+
+fn main() {
+    let spec = preset_mnist(0);
+    let sspec = mnist_like_spec(spec.seed);
+    let train_set = generate(&sspec, spec.dataset.n_train, 0, false);
+    let test_set = generate(&sspec, spec.dataset.n_test, 1, false);
+    let mut net = spec.build_network();
+    eprintln!("[fig1] training {} ...", net.summary());
+    train(&mut net, &train_set, &spec.train);
+    let x_quant = train_set.x.rows_slice(0, spec.dataset.n_quant.min(train_set.len()));
+
+    // Figure 1a
+    let t0 = Instant::now();
+    let cfg = SweepConfig {
+        levels: vec![3],
+        c_alphas: spec.quant.c_alphas.clone(),
+        methods: vec![Method::Gpfq, Method::Msq],
+        workers: spec.quant.workers,
+        ..Default::default()
+    };
+    let res = sweep(&net, &x_quant, &test_set, &cfg);
+    let mut fig1a = Table::new(
+        &format!(
+            "Figure 1a — MNIST-like MLP ternary accuracy vs C_alpha (analog {})",
+            acc(res.analog_top1)
+        ),
+        &["C_alpha", "GPFQ top-1", "MSQ top-1"],
+    );
+    for &c in &spec.quant.c_alphas {
+        let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha == c).unwrap();
+        let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha == c).unwrap();
+        fig1a.row(vec![format!("{c}"), acc(g.top1), acc(m.top1)]);
+    }
+    fig1a.emit("fig1a_mnist");
+    println!(
+        "stability: spread over C_alpha — GPFQ {:.4} vs MSQ {:.4} (paper: MSQ ≫ GPFQ)",
+        res.spread(Method::Gpfq, 3),
+        res.spread(Method::Msq, 3)
+    );
+
+    // Figure 1b at each method's best C_alpha
+    let mut fig1b = Table::new(
+        "Figure 1b — accuracy vs #layers quantized (best C_alpha per method)",
+        &["layers quantized", "GPFQ top-1", "MSQ top-1"],
+    );
+    let mut curves = Vec::new();
+    for method in [Method::Gpfq, Method::Msq] {
+        let best = res.best(method).unwrap();
+        let cfg = PipelineConfig {
+            method,
+            c_alpha: best.c_alpha as f32,
+            capture_checkpoints: true,
+            workers: spec.quant.workers,
+            ..Default::default()
+        };
+        let out = quantize_network(&net, &x_quant, &cfg);
+        curves.push(out.checkpoints.iter().map(|n| accuracy(n, &test_set)).collect::<Vec<_>>());
+    }
+    for i in 0..curves[0].len() {
+        fig1b.row(vec![(i + 1).to_string(), acc(curves[0][i]), acc(curves[1][i])]);
+    }
+    fig1b.emit("fig1b_mnist");
+    println!("[fig1] total {:.1}s", t0.elapsed().as_secs_f64());
+}

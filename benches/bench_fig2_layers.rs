@@ -1,0 +1,81 @@
+//! E4 + E5 — regenerate the paper's Figure 2a (CIFAR CNN accuracy as
+//! layers are quantized successively, best configs) and Figure 2b
+//! (histogram of GPFQ vs MSQ quantized weights at the second conv layer).
+//!
+//! Run with `cargo bench --bench bench_fig2_layers`.  Emits
+//! `results/fig2a_cifar.csv` and `results/fig2b_cifar.csv`.
+//!
+//! Expected shape (paper): both methods dip after early conv layers; GPFQ
+//! recovers in subsequent layers (error correction) while MSQ does not.
+//! The histograms show GPFQ using the outer characters more aggressively.
+
+use gpfq::config::preset_cifar;
+use gpfq::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
+use gpfq::data::synth::{cifar_like_spec, generate};
+use gpfq::eval::metrics::accuracy;
+use gpfq::eval::report::{acc, dual_histogram_table, weight_histogram};
+use gpfq::train::train;
+use gpfq::util::bench::Table;
+
+fn main() {
+    let mut spec = preset_cifar(0);
+    // Fig 2 uses the best (4-bit) configs from Table 1; fix them here so the
+    // bench runs standalone.
+    spec.quant.levels = vec![16];
+    let sspec = cifar_like_spec(spec.seed);
+    let train_set = generate(&sspec, spec.dataset.n_train, 0, spec.dataset.augment);
+    let test_set = generate(&sspec, spec.dataset.n_test, 1, false);
+    let mut net = spec.build_network();
+    eprintln!("[fig2] training {} ...", net.summary());
+    train(&mut net, &train_set, &spec.train);
+    let x_quant = train_set.x.rows_slice(0, spec.dataset.n_quant.min(train_set.len()));
+    let analog = accuracy(&net, &test_set);
+
+    let mut fig2a = Table::new(
+        &format!("Figure 2a — accuracy vs #layers quantized (4-bit, analog {})", acc(analog)),
+        &["layers quantized", "GPFQ top-1", "MSQ top-1"],
+    );
+    let mut curves = Vec::new();
+    let mut second_layer_weights = Vec::new();
+    for method in [Method::Gpfq, Method::Msq] {
+        let cfg = PipelineConfig {
+            method,
+            levels: 16,
+            c_alpha: 4.0,
+            capture_checkpoints: true,
+            workers: spec.quant.workers,
+            ..Default::default()
+        };
+        let out = quantize_network(&net, &x_quant, &cfg);
+        curves.push(out.checkpoints.iter().map(|n| accuracy(n, &test_set)).collect::<Vec<_>>());
+        let idx = out.layer_reports[1].layer_index; // 2nd quantized (conv) layer
+        second_layer_weights.push(out.network.layers[idx].weights().unwrap().data.clone());
+    }
+    for i in 0..curves[0].len() {
+        fig2a.row(vec![(i + 1).to_string(), acc(curves[0][i]), acc(curves[1][i])]);
+    }
+    fig2a.emit("fig2a_cifar");
+
+    // error-correction shape check: last >= min for GPFQ
+    let g = &curves[0];
+    let g_min = g.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "GPFQ: worst intermediate {} -> final {} (recovery {:+.4}); MSQ final {}",
+        acc(g_min),
+        acc(*g.last().unwrap()),
+        g.last().unwrap() - g_min,
+        acc(*curves[1].last().unwrap()),
+    );
+
+    println!("{}", weight_histogram("Figure 2b (GPFQ) — 2nd conv layer", &second_layer_weights[0], 17));
+    println!("{}", weight_histogram("Figure 2b (MSQ) — 2nd conv layer", &second_layer_weights[1], 17));
+    dual_histogram_table(
+        "Figure 2b — quantized weight histogram (2nd conv layer)",
+        "gpfq",
+        &second_layer_weights[0],
+        "msq",
+        &second_layer_weights[1],
+        17,
+    )
+    .emit("fig2b_cifar");
+}

@@ -1,0 +1,99 @@
+//! E3 — regenerate the paper's Table 1 (CIFAR10 CNN): top-1 test accuracy
+//! for Analog / GPFQ / MSQ over bit budgets {log2(3), 2, 3, 4} and
+//! C_alpha ∈ {2..6}.
+//!
+//! Run with `cargo bench --bench bench_table1_cifar`.  Emits
+//! `results/table1_cifar.csv`.
+//!
+//! Expected shape (paper): GPFQ degrades gracefully as bits shrink, MSQ
+//! collapses (ternary MSQ near chance); at 4 bits both approach the analog
+//! accuracy with GPFQ ≥ MSQ at every grid cell.
+
+use gpfq::config::preset_cifar;
+use gpfq::coordinator::pipeline::Method;
+use gpfq::coordinator::sweep::{sweep, SweepConfig};
+use gpfq::data::synth::{cifar_like_spec, generate};
+use gpfq::eval::report::acc;
+use gpfq::train::train;
+use gpfq::util::bench::Table;
+use std::time::Instant;
+
+fn main() {
+    let spec = preset_cifar(0);
+    let sspec = cifar_like_spec(spec.seed);
+    let train_set = generate(&sspec, spec.dataset.n_train, 0, spec.dataset.augment);
+    let test_set = generate(&sspec, spec.dataset.n_test, 1, false);
+    let mut net = spec.build_network();
+    eprintln!("[table1] training {} ...", net.summary());
+    train(&mut net, &train_set, &spec.train);
+    let x_quant = train_set.x.rows_slice(0, spec.dataset.n_quant.min(train_set.len()));
+
+    let t0 = Instant::now();
+    let cfg = SweepConfig {
+        levels: spec.quant.levels.clone(),
+        c_alphas: spec.quant.c_alphas.clone(),
+        methods: vec![Method::Gpfq, Method::Msq],
+        workers: spec.quant.workers,
+        ..Default::default()
+    };
+    eprintln!(
+        "[table1] sweeping {} levels x {} scalars x 2 methods ...",
+        cfg.levels.len(),
+        cfg.c_alphas.len()
+    );
+    let res = sweep(&net, &x_quant, &test_set, &cfg);
+
+    let mut t = Table::new(
+        "Table 1 — CIFAR-like CNN top-1 test accuracy",
+        &["bits", "C_alpha", "Analog", "GPFQ", "MSQ"],
+    );
+    for &m_levels in &spec.quant.levels {
+        let bits = if m_levels == 3 {
+            "log2(3)".to_string()
+        } else {
+            format!("{}", (m_levels as f64).log2())
+        };
+        for &c in &spec.quant.c_alphas {
+            let g = res
+                .points
+                .iter()
+                .find(|p| p.method == Method::Gpfq && p.levels == m_levels && p.c_alpha == c)
+                .unwrap();
+            let m = res
+                .points
+                .iter()
+                .find(|p| p.method == Method::Msq && p.levels == m_levels && p.c_alpha == c)
+                .unwrap();
+            t.row(vec![bits.clone(), format!("{c}"), acc(res.analog_top1), acc(g.top1), acc(m.top1)]);
+        }
+    }
+    t.emit("table1_cifar");
+
+    // shape checks the paper's prose makes about this table
+    let best = |mth: Method, lv: usize| {
+        res.points
+            .iter()
+            .filter(|p| p.method == mth && p.levels == lv)
+            .map(|p| p.top1)
+            .fold(f64::MIN, f64::max)
+    };
+    println!("ternary:  best GPFQ {} vs best MSQ {}", acc(best(Method::Gpfq, 3)), acc(best(Method::Msq, 3)));
+    if spec.quant.levels.contains(&16) {
+        println!("4-bit:    best GPFQ {} vs best MSQ {}", acc(best(Method::Gpfq, 16)), acc(best(Method::Msq, 16)));
+    }
+    let wins = res
+        .points
+        .iter()
+        .filter(|p| p.method == Method::Gpfq)
+        .filter(|g| {
+            res.points
+                .iter()
+                .find(|m| m.method == Method::Msq && m.levels == g.levels && m.c_alpha == g.c_alpha)
+                .map(|m| g.top1 >= m.top1)
+                .unwrap_or(false)
+        })
+        .count();
+    let total = res.points.len() / 2;
+    println!("GPFQ >= MSQ in {wins}/{total} grid cells (paper: uniformly better)");
+    println!("[table1] total {:.1}s", t0.elapsed().as_secs_f64());
+}

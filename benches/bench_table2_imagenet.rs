@@ -1,0 +1,94 @@
+//! E6 — regenerate the paper's Table 2 (VGG16 on ILSVRC2012): top-1/top-5
+//! accuracy of Analog / GPFQ / MSQ with the ternary alphabet over
+//! C_alpha ∈ {2..5}, quantizing only the FC layers of a VGG-style network
+//! whose FC head holds ≥90% of the weights (the property of VGG16 the
+//! paper's protocol relies on).
+//!
+//! Run with `cargo bench --bench bench_table2_imagenet`.  Emits
+//! `results/table2_imagenet.csv`.
+//!
+//! Expected shape (paper): best GPFQ within ~1% of analog top-1; GPFQ ≥
+//! MSQ at every C_alpha; MSQ deteriorates sharply at large C_alpha.
+
+use gpfq::config::preset_imagenet;
+use gpfq::coordinator::pipeline::Method;
+use gpfq::coordinator::sweep::{sweep, SweepConfig};
+use gpfq::data::synth::{generate, imagenet_like_spec};
+use gpfq::eval::report::acc;
+use gpfq::nn::Layer;
+use gpfq::train::train;
+use gpfq::util::bench::Table;
+
+fn main() {
+    let spec = preset_imagenet(0);
+    let sspec = imagenet_like_spec(spec.seed, spec.dataset.classes);
+    let train_set = generate(&sspec, spec.dataset.n_train, 0, false);
+    let test_set = generate(&sspec, spec.dataset.n_test, 1, false);
+    let mut net = spec.build_network();
+    let fc: usize = net
+        .layers
+        .iter()
+        .filter_map(|l| match l {
+            Layer::Dense { w, .. } => Some(w.data.len()),
+            _ => None,
+        })
+        .sum();
+    let fc_share = fc as f64 / net.weight_count() as f64;
+    assert!(fc_share > 0.9, "VGG-style net must be FC-dominated, got {fc_share:.2}");
+    eprintln!("[table2] training {} ({:.1}% weights in FC) ...", net.summary(), 100.0 * fc_share);
+    train(&mut net, &train_set, &spec.train);
+    let x_quant = train_set.x.rows_slice(0, spec.dataset.n_quant.min(train_set.len()));
+
+    let cfg = SweepConfig {
+        levels: vec![3],
+        c_alphas: spec.quant.c_alphas.clone(),
+        methods: vec![Method::Gpfq, Method::Msq],
+        fc_only: true,
+        workers: spec.quant.workers,
+        topk: true,
+    };
+    let res = sweep(&net, &x_quant, &test_set, &cfg);
+
+    let mut t = Table::new(
+        "Table 2 — ImageNet-like VGG accuracy (ternary, FC-only)",
+        &["C_alpha", "Analog top-1", "Analog top-5", "GPFQ top-1", "GPFQ top-5", "MSQ top-1", "MSQ top-5"],
+    );
+    for &c in &spec.quant.c_alphas {
+        let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha == c).unwrap();
+        let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha == c).unwrap();
+        t.row(vec![
+            format!("{c}"),
+            acc(res.analog_top1),
+            acc(res.analog_top5),
+            acc(g.top1),
+            acc(g.top5),
+            acc(m.top1),
+            acc(m.top5),
+        ]);
+    }
+    t.emit("table2_imagenet");
+
+    let bg = res.best(Method::Gpfq).unwrap();
+    let bm = res.best(Method::Msq).unwrap();
+    println!(
+        "gap to analog (top-1): GPFQ {:.2}% vs MSQ {:.2}%   (paper: 0.65% vs 1.24%)",
+        100.0 * (res.analog_top1 - bg.top1),
+        100.0 * (res.analog_top1 - bm.top1)
+    );
+    println!(
+        "C_alpha spread: GPFQ {:.4} vs MSQ {:.4}   (paper: MSQ unstable)",
+        res.spread(Method::Gpfq, 3),
+        res.spread(Method::Msq, 3)
+    );
+    let wins = spec
+        .quant
+        .c_alphas
+        .iter()
+        .filter(|&&c| {
+            let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha == c).unwrap();
+            let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha == c).unwrap();
+            g.top1 >= m.top1 && g.top5 >= m.top5
+        })
+        .count();
+    println!("GPFQ >= MSQ (both metrics) at {wins}/{} scalars (paper: uniform)", spec.quant.c_alphas.len());
+}

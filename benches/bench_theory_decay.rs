@@ -1,0 +1,101 @@
+//! E7/E8/E9 — theory benches: Theorem 2 error decay, Theorem 3
+//! generalization, Lemma 16 intrinsic-dimension dependence.  These
+//! quantify what the paper proves; the `theory_validation` example prints
+//! a shorter interactive version.
+//!
+//! Run with `cargo bench --bench bench_theory_decay`.  Emits
+//! `results/theory_*.csv`.
+//!
+//! Expected shape: log-log slope of error vs N0 near −0.5 (Thm 2);
+//! subspace error tracking d not m (Lemma 16); |z^T(w−q)| within a small
+//! factor of the in-sample error (Thm 3).
+
+use gpfq::data::rng::Pcg;
+use gpfq::theory::experiments::{measure_decay, measure_decay_subspace, measure_generalization};
+use gpfq::util::bench::Table;
+use gpfq::util::stats::ols_slope;
+
+fn main() {
+    let mut rng = Pcg::seed(77);
+
+    // E7: Theorem 2 decay in N0 at several m
+    let mut t = Table::new(
+        "E7 / Theorem 2 — median relative error (Gaussian data, ternary)",
+        &["m", "N0", "rel_err", "theory log(N0)sqrt(m/N0)", "ratio"],
+    );
+    let mut slopes = Vec::new();
+    for &m in &[16usize, 32, 64] {
+        let mut ln_n = Vec::new();
+        let mut ln_e = Vec::new();
+        for &n in &[128usize, 256, 512, 1024, 2048] {
+            if n <= 2 * m {
+                continue;
+            }
+            let p = measure_decay(&mut rng, m, n, 8);
+            t.row(vec![
+                m.to_string(),
+                n.to_string(),
+                format!("{:.4}", p.rel_err),
+                format!("{:.4}", p.predicted),
+                format!("{:.3}", p.rel_err / p.predicted),
+            ]);
+            ln_n.push((n as f64).ln());
+            ln_e.push(p.rel_err.ln());
+        }
+        let s = ols_slope(&ln_n, &ln_e);
+        slopes.push((m, s));
+    }
+    t.emit("theory_thm2_decay");
+    for (m, s) in &slopes {
+        println!("m={m}: log-log slope {s:.3} (theory -0.5 up to log factor)");
+    }
+
+    // E9: Lemma 16 — error vs intrinsic dimension at fixed ambient m
+    let mut t = Table::new(
+        "E9 / Lemma 16 — error vs intrinsic dimension d (m=48, N0=512)",
+        &["d", "rel_err", "theory log(N0)sqrt(d/N0)", "ratio"],
+    );
+    let mut ln_d = Vec::new();
+    let mut ln_e = Vec::new();
+    for &d in &[2usize, 4, 8, 16, 32, 48] {
+        let p = measure_decay_subspace(&mut rng, 48, d, 512, 8);
+        t.row(vec![
+            d.to_string(),
+            format!("{:.4}", p.rel_err),
+            format!("{:.4}", p.predicted),
+            format!("{:.3}", p.rel_err / p.predicted),
+        ]);
+        ln_d.push((d as f64).ln());
+        ln_e.push(p.rel_err.ln());
+    }
+    t.emit("theory_lemma16");
+    println!("Lemma 16: log-log slope of error vs d: {:.3} (theory +0.5)", ols_slope(&ln_d, &ln_e));
+
+    // Section 7 extension: clustered columns — error vs cluster count
+    let mut t = Table::new(
+        "E9+ / Section 7 — clustered feature data (m=48, N0=384, spread 0.05)",
+        &["clusters k", "rel_err", "conjectured shape log(N0)sqrt(k/N0)"],
+    );
+    for &k in &[1usize, 2, 4, 8, 16, 48] {
+        let p = gpfq::theory::experiments::measure_decay_clustered(&mut rng, 48, k, 384, 0.05, 6);
+        t.row(vec![k.to_string(), format!("{:.4}", p.rel_err), format!("{:.4}", p.predicted)]);
+    }
+    t.emit("theory_clustered");
+
+    // E8: Theorem 3 generalization
+    let mut t = Table::new(
+        "E8 / Theorem 3 — generalization error in the data span",
+        &["m", "N0", "gen err |z'(w-q)|", "in-sample", "theory m^1.5 log(N0)/sqrt(N0)"],
+    );
+    for &(m, n) in &[(8usize, 256usize), (8, 1024), (16, 512), (16, 2048), (32, 2048)] {
+        let p = measure_generalization(&mut rng, m, n, 4, 16);
+        t.row(vec![
+            m.to_string(),
+            n.to_string(),
+            format!("{:.5}", p.gen_err),
+            format!("{:.5}", p.train_err),
+            format!("{:.4}", p.predicted),
+        ]);
+    }
+    t.emit("theory_thm3_generalization");
+}

@@ -1,0 +1,98 @@
+//! E3/E4/E5 — the paper's Section 6.2 CIFAR10 experiment (Table 1,
+//! Figures 2a/2b), on the synthetic CIFAR stand-in, scaled to CPU.
+//!
+//!     cargo run --release --example cifar_cnn [-- --quick]
+//!
+//! Table 1: top-1 accuracy across bit budgets {log2(3), 2, 3, 4} ×
+//! C_alpha ∈ {2..6} for Analog/GPFQ/MSQ.  Figure 2a: accuracy vs layers
+//! quantized at each method's best config.  Figure 2b: histogram of the
+//! quantized weights at the second conv layer.
+
+use gpfq::config::preset_cifar;
+use gpfq::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
+use gpfq::coordinator::sweep::{sweep, SweepConfig};
+use gpfq::data::synth::{cifar_like_spec, generate};
+use gpfq::eval::metrics::accuracy;
+use gpfq::eval::report::{acc, dual_histogram_table, weight_histogram};
+use gpfq::train::train;
+use gpfq::util::bench::Table;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut spec = preset_cifar(0);
+    if quick {
+        spec.quant.levels = vec![3, 16];
+        spec.quant.c_alphas = vec![2.0, 4.0];
+        spec.dataset.n_train = 1000;
+        spec.train.epochs = 5;
+    }
+    let sspec = cifar_like_spec(spec.seed);
+    let train_set = generate(&sspec, spec.dataset.n_train, 0, spec.dataset.augment);
+    let test_set = generate(&sspec, spec.dataset.n_test, 1, false);
+    let mut net = spec.build_network();
+    println!("training {} on {} samples ...", net.summary(), train_set.len());
+    train(&mut net, &train_set, &spec.train);
+    let x_quant = train_set.x.rows_slice(0, spec.dataset.n_quant.min(train_set.len()));
+
+    // ---- Table 1 ----------------------------------------------------------
+    let cfg = SweepConfig {
+        levels: spec.quant.levels.clone(),
+        c_alphas: spec.quant.c_alphas.clone(),
+        methods: vec![Method::Gpfq, Method::Msq],
+        workers: spec.quant.workers,
+        ..Default::default()
+    };
+    println!("sweeping {}x{} grid x 2 methods ...", cfg.levels.len(), cfg.c_alphas.len());
+    let res = sweep(&net, &x_quant, &test_set, &cfg);
+    let mut table1 = Table::new(
+        "Table 1 — CIFAR-like CNN top-1 test accuracy",
+        &["bits", "C_alpha", "Analog", "GPFQ", "MSQ"],
+    );
+    for &m_levels in &spec.quant.levels {
+        let bits = if m_levels == 3 { "log2(3)".to_string() } else { format!("{}", (m_levels as f64).log2()) };
+        for &c in &spec.quant.c_alphas {
+            let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.levels == m_levels && p.c_alpha == c).unwrap();
+            let m = res.points.iter().find(|p| p.method == Method::Msq && p.levels == m_levels && p.c_alpha == c).unwrap();
+            table1.row(vec![bits.clone(), format!("{c}"), acc(res.analog_top1), acc(g.top1), acc(m.top1)]);
+        }
+    }
+    table1.emit("table1_cifar");
+
+    // paper's qualitative claims, checked programmatically:
+    let best3_g = res.points.iter().filter(|p| p.method == Method::Gpfq && p.levels == 3).map(|p| p.top1).fold(f64::MIN, f64::max);
+    let best3_m = res.points.iter().filter(|p| p.method == Method::Msq && p.levels == 3).map(|p| p.top1).fold(f64::MIN, f64::max);
+    println!("ternary best: GPFQ {} vs MSQ {} (paper: GPFQ degrades gracefully, MSQ collapses)", acc(best3_g), acc(best3_m));
+
+    // ---- Figure 2a: layer progression at best configs ---------------------
+    let mut fig2a = Table::new(
+        "Figure 2a — accuracy vs #layers quantized (best configs)",
+        &["layers quantized", "GPFQ top-1", "MSQ top-1"],
+    );
+    let mut curves = Vec::new();
+    let mut conv2_weights = Vec::new();
+    for method in [Method::Gpfq, Method::Msq] {
+        let best = res.best(method).unwrap();
+        let cfg = PipelineConfig {
+            method,
+            levels: best.levels,
+            c_alpha: best.c_alpha as f32,
+            capture_checkpoints: true,
+            ..Default::default()
+        };
+        let out = quantize_network(&net, &x_quant, &cfg);
+        curves.push(out.checkpoints.iter().map(|n| accuracy(n, &test_set)).collect::<Vec<_>>());
+        // Figure 2b data: quantized weights of the 2nd quantizable layer
+        let idx = out.layer_reports[1].layer_index;
+        conv2_weights.push(out.network.layers[idx].weights().unwrap().data.clone());
+    }
+    for i in 0..curves[0].len() {
+        fig2a.row(vec![(i + 1).to_string(), acc(curves[0][i]), acc(curves[1][i])]);
+    }
+    fig2a.emit("fig2a_cifar");
+
+    // ---- Figure 2b: weight histograms at the 2nd conv layer ---------------
+    println!("{}", weight_histogram("Figure 2b (GPFQ) — 2nd conv layer quantized weights", &conv2_weights[0], 17));
+    println!("{}", weight_histogram("Figure 2b (MSQ) — 2nd conv layer quantized weights", &conv2_weights[1], 17));
+    dual_histogram_table("Figure 2b — weight histogram", "gpfq", &conv2_weights[0], "msq", &conv2_weights[1], 17)
+        .emit("fig2b_cifar");
+}

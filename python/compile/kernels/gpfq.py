@@ -1,0 +1,131 @@
+"""L1: the GPFQ greedy path-following quantizer as a Pallas kernel.
+
+The compute hot-spot of the paper is the per-neuron dynamical system
+(eq. (2)/(3)):
+
+    u_0 = 0
+    q_t = argmin_{p in A} || u_{t-1} + w_t Y_t - p Y~_t ||_2^2
+    u_t = u_{t-1} + w_t Y_t - q_t Y~_t
+
+The kernel uses the concise form of Lemma 1 (generalized to layer >= 2 and
+to arbitrary equispaced alphabets):
+
+    q_t = Q_A( <Y~_t, u_{t-1} + w_t Y_t> / ||Y~_t||^2 )
+
+where Q_A is the memoryless nearest-character quantizer over
+A = alpha * {-1 + 2j/(M-1)}.  The purely-definitional argmin oracle lives in
+``ref.py``; their agreement is checked by pytest and *is* a numerical proof
+of Lemma 1.
+
+Parallelization layout (the paper's "parallelizable across neurons"):
+
+  * grid axis 0 = neuron blocks of width B -- each grid program owns an
+    independent state matrix U in registers/VMEM and is embarrassingly
+    parallel (TPU: B maps to lanes, multiples of 128 in production; we use
+    smaller B under interpret mode);
+  * the t axis is the sequential path-following order, consumed by a
+    ``lax.scan`` inside the kernel.  On a real TPU the Y/Y~ columns would be
+    streamed HBM->VMEM in double-buffered (m x T) tiles; see DESIGN.md
+    section "Hardware adaptation" for the VMEM budget.
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowering produces plain HLO that the Rust
+runtime executes unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DENOM_EPS
+
+
+def nearest_level(z, alpha, M: int):
+    """Memoryless quantizer Q_A(z): nearest character of the equispaced
+    alphabet A = alpha * {-1 + 2j/(M-1)}, computed in closed form.
+
+    Clamp to [-alpha, alpha], snap to the nearest of the M levels.  Matches
+    argmin_{p in A} |z - p| up to ties (measure-zero for float data; the
+    round-half-to-even convention of jnp.round decides ties).
+    """
+    half_step = alpha / (M - 1)  # half the spacing 2*alpha/(M-1)
+    # index of nearest level: j = round((z + alpha) / (2*alpha/(M-1)))
+    j = jnp.round((z + alpha) / jnp.maximum(2.0 * half_step, DENOM_EPS))
+    j = jnp.clip(j, 0.0, float(M - 1))
+    return -alpha + 2.0 * half_step * j
+
+
+def _gpfq_kernel(y_ref, yt_ref, w_ref, alpha_ref, q_ref, *, M: int):
+    """Pallas kernel body: quantize one B-wide neuron block.
+
+    y_ref     : (m, N)  analog activations        (VMEM tile)
+    yt_ref    : (m, N)  quantized-net activations (VMEM tile)
+    w_ref     : (N, B)  neuron block
+    alpha_ref : (1, 1)  alphabet radius (runtime input so one artifact
+                        serves the whole C_alpha cross-validation sweep)
+    q_ref     : (N, B)  output block
+    """
+    Y = y_ref[...]
+    Yt = yt_ref[...]
+    W = w_ref[...]
+    alpha = alpha_ref[0, 0]
+    m, _ = Y.shape
+    B = W.shape[1]
+
+    def step(u, inp):
+        y, yt, w = inp  # (m,), (m,), (B,)
+        denom = jnp.sum(yt * yt)
+        # Lemma 1 (general-layer form): projection of the walked state onto
+        # the quantized direction.
+        proj = (yt @ u + (yt @ y) * w) / jnp.maximum(denom, DENOM_EPS)
+        arg = jnp.where(denom > DENOM_EPS, proj, w)
+        q = nearest_level(arg, alpha, M)
+        u_next = u + y[:, None] * w[None, :] - yt[:, None] * q[None, :]
+        return u_next, q
+
+    u0 = jnp.zeros((m, B), jnp.float32)
+    _, Q = jax.lax.scan(step, u0, (Y.T, Yt.T, W))
+    q_ref[...] = Q
+
+
+def gpfq_quantize(Y, Yt, W, alpha, *, M: int, block_b: int | None = None):
+    """Quantize all neurons (columns of W) with GPFQ via the Pallas kernel.
+
+    Y, Yt : (m, N) float32;  W : (N, n) float32;  alpha : scalar.
+    Returns Q : (N, n) float32 with entries in alpha*{-1+2j/(M-1)}.
+
+    The neuron axis n must be divisible by ``block_b`` (the Rust coordinator
+    pads with zero neurons; quantizing a zero neuron yields the zero vector,
+    so padding is harmless and sliced off by the caller).
+    """
+    m, N = Y.shape
+    n = W.shape[1]
+    if block_b is None:
+        block_b = min(n, 64)
+    if n % block_b != 0:
+        raise ValueError(f"neuron count {n} not divisible by block {block_b}")
+    alpha_arr = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+
+    kernel = functools.partial(_gpfq_kernel, M=M)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_b,),
+        in_specs=[
+            pl.BlockSpec((m, N), lambda i: (0, 0)),
+            pl.BlockSpec((m, N), lambda i: (0, 0)),
+            pl.BlockSpec((N, block_b), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((N, block_b), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((N, n), jnp.float32),
+        interpret=True,
+    )(Y, Yt, W, alpha_arr)
+
+
+def gpfq_first_layer(X, W, alpha, *, M: int, block_b: int | None = None):
+    """Paper eq. (2): first-layer quantization, where Y~ = Y = X."""
+    return gpfq_quantize(X, X, W, alpha, M=M, block_b=block_b)

@@ -1,0 +1,45 @@
+"""L1: memoryless scalar quantization (MSQ) as a Pallas kernel.
+
+MSQ is the paper's baseline throughout Section 6 (Figure 1, Table 1,
+Table 2): each weight is independently snapped to the nearest character of
+the alphabet.  Trivially elementwise, so the kernel exists mainly (a) to
+give the MSQ baseline the same artifact treatment as GPFQ so that the Rust
+coordinator benchmarks apples-to-apples executables, and (b) as the simplest
+possible Pallas example in the repo.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gpfq import nearest_level
+
+
+def _msq_kernel(w_ref, alpha_ref, q_ref, *, M: int):
+    q_ref[...] = nearest_level(w_ref[...], alpha_ref[0, 0], M)
+
+
+def msq_quantize(W, alpha, *, M: int, block_b: int | None = None):
+    """Quantize a weight matrix elementwise: Q_ij = nearest level to W_ij."""
+    N, n = W.shape
+    if block_b is None:
+        block_b = min(n, 64)
+    if n % block_b != 0:
+        raise ValueError(f"neuron count {n} not divisible by block {block_b}")
+    alpha_arr = jnp.asarray(alpha, jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_msq_kernel, M=M)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_b,),
+        in_specs=[
+            pl.BlockSpec((N, block_b), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((N, block_b), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((N, n), jnp.float32),
+        interpret=True,
+    )(W, alpha_arr)

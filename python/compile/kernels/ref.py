@@ -1,0 +1,111 @@
+"""Pure-jnp correctness oracles for the GPFQ / MSQ quantizers.
+
+These references are deliberately written in the *definitional* form of the
+paper (Lybrand & Saab 2020): the per-step quantization decision is taken by
+brute-force ``argmin`` over every character of the alphabet (paper eq. (2) /
+(3)) rather than through the concise projection form of Lemma 1.  The Pallas
+kernel (``kernels/gpfq.py``) uses the Lemma 1 form, so agreement between the
+two is simultaneously a correctness check of the kernel *and* a numerical
+verification of Lemma 1.
+
+Everything here is build/test-time only; nothing in this module is ever on
+the Rust request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# A zero column carries no information: any alphabet choice leaves the state
+# u unchanged.  Both the reference and the kernel resolve the ambiguity the
+# same way (fall back to memoryless quantization of the weight itself), which
+# also makes zero-padding of the t axis a no-op -- the property the Rust
+# coordinator relies on to use bucketed artifact shapes.
+DENOM_EPS = 1e-12
+
+
+def alphabet(M: int, alpha) -> jnp.ndarray:
+    """The equispaced alphabet  A = alpha * {-1 + 2j/(M-1) : 0 <= j < M}.
+
+    ``M = 3`` recovers the ternary alphabet ``{-alpha, 0, alpha}`` used for
+    the paper's MNIST and ImageNet experiments.
+    """
+    if M < 2:
+        raise ValueError(f"alphabet needs M >= 2 characters, got {M}")
+    levels = -1.0 + 2.0 * jnp.arange(M, dtype=jnp.float32) / (M - 1)
+    return jnp.asarray(alpha, jnp.float32) * levels
+
+
+def msq_ref(W: jnp.ndarray, alpha, M: int) -> jnp.ndarray:
+    """Memoryless scalar quantization: nearest alphabet character per weight.
+
+    This is the paper's baseline (Rastegari et al.'s sign-quantizer
+    generalized to equispaced alphabets).  Brute-force nearest neighbour
+    over the alphabet -- shape (M,) broadcast against W.
+    """
+    A = alphabet(M, alpha)
+    dists = jnp.abs(W[..., None] - A)  # (..., M)
+    return A[jnp.argmin(dists, axis=-1)]
+
+
+def gpfq_step_ref(u, y, yt, w, A):
+    """One step of paper eq. (3), decided by explicit argmin over A.
+
+    u  : (m, B)  running state per neuron
+    y  : (m,)    analog activation column Y_t
+    yt : (m,)    quantized-network activation column Y~_t
+    w  : (B,)    row t of the weight block
+    A  : (M,)    alphabet
+    returns (u_next, q) with q : (B,)
+    """
+    # candidate residuals: u + w_t * Y_t - p * Y~_t for every p in A
+    base = u + y[:, None] * w[None, :]  # (m, B)
+    cand = base[:, :, None] - yt[:, None, None] * A[None, None, :]  # (m, B, M)
+    costs = jnp.sum(cand * cand, axis=0)  # (B, M)
+    idx = jnp.argmin(costs, axis=-1)  # (B,)
+    q = A[idx]
+    denom = jnp.sum(yt * yt)
+    # zero column: no information, fall back to MSQ of the weight itself.
+    msq = A[jnp.argmin(jnp.abs(w[:, None] - A[None, :]), axis=-1)]
+    q = jnp.where(denom > DENOM_EPS, q, msq)
+    u_next = base - yt[:, None] * q[None, :]
+    return u_next, q
+
+
+def gpfq_ref(Y: jnp.ndarray, Yt: jnp.ndarray, W: jnp.ndarray, alpha, M: int):
+    """Quantize a block of neurons with GPFQ (paper eq. (3)), returning (Q, U).
+
+    Y  : (m, N) analog activations of the previous layer
+    Yt : (m, N) activations of the quantized network so far
+    W  : (N, B) neuron block (columns are neurons)
+    Q  : (N, B) quantized block, U : (m, B) final state (Yw - Y~q per neuron)
+
+    First-layer quantization (paper eq. (2)) is the special case ``Yt = Y``.
+    """
+    m, N = Y.shape
+    assert Yt.shape == (m, N), (Yt.shape, (m, N))
+    assert W.shape[0] == N, (W.shape, N)
+    A = alphabet(M, alpha)
+
+    def body(u, inp):
+        y, yt, w = inp
+        u_next, q = gpfq_step_ref(u, y, yt, w, A)
+        return u_next, q
+
+    u0 = jnp.zeros((m, W.shape[1]), jnp.float32)
+    U, Q = jax.lax.scan(body, u0, (Y.T, Yt.T, W))
+    return Q, U
+
+
+def gpfq_error_ref(Y, Yt, W, alpha, M):
+    """Relative quantization error per neuron: ||Yw - Y~q|| / ||Yw||."""
+    Q, U = gpfq_ref(Y, Yt, W, alpha, M)
+    num = jnp.linalg.norm(U, axis=0)
+    den = jnp.linalg.norm(Y @ W, axis=0)
+    return num / jnp.maximum(den, DENOM_EPS)
+
+
+def median_alpha(W: jnp.ndarray, c_alpha: float) -> jnp.ndarray:
+    """Paper Section 6 alphabet radius: alpha = C_alpha * median(|W_ij|)."""
+    return jnp.asarray(c_alpha, jnp.float32) * jnp.median(jnp.abs(W))

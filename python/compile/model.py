@@ -1,0 +1,159 @@
+"""L2: JAX compute graphs lowered to AOT artifacts for the Rust runtime.
+
+Three families of graphs, all build-time only:
+
+  * quantization ops -- thin wrappers over the L1 Pallas kernels
+    (``gpfq_block`` / ``msq_block``) with the exact signatures the Rust
+    coordinator executes per neuron block;
+  * inference ops -- ``dense_fwd`` (one layer) and ``mlp_fwd`` (fused net),
+    used by the coordinator to stream the analog/quantized activation pairs
+    through the network during layer-sequential quantization, and by the
+    evaluation path;
+  * training op -- ``train_step`` (fwd + bwd via jax.grad + SGD update),
+    the substrate that produces the *pre-trained* float networks the paper
+    assumes as input.  The Rust e2e driver loops this executable.
+
+Biases are handled the way the paper prescribes (Section 4): at
+quantization time the Rust side augments activations with a constant-1
+column and folds b into W, so the graphs here carry explicit biases only in
+the training/inference paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gpfq import gpfq_quantize
+from .kernels.msq import msq_quantize
+
+ACTIVATIONS = ("relu", "none", "softmax")
+
+
+def activate(z: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "none":
+        return z
+    if act == "softmax":
+        return jax.nn.softmax(z, axis=-1)
+    raise ValueError(f"unknown activation {act!r} (expected one of {ACTIVATIONS})")
+
+
+# ---------------------------------------------------------------------------
+# quantization graphs (wrap the L1 kernels)
+# ---------------------------------------------------------------------------
+
+def gpfq_block(Y, Yt, W, alpha, *, M: int, block_b: int):
+    """Quantize one neuron block with GPFQ.  Returns a 1-tuple (Q,).
+
+    Lowered per shape as artifact ``gpfq_m{m}_n{N}_b{B}_M{M}``.
+    """
+    return (gpfq_quantize(Y, Yt, W, alpha, M=M, block_b=block_b),)
+
+
+def msq_block(W, alpha, *, M: int, block_b: int):
+    """Quantize one neuron block with MSQ.  Returns a 1-tuple (Q,)."""
+    return (msq_quantize(W, alpha, M=M, block_b=block_b),)
+
+
+# ---------------------------------------------------------------------------
+# inference graphs
+# ---------------------------------------------------------------------------
+
+def dense_fwd(Y, W, b, *, act: str):
+    """One affine layer + activation: act(Y @ W + b).  1-tuple output."""
+    return (activate(Y @ W + b[None, :], act),)
+
+
+def mlp_fwd(x, *params, dims, act="relu"):
+    """Fused forward pass of an MLP given interleaved (W, b) params.
+
+    ``dims`` = (d0, d1, ..., dL); hidden layers use ``act``, output layer is
+    linear (logits -- softmax/argmax happen on the Rust side).
+    """
+    n_layers = len(dims) - 1
+    assert len(params) == 2 * n_layers, (len(params), dims)
+    h = x
+    for i in range(n_layers):
+        W, b = params[2 * i], params[2 * i + 1]
+        h = h @ W + b[None, :]
+        if i + 1 < n_layers:
+            h = activate(h, act)
+    return (h,)
+
+
+# ---------------------------------------------------------------------------
+# training graph
+# ---------------------------------------------------------------------------
+
+def _ce_loss(params, x, y_onehot, *, dims):
+    (logits,) = mlp_fwd(x, *params, dims=dims)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def train_step(*args, dims):
+    """One SGD step on softmax cross-entropy.
+
+    args = (W1, b1, ..., WL, bL, x, y_onehot, lr); returns
+    (W1', b1', ..., WL', bL', loss) flattened as a tuple so the Rust driver
+    can round-trip parameters without pytree knowledge.
+    """
+    n_layers = len(dims) - 1
+    params = list(args[: 2 * n_layers])
+    x, y_onehot, lr = args[2 * n_layers], args[2 * n_layers + 1], args[2 * n_layers + 2]
+    loss, grads = jax.value_and_grad(_ce_loss)(params, x, y_onehot, dims=dims)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return new_params + (loss,)
+
+
+def init_mlp_params(key, dims):
+    """He-initialized MLP parameters, interleaved (W, b) like train_step."""
+    params = []
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / dims[i])
+        params.append(jax.random.normal(sub, (dims[i], dims[i + 1]), jnp.float32) * scale)
+        params.append(jnp.zeros((dims[i + 1],), jnp.float32))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# conv-as-im2col (paper Section 6.2): parity oracle for the Rust substrate
+# ---------------------------------------------------------------------------
+
+def im2col(X, kh: int, kw: int, stride: int = 1):
+    """Extract flattened conv patches: (B, H, W, C) -> (B*OH*OW, kh*kw*C).
+
+    Matches ``rust/src/nn/conv.rs``: patches are row-major over (b, oh, ow)
+    and each patch flattens (dy, dx, c) in that order.  The paper quantizes
+    conv kernels by treating these patch rows as the data matrix X.
+    """
+    Bn, H, W, C = X.shape
+    oh = (H - kh) // stride + 1
+    ow = (W - kw) // stride + 1
+    patches = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patches.append(
+                jax.lax.slice(
+                    X, (0, dy, dx, 0), (Bn, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1, C),
+                    (1, stride, stride, 1),
+                )
+            )
+    # each entry: (B, OH, OW, C); stack to (B, OH, OW, kh*kw, C)
+    stacked = jnp.stack(patches, axis=3)
+    return stacked.reshape(Bn * oh * ow, kh * kw * C)
+
+
+def conv2d_fwd(X, K, b, *, stride: int = 1, act: str = "relu"):
+    """Valid conv via im2col + matmul: K is (kh*kw*Cin, Cout) flattened."""
+    Bn, H, W, C = X.shape
+    kh = kw = int(round((K.shape[0] // C) ** 0.5))
+    assert kh * kw * C == K.shape[0], (K.shape, C)
+    oh = (H - kh) // stride + 1
+    ow = (W - kw) // stride + 1
+    cols = im2col(X, kh, kw, stride)
+    out = activate(cols @ K + b[None, :], act)
+    return (out.reshape(Bn, oh, ow, K.shape[1]),)

@@ -1,0 +1,133 @@
+"""L2 graph tests: shapes, numerics, training dynamics, conv-as-im2col."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+
+class TestDense:
+    def test_dense_fwd_relu(self):
+        Y = jnp.asarray([[1.0, -1.0]], jnp.float32)
+        W = jnp.eye(2, dtype=jnp.float32)
+        b = jnp.asarray([0.5, 0.5], jnp.float32)
+        (out,) = model.dense_fwd(Y, W, b, act="relu")
+        assert np.allclose(np.asarray(out), [[1.5, 0.0]])
+
+    def test_dense_fwd_none_keeps_negatives(self):
+        Y = jnp.asarray([[-2.0]], jnp.float32)
+        W = jnp.asarray([[1.0]], jnp.float32)
+        b = jnp.zeros((1,), jnp.float32)
+        (out,) = model.dense_fwd(Y, W, b, act="none")
+        assert float(out[0, 0]) == -2.0
+
+    def test_unknown_activation_raises(self):
+        with pytest.raises(ValueError):
+            model.activate(jnp.zeros((1,)), "gelu")
+
+
+class TestMlp:
+    DIMS = (12, 8, 5)
+
+    def params(self, seed=0):
+        return model.init_mlp_params(jax.random.PRNGKey(seed), self.DIMS)
+
+    def test_forward_shape(self):
+        p = self.params()
+        x = jnp.zeros((7, 12), jnp.float32)
+        (logits,) = model.mlp_fwd(x, *p, dims=self.DIMS)
+        assert logits.shape == (7, 5)
+
+    def test_forward_matches_manual(self):
+        p = self.params(1)
+        x = np.random.default_rng(0).normal(size=(3, 12)).astype(np.float32)
+        (logits,) = model.mlp_fwd(jnp.asarray(x), *p, dims=self.DIMS)
+        W1, b1, W2, b2 = (np.asarray(a) for a in p)
+        h = np.maximum(x @ W1 + b1, 0.0)
+        want = h @ W2 + b2
+        assert np.allclose(np.asarray(logits), want, atol=1e-5)
+
+    def test_param_count_interleaving(self):
+        p = self.params()
+        assert len(p) == 4
+        assert p[0].shape == (12, 8) and p[1].shape == (8,)
+        assert p[2].shape == (8, 5) and p[3].shape == (5,)
+
+
+class TestTrainStep:
+    DIMS = (10, 16, 4)
+
+    def test_one_step_shapes(self):
+        p = model.init_mlp_params(jax.random.PRNGKey(0), self.DIMS)
+        x = jnp.zeros((6, 10), jnp.float32)
+        y = jax.nn.one_hot(jnp.asarray([0, 1, 2, 3, 0, 1]), 4)
+        out = model.train_step(*p, x, y, jnp.float32(0.1), dims=self.DIMS)
+        assert len(out) == len(p) + 1
+        for a, b in zip(out[:-1], p):
+            assert a.shape == b.shape
+        assert out[-1].shape == ()
+
+    def test_loss_decreases(self):
+        rng = np.random.default_rng(0)
+        # a linearly separable toy problem
+        x = rng.normal(size=(64, 10)).astype(np.float32)
+        labels = (x[:, 0] > 0).astype(np.int32) + 2 * (x[:, 1] > 0).astype(np.int32)
+        y = np.asarray(jax.nn.one_hot(labels, 4))
+        params = model.init_mlp_params(jax.random.PRNGKey(1), self.DIMS)
+        losses = []
+        for _ in range(60):
+            out = model.train_step(*params, x, y, jnp.float32(0.5), dims=self.DIMS)
+            params = list(out[:-1])
+            losses.append(float(out[-1]))
+        assert losses[-1] < 0.5 * losses[0], (losses[0], losses[-1])
+
+    def test_zero_lr_is_identity(self):
+        p = model.init_mlp_params(jax.random.PRNGKey(2), self.DIMS)
+        x = jnp.ones((4, 10), jnp.float32)
+        y = jax.nn.one_hot(jnp.asarray([0, 1, 2, 3]), 4)
+        out = model.train_step(*p, x, y, jnp.float32(0.0), dims=self.DIMS)
+        for a, b in zip(out[:-1], p):
+            assert np.allclose(np.asarray(a), np.asarray(b))
+
+
+class TestConvIm2col:
+    def test_im2col_shape(self):
+        X = jnp.zeros((2, 8, 8, 3), jnp.float32)
+        cols = model.im2col(X, 3, 3, stride=1)
+        assert cols.shape == (2 * 6 * 6, 27)
+
+    def test_conv_matches_lax_conv(self):
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(2, 9, 9, 3)).astype(np.float32)
+        K4 = rng.normal(size=(3, 3, 3, 5)).astype(np.float32)  # (kh,kw,cin,cout)
+        b = rng.normal(size=(5,)).astype(np.float32)
+        Kflat = K4.reshape(27, 5)
+        (got,) = model.conv2d_fwd(jnp.asarray(X), jnp.asarray(Kflat), jnp.asarray(b), stride=1, act="none")
+        want = jax.lax.conv_general_dilated(
+            jnp.asarray(X), jnp.asarray(K4), (1, 1), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + b[None, None, None, :]
+        assert np.allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_conv_stride2(self):
+        rng = np.random.default_rng(1)
+        X = rng.normal(size=(1, 8, 8, 2)).astype(np.float32)
+        K4 = rng.normal(size=(2, 2, 2, 3)).astype(np.float32)
+        b = np.zeros((3,), np.float32)
+        (got,) = model.conv2d_fwd(jnp.asarray(X), jnp.asarray(K4.reshape(8, 3)), jnp.asarray(b), stride=2, act="none")
+        want = jax.lax.conv_general_dilated(
+            jnp.asarray(X), jnp.asarray(K4), (2, 2), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        assert got.shape == want.shape == (1, 4, 4, 3)
+        assert np.allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+    def test_relu_applied(self):
+        X = -jnp.ones((1, 3, 3, 1), jnp.float32)
+        K = jnp.ones((9, 1), jnp.float32)
+        b = jnp.zeros((1,), jnp.float32)
+        (out,) = model.conv2d_fwd(X, K, b, act="relu")
+        assert float(out.min()) == 0.0

@@ -1,0 +1,114 @@
+"""Hypothesis property tests over the L1 kernels: algorithmic invariants
+beyond the pointwise kernel-vs-oracle checks in test_kernel.py."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.gpfq import gpfq_quantize, nearest_level
+from compile.kernels.msq import msq_quantize
+from compile.kernels.ref import alphabet, gpfq_ref, msq_ref
+
+
+def rand(seed, *shape, lo=None, hi=None):
+    rng = np.random.default_rng(seed)
+    if lo is None:
+        return rng.normal(size=shape).astype(np.float32)
+    return rng.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+class TestGpfqInvariants:
+    @given(seed=st.integers(0, 2**31 - 1), m=st.sampled_from([4, 12]), n=st.sampled_from([8, 24]))
+    @settings(max_examples=20, deadline=None)
+    def test_state_identity(self, seed, m, n):
+        # ||u_N|| == ||Yw - Y~q|| recomputed from scratch
+        Y = rand(seed, m, n)
+        Yt = Y + 0.1 * rand(seed + 1, m, n)
+        W = rand(seed + 2, n, 4, lo=-1, hi=1)
+        Q, U = gpfq_ref(Y, Yt, W, 1.0, 3)
+        direct = np.linalg.norm(Y @ W - Yt @ np.asarray(Q), axis=0)
+        state = np.linalg.norm(np.asarray(U), axis=0)
+        assert np.allclose(direct, state, rtol=1e-3, atol=1e-4)
+
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        c=st.floats(0.25, 4.0),
+        M=st.sampled_from([3, 4, 8]),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_scale_equivariance(self, seed, c, M):
+        # quantize(c*W, alpha=c) == c * quantize(W, alpha=1)
+        Y = rand(seed, 8, 16)
+        W = rand(seed + 1, 16, 4, lo=-1, hi=1)
+        q1 = np.asarray(gpfq_quantize(Y, Y, W, np.float32(1.0), M=M, block_b=4))
+        q2 = np.asarray(
+            gpfq_quantize(Y, Y, (c * W).astype(np.float32), np.float32(c), M=M, block_b=4)
+        )
+        assert np.allclose(c * q1, q2, rtol=1e-4, atol=1e-5 * c)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_neuron_permutation_covariance(self, seed):
+        Y = rand(seed, 10, 20)
+        W = rand(seed + 1, 20, 6, lo=-1, hi=1)
+        Q = np.asarray(gpfq_quantize(Y, Y, W, 1.0, M=3, block_b=6))
+        perm = np.random.default_rng(seed).permutation(6)
+        Qp = np.asarray(gpfq_quantize(Y, Y, W[:, perm], 1.0, M=3, block_b=6))
+        assert np.allclose(Q[:, perm], Qp)
+
+    @given(seed=st.integers(0, 2**31 - 1), M=st.sampled_from([2, 3, 16]))
+    @settings(max_examples=15, deadline=None)
+    def test_row_scaling_invariance_of_decision(self, seed, M):
+        # scaling the whole data matrix by a positive constant leaves the
+        # argmin decisions unchanged (the projection is scale invariant)
+        Y = rand(seed, 8, 16)
+        W = rand(seed + 1, 16, 4, lo=-1, hi=1)
+        q1 = np.asarray(gpfq_quantize(Y, Y, W, 1.0, M=M, block_b=4))
+        q2 = np.asarray(gpfq_quantize(5.0 * Y, 5.0 * Y, W, 1.0, M=M, block_b=4))
+        assert np.allclose(q1, q2)
+
+
+class TestMsqInvariants:
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        alpha=st.floats(0.2, 3.0),
+        M=st.sampled_from([2, 3, 4, 16]),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_msq_minimizes_elementwise_distance(self, seed, alpha, M):
+        W = rand(seed, 12, 4, lo=-2, hi=2)
+        Q = np.asarray(msq_quantize(W, np.float32(alpha), M=M, block_b=4))
+        A = np.asarray(alphabet(M, alpha))
+        best = A[np.argmin(np.abs(W[..., None] - A), axis=-1)]
+        assert np.allclose(np.abs(Q - W), np.abs(best - W), atol=1e-5)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_msq_is_odd_function(self, seed):
+        W = rand(seed, 10, 4, lo=-1.5, hi=1.5)
+        a = np.float32(0.9)
+        q_pos = np.asarray(msq_ref(W, a, 4))
+        q_neg = np.asarray(msq_ref(-W, a, 4))
+        assert np.allclose(q_pos, -q_neg, atol=1e-6)
+
+
+class TestNearestLevel:
+    @given(
+        z=st.floats(-5, 5),
+        alpha=st.floats(0.1, 3.0),
+        M=st.sampled_from([2, 3, 4, 8, 16]),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_error_at_most_half_step(self, z, alpha, M):
+        q = float(nearest_level(jnp.float32(z), jnp.float32(alpha), M))
+        step = 2 * alpha / (M - 1)
+        zc = np.clip(np.float32(z), -alpha, alpha)
+        assert abs(q - zc) <= step / 2 + 1e-5
+
+    @given(alpha=st.floats(0.1, 3.0), M=st.sampled_from([3, 4, 16]))
+    @settings(max_examples=30, deadline=None)
+    def test_monotone(self, alpha, M):
+        zs = np.linspace(-2 * alpha, 2 * alpha, 41, dtype=np.float32)
+        qs = np.asarray(nearest_level(jnp.asarray(zs), jnp.float32(alpha), M))
+        assert np.all(np.diff(qs) >= -1e-6)

@@ -1,0 +1,126 @@
+//! Flag parsing: `--key value` / `--flag` pairs after a subcommand.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+pub const USAGE: &str = "\
+usage: gpfq <command> [flags]
+
+commands:
+  info                       show runtime/artifact status
+  train                      train a float network on a synthetic dataset
+  quantize                   quantize a trained network once
+  sweep                      cross-validate (M, C_alpha) grids (paper Sec. 6)
+  eval                       evaluate a saved .gpfq model (--model path)
+  help                       print this message
+
+common flags:
+  --preset mnist|cifar|imagenet|mnist-paper   experiment preset
+  --config <path.toml>       load an ExperimentSpec from a config file
+  --seed <u64>               override the preset seed
+  --epochs <n>               override training epochs
+  --method gpfq|msq          quantization method (quantize)
+  --c-alpha <f>              alphabet scalar (quantize)
+  --levels <M>               alphabet size (quantize)
+  --workers <n>              worker threads
+  --quant-samples <n>        samples used to learn the quantization
+  --save <path.gpfq>         write the quantized model (bit-packed weights)
+  --model <path.gpfq>        model file for eval
+  --verbose                  chatty output";
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: Vec<String>) -> Result<Args> {
+        let mut it = argv.into_iter();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let tok = &rest[i];
+            let Some(name) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument {tok:?}");
+            };
+            if name.is_empty() {
+                bail!("empty flag name");
+            }
+            // value-flag if a non-flag token follows
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                switches.push(name.to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { command, flags, switches })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}"))?)),
+        }
+    }
+
+    pub fn f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}"))?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()).collect()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse(&["sweep", "--preset", "cifar", "--workers", "4", "--verbose"]);
+        assert_eq!(a.command, "sweep");
+        assert_eq!(a.get("preset"), Some("cifar"));
+        assert_eq!(a.usize("workers").unwrap(), Some(4));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_to_help() {
+        let a = Args::parse(vec![]).unwrap();
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn numeric_validation() {
+        let a = parse(&["quantize", "--c-alpha", "2.5", "--levels", "x"]);
+        assert_eq!(a.f64("c-alpha").unwrap(), Some(2.5));
+        assert!(a.usize("levels").is_err());
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(vec!["train".into(), "oops".into()]).is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! CLI subcommand implementations.
+
+use anyhow::{bail, Result};
+
+use crate::cli::args::{Args, USAGE};
+use crate::config::{preset_cifar, preset_imagenet, preset_mnist, preset_mnist_paper, ExperimentSpec};
+use crate::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
+use crate::coordinator::sweep::{sweep, SweepConfig};
+use crate::data::synth;
+use crate::eval::metrics::accuracy;
+use crate::eval::report::acc;
+use crate::runtime::{Manifest, Runtime};
+use crate::train::train;
+use crate::util::bench::Table;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "info" => cmd_info(),
+        "train" => cmd_train(args),
+        "quantize" => cmd_quantize(args),
+        "sweep" => cmd_sweep(args),
+        "eval" => cmd_eval(args),
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+/// Resolve the experiment spec from --config / --preset plus overrides.
+pub fn resolve_spec(args: &Args) -> Result<ExperimentSpec> {
+    let mut spec = if let Some(path) = args.get("config") {
+        let doc = crate::config::toml::parse_file(std::path::Path::new(path))?;
+        ExperimentSpec::from_doc(&doc)?
+    } else {
+        match args.get("preset").unwrap_or("mnist") {
+            "mnist" => preset_mnist(0),
+            "mnist-paper" => preset_mnist_paper(0),
+            "cifar" => preset_cifar(0),
+            "imagenet" => preset_imagenet(0),
+            other => bail!("unknown preset {other:?}"),
+        }
+    };
+    if let Some(seed) = args.usize("seed")? {
+        spec.seed = seed as u64;
+        spec.train.seed = seed as u64;
+    }
+    if let Some(epochs) = args.usize("epochs")? {
+        spec.train.epochs = epochs;
+    }
+    if let Some(w) = args.usize("workers")? {
+        spec.quant.workers = w;
+    }
+    if let Some(q) = args.usize("quant-samples")? {
+        spec.dataset.n_quant = q;
+    }
+    spec.train.verbose = args.has("verbose");
+    Ok(spec)
+}
+
+/// Generate the spec's datasets (train, test).
+pub fn make_datasets(spec: &ExperimentSpec) -> (crate::data::Dataset, crate::data::Dataset) {
+    let sspec = match spec.dataset.kind {
+        crate::config::DatasetKind::MnistLike => synth::mnist_like_spec(spec.seed),
+        crate::config::DatasetKind::CifarLike => synth::cifar_like_spec(spec.seed),
+        crate::config::DatasetKind::ImagenetLike => {
+            synth::imagenet_like_spec(spec.seed, spec.dataset.classes)
+        }
+    };
+    let tr = synth::generate(&sspec, spec.dataset.n_train, 0, spec.dataset.augment);
+    let te = synth::generate(&sspec, spec.dataset.n_test, 1, false);
+    (tr, te)
+}
+
+fn cmd_info() -> Result<()> {
+    println!("gpfq — greedy path-following quantization (Lybrand & Saab 2020)");
+    let dir = crate::runtime::default_artifacts_dir();
+    if Manifest::available(&dir) {
+        let man = Manifest::load(&dir)?;
+        println!("artifacts: {} modules in {}", man.artifacts.len(), dir.display());
+        match Runtime::new(&dir) {
+            Ok(rt) => println!("pjrt: platform={} (ready)", rt.platform()),
+            Err(e) => println!("pjrt: unavailable ({e:#})"),
+        }
+        let mut t = Table::new("Artifacts", &["name", "kind", "params", "outputs"]);
+        for a in &man.artifacts {
+            t.row(vec![
+                a.name.clone(),
+                a.kind.clone(),
+                a.params.len().to_string(),
+                a.outputs.len().to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+    } else {
+        println!("artifacts: not built — run `make artifacts` (native path still works)");
+    }
+    println!("workers available: {}", crate::config::default_workers());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let spec = resolve_spec(args)?;
+    let (tr, te) = make_datasets(&spec);
+    let mut net = spec.build_network();
+    println!("training {} on {} samples: {}", spec.name, tr.len(), net.summary());
+    let hist = train(&mut net, &tr, &spec.train);
+    let last = hist.last().expect("no epochs ran");
+    println!(
+        "done: loss {:.4}, train-acc {}, test-acc {}",
+        last.loss,
+        acc(last.train_acc),
+        acc(accuracy(&net, &te))
+    );
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let spec = resolve_spec(args)?;
+    let (tr, te) = make_datasets(&spec);
+    let mut net = spec.build_network();
+    train(&mut net, &tr, &spec.train);
+    let base = accuracy(&net, &te);
+    let method = match args.get("method").unwrap_or("gpfq") {
+        "gpfq" => Method::Gpfq,
+        "msq" => Method::Msq,
+        other => bail!("unknown method {other:?}"),
+    };
+    let cfg = PipelineConfig {
+        method,
+        levels: args.usize("levels")?.unwrap_or(spec.quant.levels[0]),
+        c_alpha: args.f64("c-alpha")?.unwrap_or(spec.quant.c_alphas[0]) as f32,
+        fc_only: spec.quant.fc_only,
+        workers: spec.quant.workers,
+        // prefer the AOT Pallas artifacts when built (native fallback otherwise)
+        executor: Some(crate::coordinator::executor::Executor::auto(spec.quant.workers)),
+        ..Default::default()
+    };
+    let x_quant = tr.x.rows_slice(0, spec.dataset.n_quant.min(tr.len()));
+    let out = quantize_network(&net, &x_quant, &cfg);
+    let mut t = Table::new(
+        &format!("{} quantization ({method:?}, M={}, C_alpha={})", spec.name, cfg.levels, cfg.c_alpha),
+        &["layer", "alpha", "fro_err", "median_rel_err", "paths (native/pjrt)", "secs"],
+    );
+    for r in &out.layer_reports {
+        t.row(vec![
+            r.label.clone(),
+            format!("{:.4}", r.alpha),
+            format!("{:.4}", r.fro_err),
+            format!("{:.4}", r.median_rel_err),
+            format!("{}/{}", r.native_blocks, r.pjrt_blocks),
+            format!("{:.2}", r.seconds),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "analog test acc {}  ->  quantized {}   ({:.1}x compression)",
+        acc(base),
+        acc(accuracy(&out.network, &te)),
+        crate::quant::error::compression_ratio(cfg.levels)
+    );
+    if let Some(path) = args.get("save") {
+        let hints = crate::nn::serialize::hints_from_outcome(&out);
+        let packed = crate::nn::serialize::save_file(&out.network, &hints, std::path::Path::new(path))?;
+        // float reference size for the realized on-disk ratio
+        let mut float_buf = Vec::new();
+        crate::nn::serialize::save(&out.network, &Default::default(), &mut float_buf)?;
+        println!(
+            "saved {} ({} bytes packed vs {} float: {:.1}x on disk)",
+            path,
+            packed,
+            float_buf.len(),
+            float_buf.len() as f64 / packed as f64
+        );
+    }
+    Ok(())
+}
+
+/// Evaluate a saved `.gpfq` model on the preset's test stream.
+fn cmd_eval(args: &Args) -> Result<()> {
+    let Some(path) = args.get("model") else {
+        bail!("eval requires --model <path.gpfq>");
+    };
+    let net = crate::nn::serialize::load_file(std::path::Path::new(path))?;
+    let spec = resolve_spec(args)?;
+    let (_, te) = make_datasets(&spec);
+    if te.dim() != net.input.len() {
+        bail!(
+            "model expects input width {}, preset {} provides {}",
+            net.input.len(),
+            spec.name,
+            te.dim()
+        );
+    }
+    println!("{}", net.summary());
+    println!("test top-1 on {} ({} samples): {}", spec.name, te.len(), acc(accuracy(&net, &te)));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let spec = resolve_spec(args)?;
+    let (tr, te) = make_datasets(&spec);
+    let mut net = spec.build_network();
+    println!("training {} ...", spec.name);
+    train(&mut net, &tr, &spec.train);
+    let cfg = SweepConfig {
+        levels: spec.quant.levels.clone(),
+        c_alphas: spec.quant.c_alphas.clone(),
+        methods: vec![Method::Gpfq, Method::Msq],
+        fc_only: spec.quant.fc_only,
+        workers: spec.quant.workers,
+        topk: true,
+    };
+    let x_quant = tr.x.rows_slice(0, spec.dataset.n_quant.min(tr.len()));
+    println!("sweeping {} x {} grid ...", cfg.levels.len(), cfg.c_alphas.len());
+    let res = sweep(&net, &x_quant, &te, &cfg);
+    let mut t = Table::new(
+        &format!("{} sweep (analog top-1 {})", spec.name, acc(res.analog_top1)),
+        &["method", "M", "C_alpha", "top1", "top5", "secs"],
+    );
+    for p in &res.points {
+        t.row(vec![
+            format!("{:?}", p.method),
+            p.levels.to_string(),
+            format!("{}", p.c_alpha),
+            acc(p.top1),
+            acc(p.top5),
+            format!("{:.2}", p.seconds),
+        ]);
+    }
+    t.emit(&format!("sweep_{}", spec.name));
+    for m in [Method::Gpfq, Method::Msq] {
+        if let Some(best) = res.best(m) {
+            println!("best {:?}: top1 {} at (M={}, C_alpha={})", m, acc(best.top1), best.levels, best.c_alpha);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()).collect()).unwrap()
+    }
+
+    #[test]
+    fn resolve_spec_presets_and_overrides() {
+        let a = args(&["quantize", "--preset", "cifar", "--seed", "9", "--epochs", "2", "--workers", "3"]);
+        let spec = resolve_spec(&a).unwrap();
+        assert_eq!(spec.name, "cifar_cnn");
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.train.epochs, 2);
+        assert_eq!(spec.quant.workers, 3);
+    }
+
+    #[test]
+    fn resolve_spec_rejects_unknown_preset() {
+        let a = args(&["train", "--preset", "svhn"]);
+        assert!(resolve_spec(&a).is_err());
+    }
+
+    #[test]
+    fn dispatch_help_and_unknown() {
+        assert!(dispatch(&args(&["help"])).is_ok());
+        assert!(dispatch(&args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn make_datasets_sizes() {
+        let a = args(&["train", "--preset", "mnist"]);
+        let mut spec = resolve_spec(&a).unwrap();
+        spec.dataset.n_train = 30;
+        spec.dataset.n_test = 12;
+        let (tr, te) = make_datasets(&spec);
+        assert_eq!(tr.len(), 30);
+        assert_eq!(te.len(), 12);
+        assert_eq!(tr.dim(), 28 * 28);
+    }
+}

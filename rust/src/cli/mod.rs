@@ -1,0 +1,33 @@
+//! Command-line interface (hand-rolled: no `clap` in the offline vendor
+//! set).  Subcommands:
+//!
+//! ```text
+//! gpfq info                         # runtime + artifact inventory
+//! gpfq train   [--preset mnist] [--epochs N] [--out results/]
+//! gpfq quantize [--preset mnist] [--method gpfq|msq] [--c-alpha X] [--levels M]
+//! gpfq sweep   [--preset mnist|cifar|imagenet] [--config path.toml]
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point used by `main.rs`; returns a process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", args::USAGE);
+            return 2;
+        }
+    };
+    match commands::dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Config system: TOML-subset parser + typed experiment specs and presets.
+
+pub mod spec;
+pub mod toml;
+
+pub use spec::{
+    default_workers, preset_cifar, preset_imagenet, preset_mnist, preset_mnist_paper,
+    DatasetKind, DatasetSpec, ExperimentSpec, ModelSpec, QuantSpec,
+};

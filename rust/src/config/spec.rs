@@ -1,0 +1,327 @@
+//! Typed experiment specifications, loadable from `configs/*.toml` and
+//! constructible in code (the benches use the built-in presets so they run
+//! without any files).
+
+use anyhow::{bail, Result};
+
+use crate::config::toml::Doc;
+use crate::nn::conv::ImgShape;
+use crate::nn::network::{cifar_cnn, mnist_mlp, vgg_like, Network};
+use crate::train::TrainConfig;
+
+/// Which synthetic dataset family to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DatasetKind {
+    MnistLike,
+    CifarLike,
+    ImagenetLike,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "mnist_like" | "mnist" => DatasetKind::MnistLike,
+            "cifar_like" | "cifar" => DatasetKind::CifarLike,
+            "imagenet_like" | "imagenet" => DatasetKind::ImagenetLike,
+            _ => bail!("unknown dataset kind {s:?}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub kind: DatasetKind,
+    pub classes: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    /// samples used to learn the quantization (paper: 25k MNIST / 5k CIFAR
+    /// / 1.5k ImageNet — scaled down here)
+    pub n_quant: usize,
+    pub augment: bool,
+}
+
+#[derive(Debug, Clone)]
+pub enum ModelSpec {
+    Mlp { hidden: Vec<usize> },
+    Cnn { widths: Vec<usize>, fc: usize },
+    Vgg { conv_widths: Vec<usize>, fc_widths: Vec<usize> },
+}
+
+/// Quantization sweep parameters (paper Section 6 cross-validation).
+#[derive(Debug, Clone)]
+pub struct QuantSpec {
+    /// alphabet sizes M to sweep (bit budgets log2 M)
+    pub levels: Vec<usize>,
+    /// alphabet scalars C_alpha to sweep
+    pub c_alphas: Vec<f64>,
+    /// quantize only fully-connected layers (Table 2 / VGG16 protocol)
+    pub fc_only: bool,
+    /// worker threads for neuron-parallel quantization
+    pub workers: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub name: String,
+    pub seed: u64,
+    pub dataset: DatasetSpec,
+    pub model: ModelSpec,
+    pub train: TrainConfig,
+    pub quant: QuantSpec,
+}
+
+impl ExperimentSpec {
+    /// Image shape of the dataset family.
+    pub fn img_shape(&self) -> ImgShape {
+        match self.dataset.kind {
+            DatasetKind::MnistLike => ImgShape { h: 28, w: 28, c: 1 },
+            DatasetKind::CifarLike => ImgShape { h: 32, w: 32, c: 3 },
+            DatasetKind::ImagenetLike => ImgShape { h: 32, w: 32, c: 3 },
+        }
+    }
+
+    /// Build the (untrained) network for this spec.
+    pub fn build_network(&self) -> Network {
+        let img = self.img_shape();
+        match &self.model {
+            ModelSpec::Mlp { hidden } => mnist_mlp(self.seed, img.len(), hidden, self.dataset.classes),
+            ModelSpec::Cnn { widths, fc } => cifar_cnn(self.seed, img, widths, *fc, self.dataset.classes),
+            ModelSpec::Vgg { conv_widths, fc_widths } => {
+                vgg_like(self.seed, img, conv_widths, fc_widths, self.dataset.classes)
+            }
+        }
+    }
+
+    /// Parse from a TOML document.
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let name = doc.str_or("name", "experiment").to_string();
+        let seed = doc.usize_or("seed", 0) as u64;
+        let kind = DatasetKind::parse(doc.str_or("dataset.kind", "mnist_like"))?;
+        let dataset = DatasetSpec {
+            kind,
+            classes: doc.usize_or("dataset.classes", 10),
+            n_train: doc.usize_or("dataset.train", 2000),
+            n_test: doc.usize_or("dataset.test", 1000),
+            n_quant: doc.usize_or("dataset.quant", 512),
+            augment: doc.bool_or("dataset.augment", kind == DatasetKind::CifarLike),
+        };
+        if dataset.classes < 2 {
+            bail!("dataset.classes must be >= 2");
+        }
+        let model = match doc.str_or("model.kind", "mlp") {
+            "mlp" => ModelSpec::Mlp {
+                hidden: doc.usize_arr("model.hidden").unwrap_or_else(|| vec![128, 64]),
+            },
+            "cnn" => ModelSpec::Cnn {
+                widths: doc.usize_arr("model.widths").unwrap_or_else(|| vec![8, 16]),
+                fc: doc.usize_or("model.fc", 64),
+            },
+            "vgg" => ModelSpec::Vgg {
+                conv_widths: doc.usize_arr("model.conv_widths").unwrap_or_else(|| vec![8, 16]),
+                fc_widths: doc.usize_arr("model.fc_widths").unwrap_or_else(|| vec![256, 128]),
+            },
+            other => bail!("unknown model kind {other:?}"),
+        };
+        let train = TrainConfig {
+            epochs: doc.usize_or("train.epochs", 10),
+            batch: doc.usize_or("train.batch", 64),
+            lr: doc.f64_or("train.lr", 0.05) as f32,
+            momentum: doc.f64_or("train.momentum", 0.9) as f32,
+            seed,
+            verbose: doc.bool_or("train.verbose", false),
+        };
+        let quant = QuantSpec {
+            levels: doc.usize_arr("quant.levels").unwrap_or_else(|| vec![3]),
+            c_alphas: doc.f64_arr("quant.c_alpha").unwrap_or_else(|| vec![1.0, 2.0, 3.0, 4.0]),
+            fc_only: doc.bool_or("quant.fc_only", false),
+            workers: doc.usize_or("quant.workers", default_workers()),
+        };
+        if quant.levels.iter().any(|&m| m < 2) {
+            bail!("quant.levels entries must be >= 2");
+        }
+        if quant.c_alphas.iter().any(|&c| c <= 0.0) {
+            bail!("quant.c_alpha entries must be positive");
+        }
+        Ok(ExperimentSpec { name, seed, dataset, model, train, quant })
+    }
+}
+
+/// Default worker count: physical parallelism minus one, at least 1.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1)).unwrap_or(1).max(1)
+}
+
+// ---------------------------------------------------------------------------
+// presets (scaled-down versions of the paper's three experiments)
+// ---------------------------------------------------------------------------
+
+/// E1/E2 preset: MNIST-like MLP (paper 784-500-300-10, scaled).
+pub fn preset_mnist(seed: u64) -> ExperimentSpec {
+    ExperimentSpec {
+        name: "mnist_mlp".into(),
+        seed,
+        dataset: DatasetSpec {
+            kind: DatasetKind::MnistLike,
+            classes: 10,
+            n_train: 2400,
+            n_test: 800,
+            n_quant: 512,
+            augment: false,
+        },
+        model: ModelSpec::Mlp { hidden: vec![128, 64] },
+        train: TrainConfig { epochs: 8, batch: 64, lr: 0.05, momentum: 0.9, seed, verbose: false },
+        quant: QuantSpec {
+            levels: vec![3],
+            c_alphas: (1..=10).map(|i| i as f64).collect(),
+            fc_only: false,
+            workers: default_workers(),
+        },
+    }
+}
+
+/// Full-size paper MNIST architecture (used by `--paper-scale` runs).
+pub fn preset_mnist_paper(seed: u64) -> ExperimentSpec {
+    let mut s = preset_mnist(seed);
+    s.name = "mnist_mlp_paper".into();
+    s.model = ModelSpec::Mlp { hidden: vec![500, 300] };
+    s.dataset.n_train = 6000;
+    s.dataset.n_quant = 512;
+    s
+}
+
+/// E3/E4/E5 preset: CIFAR-like CNN (paper 2x32C3-MP2-2x64C3-MP2-2x128C3-128FC-10FC, scaled).
+pub fn preset_cifar(seed: u64) -> ExperimentSpec {
+    ExperimentSpec {
+        name: "cifar_cnn".into(),
+        seed,
+        dataset: DatasetSpec {
+            kind: DatasetKind::CifarLike,
+            classes: 10,
+            n_train: 2000,
+            n_test: 600,
+            n_quant: 256,
+            augment: true,
+        },
+        model: ModelSpec::Cnn { widths: vec![8, 16], fc: 64 },
+        train: TrainConfig { epochs: 8, batch: 64, lr: 0.03, momentum: 0.9, seed, verbose: false },
+        quant: QuantSpec {
+            levels: vec![3, 4, 8, 16],
+            c_alphas: vec![2.0, 3.0, 4.0, 5.0, 6.0],
+            fc_only: false,
+            workers: default_workers(),
+        },
+    }
+}
+
+/// E6 preset: ImageNet-like VGG-style net, FC-only quantization (Table 2).
+pub fn preset_imagenet(seed: u64) -> ExperimentSpec {
+    ExperimentSpec {
+        name: "imagenet_vgg".into(),
+        seed,
+        dataset: DatasetSpec {
+            kind: DatasetKind::ImagenetLike,
+            classes: 20,
+            n_train: 3000,
+            n_test: 800,
+            n_quant: 384,
+            augment: false,
+        },
+        model: ModelSpec::Vgg { conv_widths: vec![8, 16], fc_widths: vec![256, 128] },
+        train: TrainConfig { epochs: 10, batch: 64, lr: 0.03, momentum: 0.9, seed, verbose: false },
+        quant: QuantSpec {
+            levels: vec![3],
+            c_alphas: vec![2.0, 3.0, 4.0, 5.0],
+            fc_only: true,
+            workers: default_workers(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn parses_full_config() {
+        let doc = toml::parse(
+            r#"
+name = "demo"
+seed = 7
+[dataset]
+kind = "cifar_like"
+classes = 10
+train = 100
+test = 50
+quant = 32
+[model]
+kind = "cnn"
+widths = [4, 8]
+fc = 32
+[train]
+epochs = 2
+lr = 0.01
+[quant]
+levels = [3, 16]
+c_alpha = [2.0, 3.0]
+fc_only = false
+workers = 2
+"#,
+        )
+        .unwrap();
+        let spec = ExperimentSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.dataset.kind, DatasetKind::CifarLike);
+        assert!(spec.dataset.augment, "cifar defaults to augmented");
+        assert_eq!(spec.quant.levels, vec![3, 16]);
+        assert_eq!(spec.train.epochs, 2);
+        let net = spec.build_network();
+        assert!(net.summary().contains("conv3x3(4)"));
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let doc = toml::parse("name = \"min\"\n").unwrap();
+        let spec = ExperimentSpec::from_doc(&doc).unwrap();
+        assert_eq!(spec.dataset.kind, DatasetKind::MnistLike);
+        assert!(matches!(spec.model, ModelSpec::Mlp { .. }));
+        assert!(spec.quant.workers >= 1);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let doc = toml::parse("[quant]\nlevels = [1]\n").unwrap();
+        assert!(ExperimentSpec::from_doc(&doc).is_err());
+        let doc = toml::parse("[quant]\nc_alpha = [0.0]\n").unwrap();
+        assert!(ExperimentSpec::from_doc(&doc).is_err());
+        let doc = toml::parse("[model]\nkind = \"transformer\"\n").unwrap();
+        assert!(ExperimentSpec::from_doc(&doc).is_err());
+        let doc = toml::parse("[dataset]\nkind = \"svhn\"\n").unwrap();
+        assert!(ExperimentSpec::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn presets_build() {
+        for spec in [preset_mnist(0), preset_cifar(0), preset_imagenet(0), preset_mnist_paper(0)] {
+            let net = spec.build_network();
+            assert!(net.weight_count() > 0, "{}", spec.name);
+            assert!(!net.quantizable_layers().is_empty());
+        }
+    }
+
+    #[test]
+    fn vgg_preset_is_fc_dominated() {
+        let spec = preset_imagenet(1);
+        let net = spec.build_network();
+        let fc: usize = net
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                crate::nn::Layer::Dense { w, .. } => Some(w.data.len()),
+                _ => None,
+            })
+            .sum();
+        assert!(fc as f64 / net.weight_count() as f64 > 0.9);
+    }
+}

@@ -1,0 +1,286 @@
+//! Minimal TOML-subset parser for experiment configs (`configs/*.toml`).
+//!
+//! No `toml`/`serde` crates exist in the offline vendor set, so this
+//! implements the subset the configs use: `[table]` and `[table.sub]`
+//! headers, `key = value` with strings, integers, floats, booleans and
+//! homogeneous arrays, plus `#` comments.  Values are stored flat under
+//! dotted keys ("table.sub.key"), which keeps lookups trivial.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted-key → value.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+    /// Array of usize under a key.
+    pub fn usize_arr(&self, key: &str) -> Option<Vec<usize>> {
+        self.get(key)?.as_arr().map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+    }
+    /// Array of f64 under a key.
+    pub fn f64_arr(&self, key: &str) -> Option<Vec<f64>> {
+        self.get(key)?.as_arr().map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+    }
+    /// Keys under a table prefix.
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let pfx = format!("{prefix}.");
+        self.values.keys().filter(|k| k.starts_with(&pfx)).map(|k| k.as_str()).collect()
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn parse_scalar(s: &str, line: usize) -> Result<Value, TomlError> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(TomlError { line, msg: "empty value".into() });
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or(TomlError { line, msg: "unterminated string".into() })?;
+        return Ok(Value::Str(rest[..end].to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(TomlError { line, msg: format!("cannot parse value {s:?}") })
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, TomlError> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or(TomlError { line, msg: "unterminated array".into() })?;
+        let mut items = Vec::new();
+        // arrays of scalars only: split on commas outside strings
+        let mut depth_str = false;
+        let mut cur = String::new();
+        for ch in inner.chars() {
+            match ch {
+                '"' => {
+                    depth_str = !depth_str;
+                    cur.push(ch);
+                }
+                ',' if !depth_str => {
+                    if !cur.trim().is_empty() {
+                        items.push(parse_scalar(&cur, line)?);
+                    }
+                    cur.clear();
+                }
+                _ => cur.push(ch),
+            }
+        }
+        if !cur.trim().is_empty() {
+            items.push(parse_scalar(&cur, line)?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    parse_scalar(s, line)
+}
+
+/// Strip a trailing comment (respecting strings).
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, TomlError> {
+    let mut doc = Doc::default();
+    let mut prefix = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(hdr) = line.strip_prefix('[') {
+            let hdr = hdr
+                .strip_suffix(']')
+                .ok_or(TomlError { line: lineno, msg: "unterminated table header".into() })?
+                .trim();
+            if hdr.is_empty() || hdr.starts_with('[') {
+                return Err(TomlError { line: lineno, msg: "bad table header".into() });
+            }
+            prefix = hdr.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or(TomlError { line: lineno, msg: "expected key = value".into() })?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(TomlError { line: lineno, msg: "empty key".into() });
+        }
+        let val = parse_value(&line[eq + 1..], lineno)?;
+        let full = if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+        doc.values.insert(full, val);
+    }
+    Ok(doc)
+}
+
+/// Parse a TOML file from disk.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Doc> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    Ok(parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = parse(
+            r#"
+# experiment config
+name = "mnist"
+seed = 42
+lr = 0.05
+verbose = true
+
+[model]
+hidden = [500, 300]
+act = "relu"
+
+[quant.sweep]
+c_alpha = [1.0, 2.0, 3.5]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "mnist");
+        assert_eq!(doc.usize_or("seed", 0), 42);
+        assert!((doc.f64_or("lr", 0.0) - 0.05).abs() < 1e-12);
+        assert!(doc.bool_or("verbose", false));
+        assert_eq!(doc.usize_arr("model.hidden").unwrap(), vec![500, 300]);
+        assert_eq!(doc.str_or("model.act", ""), "relu");
+        assert_eq!(doc.f64_arr("quant.sweep.c_alpha").unwrap(), vec![1.0, 2.0, 3.5]);
+    }
+
+    #[test]
+    fn comments_and_inline_comments() {
+        let doc = parse("a = 1 # trailing\n# full line\nb = \"x # not a comment\"\n").unwrap();
+        assert_eq!(doc.usize_or("a", 0), 1);
+        assert_eq!(doc.str_or("b", ""), "x # not a comment");
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("i = 3\nf = 3.0\ne = 1e2\n").unwrap();
+        assert_eq!(doc.get("i"), Some(&Value::Int(3)));
+        assert_eq!(doc.get("f"), Some(&Value::Float(3.0)));
+        assert_eq!(doc.get("e"), Some(&Value::Float(100.0)));
+        // ints coerce to f64 on demand
+        assert_eq!(doc.f64_or("i", 0.0), 3.0);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("x = [1, 2\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("k = \n").is_err());
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = parse("[a]\nx = 1\ny = 2\n[b]\nz = 3\n").unwrap();
+        let keys = doc.keys_under("a");
+        assert_eq!(keys, vec!["a.x", "a.y"]);
+    }
+
+    #[test]
+    fn mixed_arrays_of_numbers() {
+        let doc = parse("xs = [1, 2.5, 3]\n").unwrap();
+        assert_eq!(doc.f64_arr("xs").unwrap(), vec![1.0, 2.5, 3.0]);
+    }
+}

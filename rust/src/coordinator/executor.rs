@@ -1,0 +1,225 @@
+//! Execution backends for neuron-block quantization: the PJRT path runs
+//! the AOT Pallas artifact; the native path runs `quant::gpfq`.  Every
+//! block records which path served it, and integration tests assert the
+//! two agree to float tolerance.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::scheduler::{run_jobs, SchedulerConfig};
+use crate::nn::matrix::Matrix;
+use crate::quant::alphabet::Alphabet;
+use crate::quant::gpfq::{gpfq_layer_range, LayerData};
+use crate::runtime::{Arg, Runtime};
+
+/// Which backend executed a block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    Native,
+    Pjrt,
+}
+
+/// Executor configuration.
+#[derive(Clone)]
+pub struct Executor {
+    /// PJRT runtime, if artifacts are available
+    pub runtime: Option<Arc<Runtime>>,
+    /// prefer PJRT when an exactly-matching artifact exists
+    pub prefer_pjrt: bool,
+    pub scheduler: SchedulerConfig,
+    /// neuron-block width (must match the artifacts' `b`)
+    pub block_b: usize,
+}
+
+impl Executor {
+    /// Native-only executor.
+    pub fn native(workers: usize) -> Executor {
+        Executor {
+            runtime: None,
+            prefer_pjrt: false,
+            scheduler: SchedulerConfig { workers, ..Default::default() },
+            block_b: 64,
+        }
+    }
+
+    /// Executor that uses PJRT artifacts when available, native otherwise.
+    pub fn auto(workers: usize) -> Executor {
+        let runtime = Runtime::try_default().map(Arc::new);
+        let block_b = runtime.as_ref().map(|r| r.manifest().block_b).unwrap_or(64);
+        Executor {
+            prefer_pjrt: runtime.is_some(),
+            runtime,
+            scheduler: SchedulerConfig { workers, ..Default::default() },
+            block_b,
+        }
+    }
+
+    /// With an explicit runtime (tests).
+    pub fn with_runtime(rt: Arc<Runtime>, workers: usize) -> Executor {
+        let block_b = rt.manifest().block_b;
+        Executor {
+            runtime: Some(rt),
+            prefer_pjrt: true,
+            scheduler: SchedulerConfig { workers, ..Default::default() },
+            block_b,
+        }
+    }
+
+    /// Quantize a full layer with GPFQ: `y`/`yq` are (m × N) activation
+    /// data, `w` is (N × n).  Returns (Q, per-block paths).
+    pub fn gpfq_layer(
+        &self,
+        y: &Matrix,
+        yq: &Matrix,
+        w: &Matrix,
+        a: Alphabet,
+    ) -> Result<(Matrix, Vec<Path>)> {
+        let n_neurons = w.cols;
+        let b = self.block_b;
+        let n_blocks = n_neurons.div_ceil(b).max(1);
+
+        // PJRT eligibility: an artifact for this exact (mq, N, b, M)?
+        let pjrt = if self.prefer_pjrt {
+            self.runtime.as_ref().and_then(|rt| {
+                let man = rt.manifest();
+                if y.rows <= man.mq {
+                    man.find_gpfq(man.mq, w.rows, b, a.m).cloned().map(|info| (rt.clone(), info))
+                } else {
+                    None
+                }
+            })
+        } else {
+            None
+        };
+
+        // The xla crate's PJRT handles are Rc-based (not Send), so PJRT
+        // blocks execute serially on this thread — the CPU PJRT client
+        // parallelizes internally.  The native path fans out across the
+        // worker pool.
+        let outputs: Vec<(Matrix, Path)> = if let Some((rt, info)) = &pjrt {
+            // pad activation rows up to mq with zero rows (zero rows
+            // contribute nothing to the inner products — see kernel tests).
+            let mq = rt.manifest().mq;
+            let yp = y.pad_to(mq, y.cols);
+            let yqp = yq.pad_to(mq, yq.cols);
+            let mut outs = Vec::with_capacity(n_blocks);
+            for blk in 0..n_blocks {
+                let lo = blk * b;
+                let hi = ((blk + 1) * b).min(n_neurons);
+                // pad the trailing block with zero neurons; sliced off below
+                let mut wblk = Matrix::zeros(w.rows, b);
+                for j in lo..hi {
+                    wblk.set_col(j - lo, &w.col(j));
+                }
+                let out = rt.execute_info(
+                    info,
+                    &[Arg::Mat(&yp), Arg::Mat(&yqp), Arg::Mat(&wblk), Arg::Scalar(a.alpha)],
+                )?;
+                outs.push((out[0].cols_slice(0, hi - lo), Path::Pjrt));
+            }
+            outs
+        } else {
+            let data = LayerData::new(y, yq);
+            let jobs: Vec<usize> = (0..n_blocks).collect();
+            run_jobs(self.scheduler, jobs, |_, blk| -> Result<(Matrix, Path)> {
+                let lo = blk * b;
+                let hi = ((blk + 1) * b).min(n_neurons);
+                let res = gpfq_layer_range(&data, w, a, lo, hi);
+                Ok((res.q, Path::Native))
+            })?
+        };
+
+        let mut q = Matrix::zeros(w.rows, n_neurons);
+        let mut paths = Vec::with_capacity(n_blocks);
+        let mut col = 0usize;
+        for (blockq, path) in outputs {
+            for j in 0..blockq.cols {
+                q.set_col(col, &blockq.col(j));
+                col += 1;
+            }
+            paths.push(path);
+        }
+        assert_eq!(col, n_neurons);
+        Ok((q, paths))
+    }
+
+    /// MSQ is data-free; always native (the artifact variant exists for
+    /// runtime parity tests, exercised in `rust/tests/`).
+    pub fn msq_layer(&self, w: &Matrix, a: Alphabet) -> Matrix {
+        crate::quant::msq::msq_matrix(w, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+    use crate::quant::gpfq::gpfq_layer;
+
+    #[test]
+    fn native_executor_matches_direct_call() {
+        let mut rng = Pcg::seed(1);
+        let y = Matrix::from_vec(16, 40, rng.normal_vec(640));
+        let yq = Matrix::from_vec(16, 40, rng.normal_vec(640));
+        let w = Matrix::from_vec(40, 10, rng.uniform_vec(400, -1.0, 1.0));
+        let a = Alphabet::ternary(0.9);
+        let ex = Executor { block_b: 4, ..Executor::native(3) };
+        let (q, paths) = ex.gpfq_layer(&y, &yq, &w, a).unwrap();
+        assert!(paths.iter().all(|&p| p == Path::Native));
+        assert_eq!(paths.len(), 3); // ceil(10/4)
+        let direct = gpfq_layer(&LayerData::new(&y, &yq), &w, a);
+        assert_eq!(q.data, direct.q.data);
+    }
+
+    #[test]
+    fn block_width_does_not_change_result() {
+        let mut rng = Pcg::seed(2);
+        let y = Matrix::from_vec(8, 24, rng.normal_vec(192));
+        let w = Matrix::from_vec(24, 9, rng.uniform_vec(216, -1.0, 1.0));
+        let a = Alphabet::ternary(1.0);
+        let mut results = Vec::new();
+        for b in [1usize, 3, 4, 16] {
+            let ex = Executor { block_b: b, ..Executor::native(2) };
+            let (q, _) = ex.gpfq_layer(&y, &y, &w, a).unwrap();
+            results.push(q.data);
+        }
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+    }
+
+    #[test]
+    fn pjrt_path_matches_native_when_artifacts_present() {
+        let Some(rt) = Runtime::try_default().map(Arc::new) else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let man = rt.manifest();
+        let (m, n, b) = (man.mq.min(64), 300usize, man.block_b);
+        if man.find_gpfq(man.mq, n, b, 3).is_none() {
+            eprintln!("skipping: no matching gpfq artifact");
+            return;
+        }
+        let mut rng = Pcg::seed(3);
+        let y = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+        let mut yq = y.clone();
+        for v in yq.data.iter_mut() {
+            *v += 0.03 * rng.normal() as f32;
+        }
+        let w = Matrix::from_vec(n, 70, rng.uniform_vec(n * 70, -1.0, 1.0)); // 70: forces padding of last block
+        let a = Alphabet::ternary(0.8);
+        let ex_pjrt = Executor::with_runtime(rt, 2);
+        let (q_pjrt, paths) = ex_pjrt.gpfq_layer(&y, &yq, &w, a).unwrap();
+        assert!(paths.iter().all(|&p| p == Path::Pjrt), "{paths:?}");
+        let ex_native = Executor { block_b: b, ..Executor::native(2) };
+        let (q_native, _) = ex_native.gpfq_layer(&y, &yq, &w, a).unwrap();
+        let maxdiff = q_pjrt
+            .data
+            .iter()
+            .zip(&q_native.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(maxdiff < 1e-5, "pjrt vs native diff {maxdiff}");
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator — the system around the paper's algorithm: a
+//! layer-sequential, neuron-parallel quantization [`pipeline`], a bounded
+//! worker-pool [`scheduler`], dual execution backends ([`executor`]:
+//! PJRT artifacts / native Rust), and the Section 6 cross-validation
+//! [`sweep`] orchestrator.
+
+pub mod executor;
+pub mod pipeline;
+pub mod scheduler;
+pub mod sweep;
+
+pub use executor::{Executor, Path};
+pub use pipeline::{quantize_network, try_quantize_network, Method, PipelineConfig, QuantOutcome};
+pub use scheduler::{run_jobs, SchedulerConfig};
+pub use sweep::{sweep, SweepConfig, SweepPoint, SweepResult};

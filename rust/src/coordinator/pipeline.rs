@@ -1,0 +1,397 @@
+//! The layer-sequential quantization pipeline — the coordinator's core.
+//!
+//! GPFQ quantizes layer ℓ against *two* activation streams (paper eq. (3)):
+//! the analog stream `Y = Φ^(ℓ-1)(X)` and the quantized stream
+//! `Ỹ = Φ̃^(ℓ-1)(X)` produced by the already-quantized prefix of the
+//! network.  The pipeline maintains both streams, shards each layer's
+//! neurons into blocks, dispatches them to the [`Executor`] (PJRT artifact
+//! or native), installs `Q^(ℓ)`, and advances the streams.  This dependence
+//! of layer ℓ on Q^(1..ℓ-1) is what lets GPFQ "error-correct" (Figure 1b) —
+//! and is why layers must be sequential while neurons are parallel.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::executor::{Executor, Path};
+use crate::nn::matrix::Matrix;
+use crate::nn::network::{Layer, Network};
+use crate::quant::alphabet::Alphabet;
+use crate::quant::error::layer_fro_error;
+use crate::util::stats::median;
+
+/// Quantization method.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// greedy path-following (the paper's algorithm)
+    Gpfq,
+    /// memoryless scalar quantization baseline
+    Msq,
+}
+
+/// Pipeline configuration.
+#[derive(Clone)]
+pub struct PipelineConfig {
+    pub method: Method,
+    /// alphabet size M (bit budget log2 M)
+    pub levels: usize,
+    /// alphabet radius scalar: alpha_l = c_alpha * median|W^(l)|
+    pub c_alpha: f32,
+    /// quantize only dense layers (Table 2 / VGG protocol)
+    pub fc_only: bool,
+    /// worker threads for neuron-block parallelism
+    pub workers: usize,
+    /// quantize only the first k quantizable layers (Figures 1b/2a);
+    /// None = all
+    pub max_layers: Option<usize>,
+    /// snapshot the network after each quantized layer
+    pub capture_checkpoints: bool,
+    /// quantize dense-layer biases too, via the paper's Section 4
+    /// augmentation trick: x ↦ (x, 1), w ↦ (w, b), so the bias is just one
+    /// more weight coordinate walked by the same dynamical system.  When
+    /// false (default) biases stay in full precision (the paper's "MSQ with
+    /// a big enough bit budget" alternative, at 32 bits).
+    pub quantize_bias: bool,
+    /// execution backend
+    pub executor: Option<Executor>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            method: Method::Gpfq,
+            levels: 3,
+            c_alpha: 2.0,
+            fc_only: false,
+            workers: crate::config::default_workers(),
+            max_layers: None,
+            capture_checkpoints: false,
+            quantize_bias: false,
+            executor: None,
+        }
+    }
+}
+
+/// Per-layer quantization report.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub layer_index: usize,
+    pub label: String,
+    /// alphabet actually used
+    pub alpha: f32,
+    pub levels: usize,
+    /// relative Frobenius error ‖YW − ỸQ‖_F / ‖YW‖_F of this layer's output
+    pub fro_err: f64,
+    /// median per-neuron relative error
+    pub median_rel_err: f64,
+    /// wall-clock seconds spent quantizing this layer
+    pub seconds: f64,
+    /// how many neuron blocks ran on each path
+    pub native_blocks: usize,
+    pub pjrt_blocks: usize,
+    /// number of neurons
+    pub neurons: usize,
+    /// N (features per neuron) and m (quantization samples)
+    pub n_features: usize,
+    pub m_samples: usize,
+}
+
+/// Pipeline output.
+pub struct QuantOutcome {
+    /// the quantized network Φ̃
+    pub network: Network,
+    pub layer_reports: Vec<LayerReport>,
+    /// snapshots after each quantized layer (when capture_checkpoints)
+    pub checkpoints: Vec<Network>,
+    pub total_seconds: f64,
+}
+
+/// Quantize a network with the configured method.
+///
+/// `x_quant` is the quantization sample batch (rows are samples) — the
+/// paper's "data used to learn the quantization".
+pub fn quantize_network(net: &Network, x_quant: &Matrix, cfg: &PipelineConfig) -> QuantOutcome {
+    try_quantize_network(net, x_quant, cfg).expect("quantization pipeline failed")
+}
+
+/// Fallible variant (PJRT errors surface here).
+pub fn try_quantize_network(
+    net: &Network,
+    x_quant: &Matrix,
+    cfg: &PipelineConfig,
+) -> Result<QuantOutcome> {
+    assert_eq!(x_quant.cols, net.input.len(), "quantization data width mismatch");
+    let executor = cfg
+        .executor
+        .clone()
+        .unwrap_or_else(|| Executor::native(cfg.workers));
+    let t0 = Instant::now();
+    let mut qnet = net.clone();
+    let mut reports = Vec::new();
+    let mut checkpoints = Vec::new();
+
+    // dual activation streams
+    let mut y = x_quant.clone(); // analog Φ^(ℓ-1)(X)
+    let mut yq = x_quant.clone(); // quantized Φ̃^(ℓ-1)(X)
+    let mut quantized_so_far = 0usize;
+
+    for i in 0..net.layers.len() {
+        let selected = net.layers[i].is_quantizable()
+            && (!cfg.fc_only || matches!(net.layers[i], Layer::Dense { .. }))
+            && cfg.max_layers.map(|k| quantized_so_far < k).unwrap_or(true);
+        if selected {
+            let lt = Instant::now();
+            // bias augmentation (Section 4): treat b as weight row N+1 and
+            // append a constant-1 data column, for dense layers only.
+            let augment_bias = cfg.quantize_bias && matches!(net.layers[i], Layer::Dense { .. });
+            let mut w = net.layers[i].weights().unwrap().clone();
+            let mut data_y = net.quantization_data(i, &y);
+            let mut data_yq = qnet.quantization_data(i, &yq);
+            if augment_bias {
+                if let Layer::Dense { b, .. } = &net.layers[i] {
+                    let mut wb = Matrix::zeros(w.rows + 1, w.cols);
+                    for r in 0..w.rows {
+                        wb.row_mut(r).copy_from_slice(w.row(r));
+                    }
+                    wb.row_mut(w.rows).copy_from_slice(b);
+                    w = wb;
+                }
+                let ones = Matrix::from_fn(data_y.rows, 1, |_, _| 1.0);
+                data_y = data_y.hcat(&ones);
+                data_yq = data_yq.hcat(&ones);
+            }
+            let a = Alphabet::from_median(&w.data, cfg.c_alpha, cfg.levels);
+            let (q, paths) = match cfg.method {
+                Method::Gpfq => executor.gpfq_layer(&data_y, &data_yq, &w, a)?,
+                Method::Msq => {
+                    let q = executor.msq_layer(&w, a);
+                    (q, vec![])
+                }
+            };
+            let rel = crate::quant::error::layer_rel_errors(&data_y, &data_yq, &w, &q);
+            let fro = layer_fro_error(&data_y, &data_yq, &w, &q);
+            if augment_bias {
+                let n = q.rows - 1;
+                qnet.set_weights(i, q.rows_slice(0, n));
+                if let Layer::Dense { b, .. } = &mut qnet.layers[i] {
+                    b.copy_from_slice(q.row(n));
+                }
+            } else {
+                qnet.set_weights(i, q);
+            }
+            reports.push(LayerReport {
+                layer_index: i,
+                label: net.layers[i].label(),
+                alpha: a.alpha,
+                levels: a.m,
+                fro_err: fro,
+                median_rel_err: median(&rel),
+                seconds: lt.elapsed().as_secs_f64(),
+                native_blocks: paths.iter().filter(|&&p| p == Path::Native).count(),
+                pjrt_blocks: paths.iter().filter(|&&p| p == Path::Pjrt).count(),
+                neurons: w.cols,
+                n_features: w.rows,
+                m_samples: data_y.rows,
+            });
+            quantized_so_far += 1;
+            if cfg.capture_checkpoints {
+                checkpoints.push(qnet.clone());
+            }
+        }
+        // advance both streams through layer i
+        y = net.apply_layer(i, &y);
+        yq = qnet.apply_layer(i, &yq);
+    }
+
+    Ok(QuantOutcome {
+        network: qnet,
+        layer_reports: reports,
+        checkpoints,
+        total_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Verify every quantized layer's weights live in its reported alphabet —
+/// the pipeline's core postcondition (used by tests and `gpfq eval`).
+pub fn verify_alphabet(outcome: &QuantOutcome) -> bool {
+    for rep in &outcome.layer_reports {
+        let a = Alphabet::new(rep.alpha, rep.levels);
+        let w = outcome.network.layers[rep.layer_index].weights().unwrap();
+        if !w.data.iter().all(|&v| a.contains(v, 1e-4 * a.alpha.max(1.0))) {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::eval::accuracy;
+    use crate::nn::conv::ImgShape;
+    use crate::nn::network::{cifar_cnn, mnist_mlp, vgg_like};
+    use crate::train::{train, TrainConfig};
+
+    fn trained_mlp() -> (crate::nn::Network, crate::data::Dataset, crate::data::Dataset) {
+        let spec = SynthSpec {
+            classes: 4,
+            shape: ImgShape { h: 8, w: 8, c: 1 },
+            blobs: 4,
+            noise: 0.15,
+            max_shift: 1,
+            seed: 11,
+        };
+        let tr = generate(&spec, 300, 0, false);
+        let te = generate(&spec, 150, 1, false);
+        let mut net = mnist_mlp(1, 64, &[48, 24], 4);
+        train(&mut net, &tr, &TrainConfig { epochs: 10, batch: 32, lr: 0.05, momentum: 0.9, seed: 1, verbose: false });
+        (net, tr, te)
+    }
+
+    #[test]
+    fn gpfq_pipeline_end_to_end() {
+        let (net, tr, te) = trained_mlp();
+        let base_acc = accuracy(&net, &te);
+        assert!(base_acc > 0.8, "analog net too weak: {base_acc}");
+        let x_quant = tr.x.rows_slice(0, 200);
+        let cfg = PipelineConfig { c_alpha: 3.0, workers: 2, ..Default::default() };
+        let out = quantize_network(&net, &x_quant, &cfg);
+        assert_eq!(out.layer_reports.len(), 3);
+        assert!(verify_alphabet(&out));
+        let q_acc = accuracy(&out.network, &te);
+        // ternary quantization should retain most of the accuracy
+        assert!(q_acc > base_acc - 0.25, "analog {base_acc} vs quantized {q_acc}");
+        // and every layer's relative output error must be sane
+        for rep in &out.layer_reports {
+            assert!(rep.fro_err < 1.0, "layer {} fro err {}", rep.label, rep.fro_err);
+            assert!(rep.pjrt_blocks == 0, "native test should not hit pjrt");
+        }
+    }
+
+    #[test]
+    fn gpfq_beats_msq_through_pipeline() {
+        let (net, tr, te) = trained_mlp();
+        let x_quant = tr.x.rows_slice(0, 200);
+        let gp = quantize_network(&net, &x_quant, &PipelineConfig { c_alpha: 3.0, ..Default::default() });
+        let ms = quantize_network(
+            &net,
+            &x_quant,
+            &PipelineConfig { method: Method::Msq, c_alpha: 3.0, ..Default::default() },
+        );
+        let acc_g = accuracy(&gp.network, &te);
+        let acc_m = accuracy(&ms.network, &te);
+        assert!(acc_g >= acc_m - 0.02, "gpfq {acc_g} < msq {acc_m}");
+        // layer output errors must favor gpfq decisively
+        for (g, m) in gp.layer_reports.iter().zip(&ms.layer_reports) {
+            assert!(
+                g.fro_err <= m.fro_err + 1e-6,
+                "layer {}: gpfq {} vs msq {}",
+                g.label,
+                g.fro_err,
+                m.fro_err
+            );
+        }
+    }
+
+    #[test]
+    fn max_layers_and_checkpoints() {
+        let (net, tr, _) = trained_mlp();
+        let x_quant = tr.x.rows_slice(0, 100);
+        let cfg = PipelineConfig {
+            max_layers: Some(2),
+            capture_checkpoints: true,
+            ..Default::default()
+        };
+        let out = quantize_network(&net, &x_quant, &cfg);
+        assert_eq!(out.layer_reports.len(), 2);
+        assert_eq!(out.checkpoints.len(), 2);
+        // first checkpoint has exactly 1 quantized layer: later layers must
+        // still equal the analog weights
+        let c0 = &out.checkpoints[0];
+        let orig_w2 = net.layers[out.layer_reports[1].layer_index].weights().unwrap();
+        let c0_w2 = c0.layers[out.layer_reports[1].layer_index].weights().unwrap();
+        assert_eq!(orig_w2.data, c0_w2.data);
+    }
+
+    #[test]
+    fn fc_only_skips_conv_layers() {
+        let img = ImgShape { h: 10, w: 10, c: 1 };
+        let net = cifar_cnn(3, img, &[2], 16, 3);
+        let mut rng = Pcg::seed(5);
+        let x = Matrix::from_vec(40, img.len(), rng.normal_vec(40 * img.len()));
+        let cfg = PipelineConfig { fc_only: true, ..Default::default() };
+        let out = quantize_network(&net, &x, &cfg);
+        assert!(out.layer_reports.iter().all(|r| r.label.starts_with("dense")));
+        assert_eq!(out.layer_reports.len(), 2);
+    }
+
+    #[test]
+    fn conv_quantization_uses_patches() {
+        let img = ImgShape { h: 8, w: 8, c: 1 };
+        let net = vgg_like(4, img, &[2], &[8], 3);
+        let mut rng = Pcg::seed(6);
+        let x = Matrix::from_vec(10, img.len(), rng.normal_vec(10 * img.len()));
+        let out = quantize_network(&net, &x, &PipelineConfig::default());
+        let conv_rep = out
+            .layer_reports
+            .iter()
+            .find(|r| r.label.starts_with("conv"))
+            .expect("conv layer quantized");
+        // patches: 10 samples * 6*6 spatial positions (8-3+1=6 after conv3
+        // ... first conv sees 8x8 -> 6x6), so m = 360
+        assert_eq!(conv_rep.m_samples, 10 * 6 * 6);
+        assert_eq!(conv_rep.n_features, 9);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let (net, tr, _) = trained_mlp();
+        let x_quant = tr.x.rows_slice(0, 80);
+        let run = |workers| {
+            let cfg = PipelineConfig { workers, ..Default::default() };
+            let out = quantize_network(&net, &x_quant, &cfg);
+            out.network.layers[0].weights().unwrap().data.clone()
+        };
+        let base = run(1);
+        assert_eq!(run(4), base);
+        assert_eq!(run(8), base);
+    }
+
+    #[test]
+    fn bias_augmentation_quantizes_biases() {
+        let (net, tr, te) = trained_mlp();
+        let x = tr.x.rows_slice(0, 150);
+        let cfg = PipelineConfig { quantize_bias: true, c_alpha: 3.0, ..Default::default() };
+        let out = quantize_network(&net, &x, &cfg);
+        // every dense bias must now live in that layer's alphabet
+        for rep in &out.layer_reports {
+            let a = Alphabet::new(rep.alpha, rep.levels);
+            if let Layer::Dense { b, .. } = &out.network.layers[rep.layer_index] {
+                for &v in b {
+                    assert!(a.contains(v, 1e-4 * a.alpha.max(1.0)), "bias {v} not in alphabet");
+                }
+            }
+            // augmented feature count: N+1
+            assert_eq!(rep.n_features, net.layers[rep.layer_index].weights().unwrap().rows + 1);
+        }
+        // and the network should still work
+        let q_acc = accuracy(&out.network, &te);
+        assert!(q_acc > 0.5, "bias-quantized acc {q_acc}");
+    }
+
+    #[test]
+    fn quantized_weights_compress() {
+        let (net, tr, _) = trained_mlp();
+        let out = quantize_network(&net, &tr.x.rows_slice(0, 50), &PipelineConfig::default());
+        // ternary: each layer's weights take at most 3 distinct values
+        for rep in &out.layer_reports {
+            let w = out.network.layers[rep.layer_index].weights().unwrap();
+            let mut distinct: Vec<i64> = w.data.iter().map(|&v| (v * 1e6).round() as i64).collect();
+            distinct.sort_unstable();
+            distinct.dedup();
+            assert!(distinct.len() <= 3, "layer {} has {} distinct values", rep.label, distinct.len());
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Worker-pool scheduler for neuron-block quantization jobs.
+//!
+//! The paper's algorithm is embarrassingly parallel across neurons; the
+//! coordinator shards each layer into fixed-width neuron blocks and feeds
+//! them to a pool of worker threads through a bounded queue (backpressure:
+//! the producer blocks when `queue_cap` jobs are in flight).  Results are
+//! reassembled in submission order regardless of completion order, so the
+//! pipeline output is deterministic for any worker count.
+//!
+//! Failure semantics: the first job error flips a cancel flag; remaining
+//! queued jobs are skipped and the error is propagated to the caller.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Scheduler configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    pub workers: usize,
+    /// max jobs admitted ahead of the slowest worker (backpressure bound)
+    pub queue_cap: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { workers: crate::config::default_workers(), queue_cap: 64 }
+    }
+}
+
+struct Queue<J> {
+    jobs: Mutex<VecDeque<(usize, J)>>,
+    available: Condvar,
+    space: Condvar,
+    closed: AtomicBool,
+    cancelled: AtomicBool,
+    cap: usize,
+}
+
+/// Run `jobs` (an ordered iterator of inputs) across `cfg.workers` threads,
+/// applying `work` to each; returns outputs in input order, or the first
+/// error encountered.
+pub fn run_jobs<J, T, E, F>(cfg: SchedulerConfig, jobs: Vec<J>, work: F) -> Result<Vec<T>, E>
+where
+    J: Send,
+    T: Send,
+    E: Send,
+    F: Fn(usize, J) -> Result<T, E> + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = cfg.workers.max(1).min(n);
+    if workers == 1 {
+        // fast path: no threads, still identical semantics
+        let mut out = Vec::with_capacity(n);
+        for (i, j) in jobs.into_iter().enumerate() {
+            out.push(work(i, j)?);
+        }
+        return Ok(out);
+    }
+
+    let queue = Queue {
+        jobs: Mutex::new(VecDeque::new()),
+        available: Condvar::new(),
+        space: Condvar::new(),
+        closed: AtomicBool::new(false),
+        cancelled: AtomicBool::new(false),
+        cap: cfg.queue_cap.max(1),
+    };
+    let results: Mutex<Vec<Option<Result<T, E>>>> = Mutex::new((0..n).map(|_| None).collect());
+
+    std::thread::scope(|s| {
+        let queue = &queue;
+        let results = &results;
+        let work = &work;
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            handles.push(s.spawn(move || loop {
+                let job = {
+                    let mut q = queue.jobs.lock().unwrap();
+                    loop {
+                        if let Some(j) = q.pop_front() {
+                            queue.space.notify_one();
+                            break Some(j);
+                        }
+                        if queue.closed.load(Ordering::Acquire) {
+                            break None;
+                        }
+                        q = queue.available.wait(q).unwrap();
+                    }
+                };
+                let Some((idx, input)) = job else { return };
+                if queue.cancelled.load(Ordering::Acquire) {
+                    continue; // drain without running
+                }
+                let res = work(idx, input);
+                if res.is_err() {
+                    queue.cancelled.store(true, Ordering::Release);
+                }
+                results.lock().unwrap()[idx] = Some(res);
+            }));
+        }
+        // producer with backpressure
+        for (i, j) in jobs.into_iter().enumerate() {
+            let mut q = queue.jobs.lock().unwrap();
+            while q.len() >= queue.cap {
+                q = queue.space.wait(q).unwrap();
+            }
+            q.push_back((i, j));
+            drop(q);
+            queue.available.notify_one();
+        }
+        queue.closed.store(true, Ordering::Release);
+        queue.available.notify_all();
+        for h in handles {
+            h.join().expect("scheduler worker panicked");
+        }
+    });
+
+    let slots = results.into_inner().unwrap();
+    let mut out = Vec::with_capacity(n);
+    for slot in slots {
+        match slot {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            // skipped due to cancellation: the error that caused the
+            // cancellation is elsewhere in the vec; find it
+            None => continue,
+        }
+    }
+    if out.len() != n {
+        // cancellation dropped some results but no Err slot survived the
+        // scan above — can't happen (cancel implies an Err slot), but keep
+        // the invariant explicit.
+        unreachable!("scheduler lost results without an error");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn preserves_order() {
+        let cfg = SchedulerConfig { workers: 4, queue_cap: 2 };
+        let jobs: Vec<usize> = (0..100).collect();
+        let out: Vec<usize> =
+            run_jobs(cfg, jobs, |_, j| Ok::<_, ()>(j * 2)).unwrap();
+        assert_eq!(out, (0..100).map(|j| j * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_fast_path() {
+        let cfg = SchedulerConfig { workers: 1, queue_cap: 1 };
+        let out: Vec<usize> = run_jobs(cfg, vec![1, 2, 3], |i, j| Ok::<_, ()>(i + j)).unwrap();
+        assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let cfg = SchedulerConfig::default();
+        let out: Vec<usize> = run_jobs(cfg, Vec::<usize>::new(), |_, j| Ok::<_, ()>(j)).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn propagates_error_and_cancels() {
+        let cfg = SchedulerConfig { workers: 3, queue_cap: 4 };
+        let ran = AtomicUsize::new(0);
+        let res: Result<Vec<usize>, String> = run_jobs(cfg, (0..200).collect(), |_, j| {
+            ran.fetch_add(1, Ordering::Relaxed);
+            if j == 5 {
+                Err(format!("job {j} failed"))
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                Ok(j)
+            }
+        });
+        assert_eq!(res.unwrap_err(), "job 5 failed");
+        // cancellation means not all 200 jobs ran
+        assert!(ran.load(Ordering::Relaxed) < 200, "no cancellation happened");
+    }
+
+    #[test]
+    fn backpressure_bounds_inflight() {
+        // queue cap 1 with slow workers: producer must block, never panic
+        let cfg = SchedulerConfig { workers: 2, queue_cap: 1 };
+        let out: Vec<usize> = run_jobs(cfg, (0..50).collect(), |_, j| {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+            Ok::<_, ()>(j)
+        })
+        .unwrap();
+        assert_eq!(out.len(), 50);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let jobs: Vec<usize> = (0..64).collect();
+        let run = |workers| {
+            let cfg = SchedulerConfig { workers, queue_cap: 8 };
+            run_jobs(cfg, jobs.clone(), |i, j| Ok::<_, ()>(i * 1000 + j)).unwrap()
+        };
+        let base = run(1);
+        for w in [2, 4, 16] {
+            assert_eq!(run(w), base, "workers={w}");
+        }
+    }
+}

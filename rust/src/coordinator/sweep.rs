@@ -1,0 +1,178 @@
+//! Cross-validation sweep orchestrator (paper Section 6): grid over
+//! alphabet size M (bit budget) × alphabet scalar C_alpha, for both GPFQ
+//! and the MSQ baseline, scoring test accuracy — the machinery behind
+//! Figure 1a, Table 1 and Table 2.
+
+use crate::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
+use crate::data::dataset::Dataset;
+use crate::eval::metrics::{accuracy, topk_accuracy};
+use crate::nn::network::Network;
+
+/// One grid cell result.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub method: Method,
+    pub levels: usize,
+    pub c_alpha: f64,
+    pub top1: f64,
+    pub top5: f64,
+    pub seconds: f64,
+}
+
+/// Sweep results plus the analog reference accuracy.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub analog_top1: f64,
+    pub analog_top5: f64,
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepResult {
+    /// Best point for a method (by top-1).
+    pub fn best(&self, method: Method) -> Option<&SweepPoint> {
+        self.points
+            .iter()
+            .filter(|p| p.method == method)
+            .max_by(|a, b| a.top1.partial_cmp(&b.top1).unwrap())
+    }
+
+    /// Accuracy spread (max − min) across C_alpha for a method at fixed M —
+    /// the paper's "MSQ is unstable in C_alpha, GPFQ is not" observation.
+    pub fn spread(&self, method: Method, levels: usize) -> f64 {
+        let accs: Vec<f64> = self
+            .points
+            .iter()
+            .filter(|p| p.method == method && p.levels == levels)
+            .map(|p| p.top1)
+            .collect();
+        if accs.is_empty() {
+            return 0.0;
+        }
+        let max = accs.iter().cloned().fold(f64::MIN, f64::max);
+        let min = accs.iter().cloned().fold(f64::MAX, f64::min);
+        max - min
+    }
+}
+
+/// Sweep configuration.
+pub struct SweepConfig {
+    pub levels: Vec<usize>,
+    pub c_alphas: Vec<f64>,
+    pub methods: Vec<Method>,
+    pub fc_only: bool,
+    pub workers: usize,
+    /// also compute top-5 (Table 2)
+    pub topk: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            levels: vec![3],
+            c_alphas: vec![1.0, 2.0, 3.0, 4.0],
+            methods: vec![Method::Gpfq, Method::Msq],
+            fc_only: false,
+            workers: crate::config::default_workers(),
+            topk: false,
+        }
+    }
+}
+
+/// Run the full grid.  `x_quant` are the samples used to learn the
+/// quantization; `test` scores each quantized network.
+pub fn sweep(
+    net: &Network,
+    x_quant: &crate::nn::matrix::Matrix,
+    test: &Dataset,
+    cfg: &SweepConfig,
+) -> SweepResult {
+    let analog_top1 = accuracy(net, test);
+    let analog_top5 = if cfg.topk { topk_accuracy(net, test, 5) } else { 0.0 };
+    let mut points = Vec::new();
+    for &method in &cfg.methods {
+        for &levels in &cfg.levels {
+            for &c_alpha in &cfg.c_alphas {
+                let pcfg = PipelineConfig {
+                    method,
+                    levels,
+                    c_alpha: c_alpha as f32,
+                    fc_only: cfg.fc_only,
+                    workers: cfg.workers,
+                    ..Default::default()
+                };
+                let out = quantize_network(net, x_quant, &pcfg);
+                let top1 = accuracy(&out.network, test);
+                let top5 = if cfg.topk { topk_accuracy(&out.network, test, 5) } else { 0.0 };
+                points.push(SweepPoint {
+                    method,
+                    levels,
+                    c_alpha,
+                    top1,
+                    top5,
+                    seconds: out.total_seconds,
+                });
+            }
+        }
+    }
+    SweepResult { analog_top1, analog_top5, points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::nn::conv::ImgShape;
+    use crate::nn::network::mnist_mlp;
+    use crate::train::{train, TrainConfig};
+
+    fn setup() -> (Network, Dataset, Dataset) {
+        let spec = SynthSpec {
+            classes: 3,
+            shape: ImgShape { h: 8, w: 8, c: 1 },
+            blobs: 4,
+            noise: 0.15,
+            max_shift: 1,
+            seed: 21,
+        };
+        let tr = generate(&spec, 240, 0, false);
+        let te = generate(&spec, 120, 1, false);
+        let mut net = mnist_mlp(2, 64, &[32], 3);
+        train(&mut net, &tr, &TrainConfig { epochs: 8, batch: 32, lr: 0.05, momentum: 0.9, seed: 2, verbose: false });
+        (net, tr, te)
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_picks_best() {
+        let (net, tr, te) = setup();
+        let cfg = SweepConfig {
+            levels: vec![3],
+            c_alphas: vec![2.0, 4.0],
+            methods: vec![Method::Gpfq, Method::Msq],
+            ..Default::default()
+        };
+        let res = sweep(&net, &tr.x.rows_slice(0, 120), &te, &cfg);
+        assert_eq!(res.points.len(), 4);
+        assert!(res.analog_top1 > 0.7);
+        let best_g = res.best(Method::Gpfq).unwrap();
+        let best_m = res.best(Method::Msq).unwrap();
+        assert!(best_g.top1 >= best_m.top1 - 0.05, "gpfq {} msq {}", best_g.top1, best_m.top1);
+        assert!(best_g.top1 > 0.5, "best gpfq {}", best_g.top1);
+    }
+
+    #[test]
+    fn spread_computation() {
+        let res = SweepResult {
+            analog_top1: 0.9,
+            analog_top5: 0.0,
+            points: vec![
+                SweepPoint { method: Method::Gpfq, levels: 3, c_alpha: 1.0, top1: 0.8, top5: 0.0, seconds: 0.0 },
+                SweepPoint { method: Method::Gpfq, levels: 3, c_alpha: 2.0, top1: 0.85, top5: 0.0, seconds: 0.0 },
+                SweepPoint { method: Method::Msq, levels: 3, c_alpha: 1.0, top1: 0.2, top5: 0.0, seconds: 0.0 },
+                SweepPoint { method: Method::Msq, levels: 3, c_alpha: 2.0, top1: 0.7, top5: 0.0, seconds: 0.0 },
+            ],
+        };
+        assert!((res.spread(Method::Gpfq, 3) - 0.05).abs() < 1e-12);
+        assert!((res.spread(Method::Msq, 3) - 0.5).abs() < 1e-12);
+        assert_eq!(res.spread(Method::Gpfq, 16), 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Labeled dataset container with deterministic splits and minibatching.
+
+use crate::data::rng::Pcg;
+use crate::nn::matrix::Matrix;
+
+/// A supervised dataset: one sample per row of `x`, integer labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Matrix,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Matrix, labels: Vec<usize>, classes: usize) -> Self {
+        assert_eq!(x.rows, labels.len(), "samples != labels");
+        assert!(labels.iter().all(|&l| l < classes), "label out of range");
+        Dataset { x, labels, classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    /// One-hot encode the labels.
+    pub fn one_hot(&self) -> Matrix {
+        let mut y = Matrix::zeros(self.len(), self.classes);
+        for (r, &l) in self.labels.iter().enumerate() {
+            *y.at_mut(r, l) = 1.0;
+        }
+        y
+    }
+
+    /// Deterministic shuffled train/test split.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        Pcg::seed(seed).shuffle(&mut idx);
+        let n_train = ((self.len() as f64) * train_frac).round() as usize;
+        let (tr, te) = idx.split_at(n_train.min(self.len()));
+        (self.subset(tr), self.subset(te))
+    }
+
+    /// Gather a subset by sample indices.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.gather_rows(idx),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+            classes: self.classes,
+        }
+    }
+
+    /// First `n` samples (the paper quantizes with a prefix of the training
+    /// set, e.g. "the first 5,000 images" for CIFAR10).
+    pub fn take(&self, n: usize) -> Dataset {
+        let idx: Vec<usize> = (0..n.min(self.len())).collect();
+        self.subset(&idx)
+    }
+
+    /// Deterministic minibatch index schedule for one epoch.
+    pub fn batches(&self, batch: usize, rng: &mut Pcg) -> Vec<Vec<usize>> {
+        assert!(batch > 0);
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        idx.chunks(batch).map(|c| c.to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Matrix::from_fn(10, 3, |r, c| (r * 3 + c) as f32);
+        let labels = (0..10).map(|i| i % 2).collect();
+        Dataset::new(x, labels, 2)
+    }
+
+    #[test]
+    fn one_hot_rows() {
+        let d = toy();
+        let y = d.one_hot();
+        assert_eq!((y.rows, y.cols), (10, 2));
+        for r in 0..10 {
+            assert_eq!(y.at(r, d.labels[r]), 1.0);
+            let sum: f32 = y.row(r).iter().sum();
+            assert_eq!(sum, 1.0);
+        }
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = toy();
+        let (tr, te) = d.split(0.7, 1);
+        assert_eq!(tr.len(), 7);
+        assert_eq!(te.len(), 3);
+        // same seed reproduces
+        let (tr2, _) = d.split(0.7, 1);
+        assert_eq!(tr.labels, tr2.labels);
+    }
+
+    #[test]
+    fn subset_gathers() {
+        let d = toy();
+        let s = d.subset(&[9, 0]);
+        assert_eq!(s.labels, vec![1, 0]);
+        assert_eq!(s.x.row(0), d.x.row(9));
+    }
+
+    #[test]
+    fn batches_cover_everything() {
+        let d = toy();
+        let mut rng = Pcg::seed(0);
+        let batches = d.batches(3, &mut rng);
+        let mut all: Vec<usize> = batches.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "label out of range")]
+    fn rejects_bad_labels() {
+        Dataset::new(Matrix::zeros(1, 1), vec![5], 2);
+    }
+}

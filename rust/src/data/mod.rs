@@ -1,0 +1,10 @@
+//! Data substrate: deterministic RNG, dataset container, and the synthetic
+//! stand-ins for MNIST / CIFAR10 / ImageNet plus the theory data models
+//! (see DESIGN.md §5 Substitutions).
+
+pub mod dataset;
+pub mod rng;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use rng::Pcg;

@@ -1,0 +1,314 @@
+//! Synthetic dataset generators.
+//!
+//! MNIST / CIFAR10 / ILSVRC2012 are not reachable in the offline build
+//! environment, so every experiment runs on deterministic synthetic stand-
+//! ins (DESIGN.md §5): class-prototype images plus noise and augmentation.
+//! The generators preserve the properties GPFQ's claims rest on —
+//! correlated, non-Gaussian features; a genuine train/test generalization
+//! gap; activation matrices that are overparameterized relative to the
+//! quantization sample count — while remaining fully reproducible from a
+//! seed.
+//!
+//! Also here: the Gaussian and low-rank data models of the theory
+//! (Theorems 2/3, Lemma 16).
+
+use crate::data::dataset::Dataset;
+use crate::data::rng::Pcg;
+use crate::nn::conv::ImgShape;
+use crate::nn::matrix::Matrix;
+
+/// Parameters of a prototype-based image classification task.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub classes: usize,
+    pub shape: ImgShape,
+    /// number of random low-frequency blobs composing each class prototype
+    pub blobs: usize,
+    /// additive Gaussian pixel noise
+    pub noise: f32,
+    /// max |shift| in pixels applied per sample (sub-prototype variability)
+    pub max_shift: usize,
+    pub seed: u64,
+}
+
+/// "MNIST-like": 28×28 grayscale, 10 classes of blob prototypes.  Noise and
+/// shift levels are tuned so a trained MLP lands around 0.9 test accuracy —
+/// a real generalization gap, so quantization-induced drops are visible.
+pub fn mnist_like_spec(seed: u64) -> SynthSpec {
+    SynthSpec {
+        classes: 10,
+        shape: ImgShape { h: 28, w: 28, c: 1 },
+        blobs: 6,
+        noise: 0.9,
+        max_shift: 4,
+        seed,
+    }
+}
+
+/// "CIFAR-like": 32×32×3, 10 classes, noisier.
+pub fn cifar_like_spec(seed: u64) -> SynthSpec {
+    SynthSpec {
+        classes: 10,
+        shape: ImgShape { h: 32, w: 32, c: 3 },
+        blobs: 8,
+        noise: 1.1,
+        max_shift: 4,
+        seed,
+    }
+}
+
+/// "ImageNet-like": more classes, bigger canvas (scaled down from 224²).
+pub fn imagenet_like_spec(seed: u64, classes: usize) -> SynthSpec {
+    SynthSpec {
+        classes,
+        shape: ImgShape { h: 32, w: 32, c: 3 },
+        blobs: 10,
+        noise: 1.0,
+        max_shift: 4,
+        seed,
+    }
+}
+
+/// Smooth radial blob centered at (cy, cx).
+fn add_blob(img: &mut [f32], shape: ImgShape, cy: f64, cx: f64, sigma: f64, amp: f64, ch: usize) {
+    for y in 0..shape.h {
+        for x in 0..shape.w {
+            let d2 = ((y as f64 - cy).powi(2) + (x as f64 - cx).powi(2)) / (2.0 * sigma * sigma);
+            img[shape.idx(y, x, ch)] += (amp * (-d2).exp()) as f32;
+        }
+    }
+}
+
+/// Class prototypes: each class is a fixed sum of random blobs per channel.
+pub fn prototypes(spec: &SynthSpec) -> Vec<Vec<f32>> {
+    let mut rng = Pcg::new(spec.seed, 7);
+    (0..spec.classes)
+        .map(|_| {
+            let mut img = vec![0.0f32; spec.shape.len()];
+            for _ in 0..spec.blobs {
+                let cy = rng.uniform_in(2.0, spec.shape.h as f64 - 2.0);
+                let cx = rng.uniform_in(2.0, spec.shape.w as f64 - 2.0);
+                let sigma = rng.uniform_in(1.2, spec.shape.h as f64 / 5.0);
+                let amp = rng.uniform_in(0.4, 1.0) * if rng.uniform() < 0.3 { -1.0 } else { 1.0 };
+                let ch = rng.below(spec.shape.c);
+                add_blob(&mut img, spec.shape, cy, cx, sigma, amp, ch);
+            }
+            img
+        })
+        .collect()
+}
+
+/// Integer-pixel shift with zero fill.
+fn shift_img(img: &[f32], shape: ImgShape, dy: isize, dx: isize) -> Vec<f32> {
+    let mut out = vec![0.0f32; shape.len()];
+    for y in 0..shape.h {
+        let sy = y as isize - dy;
+        if sy < 0 || sy >= shape.h as isize {
+            continue;
+        }
+        for x in 0..shape.w {
+            let sx = x as isize - dx;
+            if sx < 0 || sx >= shape.w as isize {
+                continue;
+            }
+            for c in 0..shape.c {
+                out[shape.idx(y, x, c)] = img[shape.idx(sy as usize, sx as usize, c)];
+            }
+        }
+    }
+    out
+}
+
+/// Horizontal flip (the paper's CIFAR augmentation).
+pub fn hflip(img: &[f32], shape: ImgShape) -> Vec<f32> {
+    let mut out = vec![0.0f32; shape.len()];
+    for y in 0..shape.h {
+        for x in 0..shape.w {
+            for c in 0..shape.c {
+                out[shape.idx(y, x, c)] = img[shape.idx(y, shape.w - 1 - x, c)];
+            }
+        }
+    }
+    out
+}
+
+/// Generate `n` labeled samples: prototype[label] shifted + noised
+/// (+ random hflip when `flip`).
+pub fn generate(spec: &SynthSpec, n: usize, stream: u64, flip: bool) -> Dataset {
+    let protos = prototypes(spec);
+    let mut rng = Pcg::new(spec.seed, 100 + stream);
+    let mut x = Matrix::zeros(n, spec.shape.len());
+    let mut labels = Vec::with_capacity(n);
+    for r in 0..n {
+        let label = rng.below(spec.classes);
+        let s = spec.max_shift as isize;
+        let dy = rng.uniform_in(-(s as f64), s as f64 + 1.0).floor() as isize;
+        let dx = rng.uniform_in(-(s as f64), s as f64 + 1.0).floor() as isize;
+        let mut img = shift_img(&protos[label], spec.shape, dy.clamp(-s, s), dx.clamp(-s, s));
+        if flip && rng.uniform() < 0.5 {
+            img = hflip(&img, spec.shape);
+        }
+        // per-sample contrast jitter + pixel noise: keeps the task learnable
+        // but leaves a genuine generalization gap
+        let gain = rng.uniform_in(0.6, 1.4) as f32;
+        for v in &mut img {
+            *v = *v * gain + (rng.normal() as f32) * spec.noise;
+        }
+        x.row_mut(r).copy_from_slice(&img);
+        labels.push(label);
+    }
+    Dataset::new(x, labels, spec.classes)
+}
+
+// ---------------------------------------------------------------------------
+// theory data models
+// ---------------------------------------------------------------------------
+
+/// Gaussian data matrix X ∈ R^{m×N} with N(0, σ²) i.i.d. entries — the
+/// model of Theorems 2/3 (columns X_t ~ N(0, σ² I_m)).
+pub fn gaussian_data(rng: &mut Pcg, m: usize, n: usize, sigma: f64) -> Matrix {
+    Matrix::from_vec(m, n, (0..m * n).map(|_| (rng.normal() * sigma) as f32).collect())
+}
+
+/// Lemma 16 model: X = Z·A with Zᵀ Z = I_d (a random d-dimensional isometry
+/// of R^m) and A ∈ R^{d×N} i.i.d. N(0, σ²): feature vectors living in a
+/// d-dimensional subspace.
+pub fn subspace_data(rng: &mut Pcg, m: usize, d: usize, n: usize, sigma: f64) -> Matrix {
+    assert!(d <= m);
+    // random orthonormal columns via Gram-Schmidt on a Gaussian matrix
+    let g = gaussian_data(rng, d, m, 1.0);
+    let z_t = crate::nn::linalg::orthonormal_rows(&g, 1e-9); // (d × m), rows o.n.
+    assert_eq!(z_t.rows, d, "rank deficiency in subspace basis");
+    let a = gaussian_data(rng, d, n, sigma);
+    z_t.transpose().matmul(&a)
+}
+
+/// Paper Section 7 ("clustered feature data") extension model: columns X_t
+/// drawn from k cluster centers plus small within-cluster noise.  The
+/// effective intrinsic complexity is ~k (centers) + noise dimensions, so
+/// Lemma 16's intuition predicts error governed by k, not m, for small
+/// within-cluster spread.
+pub fn clustered_data(rng: &mut Pcg, m: usize, k: usize, n: usize, spread: f64) -> Matrix {
+    assert!(k >= 1);
+    let centers: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(m)).collect();
+    let mut x = Matrix::zeros(m, n);
+    for t in 0..n {
+        let c = &centers[rng.below(k)];
+        let col: Vec<f32> = c
+            .iter()
+            .map(|&v| v + (rng.normal() * spread) as f32)
+            .collect();
+        x.set_col(t, &col);
+    }
+    x
+}
+
+/// A generic weight vector with entries uniform in [−1, 1] (Assumption 2,
+/// and ‖w‖₂ ∝ √N as Theorem 2's "generic vector" discussion assumes),
+/// kept ε-separated from the ternary alphabet (Theorem 2's hypothesis).
+pub fn generic_weights(rng: &mut Pcg, n: usize, eps: f64) -> Vec<f32> {
+    (0..n)
+        .map(|_| loop {
+            let w = rng.uniform_in(-1.0, 1.0);
+            let dist = [-1.0f64, 0.0, 1.0].iter().map(|a| (w - a).abs()).fold(f64::MAX, f64::min);
+            if dist > eps {
+                break w as f32;
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic() {
+        let spec = mnist_like_spec(3);
+        let a = generate(&spec, 20, 0, false);
+        let b = generate(&spec, 20, 0, false);
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.labels, b.labels);
+        let c = generate(&spec, 20, 1, false);
+        assert_ne!(a.x.data, c.x.data, "streams must differ");
+    }
+
+    #[test]
+    fn classes_are_separable_by_prototype_distance() {
+        // nearest-prototype classification should beat chance by a lot —
+        // the task must be learnable for the accuracy experiments to mean
+        // anything.
+        let spec = mnist_like_spec(5);
+        let protos = prototypes(&spec);
+        let d = generate(&spec, 100, 2, false);
+        let mut correct = 0;
+        for r in 0..d.len() {
+            let row = d.x.row(r);
+            let mut best = 0usize;
+            let mut best_d = f64::MAX;
+            for (k, p) in protos.iter().enumerate() {
+                let dist: f64 = row.iter().zip(p).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+                if dist < best_d {
+                    best_d = dist;
+                    best = k;
+                }
+            }
+            if best == d.labels[r] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 60, "nearest-prototype acc {correct}/100");
+    }
+
+    #[test]
+    fn hflip_involution() {
+        let shape = ImgShape { h: 2, w: 3, c: 1 };
+        let img: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        assert_eq!(hflip(&hflip(&img, shape), shape), img);
+        assert_eq!(hflip(&img, shape), vec![2., 1., 0., 5., 4., 3.]);
+    }
+
+    #[test]
+    fn shift_moves_mass() {
+        let shape = ImgShape { h: 3, w: 3, c: 1 };
+        let mut img = vec![0.0f32; 9];
+        img[shape.idx(1, 1, 0)] = 1.0;
+        let s = shift_img(&img, shape, 1, 0);
+        assert_eq!(s[shape.idx(2, 1, 0)], 1.0);
+        assert_eq!(s.iter().sum::<f32>(), 1.0);
+        // shifting off the edge loses mass
+        let far = shift_img(&img, shape, 3, 0);
+        assert_eq!(far.iter().sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    fn gaussian_data_moments() {
+        let mut rng = Pcg::seed(1);
+        let x = gaussian_data(&mut rng, 40, 50, 0.5);
+        let mean: f64 = x.data.iter().map(|&v| v as f64).sum::<f64>() / 2000.0;
+        let var: f64 = x.data.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / 2000.0;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 0.25).abs() < 0.05);
+    }
+
+    #[test]
+    fn subspace_data_has_rank_d() {
+        let mut rng = Pcg::seed(2);
+        let x = subspace_data(&mut rng, 16, 4, 40, 1.0);
+        assert_eq!((x.rows, x.cols), (16, 40));
+        // rank via Gram-Schmidt on the transpose's rows (columns of X span)
+        let basis = crate::nn::linalg::orthonormal_rows(&x.transpose(), 1e-4);
+        assert_eq!(basis.rows, 4, "column space rank");
+    }
+
+    #[test]
+    fn generic_weights_eps_separated() {
+        let mut rng = Pcg::seed(3);
+        let w = generic_weights(&mut rng, 500, 0.05);
+        for v in w {
+            let d = [-1.0f32, 0.0, 1.0].iter().map(|a| (v - a).abs()).fold(f32::MAX, f32::min);
+            assert!(d > 0.05);
+            assert!((-1.0..=1.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Classification metrics: top-1 / top-k accuracy (the quantities of the
+//! paper's Figure 1, Table 1 and Table 2).
+
+use crate::data::dataset::Dataset;
+use crate::nn::activations::{argmax_rows, topk_rows};
+use crate::nn::matrix::Matrix;
+use crate::nn::network::Network;
+
+/// Top-1 accuracy of `net` on `data`, evaluated in chunks to bound memory.
+pub fn accuracy(net: &Network, data: &Dataset) -> f64 {
+    topk_accuracy(net, data, 1)
+}
+
+/// Top-k accuracy (paper Table 2 reports top-1 and top-5).
+pub fn topk_accuracy(net: &Network, data: &Dataset, k: usize) -> f64 {
+    let chunk = 512usize;
+    let mut correct = 0usize;
+    let mut row = 0usize;
+    while row < data.len() {
+        let end = (row + chunk).min(data.len());
+        let xb = data.x.rows_slice(row, end);
+        let logits = net.forward(&xb);
+        if k == 1 {
+            for (i, p) in argmax_rows(&logits).into_iter().enumerate() {
+                if p == data.labels[row + i] {
+                    correct += 1;
+                }
+            }
+        } else {
+            for (i, tk) in topk_rows(&logits, k).into_iter().enumerate() {
+                if tk.contains(&data.labels[row + i]) {
+                    correct += 1;
+                }
+            }
+        }
+        row = end;
+    }
+    correct as f64 / data.len().max(1) as f64
+}
+
+/// Accuracy given precomputed logits (for PJRT-path evaluation).
+pub fn accuracy_from_logits(logits: &Matrix, labels: &[usize]) -> f64 {
+    assert_eq!(logits.rows, labels.len());
+    let preds = argmax_rows(logits);
+    let correct = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::activations::Activation;
+    use crate::nn::network::{NetworkBuilder, Shape};
+
+    fn identity_net(dim: usize) -> Network {
+        // a dense layer with identity weights: logits = x
+        let mut b = NetworkBuilder::new(Shape::Flat(dim), 0);
+        b.dense(dim, Activation::None);
+        let mut net = b.build();
+        net.set_weights(0, Matrix::eye(dim));
+        net
+    }
+
+    #[test]
+    fn accuracy_identity_classifier() {
+        let net = identity_net(3);
+        let x = Matrix::from_vec(3, 3, vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]);
+        let d = Dataset::new(x.clone(), vec![0, 1, 2], 3);
+        assert_eq!(accuracy(&net, &d), 1.0);
+        let wrong = Dataset::new(x, vec![1, 2, 0], 3);
+        assert_eq!(accuracy(&net, &wrong), 0.0);
+    }
+
+    #[test]
+    fn topk_accuracy_widens() {
+        let net = identity_net(4);
+        // second-best class is the true label
+        let x = Matrix::from_vec(2, 4, vec![1.0, 0.9, 0., 0., 0., 0., 0.9, 1.0]);
+        let d = Dataset::new(x, vec![1, 2], 4);
+        assert_eq!(topk_accuracy(&net, &d, 1), 0.0);
+        assert_eq!(topk_accuracy(&net, &d, 2), 1.0);
+    }
+
+    #[test]
+    fn logits_accuracy() {
+        let logits = Matrix::from_vec(2, 2, vec![2.0, 1.0, 0.0, 3.0]);
+        assert_eq!(accuracy_from_logits(&logits, &[0, 1]), 1.0);
+        assert_eq!(accuracy_from_logits(&logits, &[1, 0]), 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Evaluation: accuracy metrics and paper-style reporting.
+
+pub mod metrics;
+pub mod report;
+
+pub use metrics::{accuracy, accuracy_from_logits, topk_accuracy};

@@ -1,0 +1,121 @@
+//! Paper-style reporting: accuracy tables, layer-progression curves and
+//! weight histograms, printed as markdown and dumped as CSV under
+//! `results/` (re-exported table machinery lives in `util::bench::Table`).
+
+use crate::nn::matrix::Matrix;
+use crate::util::bench::Table;
+use crate::util::stats::histogram;
+
+/// Format a fraction as the paper's 4-decimal accuracy style.
+pub fn acc(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+/// Render an ASCII histogram of quantized weights (Figure 2b analogue):
+/// one row per bin with a proportional bar.
+pub fn weight_histogram(title: &str, weights: &[f32], bins: usize) -> String {
+    let lo = weights.iter().cloned().fold(f32::MAX, f32::min).min(-1e-6);
+    let hi = weights.iter().cloned().fold(f32::MIN, f32::max).max(1e-6);
+    let counts = histogram(weights, lo, hi, bins);
+    let max = *counts.iter().max().unwrap_or(&1) as f64;
+    let mut out = format!("{title}  (n={}, range [{:.3}, {:.3}])\n", weights.len(), lo, hi);
+    let w = (hi - lo) / bins as f32;
+    for (i, &c) in counts.iter().enumerate() {
+        let bar_len = ((c as f64 / max.max(1.0)) * 50.0).round() as usize;
+        out.push_str(&format!(
+            "{:>8.3} | {:<50} {}\n",
+            lo + w * (i as f32 + 0.5),
+            "#".repeat(bar_len),
+            c
+        ));
+    }
+    out
+}
+
+/// Histogram table (CSV-able) of two weight sets side by side — the GPFQ vs
+/// MSQ comparison of Figure 2b.
+pub fn dual_histogram_table(
+    title: &str,
+    a_name: &str,
+    a: &[f32],
+    b_name: &str,
+    b: &[f32],
+    bins: usize,
+) -> Table {
+    let lo = a
+        .iter()
+        .chain(b)
+        .cloned()
+        .fold(f32::MAX, f32::min)
+        .min(-1e-6);
+    let hi = a
+        .iter()
+        .chain(b)
+        .cloned()
+        .fold(f32::MIN, f32::max)
+        .max(1e-6);
+    let ca = histogram(a, lo, hi, bins);
+    let cb = histogram(b, lo, hi, bins);
+    let w = (hi - lo) / bins as f32;
+    let mut t = Table::new(title, &["bin_center", a_name, b_name]);
+    for i in 0..bins {
+        t.row(vec![
+            format!("{:.4}", lo + w * (i as f32 + 0.5)),
+            ca[i].to_string(),
+            cb[i].to_string(),
+        ]);
+    }
+    t
+}
+
+/// Flatten all quantizable weights of a network into one vector (for the
+/// histogram figures).
+pub fn all_weights(net: &crate::nn::network::Network) -> Vec<f32> {
+    let mut out = Vec::new();
+    for l in &net.layers {
+        if let Some(w) = l.weights() {
+            out.extend_from_slice(&w.data);
+        }
+    }
+    out
+}
+
+/// Layer weights as a flat vector.
+pub fn layer_weights(w: &Matrix) -> Vec<f32> {
+    w.data.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acc_format() {
+        assert_eq!(acc(0.89221), "0.8922");
+    }
+
+    #[test]
+    fn histogram_renders() {
+        let w = vec![-1.0f32, -1.0, 0.0, 1.0, 1.0, 1.0];
+        let s = weight_histogram("demo", &w, 3);
+        assert!(s.contains("demo"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn dual_histogram_counts() {
+        let a = vec![-1.0f32, 0.0, 1.0];
+        let b = vec![1.0f32, 1.0, 1.0];
+        let t = dual_histogram_table("t", "gpfq", &a, "msq", &b, 3);
+        assert_eq!(t.rows.len(), 3);
+        // last bin holds all of b
+        assert_eq!(t.rows[2][2], "3");
+    }
+
+    #[test]
+    fn all_weights_concatenates() {
+        let net = crate::nn::network::mnist_mlp(0, 4, &[3], 2);
+        let w = all_weights(&net);
+        assert_eq!(w.len(), 4 * 3 + 3 * 2);
+    }
+}

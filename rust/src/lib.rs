@@ -1,0 +1,32 @@
+//! # GPFQ — A Greedy Algorithm for Quantizing Neural Networks
+//!
+//! Full-system reproduction of Lybrand & Saab (2020) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** (build time): the GPFQ inner loop as a Pallas kernel
+//!   (`python/compile/kernels/gpfq.py`), lowered to HLO text.
+//! * **L2** (build time): JAX forward/backward graphs
+//!   (`python/compile/model.py`) lowered alongside.
+//! * **L3** (this crate): the quantization coordinator — layer-sequential,
+//!   neuron-parallel pipeline ([`coordinator`]), PJRT artifact runtime
+//!   ([`runtime`]), plus every substrate the paper's experiments assume:
+//!   networks ([`nn`]), training ([`train`]), datasets ([`data`]),
+//!   quantizers and baselines ([`quant`]), theory checks ([`theory`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained, loading the HLO-text artifacts through the
+//! PJRT CPU client (`xla` crate) and falling back to the native [`quant`]
+//! implementations for shapes without artifacts.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod testing;
+pub mod theory;
+pub mod train;
+pub mod util;

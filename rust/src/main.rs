@@ -1,0 +1,10 @@
+//! `gpfq` — leader entrypoint for the quantization coordinator.
+//!
+//! See `gpfq help` for subcommands.  After `make artifacts`, the binary is
+//! self-contained: the PJRT runtime loads the AOT HLO-text modules and
+//! Python is never on the request path.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(gpfq::cli::run(argv));
+}

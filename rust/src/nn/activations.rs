@@ -1,0 +1,146 @@
+//! Activation functions (the rectifier φ of the paper) and the softmax /
+//! cross-entropy head used for classification.
+
+use crate::nn::matrix::Matrix;
+
+/// Per-layer activation choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    /// identity (logit layers)
+    None,
+}
+
+impl Activation {
+    pub fn apply(&self, z: &mut Matrix) {
+        if let Activation::Relu = self {
+            for v in &mut z.data {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Multiply `grad` elementwise by φ'(pre-activation).
+    pub fn backprop(&self, pre: &Matrix, grad: &mut Matrix) {
+        if let Activation::Relu = self {
+            debug_assert_eq!(pre.data.len(), grad.data.len());
+            for (g, &p) in grad.data.iter_mut().zip(&pre.data) {
+                if p <= 0.0 {
+                    *g = 0.0;
+                }
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Activation> {
+        match s {
+            "relu" => Some(Activation::Relu),
+            "none" | "linear" => Some(Activation::None),
+            _ => None,
+        }
+    }
+}
+
+/// Row-wise softmax (numerically stabilized).
+pub fn softmax_rows(z: &Matrix) -> Matrix {
+    let mut out = z.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Argmax per row (predicted class).
+pub fn argmax_rows(z: &Matrix) -> Vec<usize> {
+    (0..z.rows)
+        .map(|r| {
+            let row = z.row(r);
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Indices of the k largest entries per row, descending (top-5 accuracy).
+pub fn topk_rows(z: &Matrix, k: usize) -> Vec<Vec<usize>> {
+    (0..z.rows)
+        .map(|r| {
+            let row = z.row(r);
+            let mut idx: Vec<usize> = (0..row.len()).collect();
+            idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+            idx.truncate(k);
+            idx
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps() {
+        let mut z = Matrix::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -0.5]);
+        Activation::Relu.apply(&mut z);
+        assert_eq!(z.data, vec![0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let mut z = Matrix::from_vec(1, 2, vec![-1.0, 3.0]);
+        Activation::None.apply(&mut z);
+        assert_eq!(z.data, vec![-1.0, 3.0]);
+    }
+
+    #[test]
+    fn relu_backprop_masks() {
+        let pre = Matrix::from_vec(1, 3, vec![-1.0, 0.0, 2.0]);
+        let mut g = Matrix::from_vec(1, 3, vec![5.0, 5.0, 5.0]);
+        Activation::Relu.backprop(&pre, &mut g);
+        assert_eq!(g.data, vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let z = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 1000.0, 1000.0, 1000.0]);
+        let s = softmax_rows(&z);
+        for r in 0..2 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+        assert!(s.at(0, 2) > s.at(0, 1) && s.at(0, 1) > s.at(0, 0));
+        assert!((s.at(1, 0) - 1.0 / 3.0).abs() < 1e-5); // stable at huge logits
+    }
+
+    #[test]
+    fn argmax_and_topk() {
+        let z = Matrix::from_vec(2, 4, vec![0.1, 0.9, 0.3, 0.2, 5.0, 1.0, 4.0, 3.0]);
+        assert_eq!(argmax_rows(&z), vec![1, 0]);
+        let tk = topk_rows(&z, 2);
+        assert_eq!(tk[0], vec![1, 2]);
+        assert_eq!(tk[1], vec![0, 2]);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Activation::parse("relu"), Some(Activation::Relu));
+        assert_eq!(Activation::parse("none"), Some(Activation::None));
+        assert_eq!(Activation::parse("gelu"), None);
+    }
+}

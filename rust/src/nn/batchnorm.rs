@@ -1,0 +1,236 @@
+//! Batch normalization (Ioffe & Szegedy 2015), used by both of the paper's
+//! experimental architectures (Section 6.1/6.2).
+//!
+//! Features are normalized per channel: for dense activations the channel
+//! is the column; for conv activations (NHWC flattened) it is `col % c`.
+//! Training uses batch statistics and maintains running estimates;
+//! inference uses the running estimates.  The quantization pipeline treats
+//! BN layers as pass-through (they hold no quantizable weight matrix) —
+//! exactly what the paper does.
+
+use crate::nn::matrix::Matrix;
+
+#[derive(Debug, Clone)]
+pub struct BatchNorm {
+    /// number of channels normalized over
+    pub channels: usize,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub running_mean: Vec<f32>,
+    pub running_var: Vec<f32>,
+    pub eps: f32,
+    pub momentum: f32,
+}
+
+/// Cached forward state for the backward pass.
+#[derive(Debug, Clone)]
+pub struct BnCache {
+    pub x_hat: Matrix,
+    pub inv_std: Vec<f32>,
+    pub mean: Vec<f32>,
+}
+
+impl BatchNorm {
+    pub fn new(channels: usize) -> Self {
+        BatchNorm {
+            channels,
+            gamma: vec![1.0; channels],
+            beta: vec![0.0; channels],
+            running_mean: vec![0.0; channels],
+            running_var: vec![1.0; channels],
+            eps: 1e-5,
+            momentum: 0.9,
+        }
+    }
+
+    #[inline]
+    fn ch(&self, col: usize) -> usize {
+        col % self.channels
+    }
+
+    /// Inference-mode forward using running statistics.
+    pub fn forward_infer(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols % self.channels, 0, "cols {} not divisible by channels {}", x.cols, self.channels);
+        let mut out = x.clone();
+        let inv_std: Vec<f32> = self.running_var.iter().map(|v| 1.0 / (v + self.eps).sqrt()).collect();
+        for r in 0..out.rows {
+            let row = out.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                let ch = c % self.channels;
+                *v = self.gamma[ch] * (*v - self.running_mean[ch]) * inv_std[ch] + self.beta[ch];
+            }
+        }
+        out
+    }
+
+    /// Training-mode forward using batch statistics; updates running stats.
+    pub fn forward_train(&mut self, x: &Matrix) -> (Matrix, BnCache) {
+        assert_eq!(x.cols % self.channels, 0);
+        let groups = x.cols / self.channels; // spatial positions per channel
+        let count = (x.rows * groups) as f32;
+        let mut mean = vec![0.0f32; self.channels];
+        for r in 0..x.rows {
+            for (c, &v) in x.row(r).iter().enumerate() {
+                mean[self.ch(c)] += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= count;
+        }
+        let mut var = vec![0.0f32; self.channels];
+        for r in 0..x.rows {
+            for (c, &v) in x.row(r).iter().enumerate() {
+                let d = v - mean[self.ch(c)];
+                var[self.ch(c)] += d * d;
+            }
+        }
+        for v in &mut var {
+            *v /= count;
+        }
+        let inv_std: Vec<f32> = var.iter().map(|v| 1.0 / (v + self.eps).sqrt()).collect();
+        let mut x_hat = x.clone();
+        for r in 0..x_hat.rows {
+            let row = x_hat.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                let ch = c % self.channels;
+                *v = (*v - mean[ch]) * inv_std[ch];
+            }
+        }
+        let mut out = x_hat.clone();
+        for r in 0..out.rows {
+            let row = out.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                let ch = c % self.channels;
+                *v = self.gamma[ch] * *v + self.beta[ch];
+            }
+        }
+        for ch in 0..self.channels {
+            self.running_mean[ch] = self.momentum * self.running_mean[ch] + (1.0 - self.momentum) * mean[ch];
+            self.running_var[ch] = self.momentum * self.running_var[ch] + (1.0 - self.momentum) * var[ch];
+        }
+        (out, BnCache { x_hat, inv_std, mean })
+    }
+
+    /// Backward pass; returns dx and accumulates (dgamma, dbeta).
+    pub fn backward(&self, cache: &BnCache, dout: &Matrix, dgamma: &mut [f32], dbeta: &mut [f32]) -> Matrix {
+        let groups = dout.cols / self.channels;
+        let count = (dout.rows * groups) as f32;
+        // per-channel sums
+        let mut sum_dy = vec![0.0f32; self.channels];
+        let mut sum_dy_xhat = vec![0.0f32; self.channels];
+        for r in 0..dout.rows {
+            for (c, &dy) in dout.row(r).iter().enumerate() {
+                let ch = c % self.channels;
+                sum_dy[ch] += dy;
+                sum_dy_xhat[ch] += dy * cache.x_hat.at(r, c);
+            }
+        }
+        for ch in 0..self.channels {
+            dgamma[ch] += sum_dy_xhat[ch];
+            dbeta[ch] += sum_dy[ch];
+        }
+        let mut dx = Matrix::zeros(dout.rows, dout.cols);
+        for r in 0..dout.rows {
+            for c in 0..dout.cols {
+                let ch = c % self.channels;
+                let dy = dout.at(r, c);
+                let xh = cache.x_hat.at(r, c);
+                let v = self.gamma[ch] * cache.inv_std[ch] / count
+                    * (count * dy - sum_dy[ch] - xh * sum_dy_xhat[ch]);
+                *dx.at_mut(r, c) = v;
+            }
+        }
+        dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+
+    #[test]
+    fn train_forward_normalizes() {
+        let mut rng = Pcg::seed(1);
+        let mut bn = BatchNorm::new(3);
+        let x = Matrix::from_vec(64, 3, rng.uniform_vec(192, 5.0, 9.0));
+        let (out, _) = bn.forward_train(&x);
+        for ch in 0..3 {
+            let col: Vec<f64> = (0..64).map(|r| out.at(r, ch) as f64).collect();
+            let mean: f64 = col.iter().sum::<f64>() / 64.0;
+            let var: f64 = col.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / 64.0;
+            assert!(mean.abs() < 1e-4, "ch{ch} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "ch{ch} var {var}");
+        }
+    }
+
+    #[test]
+    fn infer_uses_running_stats() {
+        let mut bn = BatchNorm::new(1);
+        bn.running_mean = vec![2.0];
+        bn.running_var = vec![4.0];
+        bn.gamma = vec![3.0];
+        bn.beta = vec![1.0];
+        let x = Matrix::from_vec(1, 1, vec![4.0]);
+        let out = bn.forward_infer(&x);
+        // 3 * (4-2)/2 + 1 = 4
+        assert!((out.at(0, 0) - 4.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn conv_channel_grouping() {
+        // 2 channels over 2 spatial positions: cols [c0 c1 c0 c1]
+        let mut bn = BatchNorm::new(2);
+        let x = Matrix::from_vec(1, 4, vec![1.0, 10.0, 3.0, 20.0]);
+        let (out, _) = bn.forward_train(&x);
+        // channel 0 values {1,3} normalize to {-1, 1}; channel 1 {10,20} too
+        assert!((out.at(0, 0) + 1.0).abs() < 0.01);
+        assert!((out.at(0, 2) - 1.0).abs() < 0.01);
+        assert!((out.at(0, 1) + 1.0).abs() < 0.01);
+        assert!((out.at(0, 3) - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let mut rng = Pcg::seed(2);
+        let mut bn = BatchNorm::new(2);
+        bn.gamma = vec![1.3, 0.7];
+        bn.beta = vec![0.1, -0.2];
+        let x = Matrix::from_vec(5, 2, rng.normal_vec(10));
+        // loss = sum(out * R) for fixed random R
+        let rmat = Matrix::from_vec(5, 2, rng.normal_vec(10));
+        let loss = |bn: &mut BatchNorm, x: &Matrix| -> f64 {
+            let (out, _) = bn.forward_train(x);
+            out.data.iter().zip(&rmat.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        let (_, cache) = bn.clone().forward_train(&x);
+        let mut dgamma = vec![0.0; 2];
+        let mut dbeta = vec![0.0; 2];
+        let dx = bn.backward(&cache, &rmat, &mut dgamma, &mut dbeta);
+        let eps = 1e-3f32;
+        for idx in [0usize, 3, 7] {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let fd = (loss(&mut bn.clone(), &xp) - loss(&mut bn.clone(), &xm)) / (2.0 * eps as f64);
+            assert!(
+                (fd - dx.data[idx] as f64).abs() < 2e-2 * fd.abs().max(1.0),
+                "idx {idx}: fd {fd} vs dx {}",
+                dx.data[idx]
+            );
+        }
+        // dbeta = column sums of dout per channel
+        assert!((dbeta[0] as f64 - (0..5).map(|r| rmat.at(r, 0) as f64).sum::<f64>()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn running_stats_update() {
+        let mut bn = BatchNorm::new(1);
+        bn.momentum = 0.5;
+        let x = Matrix::from_vec(4, 1, vec![2.0, 2.0, 2.0, 2.0]);
+        bn.forward_train(&x);
+        assert!((bn.running_mean[0] - 1.0).abs() < 1e-6); // 0.5*0 + 0.5*2
+        assert!((bn.running_var[0] - 0.5).abs() < 1e-6); // 0.5*1 + 0.5*0
+    }
+}

@@ -1,0 +1,233 @@
+//! Convolution as im2col + matmul (paper Section 6.2).
+//!
+//! The paper quantizes convolutional kernels by vectorizing each kernel and
+//! treating the image *patches* as the data matrix: "if we were to vectorize
+//! both the kernel and the image patches then we could take the usual inner
+//! product on vectors and reduce back to the case of a multilayer
+//! perceptron".  We therefore make im2col the primitive: the same patch
+//! matrix drives the forward pass (patches · K), the backward pass and the
+//! GPFQ quantization data for the layer.
+//!
+//! Layout: activations are NHWC, flattened per sample into matrix rows of
+//! length h*w*c; patch rows are ordered (sample, out_y, out_x) and each
+//! patch flattens (dy, dx, channel) — identical to `python/compile/model.py
+//! ::im2col`, which pytest cross-checks against `lax.conv`.
+
+use crate::nn::matrix::Matrix;
+
+/// Spatial shape of conv activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ImgShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl ImgShape {
+    pub fn len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    #[inline]
+    pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        (y * self.w + x) * self.c + ch
+    }
+}
+
+/// Output spatial size of a valid convolution.
+pub fn conv_out(h: usize, k: usize, stride: usize) -> usize {
+    assert!(h >= k && stride > 0, "conv: input {h} < kernel {k} or stride 0");
+    (h - k) / stride + 1
+}
+
+/// Extract conv patches: input (batch, h*w*c) → (batch*oh*ow, kh*kw*c).
+pub fn im2col(x: &Matrix, shape: ImgShape, kh: usize, kw: usize, stride: usize) -> Matrix {
+    assert_eq!(x.cols, shape.len(), "activation width != shape");
+    let oh = conv_out(shape.h, kh, stride);
+    let ow = conv_out(shape.w, kw, stride);
+    let patch_len = kh * kw * shape.c;
+    let mut out = Matrix::zeros(x.rows * oh * ow, patch_len);
+    for b in 0..x.rows {
+        let row = x.row(b);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = out.row_mut((b * oh + oy) * ow + ox);
+                let mut k = 0usize;
+                for dy in 0..kh {
+                    let y = oy * stride + dy;
+                    // copy kw*c contiguous channels per dy when stride over x
+                    // is 1 within the patch (always true: patch x's are
+                    // consecutive) — contiguous row copy per (dy, dx)
+                    for dx in 0..kw {
+                        let x0 = ox * stride + dx;
+                        let src = shape.idx(y, x0, 0);
+                        dst[k..k + shape.c].copy_from_slice(&row[src..src + shape.c]);
+                        k += shape.c;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Scatter-add patch gradients back to input gradients (adjoint of im2col).
+pub fn col2im(
+    dpatches: &Matrix,
+    batch: usize,
+    shape: ImgShape,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+) -> Matrix {
+    let oh = conv_out(shape.h, kh, stride);
+    let ow = conv_out(shape.w, kw, stride);
+    assert_eq!(dpatches.rows, batch * oh * ow);
+    assert_eq!(dpatches.cols, kh * kw * shape.c);
+    let mut dx = Matrix::zeros(batch, shape.len());
+    for b in 0..batch {
+        let drow = dx.row_mut(b);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let src = dpatches.row((b * oh + oy) * ow + ox);
+                let mut k = 0usize;
+                for dy in 0..kh {
+                    let y = oy * stride + dy;
+                    for dx_ in 0..kw {
+                        let x0 = ox * stride + dx_;
+                        let dst = shape.idx(y, x0, 0);
+                        for c in 0..shape.c {
+                            drow[dst + c] += src[k + c];
+                        }
+                        k += shape.c;
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Reshape conv matmul output (batch*oh*ow, cout) → (batch, oh*ow*cout).
+/// Pure metadata: the row ordering already matches the NHWC flattening.
+pub fn fold_output(out: Matrix, batch: usize) -> Matrix {
+    assert_eq!(out.rows % batch, 0);
+    let per = out.rows / batch;
+    Matrix::from_vec(batch, per * out.cols, out.data)
+}
+
+/// Inverse of [`fold_output`].
+pub fn unfold_output(x: &Matrix, cout: usize) -> Matrix {
+    assert_eq!(x.cols % cout, 0);
+    let per = x.cols / cout;
+    Matrix::from_vec(x.rows * per, cout, x.data.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+
+    /// naive direct convolution oracle
+    fn conv_direct(x: &Matrix, shape: ImgShape, k4: &[f32], kh: usize, kw: usize, cout: usize, stride: usize) -> Matrix {
+        let oh = conv_out(shape.h, kh, stride);
+        let ow = conv_out(shape.w, kw, stride);
+        let mut out = Matrix::zeros(x.rows, oh * ow * cout);
+        for b in 0..x.rows {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for co in 0..cout {
+                        let mut s = 0.0f32;
+                        for dy in 0..kh {
+                            for dx in 0..kw {
+                                for c in 0..shape.c {
+                                    let xi = x.at(b, shape.idx(oy * stride + dy, ox * stride + dx, c));
+                                    let ki = k4[((dy * kw + dx) * shape.c + c) * cout + co];
+                                    s += xi * ki;
+                                }
+                            }
+                        }
+                        out.data[b * (oh * ow * cout) + (oy * ow + ox) * cout + co] = s;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn im2col_shapes() {
+        let shape = ImgShape { h: 8, w: 8, c: 3 };
+        let x = Matrix::zeros(2, shape.len());
+        let p = im2col(&x, shape, 3, 3, 1);
+        assert_eq!((p.rows, p.cols), (2 * 36, 27));
+        let p2 = im2col(&x, shape, 2, 2, 2);
+        assert_eq!((p2.rows, p2.cols), (2 * 16, 12));
+    }
+
+    #[test]
+    fn im2col_matmul_matches_direct_conv() {
+        let mut rng = Pcg::seed(1);
+        let shape = ImgShape { h: 6, w: 5, c: 2 };
+        let (kh, kw, cout, stride) = (3, 2, 4, 1);
+        let x = Matrix::from_vec(3, shape.len(), rng.normal_vec(3 * shape.len()));
+        let kflat = rng.normal_vec(kh * kw * shape.c * cout);
+        let kmat = Matrix::from_vec(kh * kw * shape.c, cout, kflat.clone());
+        let got = fold_output(im2col(&x, shape, kh, kw, stride).matmul(&kmat), 3);
+        let want = conv_direct(&x, shape, &kflat, kh, kw, cout, stride);
+        assert!(got.sub(&want).fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn im2col_matmul_matches_direct_conv_stride2() {
+        let mut rng = Pcg::seed(2);
+        let shape = ImgShape { h: 8, w: 8, c: 1 };
+        let (kh, kw, cout, stride) = (2, 2, 3, 2);
+        let x = Matrix::from_vec(2, shape.len(), rng.normal_vec(2 * shape.len()));
+        let kflat = rng.normal_vec(kh * kw * cout);
+        let kmat = Matrix::from_vec(kh * kw, cout, kflat.clone());
+        let got = fold_output(im2col(&x, shape, kh, kw, stride).matmul(&kmat), 2);
+        let want = conv_direct(&x, shape, &kflat, kh, kw, cout, stride);
+        assert!(got.sub(&want).fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), p> == <x, col2im(p)> for random x, p
+        let mut rng = Pcg::seed(3);
+        let shape = ImgShape { h: 5, w: 5, c: 2 };
+        let (kh, kw, stride) = (3, 3, 1);
+        let x = Matrix::from_vec(2, shape.len(), rng.normal_vec(2 * shape.len()));
+        let cols = im2col(&x, shape, kh, kw, stride);
+        let p = Matrix::from_vec(cols.rows, cols.cols, rng.normal_vec(cols.rows * cols.cols));
+        let lhs: f64 = cols.data.iter().zip(&p.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let back = col2im(&p, 2, shape, kh, kw, stride);
+        let rhs: f64 = x.data.iter().zip(&back.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn fold_unfold_roundtrip() {
+        let mut rng = Pcg::seed(4);
+        let out = Matrix::from_vec(12, 5, rng.normal_vec(60));
+        let folded = fold_output(out.clone(), 3);
+        assert_eq!((folded.rows, folded.cols), (3, 20));
+        let back = unfold_output(&folded, 5);
+        assert_eq!(back.data, out.data);
+    }
+
+    #[test]
+    fn conv_out_sizes() {
+        assert_eq!(conv_out(8, 3, 1), 6);
+        assert_eq!(conv_out(8, 2, 2), 4);
+        assert_eq!(conv_out(3, 3, 1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "conv: input")]
+    fn conv_out_rejects_small_input() {
+        conv_out(2, 3, 1);
+    }
+}

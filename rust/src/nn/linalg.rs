@@ -1,0 +1,253 @@
+//! Small dense linear-algebra kernels used by the GSW baseline (least
+//! squares via Cholesky) and by the theory experiments (orthonormal bases
+//! of the data span for Theorem 3's `z = Vg` sampling).
+
+use crate::nn::matrix::{axpy, dot, norm_sq, Matrix};
+
+/// Cholesky factorization of a symmetric positive-definite matrix.
+/// Returns lower-triangular L with A = L Lᵀ, or None if not SPD.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = s.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (s / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve A x = b for SPD A via Cholesky (forward + back substitution).
+pub fn cholesky_solve(a: &Matrix, b: &[f32]) -> Option<Vec<f32>> {
+    let l = cholesky(a)?;
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    // forward: L y = b
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l.at(i, k) as f64 * y[k] as f64;
+        }
+        y[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    // back: Lᵀ x = y
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = y[i] as f64;
+        for k in i + 1..n {
+            s -= l.at(k, i) as f64 * x[k] as f64;
+        }
+        x[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    Some(x)
+}
+
+/// Ridge-regularized least squares: argmin_x ‖A x − b‖² + ridge‖x‖²,
+/// solved through the normal equations (AᵀA + ridge·I) x = Aᵀ b.
+/// A is (m × n) with n expected small (the GSW alive set).
+pub fn lstsq(a: &Matrix, b: &[f32], ridge: f32) -> Option<Vec<f32>> {
+    assert_eq!(a.rows, b.len());
+    let at = a.transpose();
+    let mut ata = at.matmul(a);
+    for i in 0..ata.rows {
+        *ata.at_mut(i, i) += ridge;
+    }
+    let mut atb = vec![0.0f32; a.cols];
+    for (i, v) in atb.iter_mut().enumerate() {
+        *v = dot(at.row(i), b);
+    }
+    cholesky_solve(&ata, &atb)
+}
+
+/// Minimum-norm least squares for *underdetermined* systems (n > m):
+/// among exact/least-squares solutions of A x ≈ b pick the smallest-norm
+/// one via the dual normal equations x = Aᵀ (A Aᵀ + ridge·I_m)⁻¹ b.
+/// The m×m dual system stays well-conditioned where the n×n primal
+/// normal equations are rank-deficient (rank ≤ m).
+pub fn lstsq_min_norm(a: &Matrix, b: &[f32], ridge: f32) -> Option<Vec<f32>> {
+    assert_eq!(a.rows, b.len());
+    let at = a.transpose();
+    let mut aat = a.matmul(&at);
+    for i in 0..aat.rows {
+        *aat.at_mut(i, i) += ridge;
+    }
+    let lam = cholesky_solve(&aat, b)?;
+    let mut x = vec![0.0f32; a.cols];
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = dot(at.row(i), &lam);
+    }
+    Some(x)
+}
+
+/// Least squares dispatching on shape: dual (min-norm) form when the
+/// system is underdetermined, primal normal equations otherwise.
+pub fn lstsq_auto(a: &Matrix, b: &[f32], ridge: f32) -> Option<Vec<f32>> {
+    if a.cols > a.rows {
+        lstsq_min_norm(a, b, ridge)
+    } else {
+        lstsq(a, b, ridge)
+    }
+}
+
+/// Modified Gram–Schmidt on the rows of X; returns an orthonormal basis of
+/// the row space as the rows of the result (rank-revealing: rows whose
+/// residual norm falls below `tol` are dropped).
+pub fn orthonormal_rows(x: &Matrix, tol: f32) -> Matrix {
+    let mut basis: Vec<Vec<f32>> = Vec::new();
+    for r in 0..x.rows {
+        let mut v = x.row(r).to_vec();
+        for b in &basis {
+            let c = dot(b, &v);
+            axpy(-c, b, &mut v);
+        }
+        let n = norm_sq(&v).sqrt();
+        if n > tol {
+            for vi in &mut v {
+                *vi /= n;
+            }
+            basis.push(v);
+        }
+    }
+    let rows = basis.len();
+    let mut out = Matrix::zeros(rows, x.cols);
+    for (r, b) in basis.into_iter().enumerate() {
+        out.row_mut(r).copy_from_slice(&b);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+
+    #[test]
+    fn cholesky_identity() {
+        let l = cholesky(&Matrix::eye(4)).unwrap();
+        assert_eq!(l, Matrix::eye(4));
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // A = B Bᵀ + I is SPD
+        let mut rng = Pcg::seed(1);
+        let b = Matrix::from_vec(4, 4, rng.normal_vec(16));
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..4 {
+            *a.at_mut(i, i) += 1.0;
+        }
+        let l = cholesky(&a).unwrap();
+        let back = l.matmul(&l.transpose());
+        assert!(a.sub(&back).fro_norm() < 1e-3);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig −1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_recovers_solution() {
+        let mut rng = Pcg::seed(2);
+        let b = Matrix::from_vec(5, 5, rng.normal_vec(25));
+        let mut a = b.matmul(&b.transpose());
+        for i in 0..5 {
+            *a.at_mut(i, i) += 2.0;
+        }
+        let x_true: Vec<f32> = rng.normal_vec(5);
+        let rhs: Vec<f32> = (0..5).map(|i| dot(a.row(i), &x_true)).collect();
+        let x = cholesky_solve(&a, &rhs).unwrap();
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn lstsq_overdetermined() {
+        // fit y = 2x exactly
+        let a = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let b = vec![2.0f32, 4.0, 6.0];
+        let x = lstsq(&a, &b, 1e-6).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn min_norm_solves_underdetermined_exactly() {
+        // A (3 x 10): any b is reachable; residual must be ~0 and the
+        // solution must be the min-norm one (orthogonal to the kernel).
+        let mut rng = Pcg::seed(4);
+        let a = Matrix::from_vec(3, 10, rng.normal_vec(30));
+        let b: Vec<f32> = rng.normal_vec(3);
+        let x = lstsq_min_norm(&a, &b, 1e-7).unwrap();
+        for i in 0..3 {
+            let got = dot(a.row(i), &x);
+            assert!((got - b[i]).abs() < 1e-3, "row {i}: {got} vs {}", b[i]);
+        }
+        // min-norm: x ∈ row space of A ⇒ x ⊥ any kernel vector; verify
+        // ‖x‖ ≤ ‖x + k‖ for a random kernel perturbation
+        let q = orthonormal_rows(&a, 1e-6);
+        let mut k: Vec<f32> = rng.normal_vec(10);
+        for r in 0..q.rows {
+            let c = dot(q.row(r), &k);
+            axpy(-c, q.row(r), &mut k);
+        }
+        let xn: f32 = norm_sq(&x);
+        let perturbed: f32 = x.iter().zip(&k).map(|(a, b)| (a + b) * (a + b)).sum();
+        assert!(xn <= perturbed + 1e-4);
+    }
+
+    #[test]
+    fn lstsq_auto_dispatches() {
+        let mut rng = Pcg::seed(5);
+        // overdetermined: y = 2x
+        let a = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let x = lstsq_auto(&a, &[2.0, 4.0, 6.0], 1e-7).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-3);
+        // underdetermined: exact solve
+        let a = Matrix::from_vec(2, 6, rng.normal_vec(12));
+        let b = vec![1.0f32, -1.0];
+        let x = lstsq_auto(&a, &b, 1e-7).unwrap();
+        for i in 0..2 {
+            assert!((dot(a.row(i), &x) - b[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn orthonormal_rows_properties() {
+        let mut rng = Pcg::seed(3);
+        let x = Matrix::from_vec(4, 10, rng.normal_vec(40));
+        let q = orthonormal_rows(&x, 1e-6);
+        assert_eq!(q.rows, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                let d = dot(q.row(i), q.row(j));
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-4, "({i},{j}) {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormal_rows_drops_dependent() {
+        let mut x = Matrix::zeros(3, 5);
+        x.row_mut(0).copy_from_slice(&[1., 0., 0., 0., 0.]);
+        x.row_mut(1).copy_from_slice(&[2., 0., 0., 0., 0.]); // dependent
+        x.row_mut(2).copy_from_slice(&[0., 1., 0., 0., 0.]);
+        let q = orthonormal_rows(&x, 1e-6);
+        assert_eq!(q.rows, 2);
+    }
+}

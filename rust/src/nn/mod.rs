@@ -1,0 +1,17 @@
+//! Neural-network substrate: the inference/training stack the paper's
+//! experiments assume as given (Keras/TensorFlow in the paper; built from
+//! scratch here — see DESIGN.md §5 Substitutions).
+
+pub mod activations;
+pub mod batchnorm;
+pub mod conv;
+pub mod linalg;
+pub mod matrix;
+pub mod network;
+pub mod pool;
+pub mod serialize;
+
+pub use activations::Activation;
+pub use conv::ImgShape;
+pub use matrix::Matrix;
+pub use network::{cifar_cnn, mnist_mlp, vgg_like, Layer, Network, NetworkBuilder, Shape};

@@ -1,0 +1,451 @@
+//! Composable feed-forward networks: the Φ = φ∘A^(L)∘…∘φ∘A^(1) of the
+//! paper, extended with the batch-norm / max-pool layers its experimental
+//! architectures use.
+//!
+//! Activations flow as `Matrix` rows (one sample per row); conv feature
+//! maps are NHWC flattened into the row.  `forward_capture` records the
+//! *input* activation of every layer — the `Y = Φ^(ℓ-1)(X)` /
+//! `Ỹ = Φ̃^(ℓ-1)(X)` streams that drive GPFQ.
+
+use crate::data::rng::Pcg;
+use crate::nn::activations::Activation;
+use crate::nn::batchnorm::BatchNorm;
+use crate::nn::conv::{conv_out, fold_output, im2col, ImgShape};
+use crate::nn::matrix::Matrix;
+use crate::nn::pool::maxpool_forward;
+
+/// Activation shape between layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    Flat(usize),
+    Img(ImgShape),
+}
+
+impl Shape {
+    pub fn len(&self) -> usize {
+        match self {
+            Shape::Flat(n) => *n,
+            Shape::Img(s) => s.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One network layer.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    Dense {
+        /// (in × out): columns are neurons, matching the paper's W^(ℓ)
+        w: Matrix,
+        b: Vec<f32>,
+        act: Activation,
+    },
+    Conv {
+        /// flattened kernels (kh*kw*cin × cout): columns are neurons
+        k: Matrix,
+        b: Vec<f32>,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        act: Activation,
+        in_shape: ImgShape,
+    },
+    MaxPool {
+        size: usize,
+        in_shape: ImgShape,
+    },
+    BatchNorm(BatchNorm),
+}
+
+impl Layer {
+    /// Does this layer hold a quantizable weight matrix?
+    pub fn is_quantizable(&self) -> bool {
+        matches!(self, Layer::Dense { .. } | Layer::Conv { .. })
+    }
+
+    /// The quantizable weight matrix (N × n_neurons), if any.
+    pub fn weights(&self) -> Option<&Matrix> {
+        match self {
+            Layer::Dense { w, .. } => Some(w),
+            Layer::Conv { k, .. } => Some(k),
+            _ => None,
+        }
+    }
+
+    pub fn weights_mut(&mut self) -> Option<&mut Matrix> {
+        match self {
+            Layer::Dense { w, .. } => Some(w),
+            Layer::Conv { k, .. } => Some(k),
+            _ => None,
+        }
+    }
+
+    /// Human label for reports.
+    pub fn label(&self) -> String {
+        match self {
+            Layer::Dense { w, .. } => format!("dense({}x{})", w.rows, w.cols),
+            Layer::Conv { k, kh, kw, .. } => format!("conv{kh}x{kw}({})", k.cols),
+            Layer::MaxPool { size, .. } => format!("maxpool{size}"),
+            Layer::BatchNorm(bn) => format!("bn({})", bn.channels),
+        }
+    }
+}
+
+/// A sequential network with static shape checking at construction.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub input: Shape,
+    pub layers: Vec<Layer>,
+    shapes: Vec<Shape>, // shape *after* each layer
+}
+
+impl Network {
+    /// Reassemble a network from raw parts (deserialization); `shapes[i]`
+    /// is the shape after layer i.
+    pub fn from_parts(input: Shape, layers: Vec<Layer>, shapes: Vec<Shape>) -> Network {
+        assert_eq!(layers.len(), shapes.len());
+        Network { input, layers, shapes }
+    }
+
+    pub fn output_shape(&self) -> Shape {
+        *self.shapes.last().unwrap_or(&self.input)
+    }
+
+    /// Shape of the input to layer `i`.
+    pub fn in_shape(&self, i: usize) -> Shape {
+        if i == 0 {
+            self.input
+        } else {
+            self.shapes[i - 1]
+        }
+    }
+
+    /// Indices of quantizable (dense/conv) layers.
+    pub fn quantizable_layers(&self) -> Vec<usize> {
+        (0..self.layers.len()).filter(|&i| self.layers[i].is_quantizable()).collect()
+    }
+
+    /// Total number of quantizable weights.
+    pub fn weight_count(&self) -> usize {
+        self.layers.iter().filter_map(|l| l.weights()).map(|w| w.data.len()).sum()
+    }
+
+    /// Apply one layer in inference mode.
+    pub fn apply_layer(&self, i: usize, x: &Matrix) -> Matrix {
+        match &self.layers[i] {
+            Layer::Dense { w, b, act } => {
+                let mut z = x.matmul(w);
+                z.add_row_vec(b);
+                act.apply(&mut z);
+                z
+            }
+            Layer::Conv { k, b, kh, kw, stride, act, in_shape } => {
+                let patches = im2col(x, *in_shape, *kh, *kw, *stride);
+                let mut z = patches.matmul(k);
+                z.add_row_vec(b);
+                act.apply(&mut z);
+                fold_output(z, x.rows)
+            }
+            Layer::MaxPool { size, in_shape } => maxpool_forward(x, *in_shape, *size).0,
+            Layer::BatchNorm(bn) => bn.forward_infer(x),
+        }
+    }
+
+    /// Inference forward pass: returns the logits.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.input.len(), "input width {} != {}", x.cols, self.input.len());
+        let mut h = x.clone();
+        for i in 0..self.layers.len() {
+            h = self.apply_layer(i, &h);
+        }
+        h
+    }
+
+    /// Forward pass capturing the input activation of every layer.
+    /// Returns (per-layer inputs, logits); `inputs[i]` feeds layer i.
+    pub fn forward_capture(&self, x: &Matrix) -> (Vec<Matrix>, Matrix) {
+        let mut inputs = Vec::with_capacity(self.layers.len());
+        let mut h = x.clone();
+        for i in 0..self.layers.len() {
+            inputs.push(h.clone());
+            h = self.apply_layer(i, &h);
+        }
+        (inputs, h)
+    }
+
+    /// The GPFQ data matrix for quantizing layer `i` given that layer's
+    /// input activations: dense layers use the activations directly, conv
+    /// layers use the im2col patch matrix (paper Section 6.2).
+    pub fn quantization_data(&self, i: usize, layer_input: &Matrix) -> Matrix {
+        match &self.layers[i] {
+            Layer::Dense { .. } => layer_input.clone(),
+            Layer::Conv { kh, kw, stride, in_shape, .. } => {
+                im2col(layer_input, *in_shape, *kh, *kw, *stride)
+            }
+            _ => panic!("layer {i} ({}) is not quantizable", self.layers[i].label()),
+        }
+    }
+
+    /// Replace the weights of a quantizable layer (used by the pipeline to
+    /// install Q^(ℓ)).
+    pub fn set_weights(&mut self, i: usize, q: Matrix) {
+        let w = self.layers[i].weights_mut().expect("not a quantizable layer");
+        assert_eq!((w.rows, w.cols), (q.rows, q.cols), "weight shape mismatch");
+        *w = q;
+    }
+
+    /// One-line architecture summary.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self.layers.iter().map(|l| l.label()).collect();
+        format!("{} -> {}", self.input.len(), parts.join(" -> "))
+    }
+}
+
+/// Builder with shape inference and He initialization.
+pub struct NetworkBuilder {
+    input: Shape,
+    cur: Shape,
+    layers: Vec<Layer>,
+    shapes: Vec<Shape>,
+    rng: Pcg,
+}
+
+impl NetworkBuilder {
+    pub fn new(input: Shape, seed: u64) -> Self {
+        NetworkBuilder { input, cur: input, layers: Vec::new(), shapes: Vec::new(), rng: Pcg::seed(seed) }
+    }
+
+    fn push(&mut self, layer: Layer, out: Shape) -> &mut Self {
+        self.layers.push(layer);
+        self.shapes.push(out);
+        self.cur = out;
+        self
+    }
+
+    /// He-normal init scaled by fan-in.
+    fn he(&mut self, rows: usize, cols: usize) -> Matrix {
+        let scale = (2.0 / rows as f64).sqrt();
+        Matrix::from_vec(
+            rows,
+            cols,
+            (0..rows * cols).map(|_| (self.rng.normal() * scale) as f32).collect(),
+        )
+    }
+
+    pub fn dense(&mut self, out: usize, act: Activation) -> &mut Self {
+        let n_in = self.cur.len();
+        let w = self.he(n_in, out);
+        self.push(Layer::Dense { w, b: vec![0.0; out], act }, Shape::Flat(out))
+    }
+
+    pub fn conv(&mut self, kh: usize, kw: usize, cout: usize, stride: usize, act: Activation) -> &mut Self {
+        let in_shape = match self.cur {
+            Shape::Img(s) => s,
+            Shape::Flat(_) => panic!("conv requires image-shaped input"),
+        };
+        let k = self.he(kh * kw * in_shape.c, cout);
+        let out = ImgShape {
+            h: conv_out(in_shape.h, kh, stride),
+            w: conv_out(in_shape.w, kw, stride),
+            c: cout,
+        };
+        self.push(
+            Layer::Conv { k, b: vec![0.0; cout], kh, kw, stride, act, in_shape },
+            Shape::Img(out),
+        )
+    }
+
+    pub fn maxpool(&mut self, size: usize) -> &mut Self {
+        let in_shape = match self.cur {
+            Shape::Img(s) => s,
+            Shape::Flat(_) => panic!("maxpool requires image-shaped input"),
+        };
+        let out = ImgShape { h: in_shape.h / size, w: in_shape.w / size, c: in_shape.c };
+        self.push(Layer::MaxPool { size, in_shape }, Shape::Img(out))
+    }
+
+    pub fn batchnorm(&mut self) -> &mut Self {
+        let channels = match self.cur {
+            Shape::Img(s) => s.c,
+            Shape::Flat(n) => n,
+        };
+        let out = self.cur;
+        self.push(Layer::BatchNorm(BatchNorm::new(channels)), out)
+    }
+
+    /// Flatten an image shape to a flat vector (metadata only).
+    pub fn flatten(&mut self) -> &mut Self {
+        self.cur = Shape::Flat(self.cur.len());
+        if let Some(last) = self.shapes.last_mut() {
+            *last = self.cur;
+        }
+        self
+    }
+
+    pub fn build(&mut self) -> Network {
+        Network { input: self.input, layers: self.layers.clone(), shapes: self.shapes.clone() }
+    }
+}
+
+/// The paper's MNIST MLP (Section 6.1): 784-500-300-10 with BN after each
+/// hidden layer.
+pub fn mnist_mlp(seed: u64, input: usize, hidden: &[usize], classes: usize) -> Network {
+    let mut b = NetworkBuilder::new(Shape::Flat(input), seed);
+    for &h in hidden {
+        b.dense(h, Activation::Relu).batchnorm();
+    }
+    b.dense(classes, Activation::None);
+    b.build()
+}
+
+/// A scaled version of the paper's CIFAR10 CNN (Section 6.2):
+/// per block: conv(C3) ×2 → MP2, then dense head.  `widths` are the conv
+/// channel counts per block.
+pub fn cifar_cnn(seed: u64, img: ImgShape, widths: &[usize], fc: usize, classes: usize) -> Network {
+    let mut b = NetworkBuilder::new(Shape::Img(img), seed);
+    let mut first = true;
+    for &wch in widths {
+        for _ in 0..2 {
+            if !first {
+                b.batchnorm();
+            }
+            b.conv(3, 3, wch, 1, Activation::Relu);
+            first = false;
+        }
+        b.maxpool(2);
+    }
+    b.flatten();
+    b.batchnorm();
+    b.dense(fc, Activation::Relu);
+    b.batchnorm();
+    b.dense(classes, Activation::None);
+    b.build()
+}
+
+/// A VGG-style network whose FC head dominates the weight count (≥90%,
+/// mirroring VGG16's distribution so Table 2's FC-only quantization is
+/// faithful).
+pub fn vgg_like(seed: u64, img: ImgShape, conv_widths: &[usize], fc_widths: &[usize], classes: usize) -> Network {
+    let mut b = NetworkBuilder::new(Shape::Img(img), seed);
+    for &wch in conv_widths {
+        b.conv(3, 3, wch, 1, Activation::Relu);
+        b.maxpool(2);
+    }
+    b.flatten();
+    for &f in fc_widths {
+        b.dense(f, Activation::Relu).batchnorm();
+    }
+    b.dense(classes, Activation::None);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_shapes_and_summary() {
+        let net = mnist_mlp(0, 784, &[500, 300], 10);
+        assert_eq!(net.output_shape(), Shape::Flat(10));
+        assert_eq!(net.quantizable_layers(), vec![0, 2, 4]);
+        assert_eq!(net.weight_count(), 784 * 500 + 500 * 300 + 300 * 10);
+        assert!(net.summary().contains("dense(784x500)"));
+    }
+
+    #[test]
+    fn forward_shapes_mlp() {
+        let net = mnist_mlp(1, 20, &[8], 4);
+        let x = Matrix::zeros(5, 20);
+        let out = net.forward(&x);
+        assert_eq!((out.rows, out.cols), (5, 4));
+    }
+
+    #[test]
+    fn cnn_shapes() {
+        let img = ImgShape { h: 12, w: 12, c: 3 };
+        let net = cifar_cnn(0, img, &[4], 16, 10);
+        // conv3 -> 10x10x4, conv3 -> 8x8x4, mp2 -> 4x4x4 = 64 -> fc16 -> 10
+        let x = Matrix::zeros(2, img.len());
+        let out = net.forward(&x);
+        assert_eq!((out.rows, out.cols), (2, 10));
+        let q = net.quantizable_layers();
+        assert_eq!(q.len(), 4); // 2 conv + 2 dense
+    }
+
+    #[test]
+    fn vgg_like_fc_dominates() {
+        let img = ImgShape { h: 16, w: 16, c: 3 };
+        let net = vgg_like(0, img, &[8, 16], &[256, 128], 10);
+        let total = net.weight_count() as f64;
+        let fc: usize = net
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Dense { w, .. } => Some(w.data.len()),
+                _ => None,
+            })
+            .sum();
+        assert!(fc as f64 / total > 0.9, "fc share {}", fc as f64 / total);
+    }
+
+    #[test]
+    fn forward_capture_returns_layer_inputs() {
+        let net = mnist_mlp(2, 6, &[4], 3);
+        let x = Matrix::from_fn(2, 6, |r, c| (r + c) as f32);
+        let (inputs, logits) = net.forward_capture(&x);
+        assert_eq!(inputs.len(), net.layers.len());
+        assert_eq!(inputs[0].data, x.data);
+        // replaying layer-by-layer must reproduce the logits
+        let mut h = x.clone();
+        for i in 0..net.layers.len() {
+            assert_eq!(h.data, inputs[i].data, "layer {i}");
+            h = net.apply_layer(i, &h);
+        }
+        assert_eq!(h.data, logits.data);
+    }
+
+    #[test]
+    fn quantization_data_dense_is_input() {
+        let net = mnist_mlp(3, 6, &[4], 3);
+        let x = Matrix::from_fn(2, 6, |_, c| c as f32);
+        let d = net.quantization_data(0, &x);
+        assert_eq!(d.data, x.data);
+    }
+
+    #[test]
+    fn quantization_data_conv_is_patches() {
+        let img = ImgShape { h: 6, w: 6, c: 1 };
+        let mut b = NetworkBuilder::new(Shape::Img(img), 0);
+        b.conv(3, 3, 2, 1, Activation::Relu);
+        let net = b.build();
+        let x = Matrix::zeros(2, img.len());
+        let d = net.quantization_data(0, &x);
+        assert_eq!((d.rows, d.cols), (2 * 16, 9));
+    }
+
+    #[test]
+    fn set_weights_replaces() {
+        let mut net = mnist_mlp(4, 4, &[3], 2);
+        let q = Matrix::zeros(4, 3);
+        net.set_weights(0, q);
+        assert_eq!(net.layers[0].weights().unwrap().data, vec![0.0; 12]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a quantizable layer")]
+    fn set_weights_rejects_bn() {
+        let mut net = mnist_mlp(5, 4, &[3], 2);
+        net.set_weights(1, Matrix::zeros(1, 1)); // layer 1 is BN
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = mnist_mlp(7, 10, &[5], 2);
+        let b = mnist_mlp(7, 10, &[5], 2);
+        assert_eq!(a.layers[0].weights().unwrap().data, b.layers[0].weights().unwrap().data);
+        let c = mnist_mlp(8, 10, &[5], 2);
+        assert_ne!(a.layers[0].weights().unwrap().data, c.layers[0].weights().unwrap().data);
+    }
+}

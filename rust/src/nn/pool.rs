@@ -1,0 +1,99 @@
+//! Max pooling (the MP2 blocks of the paper's CIFAR10 architecture).
+
+use crate::nn::conv::ImgShape;
+use crate::nn::matrix::Matrix;
+
+/// Forward max-pool with square window/stride `size`; also returns the
+/// argmax source index per output element for the backward pass.
+pub fn maxpool_forward(x: &Matrix, shape: ImgShape, size: usize) -> (Matrix, Vec<usize>, ImgShape) {
+    assert_eq!(x.cols, shape.len());
+    assert!(size > 0 && shape.h >= size && shape.w >= size);
+    let oh = shape.h / size;
+    let ow = shape.w / size;
+    let out_shape = ImgShape { h: oh, w: ow, c: shape.c };
+    let mut out = Matrix::zeros(x.rows, out_shape.len());
+    let mut argmax = vec![0usize; x.rows * out_shape.len()];
+    for b in 0..x.rows {
+        let row = x.row(b);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for c in 0..shape.c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0usize;
+                    for dy in 0..size {
+                        for dx in 0..size {
+                            let idx = shape.idx(oy * size + dy, ox * size + dx, c);
+                            if row[idx] > best {
+                                best = row[idx];
+                                best_idx = idx;
+                            }
+                        }
+                    }
+                    let oidx = out_shape.idx(oy, ox, c);
+                    out.data[b * out_shape.len() + oidx] = best;
+                    argmax[b * out_shape.len() + oidx] = best_idx;
+                }
+            }
+        }
+    }
+    (out, argmax, out_shape)
+}
+
+/// Backward max-pool: route each output gradient to its argmax source.
+pub fn maxpool_backward(dout: &Matrix, argmax: &[usize], in_shape: ImgShape) -> Matrix {
+    let mut dx = Matrix::zeros(dout.rows, in_shape.len());
+    let out_len = dout.cols;
+    for b in 0..dout.rows {
+        for o in 0..out_len {
+            let src = argmax[b * out_len + o];
+            dx.data[b * in_shape.len() + src] += dout.data[b * out_len + o];
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_maxima() {
+        let shape = ImgShape { h: 4, w: 4, c: 1 };
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let x = Matrix::from_vec(1, 16, data);
+        let (out, _, oshape) = maxpool_forward(&x, shape, 2);
+        assert_eq!(oshape, ImgShape { h: 2, w: 2, c: 1 });
+        assert_eq!(out.data, vec![5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn channels_pooled_independently() {
+        let shape = ImgShape { h: 2, w: 2, c: 2 };
+        // (y,x,c): c0 = [1,3,5,7], c1 = [8,6,4,2]
+        let x = Matrix::from_vec(1, 8, vec![1., 8., 3., 6., 5., 4., 7., 2.]);
+        let (out, _, _) = maxpool_forward(&x, shape, 2);
+        assert_eq!(out.data, vec![7.0, 8.0]);
+    }
+
+    #[test]
+    fn backward_routes_to_argmax() {
+        let shape = ImgShape { h: 2, w: 2, c: 1 };
+        let x = Matrix::from_vec(1, 4, vec![0.0, 9.0, 1.0, 2.0]);
+        let (_, argmax, _) = maxpool_forward(&x, shape, 2);
+        let dout = Matrix::from_vec(1, 1, vec![5.0]);
+        let dx = maxpool_backward(&dout, &argmax, shape);
+        assert_eq!(dx.data, vec![0.0, 5.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gradient_sums_when_shared_argmax() {
+        // two different output cells can't share a source under disjoint
+        // windows, but batch rows must stay independent
+        let shape = ImgShape { h: 2, w: 2, c: 1 };
+        let x = Matrix::from_vec(2, 4, vec![1., 0., 0., 0., 0., 0., 0., 1.]);
+        let (_, argmax, _) = maxpool_forward(&x, shape, 2);
+        let dout = Matrix::from_vec(2, 1, vec![3.0, 4.0]);
+        let dx = maxpool_backward(&dout, &argmax, shape);
+        assert_eq!(dx.data, vec![3., 0., 0., 0., 0., 0., 0., 4.]);
+    }
+}

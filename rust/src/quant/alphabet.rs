@@ -1,0 +1,180 @@
+//! Quantization alphabets (paper Section 6).
+//!
+//! The paper's theory uses the ternary alphabet {-1, 0, 1}; its experiments
+//! use the equispaced alphabet `A = alpha * {-1 + 2j/(M-1) : 0 <= j < M}`
+//! with radius `alpha = C_alpha * median |W^(l)|` chosen per layer by
+//! cross-validation.  `M = 3` recovers the ternary case.
+
+use crate::util::stats::median_f32;
+
+/// An equispaced symmetric quantization alphabet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Alphabet {
+    /// radius: characters live in [-alpha, alpha]
+    pub alpha: f32,
+    /// number of characters (M >= 2); bit budget = log2(M)
+    pub m: usize,
+}
+
+impl Alphabet {
+    pub fn new(alpha: f32, m: usize) -> Self {
+        assert!(m >= 2, "alphabet needs at least 2 characters, got {m}");
+        assert!(alpha > 0.0, "alphabet radius must be positive, got {alpha}");
+        Alphabet { alpha, m }
+    }
+
+    /// Ternary {-alpha, 0, alpha} — the alphabet of the paper's theory and
+    /// of its MNIST / ImageNet experiments.
+    pub fn ternary(alpha: f32) -> Self {
+        Self::new(alpha, 3)
+    }
+
+    /// Paper Section 6 radius rule: `alpha = C_alpha * median(|W_ij|)`.
+    /// Falls back to a tiny positive radius when the weights are all zero so
+    /// downstream code never divides by zero.
+    pub fn from_median(weights: &[f32], c_alpha: f32, m: usize) -> Self {
+        let abs: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+        let med = median_f32(&abs);
+        let alpha = if med > 0.0 { c_alpha * med } else { f32::MIN_POSITIVE.max(1e-12) };
+        Self::new(alpha, m)
+    }
+
+    /// All characters, ascending.
+    pub fn levels(&self) -> Vec<f32> {
+        (0..self.m)
+            .map(|j| self.alpha * (-1.0 + 2.0 * j as f32 / (self.m - 1) as f32))
+            .collect()
+    }
+
+    /// Spacing between adjacent characters.
+    pub fn step(&self) -> f32 {
+        2.0 * self.alpha / (self.m - 1) as f32
+    }
+
+    /// Bits needed to index a character.
+    pub fn bits(&self) -> f64 {
+        (self.m as f64).log2()
+    }
+
+    /// The memoryless quantizer Q_A(z): nearest character, closed form.
+    /// Ties round half-to-even, matching the jnp.round convention of the L1
+    /// kernel so the native and PJRT paths agree bit-for-bit.
+    #[inline]
+    pub fn nearest(&self, z: f32) -> f32 {
+        let step = self.step();
+        let j = (((z + self.alpha) / step) as f64).round_ties_even();
+        let j = j.clamp(0.0, (self.m - 1) as f64) as f32;
+        -self.alpha + step * j
+    }
+
+    /// Index (0..M) of the nearest character — what actually gets stored in
+    /// a deployed quantized network (log2(M) bits each).
+    #[inline]
+    pub fn nearest_index(&self, z: f32) -> usize {
+        let step = self.step();
+        let j = (((z + self.alpha) / step) as f64).round_ties_even();
+        j.clamp(0.0, (self.m - 1) as f64) as usize
+    }
+
+    /// Reconstruct a character from its index.
+    #[inline]
+    pub fn level(&self, j: usize) -> f32 {
+        assert!(j < self.m);
+        -self.alpha + self.step() * j as f32
+    }
+
+    /// Is `z` (numerically) a character of this alphabet?
+    pub fn contains(&self, z: f32, tol: f32) -> bool {
+        (self.nearest(z) - z).abs() <= tol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ternary_levels() {
+        let a = Alphabet::ternary(2.0);
+        assert_eq!(a.levels(), vec![-2.0, 0.0, 2.0]);
+        assert_eq!(a.step(), 2.0);
+        assert!((a.bits() - 3f64.log2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn levels_symmetric_equispaced() {
+        for m in [2usize, 3, 4, 8, 16] {
+            let a = Alphabet::new(1.5, m);
+            let ls = a.levels();
+            assert_eq!(ls.len(), m);
+            assert!((ls[0] + 1.5).abs() < 1e-6 && (ls[m - 1] - 1.5).abs() < 1e-6);
+            for w in ls.windows(2) {
+                assert!((w[1] - w[0] - a.step()).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_is_argmin_over_levels() {
+        let a = Alphabet::new(1.3, 8);
+        let levels = a.levels();
+        let mut z = -3.0f32;
+        while z < 3.0 {
+            let q = a.nearest(z);
+            let best = levels
+                .iter()
+                .cloned()
+                .min_by(|x, y| (x - z).abs().partial_cmp(&(y - z).abs()).unwrap())
+                .unwrap();
+            assert!(
+                ((q - z).abs() - (best - z).abs()).abs() < 1e-5,
+                "z={z} q={q} best={best}"
+            );
+            z += 0.0173;
+        }
+    }
+
+    #[test]
+    fn nearest_clamps_out_of_range() {
+        let a = Alphabet::ternary(1.0);
+        assert_eq!(a.nearest(100.0), 1.0);
+        assert_eq!(a.nearest(-100.0), -1.0);
+    }
+
+    #[test]
+    fn nearest_idempotent_on_levels() {
+        let a = Alphabet::new(0.7, 16);
+        for l in a.levels() {
+            assert!((a.nearest(l) - l).abs() < 1e-6);
+            assert!(a.contains(l, 1e-6));
+        }
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let a = Alphabet::new(2.1, 4);
+        for (j, l) in a.levels().into_iter().enumerate() {
+            assert_eq!(a.nearest_index(l), j);
+            assert!((a.level(j) - l).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn from_median_rule() {
+        let w = [0.1f32, -0.2, 0.3, -0.4];
+        let a = Alphabet::from_median(&w, 2.0, 3);
+        assert!((a.alpha - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_median_zero_weights_safe() {
+        let a = Alphabet::from_median(&[0.0, 0.0], 3.0, 3);
+        assert!(a.alpha > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2 characters")]
+    fn rejects_m1() {
+        Alphabet::new(1.0, 1);
+    }
+}

@@ -1,0 +1,88 @@
+//! Quantization error metrics shared by the pipeline, benches and tests.
+
+use crate::nn::matrix::Matrix;
+
+/// Relative per-neuron error ‖Yw − Ỹq‖₂ / ‖Yw‖₂ (Theorem 2's LHS) for a
+/// full layer: W and Q are (N × n), Y/Ỹ are (m × N).
+pub fn layer_rel_errors(y: &Matrix, yq: &Matrix, w: &Matrix, q: &Matrix) -> Vec<f64> {
+    assert_eq!(w.rows, y.cols);
+    assert_eq!(q.rows, yq.cols);
+    assert_eq!(w.cols, q.cols);
+    let yw = y.matmul(w);
+    let yqq = yq.matmul(q);
+    (0..w.cols)
+        .map(|j| {
+            let num: f64 = (0..yw.rows)
+                .map(|r| ((yw.at(r, j) - yqq.at(r, j)) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let den = yw.col_norm(j);
+            if den > 0.0 {
+                num / den
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Relative Frobenius error of the whole layer output:
+/// ‖YW − ỸQ‖_F / ‖YW‖_F (the quantity ‖Φ(X) − Φ̃(X)‖_F the paper controls).
+pub fn layer_fro_error(y: &Matrix, yq: &Matrix, w: &Matrix, q: &Matrix) -> f64 {
+    let yw = y.matmul(w);
+    let yqq = yq.matmul(q);
+    let num = yw.sub(&yqq).fro_norm();
+    let den = yw.fro_norm();
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Compression ratio versus 32-bit floats for an M-character alphabet:
+/// 32 / log2(M), ignoring the per-layer float alpha (paper Section 6.1
+/// reports ≈20× for ternary).
+pub fn compression_ratio(m_levels: usize) -> f64 {
+    32.0 / (m_levels as f64).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+
+    #[test]
+    fn zero_error_for_identical_weights() {
+        let mut rng = Pcg::seed(1);
+        let y = Matrix::from_vec(5, 8, rng.normal_vec(40));
+        let w = Matrix::from_vec(8, 3, rng.normal_vec(24));
+        let errs = layer_rel_errors(&y, &y, &w, &w);
+        assert!(errs.iter().all(|&e| e < 1e-6));
+        assert!(layer_fro_error(&y, &y, &w, &w) < 1e-6);
+    }
+
+    #[test]
+    fn scales_with_perturbation() {
+        let mut rng = Pcg::seed(2);
+        let y = Matrix::from_vec(6, 10, rng.normal_vec(60));
+        let w = Matrix::from_vec(10, 2, rng.normal_vec(20));
+        let mut q_small = w.clone();
+        let mut q_big = w.clone();
+        for i in 0..q_small.data.len() {
+            q_small.data[i] += 0.01;
+            q_big.data[i] += 0.1;
+        }
+        let e_small = layer_fro_error(&y, &y, &w, &q_small);
+        let e_big = layer_fro_error(&y, &y, &w, &q_big);
+        assert!(e_big > 5.0 * e_small, "{e_big} vs {e_small}");
+    }
+
+    #[test]
+    fn compression_ratios() {
+        assert!((compression_ratio(3) - 32.0 / 3f64.log2()).abs() < 1e-12);
+        assert!((compression_ratio(16) - 8.0).abs() < 1e-12);
+        // paper: ternary ≈ 20x
+        assert!((compression_ratio(3) - 20.19).abs() < 0.01);
+    }
+}

@@ -1,0 +1,147 @@
+//! Exhaustive (optimal) quantization — the paper's eq. (1):
+//!
+//! ```text
+//! minimize ||Xw - Xq||^2  subject to  q in A^N
+//! ```
+//!
+//! NP-hard in general (Ajtai 1998), but enumerable for tiny N.  Used as the
+//! *optimality oracle* in tests and in the baseline-crossover bench: GPFQ is
+//! greedy, so it need not attain the optimum, but it must stay within the
+//! theory's bound of it, and both must beat MSQ on generic data.
+
+use crate::nn::matrix::{axpy, norm_sq, Matrix};
+use crate::quant::alphabet::Alphabet;
+
+/// Cap on M^N enumeration size (3^12 * m flops is the practical limit).
+pub const MAX_COMBINATIONS: u64 = 2_000_000;
+
+/// Solve eq. (1) exactly by enumeration.  `y` is (m×N) analog data, `yq`
+/// the quantized-net data (pass `y` again for the first layer), `w` one
+/// neuron.  Returns (q*, optimal error ‖Yw − Ỹq*‖₂).
+///
+/// Panics if `M^N` exceeds [`MAX_COMBINATIONS`] — this is a test oracle,
+/// not a production path.
+pub fn exhaustive_neuron(y: &Matrix, yq: &Matrix, w: &[f32], a: Alphabet) -> (Vec<f32>, f64) {
+    let n = w.len();
+    assert_eq!(y.cols, n);
+    assert_eq!((yq.rows, yq.cols), (y.rows, y.cols));
+    let combos = (a.m as u64).checked_pow(n as u32).expect("combination overflow");
+    assert!(
+        combos <= MAX_COMBINATIONS,
+        "exhaustive search over {combos} combos refused (N={n}, M={})",
+        a.m
+    );
+    let m = y.rows;
+    // target = Yw
+    let mut target = vec![0.0f32; m];
+    let ycols: Vec<Vec<f32>> = (0..n).map(|t| y.col(t)).collect();
+    let yqcols: Vec<Vec<f32>> = (0..n).map(|t| yq.col(t)).collect();
+    for t in 0..n {
+        axpy(w[t], &ycols[t], &mut target);
+    }
+    let levels = a.levels();
+    let mut best_err = f64::INFINITY;
+    let mut best_q = vec![0.0f32; n];
+    let mut digits = vec![0usize; n];
+    let mut resid = vec![0.0f32; m];
+    for combo in 0..combos {
+        // decode combo in base M
+        let mut c = combo;
+        for d in digits.iter_mut() {
+            *d = (c % a.m as u64) as usize;
+            c /= a.m as u64;
+        }
+        resid.copy_from_slice(&target);
+        for t in 0..n {
+            axpy(-levels[digits[t]], &yqcols[t], &mut resid);
+        }
+        let err = norm_sq(&resid) as f64;
+        if err < best_err {
+            best_err = err;
+            for t in 0..n {
+                best_q[t] = levels[digits[t]];
+            }
+        }
+    }
+    (best_q, best_err.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+    use crate::quant::gpfq::{gpfq_neuron, LayerData};
+    use crate::quant::msq::msq_vec;
+
+    fn rand_matrix(rng: &mut Pcg, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols))
+    }
+
+    #[test]
+    fn finds_exact_representation_when_w_in_alphabet() {
+        let mut rng = Pcg::seed(1);
+        let y = rand_matrix(&mut rng, 6, 5);
+        let a = Alphabet::ternary(1.0);
+        let levels = a.levels();
+        let w: Vec<f32> = (0..5).map(|_| levels[rng.below(3)]).collect();
+        let (q, err) = exhaustive_neuron(&y, &y, &w, a);
+        assert!(err < 1e-4, "err {err}");
+        // the optimum may be non-unique, but must act identically on Y
+        let wq = Matrix::from_vec(5, 1, q);
+        let ww = Matrix::from_vec(5, 1, w);
+        assert!(y.matmul(&wq).sub(&y.matmul(&ww)).fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn optimal_never_worse_than_gpfq_or_msq() {
+        let mut rng = Pcg::seed(2);
+        let a = Alphabet::ternary(1.0);
+        for trial in 0..5 {
+            let (m, n) = (4 + trial, 7);
+            let y = rand_matrix(&mut rng, m, n);
+            let w: Vec<f32> = rng.uniform_vec(n, -1.0, 1.0);
+            let (_, opt) = exhaustive_neuron(&y, &y, &w, a);
+            let data = LayerData::first_layer(&y);
+            let mut u = vec![0.0f32; m];
+            let g = gpfq_neuron(&data, &w, a, &mut u);
+            // msq error
+            let q = msq_vec(&w, a);
+            let wm = Matrix::from_vec(n, 1, w.clone());
+            let qm = Matrix::from_vec(n, 1, q);
+            let msq_err = y.matmul(&wm).sub(&y.matmul(&qm)).fro_norm();
+            assert!(opt <= g.err + 1e-4, "opt {opt} > gpfq {}", g.err);
+            assert!(opt <= msq_err + 1e-4, "opt {opt} > msq {msq_err}");
+        }
+    }
+
+    #[test]
+    fn gpfq_close_to_optimal_on_overparameterized_data() {
+        // with m ≪ N the kernel of Y is large and greedy path-following
+        // should land close to the optimum (small constant factor).
+        let mut rng = Pcg::seed(3);
+        let a = Alphabet::ternary(1.0);
+        let mut ratios = Vec::new();
+        for _ in 0..6 {
+            let (m, n) = (3, 9);
+            let y = rand_matrix(&mut rng, m, n);
+            let w: Vec<f32> = rng.uniform_vec(n, -1.0, 1.0);
+            let (_, opt) = exhaustive_neuron(&y, &y, &w, a);
+            let data = LayerData::first_layer(&y);
+            let mut u = vec![0.0f32; m];
+            let g = gpfq_neuron(&data, &w, a, &mut u);
+            if opt > 1e-6 {
+                ratios.push(g.err / opt);
+            }
+        }
+        let med = crate::util::stats::median(&ratios);
+        assert!(med < 6.0, "gpfq/optimal median ratio {med} (ratios {ratios:?})");
+    }
+
+    #[test]
+    #[should_panic(expected = "refused")]
+    fn refuses_huge_enumerations() {
+        let y = Matrix::zeros(2, 32);
+        let w = vec![0.0f32; 32];
+        let _ = exhaustive_neuron(&y, &y, &w, Alphabet::ternary(1.0));
+    }
+}

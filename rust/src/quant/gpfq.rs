@@ -1,0 +1,550 @@
+//! GPFQ — Greedy Path Following Quantization (paper eq. (2)/(3), Lemma 1).
+//!
+//! Native Rust implementation of the paper's algorithm.  This is the
+//! fallback/oracle twin of the Pallas artifact (`gpfq_m*_n*_b*_M*`): the
+//! coordinator dispatches neuron blocks to either path and integration
+//! tests assert they agree.
+//!
+//! Per neuron w ∈ R^N with analog activations Y ∈ R^{m×N} and
+//! quantized-network activations Ỹ:
+//!
+//! ```text
+//! u_0 = 0
+//! q_t = Q_A( ⟨Ỹ_t, u_{t-1} + w_t Y_t⟩ / ‖Ỹ_t‖² )    (Lemma 1, general form)
+//! u_t = u_{t-1} + w_t Y_t − q_t Ỹ_t
+//! ```
+//!
+//! Cost is O(Nm) per neuron — optimal for any data-dependent scheme — and
+//! embarrassingly parallel across neurons (paper Section 4).  The hot loop
+//! works on *transposed* activations so each column access is contiguous,
+//! and the per-step column norms ‖Ỹ_t‖² and cross-correlations ⟨Ỹ_t, Y_t⟩
+//! are computed once per layer and shared across all neurons.
+
+use crate::nn::matrix::{axpy, dot, norm_sq, Matrix};
+use crate::quant::alphabet::Alphabet;
+
+/// Columns with squared norm below this carry no usable direction; GPFQ
+/// falls back to memoryless quantization of the weight (same convention as
+/// the L1 kernel, which makes zero-padding a no-op).
+pub const DENOM_EPS: f32 = 1e-12;
+
+/// Precomputed per-layer data shared by every neuron of the layer.
+///
+/// `yt` / `yqt` are the activations stored **transposed** (N×m, rows are
+/// the walk directions), so the per-step dot/axpy run over contiguous
+/// memory.
+pub struct LayerData {
+    /// analog activations, transposed: row t = Y_t ∈ R^m
+    pub yt: Matrix,
+    /// quantized-net activations, transposed: row t = Ỹ_t ∈ R^m
+    pub yqt: Matrix,
+    /// ‖Ỹ_t‖² per step
+    pub denom: Vec<f32>,
+    /// ⟨Ỹ_t, Y_t⟩ per step
+    pub cross: Vec<f32>,
+    /// true when Y and Ỹ were identical (first layer, eq. (2)): enables the
+    /// single-axpy fast path u += (w_t − q_t) X_t
+    pub same: bool,
+}
+
+impl LayerData {
+    /// Build from (m × N) activation matrices.
+    pub fn new(y: &Matrix, yq: &Matrix) -> Self {
+        assert_eq!((y.rows, y.cols), (yq.rows, yq.cols), "activation shape mismatch");
+        let same = y.data == yq.data;
+        let yt = y.transpose();
+        let yqt = if same { yt.clone() } else { yq.transpose() };
+        let n = yt.rows;
+        let mut denom = Vec::with_capacity(n);
+        let mut cross = Vec::with_capacity(n);
+        for t in 0..n {
+            let ytr = yqt.row(t);
+            denom.push(norm_sq(ytr));
+            cross.push(if same { denom[t] } else { dot(ytr, yt.row(t)) });
+        }
+        LayerData { yt, yqt, denom, cross, same }
+    }
+
+    /// First-layer convenience (paper eq. (2)): Ỹ = Y = X.
+    pub fn first_layer(x: &Matrix) -> Self {
+        Self::new(x, x)
+    }
+
+    pub fn n(&self) -> usize {
+        self.yt.rows
+    }
+
+    pub fn m(&self) -> usize {
+        self.yt.cols
+    }
+}
+
+/// Result of quantizing one neuron.
+#[derive(Debug, Clone)]
+pub struct NeuronResult {
+    /// quantized weights q ∈ A^N
+    pub q: Vec<f32>,
+    /// ‖u_N‖₂ = ‖Yw − Ỹq‖₂ (absolute training error, Section 4)
+    pub err: f64,
+}
+
+/// Quantize a single neuron (column of W).  `u` is caller-provided scratch
+/// of length m (zeroed here) so block workers can reuse the allocation.
+pub fn gpfq_neuron(data: &LayerData, w: &[f32], a: Alphabet, u: &mut [f32]) -> NeuronResult {
+    let n = data.n();
+    assert_eq!(w.len(), n, "weight length {} != layer width {n}", w.len());
+    assert_eq!(u.len(), data.m(), "state length mismatch");
+    u.fill(0.0);
+    let mut q = Vec::with_capacity(n);
+    for t in 0..n {
+        let denom = data.denom[t];
+        let wt = w[t];
+        let yq_row = data.yqt.row(t);
+        let qt = if denom > DENOM_EPS {
+            // Lemma 1: q_t = Q_A( (⟨Ỹ_t, u⟩ + ⟨Ỹ_t, Y_t⟩ w_t) / ‖Ỹ_t‖² )
+            let proj = (dot(yq_row, u) + data.cross[t] * wt) / denom;
+            a.nearest(proj)
+        } else {
+            a.nearest(wt)
+        };
+        // fused single-rounding update — bit-identical to the lane kernel
+        if data.same {
+            axpy(wt - qt, yq_row, u);
+        } else {
+            let y_row = data.yt.row(t);
+            for i in 0..u.len() {
+                u[i] += wt * y_row[i] - qt * yq_row[i];
+            }
+        }
+        q.push(qt);
+    }
+    let err = u.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+    NeuronResult { q, err }
+}
+
+/// Result of quantizing a full layer.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    /// quantized weight matrix Q (N × n), columns are neurons
+    pub q: Matrix,
+    /// absolute error ‖Yw − Ỹq‖₂ per neuron
+    pub errs: Vec<f64>,
+    /// relative error ‖Yw − Ỹq‖₂ / ‖Yw‖₂ per neuron (paper Theorem 2 LHS)
+    pub rel_errs: Vec<f64>,
+}
+
+/// Quantize every neuron of a layer, single-threaded.  The coordinator's
+/// scheduler parallelizes across neuron blocks; this entry point is what
+/// each worker runs on its block (and what the benches time).
+pub fn gpfq_layer(data: &LayerData, w: &Matrix, a: Alphabet) -> LayerResult {
+    gpfq_layer_range(data, w, a, 0, w.cols)
+}
+
+/// Lane width of the interleaved block kernel: neurons are packed into the
+/// fastest-varying axis so the per-step dot/update vectorize across
+/// neurons (one 256-bit AVX vector of f32) — the same "neurons → lanes"
+/// layout the Pallas kernel uses on TPU.  See EXPERIMENTS.md §Perf.
+pub const LANES: usize = 8;
+
+/// Quantize neurons [lo, hi) of the layer (a "neuron block").
+pub fn gpfq_layer_range(
+    data: &LayerData,
+    w: &Matrix,
+    a: Alphabet,
+    lo: usize,
+    hi: usize,
+) -> LayerResult {
+    assert!(lo <= hi && hi <= w.cols);
+    assert_eq!(w.rows, data.n(), "weight rows != layer width");
+    let mut q = Matrix::zeros(w.rows, hi - lo);
+    let mut errs = Vec::with_capacity(hi - lo);
+    let mut rel_errs = Vec::with_capacity(hi - lo);
+    let mut j = lo;
+    while j < hi {
+        let jb = (j + LANES).min(hi);
+        let part = gpfq_lane_block(data, w, a, j, jb);
+        for (c, col) in part.iter().enumerate() {
+            q.set_col(j - lo + c, &col.0);
+            errs.push(col.1);
+            rel_errs.push(col.2);
+        }
+        j = jb;
+    }
+    LayerResult { q, errs, rel_errs }
+}
+
+/// Interleaved kernel over up to [`LANES`] neurons: dispatches to a
+/// const-generic implementation so the lane loops fully unroll and SIMD-
+/// vectorize (a dynamic lane bound defeats the vectorizer — see
+/// EXPERIMENTS.md §Perf iteration 3).  Tail blocks (< LANES neurons) take
+/// the per-neuron path.
+fn gpfq_lane_block(
+    data: &LayerData,
+    w: &Matrix,
+    a: Alphabet,
+    lo: usize,
+    hi: usize,
+) -> Vec<(Vec<f32>, f64, f64)> {
+    if hi - lo == LANES {
+        return lane_kernel::<LANES>(data, w, a, lo);
+    }
+    // tail: per-neuron path + explicit ‖Yw‖ pass
+    let mut out = Vec::with_capacity(hi - lo);
+    let mut u = vec![0.0f32; data.m()];
+    let mut wcol = vec![0.0f32; w.rows];
+    for j in lo..hi {
+        for t in 0..w.rows {
+            wcol[t] = w.at(t, j);
+        }
+        let res = gpfq_neuron(data, &wcol, a, &mut u);
+        let mut yw = vec![0.0f32; data.m()];
+        for t in 0..w.rows {
+            axpy(wcol[t], data.yt.row(t), &mut yw);
+        }
+        let den = norm_sq(&yw).sqrt() as f64;
+        let rel = if den > 0.0 { res.err / den } else { 0.0 };
+        out.push((res.q, res.err, rel));
+    }
+    out
+}
+
+/// Const-generic lane kernel: U and the ‖Yw‖ accumulator are stored
+/// (m × L) row-major, so every inner loop is a fixed-width contiguous
+/// operation across neurons — one AVX vector of f32 when L = 8.  One pass
+/// of the activation row serves all L neurons per step (the per-neuron
+/// path re-streams it per neuron).
+fn lane_kernel<const L: usize>(
+    data: &LayerData,
+    w: &Matrix,
+    a: Alphabet,
+    lo: usize,
+) -> Vec<(Vec<f32>, f64, f64)> {
+    let n = data.n();
+    let m = data.m();
+    let mut u = vec![[0.0f32; L]; m];
+    let mut yw = vec![[0.0f32; L]; m];
+    let mut qcols = vec![vec![0.0f32; n]; L];
+    for t in 0..n {
+        let denom = data.denom[t];
+        let cross = data.cross[t];
+        let row_y = data.yt.row(t);
+        let row_q = data.yqt.row(t);
+        let wrow = &w.row(t)[lo..lo + L];
+        let mut coef_y = [0.0f32; L];
+        let mut coef_q = [0.0f32; L];
+        if denom > DENOM_EPS {
+            // proj_j = <row_q, u_j> across all lanes in one row pass
+            let mut proj = [0.0f32; L];
+            for (urow, &rq) in u.iter().zip(row_q) {
+                for j in 0..L {
+                    proj[j] += rq * urow[j];
+                }
+            }
+            for j in 0..L {
+                let z = (proj[j] + cross * wrow[j]) / denom;
+                let qt = a.nearest(z);
+                qcols[j][t] = qt;
+                coef_y[j] = wrow[j];
+                coef_q[j] = qt;
+            }
+        } else {
+            for j in 0..L {
+                let qt = a.nearest(wrow[j]);
+                qcols[j][t] = qt;
+                coef_y[j] = wrow[j];
+                coef_q[j] = qt;
+            }
+        }
+        // fused update: u += w ⊗ row_y − q ⊗ row_q;  yw += w ⊗ row_y
+        if data.same {
+            for ((urow, ywrow), &ry) in u.iter_mut().zip(yw.iter_mut()).zip(row_y) {
+                for j in 0..L {
+                    urow[j] += (coef_y[j] - coef_q[j]) * ry;
+                    ywrow[j] += coef_y[j] * ry;
+                }
+            }
+        } else {
+            for i in 0..m {
+                let ry = row_y[i];
+                let rq = row_q[i];
+                let urow = &mut u[i];
+                let ywrow = &mut yw[i];
+                for j in 0..L {
+                    let wy = coef_y[j] * ry;
+                    urow[j] += wy - coef_q[j] * rq;
+                    ywrow[j] += wy;
+                }
+            }
+        }
+    }
+    // per-lane norms
+    let mut out = Vec::with_capacity(L);
+    for (j, qcol) in qcols.into_iter().enumerate() {
+        let mut err2 = 0.0f64;
+        let mut den2 = 0.0f64;
+        for i in 0..m {
+            err2 += (u[i][j] as f64).powi(2);
+            den2 += (yw[i][j] as f64).powi(2);
+        }
+        let err = err2.sqrt();
+        let den = den2.sqrt();
+        out.push((qcol, err, if den > 0.0 { err / den } else { 0.0 }));
+    }
+    out
+}
+
+/// Parallel layer quantization across `workers` threads (std::thread::scope;
+/// the paper's "parallelizable across neurons in a layer").
+pub fn gpfq_layer_parallel(data: &LayerData, w: &Matrix, a: Alphabet, workers: usize) -> LayerResult {
+    let n_neurons = w.cols;
+    let workers = workers.max(1).min(n_neurons.max(1));
+    if workers <= 1 || n_neurons == 0 {
+        return gpfq_layer(data, w, a);
+    }
+    let chunk = n_neurons.div_ceil(workers);
+    let mut parts: Vec<Option<LayerResult>> = Vec::new();
+    parts.resize_with(workers, || None);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (i, slot) in parts.iter_mut().enumerate() {
+            let lo = i * chunk;
+            let hi = ((i + 1) * chunk).min(n_neurons);
+            if lo >= hi {
+                continue;
+            }
+            handles.push(s.spawn(move || {
+                *slot = Some(gpfq_layer_range(data, w, a, lo, hi));
+            }));
+        }
+        for h in handles {
+            h.join().expect("gpfq worker panicked");
+        }
+    });
+    // stitch the blocks back together in order
+    let mut q = Matrix::zeros(w.rows, n_neurons);
+    let mut errs = Vec::with_capacity(n_neurons);
+    let mut rel_errs = Vec::with_capacity(n_neurons);
+    let mut col = 0usize;
+    for part in parts.into_iter().flatten() {
+        for j in 0..part.q.cols {
+            q.set_col(col, &part.q.col(j));
+            col += 1;
+        }
+        errs.extend(part.errs);
+        rel_errs.extend(part.rel_errs);
+    }
+    assert_eq!(col, n_neurons);
+    LayerResult { q, errs, rel_errs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+
+    fn rand_matrix(rng: &mut Pcg, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols))
+    }
+
+    fn rand_weights(rng: &mut Pcg, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, rng.uniform_vec(rows * cols, -1.0, 1.0))
+    }
+
+    /// definitional argmin reference (paper eq. (3)) — independent of the
+    /// Lemma 1 closed form used by the implementation.
+    fn gpfq_neuron_bruteforce(y: &Matrix, yq: &Matrix, w: &[f32], a: Alphabet) -> Vec<f32> {
+        let m = y.rows;
+        let mut u = vec![0.0f32; m];
+        let mut q = Vec::new();
+        for t in 0..y.cols {
+            let yt = y.col(t);
+            let yqt = y_col(yq, t);
+            let mut best = f32::INFINITY;
+            let mut best_p = 0.0;
+            let denom: f32 = yqt.iter().map(|v| v * v).sum();
+            for p in a.levels() {
+                let cost: f32 = (0..m)
+                    .map(|i| {
+                        let v = u[i] + w[t] * yt[i] - p * yqt[i];
+                        v * v
+                    })
+                    .sum();
+                if cost < best {
+                    best = cost;
+                    best_p = p;
+                }
+            }
+            if denom <= DENOM_EPS {
+                best_p = a.nearest(w[t]);
+            }
+            for i in 0..m {
+                u[i] += w[t] * yt[i] - best_p * yqt[i];
+            }
+            q.push(best_p);
+        }
+        q
+    }
+
+    fn y_col(m: &Matrix, c: usize) -> Vec<f32> {
+        m.col(c)
+    }
+
+    #[test]
+    fn lemma1_concise_form_matches_argmin() {
+        let mut rng = Pcg::seed(1);
+        for trial in 0..5 {
+            let (m, n) = (8 + trial, 20 + 3 * trial);
+            let y = rand_matrix(&mut rng, m, n);
+            let noise = rand_matrix(&mut rng, m, n);
+            let mut yq = y.clone();
+            for (a, b) in yq.data.iter_mut().zip(&noise.data) {
+                *a += 0.05 * b;
+            }
+            let w: Vec<f32> = rng.uniform_vec(n, -1.0, 1.0);
+            let a = Alphabet::ternary(1.0);
+            let data = LayerData::new(&y, &yq);
+            let mut u = vec![0.0f32; m];
+            let got = gpfq_neuron(&data, &w, a, &mut u).q;
+            let want = gpfq_neuron_bruteforce(&y, &yq, &w, a);
+            assert_eq!(got, want, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn output_lives_in_alphabet() {
+        let mut rng = Pcg::seed(2);
+        let y = rand_matrix(&mut rng, 16, 40);
+        let w = rand_weights(&mut rng, 40, 6);
+        let a = Alphabet::new(0.8, 8);
+        let res = gpfq_layer(&LayerData::first_layer(&y), &w, a);
+        for &q in &res.q.data {
+            assert!(a.contains(q, 1e-5), "{q} not in alphabet");
+        }
+    }
+
+    #[test]
+    fn err_equals_residual_norm_identity() {
+        // ‖Xw − Xq‖₂ = ‖u_N‖₂ (Section 4)
+        let mut rng = Pcg::seed(3);
+        let y = rand_matrix(&mut rng, 12, 30);
+        let w = rand_weights(&mut rng, 30, 1);
+        let a = Alphabet::ternary(1.0);
+        let data = LayerData::first_layer(&y);
+        let res = gpfq_layer(&data, &w, a);
+        let xq = y.matmul(&res.q);
+        let xw = y.matmul(&w);
+        let resid = xw.sub(&xq).fro_norm();
+        assert!((resid - res.errs[0]).abs() < 1e-4, "{resid} vs {}", res.errs[0]);
+    }
+
+    #[test]
+    fn already_quantized_is_fixed_point() {
+        let mut rng = Pcg::seed(4);
+        let y = rand_matrix(&mut rng, 10, 25);
+        let a = Alphabet::ternary(1.0);
+        let levels = a.levels();
+        let w = Matrix::from_fn(25, 3, |_, _| levels[rng.below(3)]);
+        let res = gpfq_layer(&LayerData::first_layer(&y), &w, a);
+        assert_eq!(res.q.data, w.data);
+        assert!(res.errs.iter().all(|&e| e < 1e-5));
+    }
+
+    #[test]
+    fn zero_padding_is_noop() {
+        let mut rng = Pcg::seed(5);
+        let y = rand_matrix(&mut rng, 8, 20);
+        let w = rand_weights(&mut rng, 20, 4);
+        let a = Alphabet::ternary(1.0);
+        let base = gpfq_layer(&LayerData::first_layer(&y), &w, a);
+        let yp = y.pad_to(8, 28);
+        let wp = w.pad_to(28, 4);
+        let padded = gpfq_layer(&LayerData::first_layer(&yp), &wp, a);
+        for j in 0..4 {
+            assert_eq!(base.q.col(j), padded.q.col(j)[..20].to_vec());
+            assert!(padded.q.col(j)[20..].iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Pcg::seed(6);
+        let y = rand_matrix(&mut rng, 16, 48);
+        let yq = rand_matrix(&mut rng, 16, 48);
+        let w = rand_weights(&mut rng, 48, 13);
+        let a = Alphabet::new(0.9, 4);
+        let data = LayerData::new(&y, &yq);
+        let serial = gpfq_layer(&data, &w, a);
+        for workers in [2, 3, 8, 32] {
+            let par = gpfq_layer_parallel(&data, &w, a, workers);
+            assert_eq!(serial.q.data, par.q.data, "workers={workers}");
+            assert_eq!(serial.errs, par.errs);
+        }
+    }
+
+    #[test]
+    fn beats_msq_on_gaussian_data() {
+        // the paper's headline: data-dependent GPFQ ≪ MSQ in relative error
+        // on overparameterized Gaussian data.
+        let mut rng = Pcg::seed(7);
+        let (m, n, neurons) = (24, 256, 8);
+        let y = rand_matrix(&mut rng, m, n);
+        let w = rand_weights(&mut rng, n, neurons);
+        let a = Alphabet::ternary(1.0);
+        let data = LayerData::first_layer(&y);
+        let res = gpfq_layer(&data, &w, a);
+        // MSQ error
+        let mut msq_rel = Vec::new();
+        for j in 0..neurons {
+            let wc = w.col(j);
+            let qc: Vec<f32> = wc.iter().map(|&v| a.nearest(v)).collect();
+            let mut diff = vec![0.0f32; m];
+            for t in 0..n {
+                axpy(wc[t] - qc[t], data.yt.row(t), &mut diff);
+            }
+            let mut yw = vec![0.0f32; m];
+            for t in 0..n {
+                axpy(wc[t], data.yt.row(t), &mut yw);
+            }
+            msq_rel.push(norm_sq(&diff).sqrt() as f64 / norm_sq(&yw).sqrt() as f64);
+        }
+        let g: f64 = res.rel_errs.iter().sum::<f64>() / neurons as f64;
+        let q: f64 = msq_rel.iter().sum::<f64>() / neurons as f64;
+        assert!(g < 0.5 * q, "gpfq {g} vs msq {q}");
+    }
+
+    #[test]
+    fn sigma_delta_degenerate_bound() {
+        // all columns equal ⇒ ‖u_N‖ ≤ ‖x‖/2 (paper Section 4, eq. (5))
+        let mut rng = Pcg::seed(8);
+        let m = 12;
+        let x: Vec<f32> = rng.normal_vec(m);
+        let n = 60;
+        let mut y = Matrix::zeros(m, n);
+        for t in 0..n {
+            y.set_col(t, &x);
+        }
+        let w = rand_weights(&mut rng, n, 1);
+        let res = gpfq_layer(&LayerData::first_layer(&y), &w, Alphabet::ternary(1.0));
+        let xnorm = norm_sq(&x).sqrt() as f64;
+        assert!(res.errs[0] <= 0.5 * xnorm + 1e-5, "{} > {}", res.errs[0], 0.5 * xnorm);
+    }
+
+    #[test]
+    fn error_decays_with_overparametrization() {
+        // Theorem 2 shape: fixed m, growing N ⇒ smaller relative error.
+        let mut rng = Pcg::seed(9);
+        let m = 12;
+        let mut med = Vec::new();
+        for n in [32usize, 512] {
+            let mut es = Vec::new();
+            for _ in 0..4 {
+                let y = rand_matrix(&mut rng, m, n);
+                let w = rand_weights(&mut rng, n, 4);
+                let res = gpfq_layer(&LayerData::first_layer(&y), &w, Alphabet::ternary(1.0));
+                es.extend(res.rel_errs);
+            }
+            med.push(crate::util::stats::median(&es));
+        }
+        assert!(med[1] < 0.5 * med[0], "{med:?}");
+    }
+}

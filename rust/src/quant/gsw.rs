@@ -1,0 +1,196 @@
+//! Gram–Schmidt walk baseline (Bansal, Dadush, Garg, Lovett 2018).
+//!
+//! The paper's Section 3 singles out the GSW as the only discrepancy-theory
+//! construction with both a Banaszczyk-style guarantee and polynomial run
+//! time — and then argues it is still infeasible for networks because of
+//! its O(N(N+m)^ω) complexity versus GPFQ's O(Nm).  We implement the walk
+//! (linear-discrepancy variant, binary alphabet ±α) so the complexity
+//! crossover and error comparison of bench E10 are measured, not asserted.
+//!
+//! Sketch: maintain a fractional x ∈ [−1,1]^N initialized at w/α.  While
+//! coordinates remain fractional ("alive"), pick the largest-index alive
+//! coordinate as pivot, find the direction u supported on the alive set
+//! with u_pivot = 1 minimizing ‖Xu‖₂ (a least-squares solve — the
+//! Gram–Schmidt step), then step x ← x + δu where δ is chosen randomly
+//! from the two magnitudes that freeze at least one coordinate, with the
+//! martingale probabilities of the paper.
+
+use crate::data::rng::Pcg;
+use crate::nn::linalg::lstsq_auto;
+use crate::nn::matrix::Matrix;
+
+/// Outcome of one GSW quantization.
+#[derive(Debug, Clone)]
+pub struct GswResult {
+    /// quantized neuron, entries in {−α, +α}
+    pub q: Vec<f32>,
+    /// number of least-squares solves performed (complexity accounting)
+    pub solves: usize,
+}
+
+/// Quantize one neuron with the Gram–Schmidt walk over the binary alphabet
+/// {−α, α}.  `x_data` is (m × N); weights are clamped into [−α, α] first
+/// (Assumption 2 scaling).
+pub fn gsw_neuron(x_data: &Matrix, w: &[f32], alpha: f32, rng: &mut Pcg) -> GswResult {
+    let n = w.len();
+    assert_eq!(x_data.cols, n);
+    // fractional iterate in [-1, 1]
+    let mut x: Vec<f64> = w.iter().map(|&v| (v / alpha).clamp(-1.0, 1.0) as f64).collect();
+    let mut alive: Vec<bool> = x.iter().map(|&v| v.abs() < 1.0 - 1e-9).collect();
+    let mut solves = 0usize;
+    let col_cache: Vec<Vec<f32>> = (0..n).map(|t| x_data.col(t)).collect();
+
+    loop {
+        let alive_idx: Vec<usize> = (0..n).filter(|&i| alive[i]).collect();
+        if alive_idx.is_empty() {
+            break;
+        }
+        let pivot = *alive_idx.last().unwrap();
+        let rest: Vec<usize> = alive_idx[..alive_idx.len() - 1].to_vec();
+
+        // u_pivot = 1; minimize ||X_rest u_rest + X_pivot|| over u_rest.
+        let mut u = vec![0.0f64; n];
+        u[pivot] = 1.0;
+        if !rest.is_empty() {
+            let m = x_data.rows;
+            let mut a = Matrix::zeros(m, rest.len());
+            for (j, &t) in rest.iter().enumerate() {
+                for r in 0..m {
+                    *a.at_mut(r, j) = col_cache[t][r];
+                }
+            }
+            let b: Vec<f32> = col_cache[pivot].iter().map(|&v| -v).collect();
+            solves += 1;
+            if let Some(sol) = lstsq_auto(&a, &b, 1e-5) {
+                for (j, &t) in rest.iter().enumerate() {
+                    u[t] = sol[j] as f64;
+                }
+            }
+        }
+
+        // step sizes: largest delta+ > 0 and delta- < 0 keeping x+δu in the cube
+        let mut d_pos = f64::INFINITY;
+        let mut d_neg = f64::NEG_INFINITY;
+        for &t in &alive_idx {
+            let ut = u[t];
+            if ut.abs() < 1e-12 {
+                continue;
+            }
+            let to_hi = (1.0 - x[t]) / ut;
+            let to_lo = (-1.0 - x[t]) / ut;
+            let (lo, hi) = if to_lo < to_hi { (to_lo, to_hi) } else { (to_hi, to_lo) };
+            d_pos = d_pos.min(hi);
+            d_neg = d_neg.max(lo);
+        }
+        if !d_pos.is_finite() || !d_neg.is_finite() {
+            // degenerate direction; freeze pivot by rounding it
+            x[pivot] = if x[pivot] >= 0.0 { 1.0 } else { -1.0 };
+            alive[pivot] = false;
+            continue;
+        }
+        // martingale step: P(δ = d_pos) = |d_neg| / (d_pos + |d_neg|)
+        let p_pos = if d_pos - d_neg > 1e-15 { -d_neg / (d_pos - d_neg) } else { 0.5 };
+        let delta = if rng.uniform() < p_pos { d_pos } else { d_neg };
+        for &t in &alive_idx {
+            x[t] += delta * u[t];
+            if x[t].abs() >= 1.0 - 1e-9 {
+                x[t] = x[t].clamp(-1.0, 1.0).round();
+                alive[t] = false;
+            }
+        }
+    }
+
+    GswResult { q: x.iter().map(|&v| (v as f32) * alpha).collect(), solves }
+}
+
+/// Relative quantization error of a GSW-quantized neuron (matching the GPFQ
+/// metric so bench E10 compares like with like).
+pub fn gsw_rel_err(x_data: &Matrix, w: &[f32], q: &[f32]) -> f64 {
+    let n = w.len();
+    let wm = Matrix::from_vec(n, 1, w.to_vec());
+    let qm = Matrix::from_vec(n, 1, q.to_vec());
+    let xw = x_data.matmul(&wm);
+    let num = xw.sub(&x_data.matmul(&qm)).fro_norm();
+    let den = xw.fro_norm();
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::quant::alphabet::Alphabet;
+
+    fn rand_matrix(rng: &mut Pcg, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols))
+    }
+
+    #[test]
+    fn output_is_binary() {
+        let mut rng = Pcg::seed(1);
+        let x = rand_matrix(&mut rng, 6, 12);
+        let w: Vec<f32> = rng.uniform_vec(12, -0.9, 0.9);
+        let res = gsw_neuron(&x, &w, 1.0, &mut rng);
+        for v in &res.q {
+            assert!((v.abs() - 1.0).abs() < 1e-6, "{v}");
+        }
+    }
+
+    #[test]
+    fn respects_alpha_scaling() {
+        let mut rng = Pcg::seed(2);
+        let x = rand_matrix(&mut rng, 4, 8);
+        let w: Vec<f32> = rng.uniform_vec(8, -0.5, 0.5);
+        let res = gsw_neuron(&x, &w, 0.25, &mut rng);
+        for v in &res.q {
+            assert!((v.abs() - 0.25).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn beats_msq_binary_on_overparameterized_data() {
+        // median over seeds: the walk should use the kernel of X, MSQ can't.
+        let a = Alphabet::new(1.0, 2);
+        let mut gsw_better = 0;
+        let trials = 7;
+        for seed in 0..trials {
+            let mut rng = Pcg::seed(100 + seed);
+            let x = rand_matrix(&mut rng, 6, 48);
+            let w: Vec<f32> = rng.uniform_vec(48, -1.0, 1.0);
+            let res = gsw_neuron(&x, &w, 1.0, &mut rng);
+            let e_gsw = gsw_rel_err(&x, &w, &res.q);
+            let q_msq: Vec<f32> = w.iter().map(|&v| a.nearest(v)).collect();
+            let e_msq = gsw_rel_err(&x, &w, &q_msq);
+            if e_gsw < e_msq {
+                gsw_better += 1;
+            }
+        }
+        assert!(gsw_better * 2 > trials, "gsw better in only {gsw_better}/{trials}");
+    }
+
+    #[test]
+    fn already_binary_input_unchanged() {
+        let mut rng = Pcg::seed(3);
+        let x = rand_matrix(&mut rng, 4, 6);
+        let w = vec![1.0f32, -1.0, 1.0, 1.0, -1.0, -1.0];
+        let res = gsw_neuron(&x, &w, 1.0, &mut rng);
+        assert_eq!(res.q, w);
+        assert_eq!(res.solves, 0);
+    }
+
+    #[test]
+    fn solve_count_grows_with_n() {
+        let mut rng = Pcg::seed(4);
+        let x_small = rand_matrix(&mut rng, 4, 8);
+        let w_small: Vec<f32> = rng.uniform_vec(8, -0.9, 0.9);
+        let s_small = gsw_neuron(&x_small, &w_small, 1.0, &mut rng).solves;
+        let x_big = rand_matrix(&mut rng, 4, 32);
+        let w_big: Vec<f32> = rng.uniform_vec(32, -0.9, 0.9);
+        let s_big = gsw_neuron(&x_big, &w_big, 1.0, &mut rng).solves;
+        assert!(s_big > s_small, "{s_big} <= {s_small}");
+    }
+}

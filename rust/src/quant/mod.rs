@@ -1,0 +1,23 @@
+//! Quantization algorithms: the paper's GPFQ contribution plus every
+//! baseline it is compared against.
+//!
+//! - [`gpfq`] — Greedy Path Following Quantization (eq. (2)/(3), Lemma 1)
+//! - [`msq`] — memoryless scalar quantization baseline
+//! - [`gsw`] — Gram–Schmidt walk (Bansal et al. 2018), the feasible
+//!   discrepancy-theory comparator of Section 3
+//! - [`sigma_delta`] — the first-order ΣΔ endpoint of Section 4
+//! - [`exhaustive`] — the NP-hard optimum of eq. (1) for tiny N (test oracle)
+//! - [`alphabet`] / [`error`] — shared alphabets and metrics
+
+pub mod alphabet;
+pub mod error;
+pub mod exhaustive;
+pub mod gpfq;
+pub mod gpfq_order2;
+pub mod gsw;
+pub mod msq;
+pub mod sigma_delta;
+
+pub use alphabet::Alphabet;
+pub use gpfq::{gpfq_layer, gpfq_layer_parallel, gpfq_neuron, LayerData, LayerResult};
+pub use msq::{msq_matrix, msq_vec};

@@ -1,0 +1,74 @@
+//! MSQ — Memoryless Scalar Quantization (paper Section 3, the baseline).
+//!
+//! Each weight is quantized to the nearest alphabet character independently
+//! of all other weights and of the data.  The paper proves/argues this is
+//! the *worst case* of GPFQ's dynamical system (adversarially orthogonal
+//! data reduce GPFQ to MSQ) and shows empirically that it is far from
+//! optimal on overparameterized data (Figure 1, Tables 1–2).
+
+use crate::nn::matrix::Matrix;
+use crate::quant::alphabet::Alphabet;
+
+/// Quantize a weight matrix elementwise.
+pub fn msq_matrix(w: &Matrix, a: Alphabet) -> Matrix {
+    w.map(|x| a.nearest(x))
+}
+
+/// Quantize a weight vector elementwise.
+pub fn msq_vec(w: &[f32], a: Alphabet) -> Vec<f32> {
+    w.iter().map(|&x| a.nearest(x)).collect()
+}
+
+/// The XNOR-net style optimal rank-one binary quantization of Rastegari et
+/// al. (2016) that the paper cites: Q = sign(W), alpha* = mean |W_ij|.
+/// Included as a secondary baseline for the ablation bench.
+pub fn msq_sign_optimal(w: &Matrix) -> (Matrix, f32) {
+    let alpha = w.data.iter().map(|x| x.abs()).sum::<f32>() / (w.data.len().max(1) as f32);
+    let q = w.map(|x| if x >= 0.0 { alpha } else { -alpha });
+    (q, alpha)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantizes_to_nearest() {
+        let a = Alphabet::ternary(1.0);
+        let w = Matrix::from_vec(1, 5, vec![-0.9, -0.4, 0.0, 0.6, 2.0]);
+        let q = msq_matrix(&w, a);
+        assert_eq!(q.data, vec![-1.0, 0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn vec_matches_matrix() {
+        let a = Alphabet::new(0.5, 4);
+        let w = vec![-0.7f32, 0.1, 0.2, 0.49];
+        let m = Matrix::from_vec(2, 2, w.clone());
+        assert_eq!(msq_vec(&w, a), msq_matrix(&m, a).data);
+    }
+
+    #[test]
+    fn sign_optimal_minimizes_frobenius() {
+        // alpha* = mean|W| is the analytic minimizer of ‖W − αQ‖_F over
+        // Q ∈ {±1}: check it beats nearby alphas.
+        let w = Matrix::from_vec(2, 2, vec![0.3, -0.9, 1.2, -0.1]);
+        let (q, alpha) = msq_sign_optimal(&w);
+        let err = |s: f32| {
+            let qs = q.map(|x| x.signum() * s);
+            w.sub(&qs).fro_norm()
+        };
+        assert!(err(alpha) <= err(alpha * 1.1) + 1e-9);
+        assert!(err(alpha) <= err(alpha * 0.9) + 1e-9);
+        assert!((alpha - 0.625).abs() < 1e-6);
+    }
+
+    #[test]
+    fn idempotent() {
+        let a = Alphabet::new(1.3, 8);
+        let w = Matrix::from_vec(1, 4, vec![0.3, -1.1, 0.9, 0.0]);
+        let q1 = msq_matrix(&w, a);
+        let q2 = msq_matrix(&q1, a);
+        assert_eq!(q1.data, q2.data);
+    }
+}

@@ -1,0 +1,89 @@
+//! First-order greedy ΣΔ quantization (paper Section 4, eq. (5)).
+//!
+//! When every data column X_t equals the same vector x, the GPFQ dynamical
+//! system collapses to the classical first-order greedy ΣΔ quantizer acting
+//! on the scalar weight sequence: the state is the accumulated scalar error
+//! s_t = Σ_{j≤t} (w_j − q_j) and ‖u_t‖₂ = |s_t|·‖x‖₂.  For w_t ∈ [−α, α]
+//! one shows by induction that |s_t| ≤ step/2 ≤ α/2 for all t.
+//!
+//! This module exists (a) as the analytic endpoint of the paper's "MSQ vs
+//! ΣΔ extremes" discussion that the dynamics bench (E11) reproduces and
+//! (b) as an independent scalar quantizer usable for bias vectors.
+
+use crate::quant::alphabet::Alphabet;
+
+/// Run the first-order greedy ΣΔ quantizer over a weight sequence.
+/// Returns (q, final_state) where state = Σ (w_t − q_t).
+pub fn sigma_delta(w: &[f32], a: Alphabet) -> (Vec<f32>, f32) {
+    let mut s = 0.0f32;
+    let mut q = Vec::with_capacity(w.len());
+    for &wt in w {
+        let qt = a.nearest(wt + s);
+        s += wt - qt;
+        q.push(qt);
+    }
+    (q, s)
+}
+
+/// Running states |s_t| for analysis/benches.
+pub fn sigma_delta_trace(w: &[f32], a: Alphabet) -> Vec<f32> {
+    let mut s = 0.0f32;
+    let mut trace = Vec::with_capacity(w.len());
+    for &wt in w {
+        let qt = a.nearest(wt + s);
+        s += wt - qt;
+        trace.push(s.abs());
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+
+    #[test]
+    fn state_stays_bounded_by_half_step() {
+        // |s_t| ≤ step/2 when |w_t| ≤ α (standard greedy ΣΔ stability).
+        let mut rng = Pcg::seed(1);
+        for m in [3usize, 4, 16] {
+            let a = Alphabet::new(1.0, m);
+            let w: Vec<f32> = rng.uniform_vec(500, -1.0, 1.0);
+            let bound = a.step() / 2.0 + 1e-5;
+            for s in sigma_delta_trace(&w, a) {
+                assert!(s <= bound, "M={m}: state {s} > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruction_sum_error() {
+        // Σ q_t ≈ Σ w_t within step/2: ΣΔ preserves the running sum.
+        let mut rng = Pcg::seed(2);
+        let a = Alphabet::ternary(1.0);
+        let w: Vec<f32> = rng.uniform_vec(200, -1.0, 1.0);
+        let (q, s) = sigma_delta(&w, a);
+        let sum_w: f32 = w.iter().sum();
+        let sum_q: f32 = q.iter().sum();
+        assert!((sum_w - sum_q - s).abs() < 1e-3);
+        assert!(s.abs() <= a.step() / 2.0 + 1e-5);
+    }
+
+    #[test]
+    fn outputs_in_alphabet() {
+        let a = Alphabet::new(0.7, 4);
+        let (q, _) = sigma_delta(&[0.1, -0.6, 0.65, 0.0], a);
+        for v in q {
+            assert!(a.contains(v, 1e-6));
+        }
+    }
+
+    #[test]
+    fn quantized_input_is_fixed_point() {
+        let a = Alphabet::ternary(1.0);
+        let w = vec![1.0f32, -1.0, 0.0, 1.0];
+        let (q, s) = sigma_delta(&w, a);
+        assert_eq!(q, w);
+        assert_eq!(s, 0.0);
+    }
+}

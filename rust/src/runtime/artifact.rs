@@ -1,0 +1,219 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  `artifacts/manifest.json` describes every AOT-compiled
+//! HLO module (parameter names/shapes, outputs, and the meta needed to pick
+//! the right executable for a given layer shape).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Shape + name of one executable parameter or output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorInfo {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub params: Vec<TensorInfo>,
+    pub outputs: Vec<TensorInfo>,
+    pub meta: BTreeMap<String, f64>,
+}
+
+impl ArtifactInfo {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).map(|&v| v as usize)
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub block_b: usize,
+    pub mq: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Does an artifacts directory exist with a manifest?
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").is_file()
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = json::parse(text).context("parsing manifest.json")?;
+        let version = root.get("version").as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let block_b = root.get("block_b").as_usize().unwrap_or(64);
+        let mq = root.get("mq").as_usize().unwrap_or(512);
+        let mut artifacts = Vec::new();
+        for a in root.get("artifacts").as_arr().unwrap_or(&[]) {
+            let name = a
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .to_string();
+            let file = dir.join(
+                a.get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("artifact {name} missing file"))?,
+            );
+            let kind = a.get("kind").as_str().unwrap_or("unknown").to_string();
+            let tensor = |j: &Json, idx: usize| -> Result<TensorInfo> {
+                let shape = j
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("artifact {name}: tensor missing shape"))?
+                    .iter()
+                    .map(|s| s.as_usize().unwrap_or(0))
+                    .collect();
+                Ok(TensorInfo {
+                    name: j.get("name").as_str().unwrap_or(&format!("t{idx}")).to_string(),
+                    shape,
+                })
+            };
+            let mut params = Vec::new();
+            for (i, p) in a.get("params").as_arr().unwrap_or(&[]).iter().enumerate() {
+                params.push(tensor(p, i)?);
+            }
+            let mut outputs = Vec::new();
+            for (i, o) in a.get("outputs").as_arr().unwrap_or(&[]).iter().enumerate() {
+                outputs.push(tensor(o, i)?);
+            }
+            let mut meta = BTreeMap::new();
+            if let Some(obj) = a.get("meta").as_obj() {
+                for (k, v) in obj {
+                    if let Some(n) = v.as_f64() {
+                        meta.insert(k.clone(), n);
+                    }
+                }
+            }
+            artifacts.push(ArtifactInfo { name, file, kind, params, outputs, meta });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), block_b, mq, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the GPFQ artifact matching a layer shape exactly.
+    pub fn find_gpfq(&self, m: usize, n: usize, b: usize, levels: usize) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.kind == "gpfq"
+                && a.meta_usize("m") == Some(m)
+                && a.meta_usize("n") == Some(n)
+                && a.meta_usize("b") == Some(b)
+                && a.meta_usize("M") == Some(levels)
+        })
+    }
+
+    /// Find a dense-forward artifact for (m, n, k[, act]).
+    pub fn find_dense(&self, m: usize, n: usize, k: usize) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| {
+            a.kind == "dense"
+                && a.meta_usize("m") == Some(m)
+                && a.meta_usize("n") == Some(n)
+                && a.meta_usize("k") == Some(k)
+        })
+    }
+
+    /// Verify that every referenced HLO file exists on disk.
+    pub fn validate_files(&self) -> Result<()> {
+        for a in &self.artifacts {
+            if !a.file.is_file() {
+                bail!("artifact {} missing file {}", a.name, a.file.display());
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"version":1,"block_b":4,"mq":8,"artifacts":[
+      {"name":"gpfq_m8_n16_b4_M3","file":"gpfq_m8_n16_b4_M3.hlo.txt","kind":"gpfq",
+       "params":[{"name":"Y","shape":[8,16],"dtype":"f32"},
+                  {"name":"Yt","shape":[8,16],"dtype":"f32"},
+                  {"name":"W","shape":[16,4],"dtype":"f32"},
+                  {"name":"alpha","shape":[],"dtype":"f32"}],
+       "outputs":[{"shape":[16,4],"dtype":"f32"}],
+       "meta":{"m":8,"n":16,"b":4,"M":3}},
+      {"name":"dense_m8_n16_k4_relu","file":"d.hlo.txt","kind":"dense",
+       "params":[],"outputs":[],"meta":{"m":8,"n":16,"k":4}}]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.block_b, 4);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("gpfq_m8_n16_b4_M3").unwrap();
+        assert_eq!(a.params.len(), 4);
+        assert_eq!(a.params[2].shape, vec![16, 4]);
+        assert_eq!(a.params[3].shape, Vec::<usize>::new());
+        assert_eq!(a.params[3].elements(), 1, "scalar counts one element");
+        assert_eq!(a.outputs[0].shape, vec![16, 4]);
+        assert_eq!(a.file, Path::new("/tmp/arts/gpfq_m8_n16_b4_M3.hlo.txt"));
+    }
+
+    #[test]
+    fn find_gpfq_by_shape() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        assert!(m.find_gpfq(8, 16, 4, 3).is_some());
+        assert!(m.find_gpfq(8, 16, 4, 16).is_none());
+        assert!(m.find_gpfq(9, 16, 4, 3).is_none());
+        assert!(m.find_dense(8, 16, 4).is_some());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let err = Manifest::parse(Path::new("/x"), r#"{"version":2,"artifacts":[]}"#);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn validate_files_fails_for_missing() {
+        let m = Manifest::parse(Path::new("/nonexistent-dir"), SAMPLE).unwrap();
+        assert!(m.validate_files().is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // integration: when `make artifacts` has run, the real manifest must
+        // parse and reference existing files.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if Manifest::available(&dir) {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            m.validate_files().unwrap();
+            assert!(m.find_gpfq(m.mq, 784, m.block_b, 3).is_some());
+        }
+    }
+}

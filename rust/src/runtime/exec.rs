@@ -1,0 +1,275 @@
+//! PJRT execution: load HLO-text artifacts, compile them once on the CPU
+//! client, execute with `Matrix`/scalar arguments.
+//!
+//! This is the only module that touches the `xla` crate.  Interchange is
+//! HLO *text* (see `python/compile/aot.py` — serialized protos from
+//! jax ≥ 0.5 are rejected by xla_extension 0.5.1).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::nn::matrix::Matrix;
+use crate::runtime::artifact::{ArtifactInfo, Manifest};
+
+/// An argument to an artifact execution.
+pub enum Arg<'a> {
+    Mat(&'a Matrix),
+    Vec(&'a [f32]),
+    Scalar(f32),
+}
+
+impl Arg<'_> {
+    fn elements(&self) -> usize {
+        match self {
+            Arg::Mat(m) => m.data.len(),
+            Arg::Vec(v) => v.len(),
+            Arg::Scalar(_) => 1,
+        }
+    }
+}
+
+/// PJRT runtime: a CPU client plus a compile cache of loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifacts directory (must contain
+    /// `manifest.json`).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Try to create a runtime; None when artifacts are absent (callers then
+    /// use the native path).
+    pub fn try_default() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if Manifest::available(&dir) {
+            match Runtime::new(&dir) {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    eprintln!("warning: artifacts present but runtime failed: {e:#}");
+                    None
+                }
+            }
+        } else {
+            None
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    fn executable(&self, info: &ArtifactInfo) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&info.name) {
+                return Ok(exe.clone());
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(&info.file)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", info.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", info.name))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(info.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (for tests/metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute an artifact by name.  Arguments are validated against the
+    /// manifest shapes; outputs come back as `Matrix` values shaped per the
+    /// manifest (scalars become 1×1).
+    pub fn execute(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Matrix>> {
+        let info = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        self.execute_info(&info, args)
+    }
+
+    /// Execute a manifest entry.
+    pub fn execute_info(&self, info: &ArtifactInfo, args: &[Arg<'_>]) -> Result<Vec<Matrix>> {
+        if args.len() != info.params.len() {
+            bail!("artifact {}: expected {} args, got {}", info.name, info.params.len(), args.len());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, param) in args.iter().zip(&info.params) {
+            if arg.elements() != param.elements() {
+                bail!(
+                    "artifact {}: param {} expects {:?} ({} elems), got {} elems",
+                    info.name,
+                    param.name,
+                    param.shape,
+                    param.elements(),
+                    arg.elements()
+                );
+            }
+            let lit = match arg {
+                Arg::Mat(m) => {
+                    let dims: Vec<i64> = param.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&m.data)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow::anyhow!("reshape {}: {e:?}", param.name))?
+                }
+                Arg::Vec(v) => {
+                    let dims: Vec<i64> = param.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(v)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow::anyhow!("reshape {}: {e:?}", param.name))?
+                }
+                Arg::Scalar(s) => xla::Literal::from(*s),
+            };
+            literals.push(lit);
+        }
+        let exe = self.executable(info)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", info.name))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e:?}", info.name))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of {}: {e:?}", info.name))?;
+        if parts.len() != info.outputs.len() {
+            bail!("artifact {}: expected {} outputs, got {}", info.name, info.outputs.len(), parts.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, oinfo) in parts.into_iter().zip(&info.outputs) {
+            let data: Vec<f32> = lit
+                .to_vec()
+                .map_err(|e| anyhow::anyhow!("reading output of {}: {e:?}", info.name))?;
+            let (rows, cols) = match oinfo.shape.len() {
+                0 => (1, 1),
+                1 => (1, oinfo.shape[0]),
+                2 => (oinfo.shape[0], oinfo.shape[1]),
+                _ => bail!("artifact {}: rank-{} outputs unsupported", info.name, oinfo.shape.len()),
+            };
+            if data.len() != rows * cols {
+                bail!("artifact {}: output size mismatch", info.name);
+            }
+            out.push(Matrix::from_vec(rows, cols, data));
+        }
+        Ok(out)
+    }
+}
+
+/// `<crate root>/artifacts` — where `make artifacts` writes.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+    use crate::quant::alphabet::Alphabet;
+    use crate::quant::gpfq::{gpfq_layer, LayerData};
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::try_default()
+    }
+
+    /// Full AOT round-trip: python-lowered GPFQ artifact == native Rust
+    /// quantizer, bit for bit on generic data.  THE integration signal.
+    #[test]
+    fn gpfq_artifact_matches_native() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        };
+        let (m, n, b) = (rt.manifest().mq, 300, rt.manifest().block_b);
+        let Some(info) = rt.manifest().find_gpfq(m, n, b, 3).cloned() else {
+            eprintln!("skipping: no gpfq artifact for ({m},{n},{b},M3)");
+            return;
+        };
+        let mut rng = Pcg::seed(42);
+        let y = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+        let mut yq = y.clone();
+        for v in yq.data.iter_mut() {
+            *v += 0.02 * rng.normal() as f32;
+        }
+        let w = Matrix::from_vec(n, b, rng.uniform_vec(n * b, -1.0, 1.0));
+        let alpha = 0.8f32;
+        let got = rt
+            .execute_info(&info, &[Arg::Mat(&y), Arg::Mat(&yq), Arg::Mat(&w), Arg::Scalar(alpha)])
+            .unwrap();
+        let native = gpfq_layer(&LayerData::new(&y, &yq), &w, Alphabet::new(alpha, 3));
+        let diff: f32 = got[0]
+            .data
+            .iter()
+            .zip(&native.q.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(diff < 1e-5, "pjrt vs native max diff {diff}");
+    }
+
+    #[test]
+    fn execute_validates_arity_and_shapes() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let m = rt.manifest().mq;
+        let info = rt.manifest().find_gpfq(m, 300, rt.manifest().block_b, 3).cloned();
+        let Some(info) = info else { return };
+        // wrong arity
+        assert!(rt.execute_info(&info, &[]).is_err());
+        // wrong shape
+        let bad = Matrix::zeros(1, 1);
+        let args = [Arg::Mat(&bad), Arg::Mat(&bad), Arg::Mat(&bad), Arg::Scalar(1.0)];
+        assert!(rt.execute_info(&info, &args).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        assert!(rt.execute("no_such_artifact", &[]).is_err());
+    }
+
+    #[test]
+    fn compile_cache_reuses() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let Some(info) = rt.manifest().artifacts.iter().find(|a| a.kind == "msq").cloned() else {
+            return;
+        };
+        let n = info.params[0].shape[0];
+        let b = info.params[0].shape[1];
+        let w = Matrix::zeros(n, b);
+        let before = rt.compiled_count();
+        rt.execute_info(&info, &[Arg::Mat(&w), Arg::Scalar(1.0)]).unwrap();
+        let after_first = rt.compiled_count();
+        rt.execute_info(&info, &[Arg::Mat(&w), Arg::Scalar(1.0)]).unwrap();
+        assert_eq!(rt.compiled_count(), after_first);
+        assert_eq!(after_first, before + 1);
+    }
+}

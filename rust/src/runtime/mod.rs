@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python never runs here — this is the request path.
+
+pub mod artifact;
+pub mod exec;
+
+pub use artifact::{ArtifactInfo, Manifest, TensorInfo};
+pub use exec::{default_artifacts_dir, Arg, Runtime};

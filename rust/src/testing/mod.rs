@@ -1,0 +1,4 @@
+//! Test support: the mini property-testing framework (offline substitute
+//! for `proptest`, see DESIGN.md S19).
+
+pub mod prop;

@@ -1,0 +1,152 @@
+//! Mini property-testing framework (no `proptest` in the offline vendor
+//! set): seeded generators + a `forall` runner with failure-case reporting
+//! and simple input-size shrinking.
+//!
+//! Usage (`no_run`: rustdoc's test binaries don't inherit the rpath to
+//! libxla_extension's bundled libstdc++ in this offline image):
+//! ```no_run
+//! use gpfq::testing::prop::{forall, prop_assert, Gen};
+//! forall("sum is commutative", 50, |g| {
+//!     let a = g.f32_in(-10.0, 10.0);
+//!     let b = g.f32_in(-10.0, 10.0);
+//!     prop_assert(a + b == b + a, format!("{a} + {b}"))
+//! });
+//! ```
+
+use crate::data::rng::Pcg;
+
+/// Result of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper producing a labelled failure.
+pub fn prop_assert(cond: bool, label: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(label.into())
+    }
+}
+
+/// Input generator handed to properties; wraps a seeded RNG plus a size
+/// hint that the runner shrinks on failure.
+pub struct Gen {
+    pub rng: Pcg,
+    /// size budget (generators should scale dimensions by this)
+    pub size: usize,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo as f64, hi as f64) as f32
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+    /// dimension scaled by the current shrink size (at least 1)
+    pub fn dim(&mut self, max: usize) -> usize {
+        let cap = max.min(self.size.max(1));
+        1 + self.rng.below(cap)
+    }
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        self.rng.normal_vec(n)
+    }
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        self.rng.uniform_vec(n, lo, hi)
+    }
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of a property.  On failure, retries the failing
+/// seed at smaller size hints to report the smallest reproduction found,
+/// then panics with the seed + label so the case can be replayed.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let base_seed = env_seed().unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed ^ ((case as u64) << 32) ^ case as u64;
+        let mut run = |size: usize| {
+            let mut g = Gen { rng: Pcg::new(seed, 17), size, case };
+            prop(&mut g)
+        };
+        if let Err(msg) = run(64) {
+            // shrink the size hint; same seed, smaller dimensions
+            let mut best: (usize, String) = (64, msg);
+            for size in [32usize, 16, 8, 4, 2, 1] {
+                if let Err(m) = run(size) {
+                    best = (size, m);
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x}, shrunk size {}):\n  {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Override the base seed via GPFQ_PROP_SEED for replaying failures.
+fn env_seed() -> Option<u64> {
+    std::env::var("GPFQ_PROP_SEED").ok()?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("abs is nonnegative", 100, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            prop_assert(x.abs() >= 0.0, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\" failed")]
+    fn failing_property_panics_with_context() {
+        forall("always fails", 5, |g| {
+            let x = g.dim(100);
+            prop_assert(false, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen { rng: Pcg::seed(1), size: 8, case: 0 };
+        for _ in 0..100 {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let d = g.dim(100);
+            assert!((1..=8).contains(&d), "dim {d} respects size hint");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_case() {
+        // same case index draws the same values across runs
+        let mut v1 = Vec::new();
+        forall("collect1", 3, |g| {
+            v1.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut v2 = Vec::new();
+        forall("collect2", 3, |g| {
+            v2.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(v1, v2);
+    }
+}

@@ -1,0 +1,78 @@
+//! Predicted error bounds from the paper's theory, used by the decay
+//! benches (E7–E9) to plot measured error against the theoretical shape.
+
+/// Theorem 2 relative-error shape (up to constants):
+///   ‖Xw − Xq‖ / ‖Xw‖  ≲  √m · log(N₀) / ‖w‖₂.
+/// For generic w with ‖w‖₂ ∝ √N₀ this is log(N₀)·√(m/N₀).
+pub fn thm2_rel_error_shape(m: usize, n0: usize) -> f64 {
+    (n0 as f64).ln() * ((m as f64) / (n0 as f64)).sqrt()
+}
+
+/// Theorem 2 with an explicit ‖w‖₂.
+pub fn thm2_rel_error(m: usize, n0: usize, w_norm: f64) -> f64 {
+    (m as f64).sqrt() * (n0 as f64).ln() / w_norm.max(1e-12)
+}
+
+/// Theorem 3 / Remark 4 generalization shape for normalized rows
+/// (σ² = 1/N₀):  |z^T(w−q)| ≲ m^{3/2} log(N₀) / √N₀.
+pub fn thm3_generalization_shape(m: usize, n0: usize) -> f64 {
+    (m as f64).powf(1.5) * (n0 as f64).ln() / (n0 as f64).sqrt()
+}
+
+/// Lemma 16: when the features live in a d-dimensional subspace, m is
+/// replaced by d in the Theorem 2 bound.
+pub fn lemma16_rel_error_shape(d: usize, n0: usize) -> f64 {
+    thm2_rel_error_shape(d, n0)
+}
+
+/// GPFQ flop count per neuron: O(N·m) (Section 1.1; 2 passes of dot+axpy).
+pub fn gpfq_flops(n: usize, m: usize) -> f64 {
+    4.0 * (n as f64) * (m as f64)
+}
+
+/// Gram–Schmidt-walk flop count per neuron: O(N·(N+m)^ω) with ω = 3 for
+/// the naive normal-equation solver we implement (paper Section 3 quotes
+/// ω ≥ 2 for fast matrix multiply).
+pub fn gsw_flops(n: usize, m: usize) -> f64 {
+    (n as f64) * ((n + m) as f64).powi(3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thm2_decreases_in_n() {
+        let a = thm2_rel_error_shape(32, 128);
+        let b = thm2_rel_error_shape(32, 4096);
+        assert!(b < a, "{b} !< {a}");
+    }
+
+    #[test]
+    fn thm2_increases_in_m() {
+        assert!(thm2_rel_error_shape(64, 1024) > thm2_rel_error_shape(16, 1024));
+    }
+
+    #[test]
+    fn thm2_explicit_matches_generic_w() {
+        // ‖w‖ = sqrt(N/3) for uniform [-1,1] entries in expectation
+        let (m, n) = (16usize, 1024usize);
+        let wnorm = ((n as f64) / 3.0).sqrt();
+        let a = thm2_rel_error(m, n, wnorm);
+        let b = thm2_rel_error_shape(m, n) * 3f64.sqrt();
+        assert!((a - b).abs() / a < 1e-9);
+    }
+
+    #[test]
+    fn lemma16_depends_on_d_not_m() {
+        assert_eq!(lemma16_rel_error_shape(8, 512), thm2_rel_error_shape(8, 512));
+    }
+
+    #[test]
+    fn complexity_crossover_exists() {
+        // for small N, GSW flops are manageable; for large N the gap explodes
+        let r_small = gsw_flops(8, 16) / gpfq_flops(8, 16);
+        let r_big = gsw_flops(512, 16) / gpfq_flops(512, 16);
+        assert!(r_big > 100.0 * r_small);
+    }
+}

@@ -1,0 +1,5 @@
+//! Theory reproduction: predicted bounds (Theorems 2/3, Lemma 16) and their
+//! measured counterparts.
+
+pub mod bounds;
+pub mod experiments;

@@ -1,0 +1,301 @@
+//! Backpropagation through the `nn::Network` layer stack.
+//!
+//! The paper assumes a *pre-trained* float network; this module is the
+//! substrate that produces one (pure-Rust twin of the AOT `train_step`
+//! artifact — the e2e example drives the artifact, the benches use this).
+
+use crate::nn::activations::softmax_rows;
+use crate::nn::batchnorm::BnCache;
+use crate::nn::conv::{col2im, fold_output, im2col, unfold_output};
+use crate::nn::matrix::Matrix;
+use crate::nn::network::{Layer, Network};
+use crate::nn::pool::{maxpool_backward, maxpool_forward};
+
+/// Per-layer forward cache.
+pub enum Cache {
+    Dense { input: Matrix, pre: Matrix },
+    Conv { patches: Matrix, pre: Matrix, batch: usize },
+    Pool { argmax: Vec<usize> },
+    Bn(BnCache),
+}
+
+/// Per-layer parameter gradients (same enum arms as `Layer`).
+pub enum Grad {
+    Dense { dw: Matrix, db: Vec<f32> },
+    Conv { dk: Matrix, db: Vec<f32> },
+    Pool,
+    Bn { dgamma: Vec<f32>, dbeta: Vec<f32> },
+}
+
+/// Training-mode forward pass (BN uses batch statistics); returns logits
+/// and the caches needed by [`backward`].
+pub fn forward_train(net: &mut Network, x: &Matrix) -> (Matrix, Vec<Cache>) {
+    let mut caches = Vec::with_capacity(net.layers.len());
+    let mut h = x.clone();
+    for layer in &mut net.layers {
+        match layer {
+            Layer::Dense { w, b, act } => {
+                let mut pre = h.matmul(w);
+                pre.add_row_vec(b);
+                let mut out = pre.clone();
+                act.apply(&mut out);
+                caches.push(Cache::Dense { input: h, pre });
+                h = out;
+            }
+            Layer::Conv { k, b, kh, kw, stride, act, in_shape } => {
+                let patches = im2col(&h, *in_shape, *kh, *kw, *stride);
+                let mut pre = patches.matmul(k);
+                pre.add_row_vec(b);
+                let mut out = pre.clone();
+                act.apply(&mut out);
+                let batch = h.rows;
+                caches.push(Cache::Conv { patches, pre, batch });
+                h = fold_output(out, batch);
+            }
+            Layer::MaxPool { size, in_shape } => {
+                let (out, argmax, _) = maxpool_forward(&h, *in_shape, *size);
+                caches.push(Cache::Pool { argmax });
+                h = out;
+            }
+            Layer::BatchNorm(bn) => {
+                let (out, cache) = bn.forward_train(&h);
+                caches.push(Cache::Bn(cache));
+                h = out;
+            }
+        }
+    }
+    (h, caches)
+}
+
+/// Softmax cross-entropy loss and its gradient w.r.t. the logits.
+pub fn softmax_ce(logits: &Matrix, y_onehot: &Matrix) -> (f64, Matrix) {
+    assert_eq!((logits.rows, logits.cols), (y_onehot.rows, y_onehot.cols));
+    let probs = softmax_rows(logits);
+    let n = logits.rows as f64;
+    let mut loss = 0.0f64;
+    for r in 0..logits.rows {
+        for c in 0..logits.cols {
+            if y_onehot.at(r, c) > 0.0 {
+                loss -= (probs.at(r, c).max(1e-12) as f64).ln() * y_onehot.at(r, c) as f64;
+            }
+        }
+    }
+    let mut dlogits = probs;
+    for r in 0..dlogits.rows {
+        for c in 0..dlogits.cols {
+            *dlogits.at_mut(r, c) = (dlogits.at(r, c) - y_onehot.at(r, c)) / n as f32;
+        }
+    }
+    (loss / n, dlogits)
+}
+
+/// Backward pass from `dlogits`; returns per-layer gradients.
+pub fn backward(net: &Network, caches: &[Cache], dlogits: Matrix) -> Vec<Grad> {
+    let mut grads: Vec<Grad> = Vec::with_capacity(net.layers.len());
+    let mut d = dlogits;
+    for (layer, cache) in net.layers.iter().zip(caches).rev() {
+        match (layer, cache) {
+            (Layer::Dense { w, act, .. }, Cache::Dense { input, pre }) => {
+                act.backprop(pre, &mut d);
+                let dw = input.transpose().matmul(&d);
+                let mut db = vec![0.0f32; w.cols];
+                for r in 0..d.rows {
+                    for (c, v) in db.iter_mut().enumerate() {
+                        *v += d.at(r, c);
+                    }
+                }
+                let dx = d.matmul(&w.transpose());
+                grads.push(Grad::Dense { dw, db });
+                d = dx;
+            }
+            (Layer::Conv { k, kh, kw, stride, act, in_shape, .. }, Cache::Conv { patches, pre, batch }) => {
+                let mut dpre = unfold_output(&d, k.cols);
+                act.backprop(pre, &mut dpre);
+                let dk = patches.transpose().matmul(&dpre);
+                let mut db = vec![0.0f32; k.cols];
+                for r in 0..dpre.rows {
+                    for (c, v) in db.iter_mut().enumerate() {
+                        *v += dpre.at(r, c);
+                    }
+                }
+                let dpatches = dpre.matmul(&k.transpose());
+                let dx = col2im(&dpatches, *batch, *in_shape, *kh, *kw, *stride);
+                grads.push(Grad::Conv { dk, db });
+                d = dx;
+            }
+            (Layer::MaxPool { in_shape, .. }, Cache::Pool { argmax }) => {
+                d = maxpool_backward(&d, argmax, *in_shape);
+                grads.push(Grad::Pool);
+            }
+            (Layer::BatchNorm(bn), Cache::Bn(cache)) => {
+                let mut dgamma = vec![0.0f32; bn.channels];
+                let mut dbeta = vec![0.0f32; bn.channels];
+                d = bn.backward(cache, &d, &mut dgamma, &mut dbeta);
+                grads.push(Grad::Bn { dgamma, dbeta });
+            }
+            _ => unreachable!("cache/layer mismatch"),
+        }
+    }
+    grads.reverse();
+    grads
+}
+
+/// SGD with momentum state.
+pub struct SgdState {
+    velocity: Vec<Option<(Matrix, Vec<f32>)>>,
+    pub lr: f32,
+    pub momentum: f32,
+}
+
+impl SgdState {
+    pub fn new(net: &Network, lr: f32, momentum: f32) -> Self {
+        let velocity = net
+            .layers
+            .iter()
+            .map(|l| match l {
+                Layer::Dense { w, b, .. } => Some((Matrix::zeros(w.rows, w.cols), vec![0.0; b.len()])),
+                Layer::Conv { k, b, .. } => Some((Matrix::zeros(k.rows, k.cols), vec![0.0; b.len()])),
+                _ => None,
+            })
+            .collect();
+        SgdState { velocity, lr, momentum }
+    }
+
+    /// Apply one SGD(+momentum) update.  BN params use plain SGD.
+    pub fn step(&mut self, net: &mut Network, grads: &[Grad]) {
+        assert_eq!(grads.len(), net.layers.len());
+        for (i, (layer, grad)) in net.layers.iter_mut().zip(grads).enumerate() {
+            match (layer, grad) {
+                (Layer::Dense { w, b, .. }, Grad::Dense { dw, db })
+                | (Layer::Conv { k: w, b, .. }, Grad::Conv { dk: dw, db }) => {
+                    let (vw, vb) = self.velocity[i].as_mut().unwrap();
+                    for j in 0..w.data.len() {
+                        vw.data[j] = self.momentum * vw.data[j] - self.lr * dw.data[j];
+                        w.data[j] += vw.data[j];
+                    }
+                    for j in 0..b.len() {
+                        vb[j] = self.momentum * vb[j] - self.lr * db[j];
+                        b[j] += vb[j];
+                    }
+                }
+                (Layer::BatchNorm(bn), Grad::Bn { dgamma, dbeta }) => {
+                    for j in 0..bn.channels {
+                        bn.gamma[j] -= self.lr * dgamma[j];
+                        bn.beta[j] -= self.lr * dbeta[j];
+                    }
+                }
+                (Layer::MaxPool { .. }, Grad::Pool) => {}
+                _ => unreachable!("grad/layer mismatch"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+    use crate::nn::network::{mnist_mlp, NetworkBuilder, Shape};
+    use crate::nn::ImgShape;
+
+    fn toy_xy(rng: &mut Pcg, n: usize, dim: usize, classes: usize) -> (Matrix, Matrix, Vec<usize>) {
+        let x = Matrix::from_vec(n, dim, rng.normal_vec(n * dim));
+        let labels: Vec<usize> = (0..n).map(|r| (x.at(r, 0) > 0.0) as usize % classes).collect();
+        let mut y = Matrix::zeros(n, classes);
+        for (r, &l) in labels.iter().enumerate() {
+            *y.at_mut(r, l) = 1.0;
+        }
+        (x, y, labels)
+    }
+
+    #[test]
+    fn softmax_ce_known_value() {
+        let logits = Matrix::from_vec(1, 2, vec![0.0, 0.0]);
+        let y = Matrix::from_vec(1, 2, vec![1.0, 0.0]);
+        let (loss, d) = softmax_ce(&logits, &y);
+        assert!((loss - (2.0f64).ln()).abs() < 1e-6);
+        assert!((d.at(0, 0) + 0.5).abs() < 1e-6);
+        assert!((d.at(0, 1) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dense_grads_match_finite_difference() {
+        let mut rng = Pcg::seed(1);
+        let mut net = mnist_mlp(1, 6, &[5], 3);
+        let (x, y, _) = toy_xy(&mut rng, 4, 6, 3);
+        let loss_of = |net: &mut crate::nn::Network| {
+            let (logits, _) = forward_train(net, &x);
+            softmax_ce(&logits, &y).0
+        };
+        let (logits, caches) = forward_train(&mut net, &x);
+        let (_, dlogits) = softmax_ce(&logits, &y);
+        let grads = backward(&net, &caches, dlogits);
+        // check a few dense weights by central differences
+        if let Grad::Dense { dw, .. } = &grads[0] {
+            let eps = 1e-3f32;
+            for idx in [0usize, 7, 13] {
+                let mut np = net.clone();
+                np.layers[0].weights_mut().unwrap().data[idx] += eps;
+                let mut nm = net.clone();
+                nm.layers[0].weights_mut().unwrap().data[idx] -= eps;
+                let fd = (loss_of(&mut np) - loss_of(&mut nm)) / (2.0 * eps as f64);
+                let an = dw.data[idx] as f64;
+                assert!((fd - an).abs() < 1e-2 * fd.abs().max(0.1), "idx {idx}: {fd} vs {an}");
+            }
+        } else {
+            panic!("expected dense grad");
+        }
+    }
+
+    #[test]
+    fn conv_grads_match_finite_difference() {
+        let mut rng = Pcg::seed(2);
+        let img = ImgShape { h: 5, w: 5, c: 1 };
+        let mut b = NetworkBuilder::new(Shape::Img(img), 3);
+        b.conv(3, 3, 2, 1, crate::nn::Activation::Relu).flatten().dense(2, crate::nn::Activation::None);
+        let mut net = b.build();
+        let (x, y, _) = toy_xy(&mut rng, 3, img.len(), 2);
+        let loss_of = |net: &mut crate::nn::Network| {
+            let (logits, _) = forward_train(net, &x);
+            softmax_ce(&logits, &y).0
+        };
+        let (logits, caches) = forward_train(&mut net, &x);
+        let (_, dlogits) = softmax_ce(&logits, &y);
+        let grads = backward(&net, &caches, dlogits);
+        if let Grad::Conv { dk, .. } = &grads[0] {
+            let eps = 1e-3f32;
+            for idx in [0usize, 5, 11] {
+                let mut np = net.clone();
+                np.layers[0].weights_mut().unwrap().data[idx] += eps;
+                let mut nm = net.clone();
+                nm.layers[0].weights_mut().unwrap().data[idx] -= eps;
+                let fd = (loss_of(&mut np) - loss_of(&mut nm)) / (2.0 * eps as f64);
+                let an = dk.data[idx] as f64;
+                assert!((fd - an).abs() < 2e-2 * fd.abs().max(0.1), "idx {idx}: {fd} vs {an}");
+            }
+        } else {
+            panic!("expected conv grad");
+        }
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_separable_toy() {
+        let mut rng = Pcg::seed(3);
+        let mut net = mnist_mlp(4, 8, &[12], 2);
+        let (x, y, _) = toy_xy(&mut rng, 64, 8, 2);
+        let mut sgd = SgdState::new(&net, 0.2, 0.9);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..50 {
+            let (logits, caches) = forward_train(&mut net, &x);
+            let (loss, dlogits) = softmax_ce(&logits, &y);
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            let grads = backward(&net, &caches, dlogits);
+            sgd.step(&mut net, &grads);
+        }
+        assert!(last < 0.3 * first, "loss {first} -> {last}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Training substrate (paper assumes pre-trained nets; we build them).
+
+pub mod backprop;
+pub mod trainer;
+
+pub use backprop::{backward, forward_train, softmax_ce, SgdState};
+pub use trainer::{train, EpochStats, TrainConfig};

@@ -1,0 +1,108 @@
+//! Training loop: minibatch SGD with momentum over a `Dataset`, with
+//! per-epoch metrics.  Produces the pre-trained float networks that the
+//! quantization experiments consume.
+
+use crate::data::dataset::Dataset;
+use crate::data::rng::Pcg;
+use crate::eval::metrics::accuracy;
+use crate::nn::network::Network;
+use crate::train::backprop::{backward, forward_train, softmax_ce, SgdState};
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+    /// print a line per epoch
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 10, batch: 64, lr: 0.05, momentum: 0.9, seed: 0, verbose: false }
+    }
+}
+
+/// Per-epoch record.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub loss: f64,
+    pub train_acc: f64,
+}
+
+/// Train `net` in place; returns the loss/accuracy trajectory.
+pub fn train(net: &mut Network, data: &Dataset, cfg: &TrainConfig) -> Vec<EpochStats> {
+    let mut rng = Pcg::new(cfg.seed, 31);
+    let mut sgd = SgdState::new(net, cfg.lr, cfg.momentum);
+    let y_all = data.one_hot();
+    let mut history = Vec::with_capacity(cfg.epochs);
+    for epoch in 0..cfg.epochs {
+        let mut loss_sum = 0.0;
+        let mut batches_n = 0usize;
+        for batch_idx in data.batches(cfg.batch, &mut rng) {
+            let xb = data.x.gather_rows(&batch_idx);
+            let yb = y_all.gather_rows(&batch_idx);
+            let (logits, caches) = forward_train(net, &xb);
+            let (loss, dlogits) = softmax_ce(&logits, &yb);
+            let grads = backward(net, &caches, dlogits);
+            sgd.step(net, &grads);
+            loss_sum += loss;
+            batches_n += 1;
+        }
+        let train_acc = accuracy(net, data);
+        let stats = EpochStats { epoch, loss: loss_sum / batches_n.max(1) as f64, train_acc };
+        if cfg.verbose {
+            println!("epoch {:3}  loss {:.4}  train-acc {:.4}", epoch, stats.loss, stats.train_acc);
+        }
+        history.push(stats);
+    }
+    history
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::nn::conv::ImgShape;
+    use crate::nn::network::mnist_mlp;
+
+    fn tiny_spec() -> SynthSpec {
+        SynthSpec {
+            classes: 3,
+            shape: ImgShape { h: 8, w: 8, c: 1 },
+            blobs: 4,
+            noise: 0.15,
+            max_shift: 1,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn training_learns_synthetic_task() {
+        let spec = tiny_spec();
+        let train_set = generate(&spec, 240, 0, false);
+        let test_set = generate(&spec, 120, 1, false);
+        let mut net = mnist_mlp(1, 64, &[32], 3);
+        let cfg = TrainConfig { epochs: 12, batch: 32, lr: 0.05, momentum: 0.9, seed: 1, verbose: false };
+        let hist = train(&mut net, &train_set, &cfg);
+        assert!(hist.last().unwrap().loss < 0.5 * hist[0].loss, "{hist:?}");
+        let acc = accuracy(&net, &test_set);
+        assert!(acc > 0.8, "test acc {acc}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = tiny_spec();
+        let d = generate(&spec, 60, 0, false);
+        let cfg = TrainConfig { epochs: 2, ..Default::default() };
+        let mut a = mnist_mlp(2, 64, &[16], 3);
+        let mut b = mnist_mlp(2, 64, &[16], 3);
+        train(&mut a, &d, &cfg);
+        train(&mut b, &d, &cfg);
+        assert_eq!(a.layers[0].weights().unwrap().data, b.layers[0].weights().unwrap().data);
+    }
+}

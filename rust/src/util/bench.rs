@@ -1,0 +1,199 @@
+//! Micro/meso benchmark harness.
+//!
+//! `criterion` is not available in the offline crate set, so `cargo bench`
+//! targets (declared with `harness = false`) use this small harness: warmup,
+//! repeated timed runs, robust summary statistics, paper-style table
+//! printing and CSV dumps under `results/`.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+}
+
+impl Sample {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+/// `f` receives the iteration index and must return something observable so
+/// the optimizer cannot delete the work (we `black_box` the result).
+pub fn time_fn<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut(usize) -> T) -> Sample {
+    for i in 0..warmup {
+        std::hint::black_box(f(i));
+    }
+    let mut times = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f(i));
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Sample {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&times),
+        median_s: stats::median(&times),
+        p10_s: stats::quantile(&times, 0.1),
+        p90_s: stats::quantile(&times, 0.9),
+    }
+}
+
+/// A paper-style results table: fixed column headers, rows of strings,
+/// rendered as GitHub markdown and optionally dumped as CSV.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}", self.title);
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, " {:<w$} |", c, w = w);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&self.headers, &widths, &mut out);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &widths, &mut out);
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Print to stdout and persist a CSV copy under `results/<slug>.csv`.
+    pub fn emit(&self, slug: &str) {
+        println!("{}", self.render());
+        let dir = std::path::Path::new("results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{slug}.csv"));
+            if let Err(e) = std::fs::write(&path, self.to_csv()) {
+                eprintln!("warning: could not write {}: {e}", path.display());
+            } else {
+                println!("(csv written to {})\n", path.display());
+            }
+        }
+    }
+}
+
+/// Human formatting helpers.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K/s", per_sec / 1e3)
+    } else {
+        format!("{:.2} /s", per_sec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_iters() {
+        let mut calls = 0usize;
+        let s = time_fn("noop", 2, 5, |_| {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_s >= 0.0 && s.p90_s >= s.p10_s);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        let md = t.render();
+        assert!(md.contains("### Demo") && md.contains("| 1 |"));
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert!(fmt_secs(2e-9).contains("ns"));
+        assert!(fmt_secs(2e-5).contains("µs"));
+        assert!(fmt_secs(0.02).contains("ms"));
+        assert!(fmt_secs(2.0).contains(" s"));
+        assert!(fmt_rate(5e9).contains("G/s"));
+        assert!(fmt_rate(5e6).contains("M/s"));
+    }
+}

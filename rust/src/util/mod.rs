@@ -1,0 +1,6 @@
+//! Shared utilities: JSON parsing (manifest), statistics, and the bench
+//! harness (criterion is unavailable in the offline crate set).
+
+pub mod bench;
+pub mod json;
+pub mod stats;

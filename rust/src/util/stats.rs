@@ -1,0 +1,119 @@
+//! Small statistics helpers shared by the bench harness, the sweep
+//! orchestrator and the theory experiments.
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for fewer than two samples.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// q-th quantile (0 <= q <= 1) by linear interpolation on sorted copies.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median (0.5 quantile).
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Median of f32 samples (convenience for weight matrices).
+pub fn median_f32(xs: &[f32]) -> f32 {
+    let v: Vec<f64> = xs.iter().map(|&x| x as f64).collect();
+    median(&v) as f32
+}
+
+/// Ordinary least-squares slope of y against x (used by the scaling benches
+/// to fit log-log complexity exponents).
+pub fn ols_slope(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..x.len() {
+        num += (x[i] - mx) * (y[i] - my);
+        den += (x[i] - mx) * (x[i] - mx);
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Histogram of values into `bins` equal-width buckets over [lo, hi].
+/// Out-of-range values clamp into the edge buckets (matching how the paper's
+/// Figure 2b bins quantized weights).
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &x in xs {
+        let idx = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        counts[idx] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[2.0, 4.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(stddev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [3.0, 1.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median(&[1.0, 2.0, 3.0]), 2.0);
+    }
+
+    #[test]
+    fn slope_recovers_line() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v + 1.0).collect();
+        assert!((ols_slope(&x, &y) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bins_and_clamps() {
+        let h = histogram(&[-10.0, 0.1, 0.9, 10.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]);
+        assert_eq!(histogram(&[], 0.0, 1.0, 3), vec![0, 0, 0]);
+    }
+}

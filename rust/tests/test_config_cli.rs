@@ -1,0 +1,111 @@
+//! Config + CLI integration: every shipped config parses and builds, and
+//! the CLI dispatch layer handles the happy/sad paths.
+
+use std::path::Path;
+
+use gpfq::cli::args::Args;
+use gpfq::cli::commands::{dispatch, make_datasets, resolve_spec};
+use gpfq::config::{toml, ExperimentSpec};
+
+fn repo_path(rel: &str) -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+fn args(v: &[&str]) -> Args {
+    Args::parse(v.iter().map(|s| s.to_string()).collect()).unwrap()
+}
+
+#[test]
+fn every_shipped_config_parses_and_builds() {
+    let dir = repo_path("configs");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("configs/ directory") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let doc = toml::parse_file(&path).unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let spec = ExperimentSpec::from_doc(&doc)
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let net = spec.build_network();
+        assert!(net.weight_count() > 0, "{}", path.display());
+        assert!(!spec.quant.c_alphas.is_empty());
+        seen += 1;
+    }
+    assert!(seen >= 4, "expected >= 4 shipped configs, found {seen}");
+}
+
+#[test]
+fn shipped_configs_match_paper_grids() {
+    // cifar config must carry the Table 1 grid; imagenet must be fc-only
+    let doc = toml::parse_file(&repo_path("configs/cifar.toml")).unwrap();
+    let spec = ExperimentSpec::from_doc(&doc).unwrap();
+    assert_eq!(spec.quant.levels, vec![3, 4, 8, 16]);
+    assert_eq!(spec.quant.c_alphas, vec![2.0, 3.0, 4.0, 5.0, 6.0]);
+    let doc = toml::parse_file(&repo_path("configs/imagenet.toml")).unwrap();
+    let spec = ExperimentSpec::from_doc(&doc).unwrap();
+    assert!(spec.quant.fc_only);
+    assert_eq!(spec.quant.levels, vec![3]);
+    let doc = toml::parse_file(&repo_path("configs/mnist.toml")).unwrap();
+    let spec = ExperimentSpec::from_doc(&doc).unwrap();
+    assert_eq!(spec.quant.c_alphas.len(), 10, "Fig 1a sweeps C_alpha 1..10");
+}
+
+#[test]
+fn cli_resolves_config_files() {
+    let cfg = repo_path("configs/mnist.toml");
+    let a = args(&["quantize", "--config", cfg.to_str().unwrap(), "--epochs", "1"]);
+    let spec = resolve_spec(&a).unwrap();
+    assert_eq!(spec.name, "mnist_mlp");
+    assert_eq!(spec.train.epochs, 1);
+}
+
+#[test]
+fn cli_full_quantize_run_tiny() {
+    // a real end-to-end CLI run, shrunk to seconds
+    let cfg = repo_path("configs/mnist.toml");
+    let a = args(&[
+        "quantize",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--epochs",
+        "1",
+        "--quant-samples",
+        "64",
+        "--c-alpha",
+        "3",
+        "--workers",
+        "2",
+    ]);
+    let mut spec = resolve_spec(&a).unwrap();
+    spec.dataset.n_train = 200;
+    spec.dataset.n_test = 80;
+    // run the pieces the command runs (dispatch would re-resolve full sizes)
+    let (tr, te) = make_datasets(&spec);
+    assert_eq!(tr.len(), 200);
+    assert_eq!(te.len(), 80);
+    let mut net = spec.build_network();
+    gpfq::train::train(&mut net, &tr, &spec.train);
+    let out = gpfq::coordinator::pipeline::quantize_network(
+        &net,
+        &tr.x.rows_slice(0, 64),
+        &gpfq::coordinator::pipeline::PipelineConfig { workers: 2, ..Default::default() },
+    );
+    assert_eq!(out.layer_reports.len(), 3);
+}
+
+#[test]
+fn cli_error_paths() {
+    assert!(dispatch(&args(&["bogus"])).is_err());
+    assert!(resolve_spec(&args(&["train", "--preset", "nope"])).is_err());
+    assert!(resolve_spec(&args(&["train", "--config", "/nonexistent.toml"])).is_err());
+    let a = args(&["train", "--epochs", "NaN"]);
+    assert!(resolve_spec(&a).is_err());
+}
+
+#[test]
+fn cli_help_and_info_run() {
+    assert!(dispatch(&args(&["help"])).is_ok());
+    // info must work whether or not artifacts exist
+    assert!(dispatch(&args(&["info"])).is_ok());
+}

@@ -1,0 +1,140 @@
+//! Failure injection: corrupt artifacts, broken manifests, mid-flight job
+//! errors — the coordinator must fail loudly and cleanly, never silently
+//! produce wrong numbers.
+
+use std::io::Write;
+
+use gpfq::coordinator::scheduler::{run_jobs, SchedulerConfig};
+use gpfq::nn::matrix::Matrix;
+use gpfq::runtime::{Arg, Manifest, Runtime};
+
+fn write_file(dir: &std::path::Path, name: &str, contents: &str) {
+    let mut f = std::fs::File::create(dir.join(name)).unwrap();
+    f.write_all(contents.as_bytes()).unwrap();
+}
+
+fn tempdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("gpfq_test_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn manifest_garbage_is_an_error_not_a_panic() {
+    let dir = tempdir("garbage_manifest");
+    write_file(&dir, "manifest.json", "{ not json");
+    assert!(Manifest::load(&dir).is_err());
+    write_file(&dir, "manifest.json", r#"{"version": 9}"#);
+    assert!(Manifest::load(&dir).is_err(), "wrong version must be rejected");
+    write_file(&dir, "manifest.json", r#"{"version":1,"artifacts":[{"kind":"gpfq"}]}"#);
+    assert!(Manifest::load(&dir).is_err(), "artifact without name must be rejected");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_hlo_file_detected_by_validation() {
+    let dir = tempdir("missing_hlo");
+    write_file(
+        &dir,
+        "manifest.json",
+        r#"{"version":1,"block_b":4,"mq":8,"artifacts":[
+            {"name":"ghost","file":"ghost.hlo.txt","kind":"msq",
+             "params":[{"name":"W","shape":[4,4],"dtype":"f32"}],
+             "outputs":[{"shape":[4,4],"dtype":"f32"}],"meta":{}}]}"#,
+    );
+    let man = Manifest::load(&dir).unwrap();
+    assert!(man.validate_files().is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_execute_with_context() {
+    let dir = tempdir("corrupt_hlo");
+    write_file(
+        &dir,
+        "manifest.json",
+        r#"{"version":1,"block_b":4,"mq":8,"artifacts":[
+            {"name":"bad","file":"bad.hlo.txt","kind":"msq",
+             "params":[{"name":"W","shape":[2,2],"dtype":"f32"}],
+             "outputs":[{"shape":[2,2],"dtype":"f32"}],"meta":{}}]}"#,
+    );
+    write_file(&dir, "bad.hlo.txt", "HloModule utterly_broken\n%%%garbage%%%\n");
+    let rt = Runtime::new(&dir).expect("runtime builds; compile is lazy");
+    let w = Matrix::zeros(2, 2);
+    let err = rt.execute("bad", &[Arg::Mat(&w)]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad"), "error should name the artifact: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wrong_arity_and_shape_rejected_before_execution() {
+    // use the real artifacts when present; otherwise a synthetic manifest
+    // with a file that never needs to compile (validation fires first).
+    let dir = tempdir("arity");
+    write_file(
+        &dir,
+        "manifest.json",
+        r#"{"version":1,"block_b":4,"mq":8,"artifacts":[
+            {"name":"a","file":"a.hlo.txt","kind":"msq",
+             "params":[{"name":"W","shape":[4,4],"dtype":"f32"},
+                        {"name":"alpha","shape":[],"dtype":"f32"}],
+             "outputs":[{"shape":[4,4],"dtype":"f32"}],"meta":{}}]}"#,
+    );
+    write_file(&dir, "a.hlo.txt", "never compiled");
+    let rt = Runtime::new(&dir).unwrap();
+    let w = Matrix::zeros(4, 4);
+    // arity
+    let err = rt.execute("a", &[Arg::Mat(&w)]).unwrap_err();
+    assert!(format!("{err}").contains("expected 2 args"));
+    // shape
+    let small = Matrix::zeros(2, 2);
+    let err = rt.execute("a", &[Arg::Mat(&small), Arg::Scalar(1.0)]).unwrap_err();
+    assert!(format!("{err}").contains("expects"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scheduler_survives_panicking_free_errors_under_load() {
+    // stress: many jobs, several of which fail, across queue pressure
+    for cap in [1usize, 2, 64] {
+        let cfg = SchedulerConfig { workers: 4, queue_cap: cap };
+        let res: Result<Vec<usize>, String> = run_jobs(cfg, (0..500).collect(), |_, j| {
+            if j % 97 == 13 {
+                Err(format!("fail {j}"))
+            } else {
+                Ok(j)
+            }
+        });
+        let err = res.unwrap_err();
+        assert!(err.starts_with("fail"), "cap={cap}: {err}");
+    }
+}
+
+#[test]
+fn scheduler_many_workers_few_jobs() {
+    let cfg = SchedulerConfig { workers: 32, queue_cap: 1 };
+    let out: Vec<usize> = run_jobs(cfg, vec![7, 8], |i, j| Ok::<_, ()>(i + j)).unwrap();
+    assert_eq!(out, vec![7, 9]);
+}
+
+#[test]
+fn model_file_corruption_detected() {
+    use gpfq::nn::serialize::{load_file, save_file, AlphabetHints};
+    let dir = tempdir("model_corrupt");
+    let net = gpfq::nn::mnist_mlp(1, 12, &[6], 3);
+    let path = dir.join("m.gpfq");
+    save_file(&net, &AlphabetHints::new(), &path).unwrap();
+    // flip bytes in the header region
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[0] = b'X';
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(load_file(&path).is_err());
+    // truncate mid-layer
+    save_file(&net, &AlphabetHints::new(), &path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() * 2 / 3]).unwrap();
+    assert!(load_file(&path).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,167 @@
+//! Integration tests: the full coordinator pipeline over trained networks
+//! of every architecture family, checking the paper's qualitative results
+//! end to end (train → quantize → evaluate).
+
+use gpfq::coordinator::pipeline::{quantize_network, verify_alphabet, Method, PipelineConfig};
+use gpfq::coordinator::sweep::{sweep, SweepConfig};
+use gpfq::data::synth::{generate, SynthSpec};
+use gpfq::data::Dataset;
+use gpfq::eval::metrics::{accuracy, topk_accuracy};
+use gpfq::nn::conv::ImgShape;
+use gpfq::nn::network::{cifar_cnn, mnist_mlp, vgg_like, Network};
+use gpfq::train::{train, TrainConfig};
+
+fn spec(classes: usize, shape: ImgShape, seed: u64) -> SynthSpec {
+    SynthSpec { classes, shape, blobs: 5, noise: 0.3, max_shift: 1, seed }
+}
+
+fn train_net(net: &mut Network, data: &Dataset, epochs: usize) {
+    let cfg = TrainConfig { epochs, batch: 32, lr: 0.04, momentum: 0.9, seed: 3, verbose: false };
+    train(net, data, &cfg);
+}
+
+#[test]
+fn mlp_full_cycle_ternary() {
+    let s = spec(4, ImgShape { h: 10, w: 10, c: 1 }, 31);
+    let tr = generate(&s, 400, 0, false);
+    let te = generate(&s, 200, 1, false);
+    let mut net = mnist_mlp(3, 100, &[48, 24], 4);
+    train_net(&mut net, &tr, 10);
+    let analog = accuracy(&net, &te);
+    assert!(analog > 0.8, "analog acc {analog}");
+
+    let out = quantize_network(&net, &tr.x.rows_slice(0, 200), &PipelineConfig { c_alpha: 3.0, ..Default::default() });
+    assert!(verify_alphabet(&out));
+    let q = accuracy(&out.network, &te);
+    assert!(q > analog - 0.2, "ternary GPFQ acc {q} vs analog {analog}");
+    assert_eq!(out.layer_reports.len(), 3);
+    // weights were replaced, biases kept float
+    for rep in &out.layer_reports {
+        assert!(rep.seconds >= 0.0 && rep.neurons > 0);
+    }
+}
+
+#[test]
+fn cnn_full_cycle_4bit() {
+    let img = ImgShape { h: 12, w: 12, c: 1 };
+    let s = spec(3, img, 32);
+    let tr = generate(&s, 300, 0, false);
+    let te = generate(&s, 150, 1, false);
+    let mut net = cifar_cnn(4, img, &[4], 24, 3);
+    train_net(&mut net, &tr, 8);
+    let analog = accuracy(&net, &te);
+    assert!(analog > 0.7, "analog acc {analog}");
+
+    let cfg = PipelineConfig { levels: 16, c_alpha: 4.0, ..Default::default() };
+    let out = quantize_network(&net, &tr.x.rows_slice(0, 100), &cfg);
+    assert!(verify_alphabet(&out));
+    // conv + dense layers all quantized
+    assert_eq!(out.layer_reports.len(), net.quantizable_layers().len());
+    let q = accuracy(&out.network, &te);
+    assert!(q > analog - 0.15, "4-bit acc {q} vs analog {analog}");
+}
+
+#[test]
+fn vgg_fc_only_protocol() {
+    let img = ImgShape { h: 12, w: 12, c: 1 };
+    let s = spec(3, img, 33);
+    let tr = generate(&s, 250, 0, false);
+    let te = generate(&s, 120, 1, false);
+    let mut net = vgg_like(5, img, &[4], &[64, 32], 3);
+    train_net(&mut net, &tr, 8);
+
+    let cfg = PipelineConfig { fc_only: true, c_alpha: 3.0, ..Default::default() };
+    let out = quantize_network(&net, &tr.x.rows_slice(0, 100), &cfg);
+    // only dense layers quantized; conv kernels untouched
+    assert!(out.layer_reports.iter().all(|r| r.label.starts_with("dense")));
+    for (i, layer) in out.network.layers.iter().enumerate() {
+        if matches!(layer, gpfq::nn::Layer::Conv { .. }) {
+            assert_eq!(
+                layer.weights().unwrap().data,
+                net.layers[i].weights().unwrap().data,
+                "conv layer {i} must be unchanged"
+            );
+        }
+    }
+    // top-5 >= top-1 sanity on multiclass
+    let t1 = topk_accuracy(&out.network, &te, 1);
+    let t3 = topk_accuracy(&out.network, &te, 3);
+    assert!(t3 >= t1);
+}
+
+#[test]
+fn gpfq_dominates_msq_in_layer_error_on_every_arch() {
+    let img = ImgShape { h: 10, w: 10, c: 1 };
+    let s = spec(3, img, 34);
+    let tr = generate(&s, 200, 0, false);
+    for (name, mut net) in [
+        ("mlp", mnist_mlp(6, 100, &[32], 3)),
+        ("cnn", cifar_cnn(7, img, &[4], 16, 3)),
+    ] {
+        train_net(&mut net, &tr, 5);
+        let x = tr.x.rows_slice(0, 100);
+        let g = quantize_network(&net, &x, &PipelineConfig { c_alpha: 3.0, ..Default::default() });
+        let m = quantize_network(
+            &net,
+            &x,
+            &PipelineConfig { method: Method::Msq, c_alpha: 3.0, ..Default::default() },
+        );
+        for (gr, mr) in g.layer_reports.iter().zip(&m.layer_reports) {
+            assert!(
+                gr.fro_err <= mr.fro_err + 1e-9,
+                "{name} layer {}: gpfq {} > msq {}",
+                gr.label,
+                gr.fro_err,
+                mr.fro_err
+            );
+        }
+    }
+}
+
+#[test]
+fn sweep_matches_single_runs() {
+    let s = spec(3, ImgShape { h: 8, w: 8, c: 1 }, 35);
+    let tr = generate(&s, 200, 0, false);
+    let te = generate(&s, 100, 1, false);
+    let mut net = mnist_mlp(8, 64, &[24], 3);
+    train_net(&mut net, &tr, 6);
+    let x = tr.x.rows_slice(0, 100);
+    let res = sweep(
+        &net,
+        &x,
+        &te,
+        &SweepConfig { levels: vec![3], c_alphas: vec![2.0], methods: vec![Method::Gpfq], ..Default::default() },
+    );
+    let single = quantize_network(&net, &x, &PipelineConfig { c_alpha: 2.0, ..Default::default() });
+    let acc_single = accuracy(&single.network, &te);
+    assert!((res.points[0].top1 - acc_single).abs() < 1e-9, "sweep must reproduce single runs exactly");
+}
+
+#[test]
+fn progressive_checkpoints_monotone_layer_count() {
+    let s = spec(3, ImgShape { h: 8, w: 8, c: 1 }, 36);
+    let tr = generate(&s, 150, 0, false);
+    let mut net = mnist_mlp(9, 64, &[24, 12], 3);
+    train_net(&mut net, &tr, 4);
+    let out = quantize_network(
+        &net,
+        &tr.x.rows_slice(0, 80),
+        &PipelineConfig { capture_checkpoints: true, ..Default::default() },
+    );
+    assert_eq!(out.checkpoints.len(), 3);
+    // checkpoint k has exactly k quantized (ternary) layers
+    for (k, ck) in out.checkpoints.iter().enumerate() {
+        let quantized = ck
+            .quantizable_layers()
+            .into_iter()
+            .filter(|&i| {
+                let w = ck.layers[i].weights().unwrap();
+                let mut vals: Vec<i64> = w.data.iter().map(|&v| (v * 1e6).round() as i64).collect();
+                vals.sort_unstable();
+                vals.dedup();
+                vals.len() <= 3
+            })
+            .count();
+        assert!(quantized >= k + 1, "checkpoint {k} has {quantized} quantized layers");
+    }
+}

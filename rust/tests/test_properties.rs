@@ -1,0 +1,273 @@
+//! Property-based tests over the quantization algorithms and coordinator
+//! invariants (mini-proptest framework: `gpfq::testing::prop`).
+
+use gpfq::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
+use gpfq::coordinator::scheduler::{run_jobs, SchedulerConfig};
+use gpfq::nn::matrix::{axpy, norm_sq, Matrix};
+use gpfq::nn::network::{mnist_mlp, NetworkBuilder, Shape};
+use gpfq::nn::Activation;
+use gpfq::quant::alphabet::Alphabet;
+use gpfq::quant::exhaustive::exhaustive_neuron;
+use gpfq::quant::gpfq::{gpfq_layer, gpfq_neuron, LayerData};
+use gpfq::quant::msq::msq_vec;
+use gpfq::quant::sigma_delta::sigma_delta;
+use gpfq::testing::prop::{forall, prop_assert, Gen};
+
+fn rand_matrix(g: &mut Gen, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_vec(rows, cols, g.normal_vec(rows * cols))
+}
+
+// ---------------------------------------------------------------------------
+// alphabet invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_nearest_is_true_argmin() {
+    forall("alphabet nearest == argmin over levels", 200, |g| {
+        let m = *g.choice(&[2usize, 3, 4, 5, 8, 16, 31]);
+        let alpha = g.f32_in(0.05, 4.0);
+        let a = Alphabet::new(alpha, m);
+        let z = g.f32_in(-3.0 * alpha, 3.0 * alpha);
+        let q = a.nearest(z);
+        let best = a
+            .levels()
+            .into_iter()
+            .map(|l| (l - z).abs())
+            .fold(f32::MAX, f32::min);
+        prop_assert(
+            ((q - z).abs() - best).abs() <= 1e-4 * alpha,
+            format!("z={z} q={q} best_dist={best} (alpha={alpha}, M={m})"),
+        )
+    });
+}
+
+#[test]
+fn prop_quantizer_idempotent_and_bounded() {
+    forall("Q(Q(z)) == Q(z) and |Q(z)| <= alpha", 200, |g| {
+        let m = *g.choice(&[2usize, 3, 8]);
+        let alpha = g.f32_in(0.1, 3.0);
+        let a = Alphabet::new(alpha, m);
+        let z = g.f32_in(-10.0, 10.0);
+        let q = a.nearest(z);
+        prop_assert(
+            (a.nearest(q) - q).abs() < 1e-6 && q.abs() <= alpha + 1e-6,
+            format!("z={z} q={q}"),
+        )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// GPFQ invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gpfq_state_identity() {
+    // ‖u_N‖ == ‖Yw − Ỹq‖ exactly (Section 4 identity), for random shapes
+    forall("state identity", 30, |g| {
+        let m = g.dim(24);
+        let n = g.dim(40).max(2);
+        let y = rand_matrix(g, m, n);
+        let yq = rand_matrix(g, m, n);
+        let w: Vec<f32> = g.uniform_vec(n, -1.0, 1.0);
+        let a = Alphabet::ternary(g.f32_in(0.3, 2.0));
+        let data = LayerData::new(&y, &yq);
+        let mut u = vec![0.0f32; m];
+        let res = gpfq_neuron(&data, &w, a, &mut u);
+        // recompute ‖Yw − Ỹq‖ from scratch
+        let mut yw = vec![0.0f32; m];
+        let mut yqq = vec![0.0f32; m];
+        for t in 0..n {
+            axpy(w[t], &y.col(t), &mut yw);
+            axpy(res.q[t], &yq.col(t), &mut yqq);
+        }
+        let diff: Vec<f32> = yw.iter().zip(&yqq).map(|(a, b)| a - b).collect();
+        let direct = norm_sq(&diff).sqrt() as f64;
+        prop_assert(
+            (direct - res.err).abs() < 1e-3 * (1.0 + direct),
+            format!("direct {direct} vs state {}", res.err),
+        )
+    });
+}
+
+#[test]
+fn prop_gpfq_never_worse_than_msq_first_layer() {
+    // greedy step-t choice minimizes the step-t objective; empirically the
+    // full-path error beats MSQ on generic Gaussian data (median property —
+    // assert over the batch, not per case).
+    let mut gpfq_wins = 0usize;
+    let mut total = 0usize;
+    forall("gpfq vs msq accumulation", 40, |g| {
+        let m = g.dim(16);
+        let n = (4 * g.dim(32)).max(8);
+        let y = rand_matrix(g, m, n);
+        let w: Vec<f32> = g.uniform_vec(n, -1.0, 1.0);
+        let a = Alphabet::ternary(1.0);
+        let data = LayerData::first_layer(&y);
+        let mut u = vec![0.0f32; m];
+        let res = gpfq_neuron(&data, &w, a, &mut u);
+        let qm = msq_vec(&w, a);
+        let mut diff = vec![0.0f32; m];
+        for t in 0..n {
+            axpy(w[t] - qm[t], &y.col(t), &mut diff);
+        }
+        let msq_err = norm_sq(&diff).sqrt() as f64;
+        total += 1;
+        if res.err <= msq_err + 1e-6 {
+            gpfq_wins += 1;
+        }
+        Ok(())
+    });
+    assert!(
+        gpfq_wins * 10 >= total * 9,
+        "gpfq beat msq in only {gpfq_wins}/{total} cases"
+    );
+}
+
+#[test]
+fn prop_gpfq_optimality_gap_vs_exhaustive() {
+    // the greedy solution must never beat the exhaustive optimum, and on
+    // overparameterized data stays within a small factor of it (median).
+    let mut ratios = Vec::new();
+    forall("gpfq vs exhaustive", 25, |g| {
+        let m = g.dim(5);
+        let n = 6 + g.dim(3); // 7..9: 3^9 = 19683 combos max
+        let y = rand_matrix(g, m, n);
+        let w: Vec<f32> = g.uniform_vec(n, -1.0, 1.0);
+        let a = Alphabet::ternary(1.0);
+        let (_, opt) = exhaustive_neuron(&y, &y, &w, a);
+        let data = LayerData::first_layer(&y);
+        let mut u = vec![0.0f32; m];
+        let res = gpfq_neuron(&data, &w, a, &mut u);
+        if res.err + 1e-4 < opt {
+            return Err(format!("greedy {} beat optimum {}", res.err, opt));
+        }
+        if opt > 1e-3 {
+            ratios.push(res.err / opt);
+        }
+        Ok(())
+    });
+    let med = gpfq::util::stats::median(&ratios);
+    assert!(med < 8.0, "median greedy/optimal ratio {med}");
+}
+
+#[test]
+fn prop_gpfq_permutation_covariance_under_shared_order() {
+    // quantizing neuron columns is independent: permuting neurons permutes Q
+    forall("neuron permutation covariance", 20, |g| {
+        let m = g.dim(10);
+        let n = g.dim(20).max(2);
+        let k = 4;
+        let y = rand_matrix(g, m, n);
+        let w = Matrix::from_vec(n, k, g.uniform_vec(n * k, -1.0, 1.0));
+        let a = Alphabet::ternary(1.0);
+        let data = LayerData::first_layer(&y);
+        let res = gpfq_layer(&data, &w, a);
+        // reversed neuron order
+        let mut w_rev = Matrix::zeros(n, k);
+        for j in 0..k {
+            w_rev.set_col(j, &w.col(k - 1 - j));
+        }
+        let res_rev = gpfq_layer(&data, &w_rev, a);
+        for j in 0..k {
+            if res.q.col(j) != res_rev.q.col(k - 1 - j) {
+                return Err(format!("column {j} not permutation-covariant"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sigma_delta_bounded_state() {
+    forall("sigma-delta state bound", 100, |g| {
+        let m = *g.choice(&[2usize, 3, 4, 16]);
+        let alpha = g.f32_in(0.2, 2.0);
+        let a = Alphabet::new(alpha, m);
+        let len = g.dim(300);
+        let w: Vec<f32> = g.uniform_vec(len, -alpha, alpha);
+        let (_, s) = sigma_delta(&w, a);
+        prop_assert(
+            s.abs() <= a.step() / 2.0 + 1e-4,
+            format!("state {s} > step/2 {}", a.step() / 2.0),
+        )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_order_and_completeness() {
+    forall("scheduler preserves order for any worker/cap combo", 30, |g| {
+        let n = g.dim(64);
+        let workers = g.usize_in(1, 8);
+        let cap = g.usize_in(1, 16);
+        let cfg = SchedulerConfig { workers, queue_cap: cap };
+        let out: Vec<usize> =
+            run_jobs(cfg, (0..n).collect(), |i, j| Ok::<_, ()>(i * 7 + j)).unwrap();
+        prop_assert(
+            out == (0..n).map(|j| j * 8).collect::<Vec<_>>(),
+            format!("workers={workers} cap={cap} n={n}"),
+        )
+    });
+}
+
+#[test]
+fn prop_pipeline_every_selected_layer_quantized_once() {
+    forall("pipeline quantizes each selected layer exactly once", 8, |g| {
+        let in_dim = 8 + g.dim(8);
+        let h1 = 4 + g.dim(8);
+        let h2 = 4 + g.dim(8);
+        let net = mnist_mlp(g.usize_in(0, 1000) as u64, in_dim, &[h1, h2], 3);
+        let x = rand_matrix(g, 20, in_dim);
+        let out = quantize_network(&net, &x, &PipelineConfig { workers: g.usize_in(1, 4), ..Default::default() });
+        let mut idxs: Vec<usize> = out.layer_reports.iter().map(|r| r.layer_index).collect();
+        let expect = net.quantizable_layers();
+        idxs.sort_unstable();
+        prop_assert(idxs == expect, format!("{idxs:?} vs {expect:?}"))
+    });
+}
+
+#[test]
+fn prop_pipeline_msq_ignores_data() {
+    // MSQ is data-free: different quantization data must give identical Q
+    forall("msq pipeline data-independence", 8, |g| {
+        let mut b = NetworkBuilder::new(Shape::Flat(12), g.usize_in(0, 100) as u64);
+        b.dense(8, Activation::Relu).dense(3, Activation::None);
+        let net = b.build();
+        let x1 = rand_matrix(g, 16, 12);
+        let x2 = rand_matrix(g, 16, 12);
+        let cfg = PipelineConfig { method: Method::Msq, ..Default::default() };
+        let a = quantize_network(&net, &x1, &cfg);
+        let b2 = quantize_network(&net, &x2, &cfg);
+        prop_assert(
+            a.network.layers[0].weights().unwrap().data == b2.network.layers[0].weights().unwrap().data,
+            "msq depended on data".to_string(),
+        )
+    });
+}
+
+#[test]
+fn prop_gpfq_scale_equivariance() {
+    // Assumption 2 discussion: quantizing c*w with alphabet radius c*alpha
+    // gives c * (quantization of w with radius alpha).
+    forall("scale equivariance", 25, |g| {
+        let m = g.dim(10);
+        let n = g.dim(24).max(2);
+        let y = rand_matrix(g, m, n);
+        let w: Vec<f32> = g.uniform_vec(n, -1.0, 1.0);
+        let c = g.f32_in(0.25, 4.0);
+        let data = LayerData::first_layer(&y);
+        let mut u = vec![0.0f32; m];
+        let q1 = gpfq_neuron(&data, &w, Alphabet::ternary(1.0), &mut u).q;
+        let wc: Vec<f32> = w.iter().map(|v| v * c).collect();
+        let q2 = gpfq_neuron(&data, &wc, Alphabet::ternary(c), &mut u).q;
+        for t in 0..n {
+            if (q1[t] * c - q2[t]).abs() > 1e-3 * c {
+                return Err(format!("t={t}: {} * {c} != {}", q1[t], q2[t]));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,199 @@
+//! Runtime parity: every artifact kind must agree with its native Rust
+//! twin.  These tests skip (with a notice) when `make artifacts` has not
+//! run; CI runs them after building artifacts.
+
+use std::sync::Arc;
+
+use gpfq::data::rng::Pcg;
+use gpfq::nn::matrix::Matrix;
+use gpfq::quant::alphabet::Alphabet;
+use gpfq::quant::gpfq::{gpfq_layer, LayerData};
+use gpfq::quant::msq::msq_matrix;
+use gpfq::runtime::{Arg, Runtime};
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let rt = Runtime::try_default();
+    if rt.is_none() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    }
+    rt.map(Arc::new)
+}
+
+#[test]
+fn msq_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let Some(info) = rt.manifest().artifacts.iter().find(|a| a.kind == "msq").cloned() else {
+        return;
+    };
+    let (n, b) = (info.params[0].shape[0], info.params[0].shape[1]);
+    let m_levels = info.meta_usize("M").unwrap();
+    let mut rng = Pcg::seed(1);
+    let w = Matrix::from_vec(n, b, rng.uniform_vec(n * b, -2.0, 2.0));
+    for alpha in [0.5f32, 1.0, 2.3] {
+        let got = rt.execute_info(&info, &[Arg::Mat(&w), Arg::Scalar(alpha)]).unwrap();
+        let want = msq_matrix(&w, Alphabet::new(alpha, m_levels));
+        let maxdiff = got[0]
+            .data
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(maxdiff < 1e-5, "alpha {alpha}: max diff {maxdiff}");
+    }
+}
+
+#[test]
+fn dense_artifact_matches_native_forward() {
+    let Some(rt) = runtime() else { return };
+    let Some(info) = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .find(|a| a.kind == "dense" && a.name.ends_with("relu"))
+        .cloned()
+    else {
+        return;
+    };
+    let (m, n) = (info.params[0].shape[0], info.params[0].shape[1]);
+    let k = info.params[1].shape[1];
+    let mut rng = Pcg::seed(2);
+    let y = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+    let w = Matrix::from_vec(n, k, rng.normal_vec(n * k));
+    let b: Vec<f32> = rng.normal_vec(k);
+    let got = rt.execute_info(&info, &[Arg::Mat(&y), Arg::Mat(&w), Arg::Vec(&b)]).unwrap();
+    // native: relu(Y @ W + b)
+    let mut want = y.matmul(&w);
+    want.add_row_vec(&b);
+    for v in &mut want.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    let maxdiff = got[0]
+        .data
+        .iter()
+        .zip(&want.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(maxdiff < 1e-2, "max diff {maxdiff}"); // f32 matmul accumulation order differs
+}
+
+#[test]
+fn gpfq_artifact_matches_native_all_levels() {
+    let Some(rt) = runtime() else { return };
+    let man = rt.manifest();
+    let mut tested = 0;
+    let infos: Vec<_> = man.artifacts.iter().filter(|a| a.kind == "gpfq").cloned().collect();
+    for info in infos {
+        let m = info.meta_usize("m").unwrap();
+        let n = info.meta_usize("n").unwrap();
+        let b = info.meta_usize("b").unwrap();
+        let levels = info.meta_usize("M").unwrap();
+        if n > 500 && tested > 0 {
+            continue; // keep the suite fast: one big + all small shapes
+        }
+        let mut rng = Pcg::seed(3 + n as u64);
+        let y = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+        let mut yq = y.clone();
+        for v in yq.data.iter_mut() {
+            *v += 0.05 * rng.normal() as f32;
+        }
+        let w = Matrix::from_vec(n, b, rng.uniform_vec(n * b, -1.0, 1.0));
+        let alpha = 0.9f32;
+        let got = rt
+            .execute_info(&info, &[Arg::Mat(&y), Arg::Mat(&yq), Arg::Mat(&w), Arg::Scalar(alpha)])
+            .unwrap();
+        let native = gpfq_layer(&LayerData::new(&y, &yq), &w, Alphabet::new(alpha, levels));
+        let maxdiff = got[0]
+            .data
+            .iter()
+            .zip(&native.q.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(maxdiff < 1e-5, "{}: max diff {maxdiff}", info.name);
+        tested += 1;
+    }
+    assert!(tested >= 2, "expected at least two gpfq artifacts, tested {tested}");
+}
+
+#[test]
+fn train_step_artifact_decreases_loss() {
+    let Some(rt) = runtime() else { return };
+    let Some(info) = rt.manifest().artifacts.iter().find(|a| a.kind == "train_step").cloned() else {
+        return;
+    };
+    // dims from the manifest: params are (W1,b1,...,x,y,lr)
+    let n_params = info.params.len() - 3;
+    let mut rng = Pcg::seed(4);
+    let mut params: Vec<Matrix> = Vec::new();
+    for p in &info.params[..n_params] {
+        let (r, c) = if p.shape.len() == 2 { (p.shape[0], p.shape[1]) } else { (1, p.shape[0]) };
+        let scale = (2.0 / r as f64).sqrt() as f32;
+        params.push(Matrix::from_vec(r, c, rng.normal_vec(r * c).iter().map(|v| v * scale).collect()));
+    }
+    let batch = info.params[n_params].shape[0];
+    let in_dim = info.params[n_params].shape[1];
+    let classes = info.params[n_params + 1].shape[1];
+    let x = Matrix::from_vec(batch, in_dim, rng.normal_vec(batch * in_dim));
+    let mut y = Matrix::zeros(batch, classes);
+    for r in 0..batch {
+        *y.at_mut(r, r % classes) = 1.0;
+    }
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let mut args: Vec<Arg> = params.iter().map(Arg::Mat).collect();
+        args.push(Arg::Mat(&x));
+        args.push(Arg::Mat(&y));
+        args.push(Arg::Scalar(0.1));
+        let out = rt.execute_info(&info, &args).unwrap();
+        losses.push(out.last().unwrap().at(0, 0) as f64);
+        params = out[..out.len() - 1].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < &(0.5 * losses[0]),
+        "train_step failed to learn: {:.4} -> {:.4}",
+        losses[0],
+        losses.last().unwrap()
+    );
+}
+
+#[test]
+fn mlp_fwd_artifact_matches_manual_composition() {
+    let Some(rt) = runtime() else { return };
+    let Some(info) = rt.manifest().artifacts.iter().find(|a| a.kind == "mlp_fwd").cloned() else {
+        return;
+    };
+    let batch = info.params[0].shape[0];
+    let mut rng = Pcg::seed(5);
+    let x = Matrix::from_vec(batch, info.params[0].shape[1], rng.normal_vec(batch * info.params[0].shape[1]));
+    let mut params: Vec<Matrix> = Vec::new();
+    for p in &info.params[1..] {
+        let (r, c) = if p.shape.len() == 2 { (p.shape[0], p.shape[1]) } else { (1, p.shape[0]) };
+        params.push(Matrix::from_vec(r, c, rng.normal_vec(r * c)));
+    }
+    let mut args: Vec<Arg> = vec![Arg::Mat(&x)];
+    args.extend(params.iter().map(Arg::Mat));
+    let got = &rt.execute_info(&info, &args).unwrap()[0];
+    // manual: relu(...relu(xW1+b1)...)WL+bL
+    let mut h = x.clone();
+    let layers = params.len() / 2;
+    for i in 0..layers {
+        let mut z = h.matmul(&params[2 * i]);
+        z.add_row_vec(params[2 * i + 1].row(0));
+        if i + 1 < layers {
+            for v in &mut z.data {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        h = z;
+    }
+    let maxdiff = got
+        .data
+        .iter()
+        .zip(&h.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(maxdiff < 1e-2, "max diff {maxdiff}");
+}

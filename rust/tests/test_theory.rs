@@ -1,0 +1,171 @@
+//! Theory integration tests: Monte-Carlo verification of the paper's
+//! geometric lemmas and dynamics claims (E11/E12).
+
+use gpfq::data::rng::Pcg;
+use gpfq::nn::matrix::{axpy, dot, norm_sq};
+use gpfq::quant::alphabet::Alphabet;
+use gpfq::testing::prop::{forall, prop_assert};
+
+/// q_t as defined by Lemma 1 for the ternary alphabet (first layer).
+fn q_of(w: f32, x: &[f32], u: &[f32]) -> f32 {
+    let a = Alphabet::ternary(1.0);
+    a.nearest(w + dot(x, u) / norm_sq(x))
+}
+
+#[test]
+fn lemma9_level_sets_are_balls() {
+    // For |w| < 1/2 the set {X : q=1} is the ball B(u/(1-2w), ||u||/(1-2w))
+    // and {X : q=-1} is B(-u/(1+2w), ||u||/(1+2w)).  Monte-Carlo: membership
+    // of random X must match the ball predicate exactly (ties measure-zero).
+    forall("lemma 9 level sets", 300, |g| {
+        let m = g.dim(8).max(2);
+        let u: Vec<f32> = g.normal_vec(m);
+        let w = g.f32_in(-0.45, 0.45);
+        let x: Vec<f32> = g.normal_vec(m);
+        let q = q_of(w, &x, &u);
+        let unorm = norm_sq(&u).sqrt();
+        // q = 1 ball
+        let c1: Vec<f32> = u.iter().map(|v| v / (1.0 - 2.0 * w)).collect();
+        let r1 = unorm / (1.0 - 2.0 * w);
+        let d1: f32 = x.iter().zip(&c1).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+        let in_ball1 = d1 <= r1;
+        // q = -1 ball
+        let cm: Vec<f32> = u.iter().map(|v| -v / (1.0 + 2.0 * w)).collect();
+        let rm = unorm / (1.0 + 2.0 * w);
+        let dm: f32 = x.iter().zip(&cm).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+        let in_ballm = dm <= rm;
+        let margin = 1e-3 * unorm.max(1.0);
+        // skip near-boundary cases (float ties)
+        if (d1 - r1).abs() < margin || (dm - rm).abs() < margin {
+            return Ok(());
+        }
+        prop_assert(
+            (q == 1.0) == in_ball1 && (q == -1.0) == in_ballm,
+            format!("w={w} q={q} in_ball1={in_ball1} in_ballm={in_ballm}"),
+        )
+    });
+}
+
+#[test]
+fn remark10_level_sets_complement_for_large_w() {
+    // For w > 1/2 the q=1 region is the COMPLEMENT of the ball.
+    forall("remark 10 complement", 200, |g| {
+        let m = g.dim(6).max(2);
+        let u: Vec<f32> = g.normal_vec(m);
+        let w = g.f32_in(0.55, 0.95);
+        let x: Vec<f32> = g.normal_vec(m);
+        let q = q_of(w, &x, &u);
+        let unorm = norm_sq(&u).sqrt();
+        let c1: Vec<f32> = u.iter().map(|v| v / (1.0 - 2.0 * w)).collect(); // negative scale
+        let r1 = unorm / (2.0 * w - 1.0);
+        let d1: f32 = x.iter().zip(&c1).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+        let margin = 1e-3 * unorm.max(1.0);
+        if (d1 - r1).abs() < margin {
+            return Ok(());
+        }
+        // outside the ball ⇒ q = 1 region per Remark 10
+        prop_assert(
+            (q == 1.0) == (d1 > r1),
+            format!("w={w} q={q} d1={d1} r1={r1}"),
+        )
+    });
+}
+
+#[test]
+fn corollary13_increment_bound() {
+    // Δ‖u_t‖² ≤ B/4 when ‖X_t‖² ≤ B, for every step of a random run.
+    let mut rng = Pcg::seed(5);
+    let a = Alphabet::ternary(1.0);
+    let m = 12;
+    for _ in 0..20 {
+        let mut u = vec![0.0f32; m];
+        let mut prev = 0.0f32;
+        for _ in 0..200 {
+            let x: Vec<f32> = rng.normal_vec(m);
+            let b = norm_sq(&x);
+            let w = rng.uniform_in(-1.0, 1.0) as f32;
+            let q = q_of(w, &x, &u);
+            axpy(w - q, &x, &mut u);
+            let cur = norm_sq(&u);
+            assert!(
+                cur - prev <= b / 4.0 + 1e-3 * b,
+                "increment {} > B/4 = {}",
+                cur - prev,
+                b / 4.0
+            );
+            prev = cur;
+        }
+    }
+}
+
+#[test]
+fn orthogonal_data_reduces_to_msq() {
+    // Section 4: if X_t ⟂ u_{t-1} for all t, then q_t = Q(w_t) exactly and
+    // ‖u_t‖² = Σ (w_j − q_j)² ‖X_j‖².  Standard basis with t < m realizes it.
+    let mut rng = Pcg::seed(6);
+    let m = 40;
+    let a = Alphabet::ternary(1.0);
+    let w: Vec<f32> = rng.uniform_vec(m, -1.0, 1.0);
+    let mut u = vec![0.0f32; m];
+    let mut expect = 0.0f64;
+    for (t, &wt) in w.iter().enumerate() {
+        let mut x = vec![0.0f32; m];
+        x[t] = 1.0; // orthogonal to u (supported on untouched coords)
+        let q = q_of(wt, &x, &u);
+        assert_eq!(q, a.nearest(wt), "t={t}");
+        axpy(wt - q, &x, &mut u);
+        expect += ((wt - q) as f64).powi(2);
+    }
+    let got = norm_sq(&u) as f64;
+    assert!((got - expect).abs() < 1e-6, "{got} vs {expect}");
+}
+
+#[test]
+fn state_norm_sqrt_t_vs_bounded() {
+    // E11 quantitative shape: orthogonal-data state grows ~ sqrt(t) while
+    // Gaussian-data state stays flat in t.
+    let mut rng = Pcg::seed(7);
+    let m = 512;
+    let w: Vec<f32> = rng.uniform_vec(m, -1.0, 1.0);
+    // orthogonal construction: standard basis, t < m
+    let mut u = vec![0.0f32; m];
+    let mut norm_at = std::collections::BTreeMap::new();
+    for (t, &wt) in w.iter().enumerate() {
+        let mut x = vec![0.0f32; m];
+        x[t] = 1.0;
+        let q = q_of(wt, &x, &u);
+        axpy(wt - q, &x, &mut u);
+        if t + 1 == 64 || t + 1 == 256 {
+            norm_at.insert(t + 1, norm_sq(&u).sqrt());
+        }
+    }
+    let growth = norm_at[&256] / norm_at[&64];
+    assert!(
+        (1.5..3.0).contains(&growth),
+        "orthogonal growth {growth} not ~ sqrt(4)=2"
+    );
+
+    // Gaussian data: norm at t=256 comparable to norm at t=64 (bounded)
+    let mq = 32;
+    let sigma = 1.0 / (mq as f64).sqrt();
+    let mut u = vec![0.0f32; mq];
+    let mut g64 = 0.0f32;
+    let mut g256 = 0.0f32;
+    for t in 0..256 {
+        let x: Vec<f32> = (0..mq).map(|_| (rng.normal() * sigma) as f32).collect();
+        let wt = rng.uniform_in(-1.0, 1.0) as f32;
+        let q = q_of(wt, &x, &u);
+        axpy(wt - q, &x, &mut u);
+        if t + 1 == 64 {
+            g64 = norm_sq(&u).sqrt();
+        }
+        if t + 1 == 256 {
+            g256 = norm_sq(&u).sqrt();
+        }
+    }
+    assert!(
+        g256 < 2.0 * g64 + 1.0,
+        "gaussian state grew {g64} -> {g256}; should be bounded"
+    );
+
+}

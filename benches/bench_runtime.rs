@@ -135,7 +135,7 @@ fn main() {
             base = s.median_s;
         }
         t.row(vec![
-            format!("{wk}{}", if wk == 1 { "" } else { &"" }),
+            format!("{wk}"),
             fmt_secs(s.median_s),
             fmt_rate(neurons as f64 / s.median_s),
             fmt_rate((neurons * n) as f64 / s.median_s),

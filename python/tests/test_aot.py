@@ -6,6 +6,7 @@ import os
 import numpy as np
 import pytest
 
+pytest.importorskip("jax", reason="jax not installed: AOT emitter tests skipped")
 import jax
 import jax.numpy as jnp
 

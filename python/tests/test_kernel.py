@@ -8,6 +8,9 @@ of Lemma 1 on top of a kernel correctness check.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed: property tests skipped")
+pytest.importorskip("jax", reason="jax not installed: kernel tests skipped")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -3,6 +3,7 @@
 import numpy as np
 import pytest
 
+pytest.importorskip("jax", reason="jax not installed: model graph tests skipped")
 import jax
 import jax.numpy as jnp
 

@@ -2,6 +2,10 @@
 beyond the pointwise kernel-vs-oracle checks in test_kernel.py."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed: property tests skipped")
+pytest.importorskip("jax", reason="jax not installed: kernel tests skipped")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -2,7 +2,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 pub const USAGE: &str = "\
 usage: gpfq <command> [flags]
@@ -76,14 +76,14 @@ impl Args {
     pub fn usize(&self, name: &str) -> Result<Option<usize>> {
         match self.get(name) {
             None => Ok(None),
-            Some(v) => Ok(Some(v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}"))?)),
+            Some(v) => Ok(Some(v.parse().map_err(|_| crate::error::format_err!("--{name} expects an integer, got {v:?}"))?)),
         }
     }
 
     pub fn f64(&self, name: &str) -> Result<Option<f64>> {
         match self.get(name) {
             None => Ok(None),
-            Some(v) => Ok(Some(v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}"))?)),
+            Some(v) => Ok(Some(v.parse().map_err(|_| crate::error::format_err!("--{name} expects a number, got {v:?}"))?)),
         }
     }
 }

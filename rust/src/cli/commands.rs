@@ -1,6 +1,6 @@
 //! CLI subcommand implementations.
 
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 use crate::cli::args::{Args, USAGE};
 use crate::config::{preset_cifar, preset_imagenet, preset_mnist, preset_mnist_paper, ExperimentSpec};
@@ -80,7 +80,8 @@ fn cmd_info() -> Result<()> {
         let man = Manifest::load(&dir)?;
         println!("artifacts: {} modules in {}", man.artifacts.len(), dir.display());
         match Runtime::new(&dir) {
-            Ok(rt) => println!("pjrt: platform={} (ready)", rt.platform()),
+            Ok(rt) if cfg!(feature = "pjrt") => println!("pjrt: platform={} (ready)", rt.platform()),
+            Ok(rt) => println!("pjrt: {}", rt.platform()),
             Err(e) => println!("pjrt: unavailable ({e:#})"),
         }
         let mut t = Table::new("Artifacts", &["name", "kind", "params", "outputs"]);

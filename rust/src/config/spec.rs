@@ -2,7 +2,7 @@
 //! constructible in code (the benches use the built-in presets so they run
 //! without any files).
 
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 use crate::config::toml::Doc;
 use crate::nn::conv::ImgShape;

@@ -92,12 +92,19 @@ impl Doc {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error on line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 fn parse_scalar(s: &str, line: usize) -> Result<Value, TomlError> {
     let s = s.trim();
@@ -206,9 +213,9 @@ pub fn parse(text: &str) -> Result<Doc, TomlError> {
 }
 
 /// Parse a TOML file from disk.
-pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Doc> {
+pub fn parse_file(path: &std::path::Path) -> crate::error::Result<Doc> {
     let text = std::fs::read_to_string(path)
-        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        .map_err(|e| crate::error::format_err!("reading {}: {e}", path.display()))?;
     Ok(parse(&text)?)
 }
 

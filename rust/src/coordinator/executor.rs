@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::coordinator::scheduler::{run_jobs, SchedulerConfig};
 use crate::nn::matrix::Matrix;

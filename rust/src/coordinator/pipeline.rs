@@ -11,7 +11,7 @@
 
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::coordinator::executor::{Executor, Path};
 use crate::nn::matrix::Matrix;

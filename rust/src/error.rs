@@ -1,0 +1,161 @@
+//! Crate-local error type — the offline vendor set has no `anyhow`, so this
+//! module provides the small subset the crate uses: an opaque [`Error`] with
+//! a context chain, a [`Result`] alias, the [`bail!`]/[`format_err!`] macros
+//! and a [`Context`] extension trait for `Result`.
+//!
+//! Display formatting matches the `anyhow` conventions the CLI and tests
+//! rely on: `{e}` prints the outermost message, `{e:#}` prints the whole
+//! chain as `outer: inner: ...`.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message plus an optional chain of underlying causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.cause.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `unwrap()`/`expect()` panics go through Debug: show the full chain.
+        write!(f, "{self:#}")
+    }
+}
+
+// Mirrors anyhow's blanket conversion. `Error` itself deliberately does NOT
+// implement `std::error::Error`, which is what makes this impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut out: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            out = Some(Error { msg, cause: out.map(Box::new) });
+        }
+        out.expect("chain has at least one message")
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().context(msg))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// `format_err!(...)` — build an [`Error`] from a format string.
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!(...)` — return early with a formatted [`Error`].
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::format_err!($($arg)*))
+    };
+}
+
+pub(crate) use {bail, format_err};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(e.chain(), vec!["outer", "inner"]);
+    }
+
+    #[test]
+    fn from_std_error_keeps_sources() {
+        let e: Error = io_err().into();
+        assert!(format!("{e}").contains("missing thing"));
+    }
+
+    #[test]
+    fn context_trait_wraps() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").contains("missing thing"));
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "step 3");
+    }
+
+    #[test]
+    fn bail_and_format_err() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative input {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        let e = format_err!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+    }
+}

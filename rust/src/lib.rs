@@ -22,6 +22,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod eval;
 pub mod nn;
 pub mod quant;

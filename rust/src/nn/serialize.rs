@@ -14,7 +14,7 @@
 
 use std::io::{self, Read, Write};
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 use crate::nn::activations::Activation;
 use crate::nn::batchnorm::BatchNorm;

@@ -201,7 +201,11 @@ fn gpfq_lane_block(
         for t in 0..w.rows {
             axpy(wcol[t], data.yt.row(t), &mut yw);
         }
-        let den = norm_sq(&yw).sqrt() as f64;
+        // f64 accumulation, matching lane_kernel's ‖Yw‖ pass exactly: the
+        // same neuron must produce bit-identical (err, rel) whether it lands
+        // in a full lane block or a tail block, or results would depend on
+        // how the scheduler partitions neurons.
+        let den = yw.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
         let rel = if den > 0.0 { res.err / den } else { 0.0 };
         out.push((res.q, res.err, rel));
     }
@@ -233,9 +237,29 @@ fn lane_kernel<const L: usize>(
         let mut coef_y = [0.0f32; L];
         let mut coef_q = [0.0f32; L];
         if denom > DENOM_EPS {
-            // proj_j = <row_q, u_j> across all lanes in one row pass
+            // proj_j = <row_q, u_j> across all lanes in one row pass.
+            // Accumulated with the same 4-way-unrolled summation tree as
+            // matrix::dot so a neuron's projections — and therefore its q —
+            // are bit-identical whether it runs here or on the per-neuron
+            // tail path (the scheduler's partition must not change results).
+            let chunks = m / 4;
+            let mut acc = [[0.0f32; L]; 4];
+            for i in 0..chunks {
+                for (k, acck) in acc.iter_mut().enumerate() {
+                    let rq = row_q[i * 4 + k];
+                    let urow = &u[i * 4 + k];
+                    for j in 0..L {
+                        acck[j] += rq * urow[j];
+                    }
+                }
+            }
             let mut proj = [0.0f32; L];
-            for (urow, &rq) in u.iter().zip(row_q) {
+            for j in 0..L {
+                proj[j] = acc[0][j] + acc[1][j] + acc[2][j] + acc[3][j];
+            }
+            for i in chunks * 4..m {
+                let rq = row_q[i];
+                let urow = &u[i];
                 for j in 0..L {
                     proj[j] += rq * urow[j];
                 }
@@ -527,6 +551,93 @@ mod tests {
         let res = gpfq_layer(&LayerData::first_layer(&y), &w, Alphabet::ternary(1.0));
         let xnorm = norm_sq(&x).sqrt() as f64;
         assert!(res.errs[0] <= 0.5 * xnorm + 1e-5, "{} > {}", res.errs[0], 0.5 * xnorm);
+    }
+
+    #[test]
+    fn denom_eps_falls_back_to_msq_per_neuron_path() {
+        // zero columns carry no direction: GPFQ must quantize those weights
+        // memorylessly (q_t = Q(w_t)) and leave the state untouched.
+        let mut rng = Pcg::seed(20);
+        let (m, n) = (6, 10);
+        let mut y = rand_matrix(&mut rng, m, n);
+        let zeros = vec![0.0f32; m];
+        for &t in &[3usize, 7] {
+            y.set_col(t, &zeros);
+        }
+        let w: Vec<f32> = rng.uniform_vec(n, -1.0, 1.0);
+        let a = Alphabet::new(0.8, 4);
+        let data = LayerData::first_layer(&y);
+        assert!(data.denom[3] <= DENOM_EPS && data.denom[7] <= DENOM_EPS);
+        let mut u = vec![0.0f32; m];
+        let res = gpfq_neuron(&data, &w, a, &mut u);
+        for &t in &[3usize, 7] {
+            assert_eq!(res.q[t], a.nearest(w[t]), "t={t}");
+        }
+        // and the fallback is consistent with the bruteforce reference
+        let want = gpfq_neuron_bruteforce(&y, &y, &w, a);
+        assert_eq!(res.q, want);
+    }
+
+    #[test]
+    fn denom_eps_falls_back_to_msq_lane_path() {
+        // same invariant through the interleaved lane kernel (>= LANES
+        // neurons so the const-generic path runs).
+        let mut rng = Pcg::seed(21);
+        let (m, n, neurons) = (5, 12, LANES);
+        let mut y = rand_matrix(&mut rng, m, n);
+        let zeros = vec![0.0f32; m];
+        y.set_col(4, &zeros);
+        let w = rand_weights(&mut rng, n, neurons);
+        let a = Alphabet::ternary(0.7);
+        let res = gpfq_layer(&LayerData::first_layer(&y), &w, a);
+        for j in 0..neurons {
+            assert_eq!(res.q.at(4, j), a.nearest(w.at(4, j)), "neuron {j}");
+        }
+    }
+
+    #[test]
+    fn empty_layer_data_is_harmless() {
+        // N = 0 features: nothing to walk; every output is empty/zero.
+        let y = Matrix::zeros(6, 0);
+        let data = LayerData::first_layer(&y);
+        assert_eq!((data.n(), data.m()), (0, 6));
+        let a = Alphabet::ternary(1.0);
+        let mut u = vec![0.0f32; 6];
+        let res = gpfq_neuron(&data, &[], a, &mut u);
+        assert!(res.q.is_empty());
+        assert_eq!(res.err, 0.0);
+        let w = Matrix::zeros(0, 3);
+        let layer = gpfq_layer(&data, &w, a);
+        assert_eq!((layer.q.rows, layer.q.cols), (0, 3));
+        assert_eq!(layer.errs, vec![0.0; 3]);
+        assert_eq!(layer.rel_errs, vec![0.0; 3]);
+        let par = gpfq_layer_parallel(&data, &w, a, 4);
+        assert_eq!(par.q.data, layer.q.data);
+        // zero neurons is fine too
+        let none = gpfq_layer_parallel(&data, &Matrix::zeros(0, 0), a, 4);
+        assert_eq!(none.q.cols, 0);
+        assert!(none.errs.is_empty());
+    }
+
+    #[test]
+    fn single_column_layer_data() {
+        // N = 1: the walk is a single Lemma 1 step, q = Q(w) exactly.
+        let mut rng = Pcg::seed(22);
+        let y = rand_matrix(&mut rng, 7, 1);
+        let w = rand_weights(&mut rng, 1, 2);
+        let a = Alphabet::ternary(1.0);
+        let data = LayerData::first_layer(&y);
+        assert_eq!(data.n(), 1);
+        let res = gpfq_layer(&data, &w, a);
+        for j in 0..2 {
+            assert_eq!(res.q.at(0, j), a.nearest(w.at(0, j)), "neuron {j}");
+        }
+        // ‖u_1‖ = |w - q|·‖Y_1‖ (single-step identity)
+        let ynorm = norm_sq(&y.col(0)).sqrt() as f64;
+        for j in 0..2 {
+            let expect = ((w.at(0, j) - res.q.at(0, j)).abs() as f64) * ynorm;
+            assert!((res.errs[j] - expect).abs() < 1e-5 * (1.0 + expect), "neuron {j}");
+        }
     }
 
     #[test]

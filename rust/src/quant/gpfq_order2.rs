@@ -36,7 +36,6 @@
 //! the tests that measure this are kept as the reproducible record of the
 //! investigation; cost is O(Nm) per neuron (one extra axpy per step).
 
-use crate::nn::matrix::{dot, norm_sq, Matrix};
 use crate::quant::alphabet::Alphabet;
 use crate::quant::gpfq::{LayerData, NeuronResult, DENOM_EPS};
 
@@ -111,6 +110,7 @@ pub fn repeated_column_avg_error(w: &[f32], q: &[f32]) -> f64 {
 mod tests {
     use super::*;
     use crate::data::rng::Pcg;
+    use crate::nn::matrix::Matrix;
     use crate::quant::gpfq::gpfq_neuron;
 
     fn repeated_column_data(rng: &mut Pcg, m: usize, n: usize) -> Matrix {

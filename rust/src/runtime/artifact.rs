@@ -6,7 +6,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 use crate::util::json::{self, Json};
 
@@ -76,19 +76,19 @@ impl Manifest {
             let name = a
                 .get("name")
                 .as_str()
-                .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                .ok_or_else(|| crate::error::format_err!("artifact missing name"))?
                 .to_string();
             let file = dir.join(
                 a.get("file")
                     .as_str()
-                    .ok_or_else(|| anyhow::anyhow!("artifact {name} missing file"))?,
+                    .ok_or_else(|| crate::error::format_err!("artifact {name} missing file"))?,
             );
             let kind = a.get("kind").as_str().unwrap_or("unknown").to_string();
             let tensor = |j: &Json, idx: usize| -> Result<TensorInfo> {
                 let shape = j
                     .get("shape")
                     .as_arr()
-                    .ok_or_else(|| anyhow::anyhow!("artifact {name}: tensor missing shape"))?
+                    .ok_or_else(|| crate::error::format_err!("artifact {name}: tensor missing shape"))?
                     .iter()
                     .map(|s| s.as_usize().unwrap_or(0))
                     .collect();

@@ -1,16 +1,23 @@
 //! PJRT execution: load HLO-text artifacts, compile them once on the CPU
 //! client, execute with `Matrix`/scalar arguments.
 //!
-//! This is the only module that touches the `xla` crate.  Interchange is
-//! HLO *text* (see `python/compile/aot.py` — serialized protos from
-//! jax ≥ 0.5 are rejected by xla_extension 0.5.1).
+//! This is the only module that touches the `xla` crate, and that dependency
+//! is gated behind the `pjrt` cargo feature (the offline build environment
+//! carries no crates). Without the feature, [`Runtime`] still loads and
+//! validates manifests — argument arity/shape errors surface exactly as they
+//! would on the PJRT path — but actually executing an artifact returns an
+//! error naming it, and [`Runtime::try_default`] yields `None` so the
+//! coordinator's [`Executor`](crate::coordinator::executor::Executor) takes
+//! the native path.  Interchange is HLO *text* (see `python/compile/aot.py`
+//! — serialized protos from jax ≥ 0.5 are rejected by xla_extension 0.5.1).
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
-use anyhow::{bail, Result};
-
+use crate::error::{bail, Result};
 use crate::nn::matrix::Matrix;
 use crate::runtime::artifact::{ArtifactInfo, Manifest};
 
@@ -32,24 +39,25 @@ impl Arg<'_> {
 }
 
 /// PJRT runtime: a CPU client plus a compile cache of loaded executables.
+/// Without the `pjrt` feature it degrades to a manifest holder whose
+/// executions fail with a descriptive error.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
-    /// Create a runtime over an artifacts directory (must contain
-    /// `manifest.json`).
-    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
-    }
-
-    /// Try to create a runtime; None when artifacts are absent (callers then
-    /// use the native path).
+    /// Try to create a runtime; None when artifacts are absent or PJRT
+    /// execution is unavailable (callers then use the native path).
     pub fn try_default() -> Option<Runtime> {
+        if cfg!(not(feature = "pjrt")) {
+            // artifacts may exist on disk, but without the xla client every
+            // execution would fail — advertise the native path instead.
+            return None;
+        }
         let dir = default_artifacts_dir();
         if Manifest::available(&dir) {
             match Runtime::new(&dir) {
@@ -68,6 +76,51 @@ impl Runtime {
         &self.manifest
     }
 
+    /// Execute an artifact by name.  Arguments are validated against the
+    /// manifest shapes; outputs come back as `Matrix` values shaped per the
+    /// manifest (scalars become 1×1).
+    pub fn execute(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Matrix>> {
+        let info = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| crate::error::format_err!("unknown artifact {name:?}"))?
+            .clone();
+        self.execute_info(&info, args)
+    }
+
+    /// Execute a manifest entry.  Validation (arity, element counts) always
+    /// runs first so misuse is caught identically with or without PJRT.
+    pub fn execute_info(&self, info: &ArtifactInfo, args: &[Arg<'_>]) -> Result<Vec<Matrix>> {
+        if args.len() != info.params.len() {
+            bail!("artifact {}: expected {} args, got {}", info.name, info.params.len(), args.len());
+        }
+        for (arg, param) in args.iter().zip(&info.params) {
+            if arg.elements() != param.elements() {
+                bail!(
+                    "artifact {}: param {} expects {:?} ({} elems), got {} elems",
+                    info.name,
+                    param.name,
+                    param.shape,
+                    param.elements(),
+                    arg.elements()
+                );
+            }
+        }
+        self.run_validated(info, args)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Runtime {
+    /// Create a runtime over an artifacts directory (must contain
+    /// `manifest.json`).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| crate::error::format_err!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -81,12 +134,12 @@ impl Runtime {
             }
         }
         let proto = xla::HloModuleProto::from_text_file(&info.file)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", info.file.display()))?;
+            .map_err(|e| crate::error::format_err!("parsing {}: {e:?}", info.file.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", info.name))?;
+            .map_err(|e| crate::error::format_err!("compiling {}: {e:?}", info.name))?;
         let exe = std::sync::Arc::new(exe);
         self.cache.lock().unwrap().insert(info.name.clone(), exe.clone());
         Ok(exe)
@@ -97,47 +150,21 @@ impl Runtime {
         self.cache.lock().unwrap().len()
     }
 
-    /// Execute an artifact by name.  Arguments are validated against the
-    /// manifest shapes; outputs come back as `Matrix` values shaped per the
-    /// manifest (scalars become 1×1).
-    pub fn execute(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Matrix>> {
-        let info = self
-            .manifest
-            .find(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))?
-            .clone();
-        self.execute_info(&info, args)
-    }
-
-    /// Execute a manifest entry.
-    pub fn execute_info(&self, info: &ArtifactInfo, args: &[Arg<'_>]) -> Result<Vec<Matrix>> {
-        if args.len() != info.params.len() {
-            bail!("artifact {}: expected {} args, got {}", info.name, info.params.len(), args.len());
-        }
+    fn run_validated(&self, info: &ArtifactInfo, args: &[Arg<'_>]) -> Result<Vec<Matrix>> {
         let mut literals = Vec::with_capacity(args.len());
         for (arg, param) in args.iter().zip(&info.params) {
-            if arg.elements() != param.elements() {
-                bail!(
-                    "artifact {}: param {} expects {:?} ({} elems), got {} elems",
-                    info.name,
-                    param.name,
-                    param.shape,
-                    param.elements(),
-                    arg.elements()
-                );
-            }
             let lit = match arg {
                 Arg::Mat(m) => {
                     let dims: Vec<i64> = param.shape.iter().map(|&d| d as i64).collect();
                     xla::Literal::vec1(&m.data)
                         .reshape(&dims)
-                        .map_err(|e| anyhow::anyhow!("reshape {}: {e:?}", param.name))?
+                        .map_err(|e| crate::error::format_err!("reshape {}: {e:?}", param.name))?
                 }
                 Arg::Vec(v) => {
                     let dims: Vec<i64> = param.shape.iter().map(|&d| d as i64).collect();
                     xla::Literal::vec1(v)
                         .reshape(&dims)
-                        .map_err(|e| anyhow::anyhow!("reshape {}: {e:?}", param.name))?
+                        .map_err(|e| crate::error::format_err!("reshape {}: {e:?}", param.name))?
                 }
                 Arg::Scalar(s) => xla::Literal::from(*s),
             };
@@ -146,14 +173,14 @@ impl Runtime {
         let exe = self.executable(info)?;
         let result = exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", info.name))?;
+            .map_err(|e| crate::error::format_err!("executing {}: {e:?}", info.name))?;
         let root = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e:?}", info.name))?;
+            .map_err(|e| crate::error::format_err!("fetching result of {}: {e:?}", info.name))?;
         // aot.py lowers with return_tuple=True: the root is always a tuple.
         let parts = root
             .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling result of {}: {e:?}", info.name))?;
+            .map_err(|e| crate::error::format_err!("untupling result of {}: {e:?}", info.name))?;
         if parts.len() != info.outputs.len() {
             bail!("artifact {}: expected {} outputs, got {}", info.name, info.outputs.len(), parts.len());
         }
@@ -161,7 +188,7 @@ impl Runtime {
         for (lit, oinfo) in parts.into_iter().zip(&info.outputs) {
             let data: Vec<f32> = lit
                 .to_vec()
-                .map_err(|e| anyhow::anyhow!("reading output of {}: {e:?}", info.name))?;
+                .map_err(|e| crate::error::format_err!("reading output of {}: {e:?}", info.name))?;
             let (rows, cols) = match oinfo.shape.len() {
                 0 => (1, 1),
                 1 => (1, oinfo.shape[0]),
@@ -174,6 +201,34 @@ impl Runtime {
             out.push(Matrix::from_vec(rows, cols, data));
         }
         Ok(out)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Create a runtime over an artifacts directory (must contain
+    /// `manifest.json`).  Compilation is lazy, so this succeeds even though
+    /// executions will fail without the `pjrt` feature.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        Ok(Runtime { manifest: Manifest::load(artifacts_dir)? })
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the pjrt feature)".to_string()
+    }
+
+    /// Number of executables compiled so far — always zero without PJRT.
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+
+    fn run_validated(&self, info: &ArtifactInfo, _args: &[Arg<'_>]) -> Result<Vec<Matrix>> {
+        bail!(
+            "artifact {}: cannot execute {} — this build has no PJRT runtime (enable the `pjrt` \
+             cargo feature with the xla crate vendored); use the native quantizers instead",
+            info.name,
+            info.file.display()
+        )
     }
 }
 
@@ -271,5 +326,15 @@ mod tests {
         rt.execute_info(&info, &[Arg::Mat(&w), Arg::Scalar(1.0)]).unwrap();
         assert_eq!(rt.compiled_count(), after_first);
         assert_eq!(after_first, before + 1);
+    }
+
+    /// Without artifacts on disk the manifest-only runtime still validates
+    /// and errors descriptively (covered end-to-end in
+    /// tests/test_failure_injection.rs).
+    #[test]
+    fn try_default_is_none_without_artifacts_or_pjrt() {
+        if cfg!(not(feature = "pjrt")) {
+            assert!(Runtime::try_default().is_none());
+        }
     }
 }

@@ -85,7 +85,7 @@ impl Table {
         let line = |cells: &[String], widths: &[usize], out: &mut String| {
             let mut s = String::from("|");
             for (c, w) in cells.iter().zip(widths) {
-                let _ = write!(s, " {:<w$} |", c, w = w);
+                let _ = write!(s, " {:<w$} |", c, w = *w);
             }
             let _ = writeln!(out, "{s}");
         };

@@ -1,0 +1,163 @@
+//! Scheduler equivalence: the paper's Section 4 claim is that GPFQ is
+//! "parallelizable across neurons in a layer" — which is only true if the
+//! parallel schedule cannot change the numbers.  These tests pin that down
+//! hard: multi-threaded quantization must be **bit-identical** to the serial
+//! walk on a fixed-seed synthetic layer, for every worker count, block
+//! width, and lane/tail path mix — and the worker pool must demonstrably
+//! run blocks concurrently rather than degenerate to a serial loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use gpfq::coordinator::executor::{Executor, Path};
+use gpfq::coordinator::pipeline::{quantize_network, PipelineConfig};
+use gpfq::coordinator::scheduler::{run_jobs, SchedulerConfig};
+use gpfq::data::rng::Pcg;
+use gpfq::nn::matrix::Matrix;
+use gpfq::nn::network::mnist_mlp;
+use gpfq::quant::alphabet::Alphabet;
+use gpfq::quant::gpfq::{
+    gpfq_layer, gpfq_layer_parallel, gpfq_layer_range, gpfq_neuron, LayerData, LANES,
+};
+
+fn fixed_seed_layer(seed: u64, m: usize, n: usize, neurons: usize) -> (LayerData, Matrix) {
+    let mut rng = Pcg::seed(seed);
+    let y = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+    // distinct quantized-stream matrix: exercise the general eq. (3) path
+    let mut yq = y.clone();
+    for v in yq.data.iter_mut() {
+        *v += 0.05 * rng.normal() as f32;
+    }
+    let w = Matrix::from_vec(n, neurons, rng.uniform_vec(n * neurons, -1.0, 1.0));
+    (LayerData::new(&y, &yq), w)
+}
+
+#[test]
+fn parallel_layer_bit_identical_to_serial() {
+    // 13 neurons: serial runs one LANES block + a 5-neuron tail, while the
+    // parallel partitions cut at arbitrary offsets — every split must agree
+    // to the last bit in q, errs AND rel_errs.
+    let (data, w) = fixed_seed_layer(101, 24, 48, 13);
+    let a = Alphabet::ternary(0.9);
+    let serial = gpfq_layer(&data, &w, a);
+    for workers in [2usize, 3, 5, 8, 32] {
+        let par = gpfq_layer_parallel(&data, &w, a, workers);
+        assert_eq!(serial.q.data, par.q.data, "q mismatch at workers={workers}");
+        assert_eq!(serial.errs, par.errs, "errs mismatch at workers={workers}");
+        assert_eq!(serial.rel_errs, par.rel_errs, "rel_errs mismatch at workers={workers}");
+    }
+}
+
+#[test]
+fn lane_and_tail_paths_agree_per_neuron() {
+    // regression for the partition-dependence bug: a neuron must produce the
+    // same (q, err) whether it lands in a full lane block (interleaved
+    // kernel) or a tail block (per-neuron kernel).
+    let (data, w) = fixed_seed_layer(102, 17, 40, LANES + 3);
+    let a = Alphabet::new(0.8, 4);
+    let blocked = gpfq_layer(&data, &w, a); // lane kernel for the first LANES neurons
+    let mut u = vec![0.0f32; data.m()];
+    for j in 0..w.cols {
+        let wcol = w.col(j);
+        let res = gpfq_neuron(&data, &wcol, a, &mut u); // always the scalar path
+        assert_eq!(blocked.q.col(j), res.q, "q mismatch at neuron {j}");
+        assert_eq!(blocked.errs[j], res.err, "err mismatch at neuron {j}");
+    }
+}
+
+#[test]
+fn every_block_partition_is_bit_identical() {
+    // sweep block offsets directly: quantizing [0, n) must equal the
+    // concatenation of [0, k) and [k, n) for every cut point k.
+    let (data, w) = fixed_seed_layer(103, 12, 30, 11);
+    let a = Alphabet::ternary(1.0);
+    let whole = gpfq_layer_range(&data, &w, a, 0, w.cols);
+    for k in 0..=w.cols {
+        let lo = gpfq_layer_range(&data, &w, a, 0, k);
+        let hi = gpfq_layer_range(&data, &w, a, k, w.cols);
+        let mut q = Vec::new();
+        for j in 0..k {
+            q.extend(lo.q.col(j));
+        }
+        for j in 0..(w.cols - k) {
+            q.extend(hi.q.col(j));
+        }
+        let mut whole_q = Vec::new();
+        for j in 0..w.cols {
+            whole_q.extend(whole.q.col(j));
+        }
+        assert_eq!(whole_q, q, "cut at {k}");
+        let errs: Vec<f64> = lo.errs.iter().chain(&hi.errs).copied().collect();
+        assert_eq!(whole.errs, errs, "errs cut at {k}");
+        let rels: Vec<f64> = lo.rel_errs.iter().chain(&hi.rel_errs).copied().collect();
+        assert_eq!(whole.rel_errs, rels, "rel_errs cut at {k}");
+    }
+}
+
+#[test]
+fn executor_bit_identical_across_workers_and_block_widths() {
+    let (data, w) = fixed_seed_layer(104, 16, 36, 10);
+    // executor takes raw activation matrices; rebuild them from the data
+    let y = data.yt.transpose();
+    let yq = data.yqt.transpose();
+    let a = Alphabet::ternary(0.85);
+    let serial = gpfq_layer(&data, &w, a);
+    for block_b in [1usize, 3, 8, 64] {
+        for workers in [1usize, 2, 8] {
+            let ex = Executor { block_b, ..Executor::native(workers) };
+            let (q, paths) = ex.gpfq_layer(&y, &yq, &w, a).unwrap();
+            assert!(paths.iter().all(|&p| p == Path::Native));
+            assert_eq!(
+                serial.q.data, q.data,
+                "executor mismatch at block_b={block_b} workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_quantized_network_bit_identical_across_worker_counts() {
+    let net = mnist_mlp(7, 32, &[24, 16], 4);
+    let mut rng = Pcg::seed(105);
+    let x = Matrix::from_vec(40, 32, rng.normal_vec(40 * 32));
+    let run = |workers: usize| {
+        let cfg = PipelineConfig { workers, c_alpha: 2.5, ..Default::default() };
+        let out = quantize_network(&net, &x, &cfg);
+        out.network
+            .layers
+            .iter()
+            .filter_map(|l| l.weights())
+            .flat_map(|w| w.data.iter().copied())
+            .collect::<Vec<f32>>()
+    };
+    let base = run(1);
+    for workers in [2usize, 4, 8] {
+        assert_eq!(base, run(workers), "pipeline diverged at workers={workers}");
+    }
+}
+
+#[test]
+fn scheduler_runs_jobs_concurrently() {
+    // the worker pool must actually overlap jobs (scoped threads), not
+    // degenerate into a serial drain: with 4 workers and jobs that wait to
+    // observe a peer in flight, at least two must coexist.
+    let cfg = SchedulerConfig { workers: 4, queue_cap: 8 };
+    let inflight = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    let out: Vec<usize> = run_jobs(cfg, (0..8).collect(), |_, j| {
+        let cur = inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        peak.fetch_max(cur, Ordering::SeqCst);
+        let t0 = Instant::now();
+        while peak.load(Ordering::SeqCst) < 2 && t0.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        inflight.fetch_sub(1, Ordering::SeqCst);
+        Ok::<_, ()>(j)
+    })
+    .unwrap();
+    assert_eq!(out, (0..8).collect::<Vec<_>>());
+    assert!(
+        peak.load(Ordering::SeqCst) >= 2,
+        "scheduler never had two neuron-block jobs in flight at once"
+    );
+}

@@ -75,7 +75,6 @@ fn remark10_level_sets_complement_for_large_w() {
 fn corollary13_increment_bound() {
     // Δ‖u_t‖² ≤ B/4 when ‖X_t‖² ≤ B, for every step of a random run.
     let mut rng = Pcg::seed(5);
-    let a = Alphabet::ternary(1.0);
     let m = 12;
     for _ in 0..20 {
         let mut u = vec![0.0f32; m];

@@ -9,18 +9,31 @@
 //!    across worker counts (parallelizable-across-neurons claim), plus the
 //!    PJRT artifact path when available.
 //!
-//! Run with `cargo bench --bench bench_runtime`.  Emits `results/runtime_*.csv`.
+//!  * Activation-engine CNN pipeline vs the frozen pre-refactor oracle:
+//!    wall-clock, im2col economy and peak resident bytes, emitted as the
+//!    machine-readable `BENCH_runtime.json` CI artifact so the perf
+//!    trajectory accumulates across PRs.
+//!
+//! Run with `cargo bench --bench bench_runtime`.  Emits `results/runtime_*.csv`
+//! and `BENCH_runtime.json`.  Set `BENCH_FAST=1` (CI) for a seconds-scale run
+//! on shrunken problem sizes.
 
 use gpfq::config::default_workers;
 use gpfq::coordinator::executor::Executor;
+use gpfq::coordinator::pipeline::{try_quantize_network, PipelineConfig};
+use gpfq::coordinator::reference::reference_quantize_network;
 use gpfq::data::rng::Pcg;
+use gpfq::nn::conv::{im2col_invocations, ImgShape};
 use gpfq::nn::matrix::Matrix;
+use gpfq::nn::network::cifar_cnn;
 use gpfq::quant::alphabet::Alphabet;
 use gpfq::quant::gpfq::{gpfq_layer_parallel, gpfq_neuron, LayerData};
 use gpfq::quant::gsw::{gsw_neuron, gsw_rel_err};
 use gpfq::runtime::Runtime;
 use gpfq::util::bench::{fmt_rate, fmt_secs, time_fn, Table};
+use gpfq::util::json::Json;
 use gpfq::util::stats::ols_slope;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 fn rand_matrix(rng: &mut Pcg, rows: usize, cols: usize) -> Matrix {
@@ -28,6 +41,7 @@ fn rand_matrix(rng: &mut Pcg, rows: usize, cols: usize) -> Matrix {
 }
 
 fn main() {
+    let fast = std::env::var("BENCH_FAST").is_ok();
     let mut rng = Pcg::seed(123);
     let a = Alphabet::ternary(1.0);
 
@@ -36,7 +50,8 @@ fn main() {
     let m = 256;
     let mut ln_n = Vec::new();
     let mut ln_s = Vec::new();
-    for &n in &[256usize, 512, 1024, 2048, 4096] {
+    let n_sizes: &[usize] = if fast { &[256, 512, 1024] } else { &[256, 512, 1024, 2048, 4096] };
+    for &n in n_sizes {
         let x = rand_matrix(&mut rng, m, n);
         let w: Vec<f32> = rng.uniform_vec(n, -1.0, 1.0);
         let data = LayerData::first_layer(&x);
@@ -56,7 +71,8 @@ fn main() {
     let mut t = Table::new("E10a — GPFQ per-neuron cost vs m (N=1024)", &["m", "time", "ns per Nm element"]);
     let n = 1024;
     let (mut ln_m, mut ln_s) = (Vec::new(), Vec::new());
-    for &mm in &[64usize, 128, 256, 512, 1024] {
+    let m_sizes: &[usize] = if fast { &[64, 128, 256] } else { &[64, 128, 256, 512, 1024] };
+    for &mm in m_sizes {
         let x = rand_matrix(&mut rng, mm, n);
         let w: Vec<f32> = rng.uniform_vec(n, -1.0, 1.0);
         let data = LayerData::first_layer(&x);
@@ -80,7 +96,8 @@ fn main() {
     );
     let m = 32;
     let a2 = Alphabet::new(1.0, 2);
-    for &n in &[16usize, 32, 64, 128, 256] {
+    let gsw_sizes: &[usize] = if fast { &[16, 32, 64] } else { &[16, 32, 64, 128, 256] };
+    for &n in gsw_sizes {
         let x = rand_matrix(&mut rng, m, n);
         let w: Vec<f32> = rng.uniform_vec(n, -0.95, 0.95);
         let data = LayerData::first_layer(&x);
@@ -110,11 +127,12 @@ fn main() {
     println!("(paper Section 3: GSW needs O(N(N+m)^w) vs GPFQ O(Nm) — the slowdown column is that gap)\n");
 
     // ---- layer throughput vs workers ------------------------------------------
+    let (m, n, neurons) =
+        if fast { (128usize, 256usize, 64usize) } else { (512usize, 784usize, 256usize) };
     let mut t = Table::new(
-        "E10c — layer quantization throughput (N=784, m=512, 256 neurons)",
+        &format!("E10c — layer quantization throughput (N={n}, m={m}, {neurons} neurons)"),
         &["workers", "time", "neurons/s", "weights/s"],
     );
-    let (m, n, neurons) = (512usize, 784usize, 256usize);
     let x = rand_matrix(&mut rng, m, n);
     let w = Matrix::from_vec(n, neurons, rng.uniform_vec(n * neurons, -1.0, 1.0));
     let data = LayerData::first_layer(&x);
@@ -178,5 +196,138 @@ fn main() {
         }
     } else {
         println!("(artifacts not built — skipping PJRT path bench)");
+    }
+
+    // ---- E10e: activation engine vs frozen pre-refactor pipeline ------------
+    // The zero-copy two-stream engine builds each conv layer's im2col patch
+    // matrix once per stream and shares it (Arc) between the quantizer and
+    // the forward GEMM; the oracle materializes it twice per stream and
+    // re-transposes both streams per layer.  Measure wall-clock, im2col
+    // invocations and peak resident bytes on a CNN config, and persist the
+    // numbers as BENCH_runtime.json so CI accumulates the perf trajectory.
+    let (img, widths, fc, samples) = if fast {
+        (ImgShape { h: 10, w: 10, c: 3 }, vec![4usize], 16usize, 8usize)
+    } else {
+        (ImgShape { h: 14, w: 14, c: 3 }, vec![8usize], 32usize, 32usize)
+    };
+    let net = cifar_cnn(5, img, &widths, fc, 10);
+    let x = rand_matrix(&mut rng, samples, img.len());
+    let cfg = PipelineConfig { c_alpha: 2.0, workers: default_workers(), ..Default::default() };
+
+    let im0 = im2col_invocations();
+    let engine_out = try_quantize_network(&net, &x, &cfg).expect("engine run");
+    let engine_im2col = im2col_invocations() - im0;
+    let im1 = im2col_invocations();
+    let oracle_out = reference_quantize_network(&net, &x, &cfg).expect("oracle run");
+    let oracle_im2col = im2col_invocations() - im1;
+
+    let iters = if fast { 3 } else { 5 };
+    let s_eng = time_fn("engine", 1, iters, |_| {
+        try_quantize_network(&net, &x, &cfg).expect("engine run").total_seconds
+    });
+    let s_ref = time_fn("reference", 1, iters, |_| {
+        reference_quantize_network(&net, &x, &cfg).expect("oracle run").total_seconds
+    });
+
+    let engine_peak =
+        engine_out.layer_reports.iter().map(|r| r.peak_resident_bytes).max().unwrap_or(0);
+    // The oracle does not instrument memory; model its per-layer residency
+    // from shapes, counting only what it demonstrably holds at dispatch
+    // time: data_y + data_yq (row-major) + yt + yqt (LayerData transposes)
+    // + W + Q.  This *undercounts* the oracle (forward-pass im2col excluded).
+    let oracle_peak_model = oracle_out
+        .layer_reports
+        .iter()
+        .map(|r| 4 * (r.n_features * r.m_samples * 4) + 2 * (r.n_features * r.neurons * 4))
+        .max()
+        .unwrap_or(0);
+
+    let mut t = Table::new(
+        &format!(
+            "E10e — activation engine vs pre-refactor pipeline (CNN {}x{}x{}, {} samples)",
+            img.h, img.w, img.c, samples
+        ),
+        &["path", "time", "im2col calls", "peak resident"],
+    );
+    t.row(vec![
+        "engine".into(),
+        fmt_secs(s_eng.median_s),
+        engine_im2col.to_string(),
+        format!("{:.1} KiB", engine_peak as f64 / 1024.0),
+    ]);
+    t.row(vec![
+        "reference".into(),
+        fmt_secs(s_ref.median_s),
+        oracle_im2col.to_string(),
+        format!("{:.1} KiB (modeled)", oracle_peak_model as f64 / 1024.0),
+    ]);
+    t.emit("runtime_engine_vs_reference");
+    println!(
+        "engine speedup: {:.2}x wall-clock, {}→{} im2col calls, {:.2}x peak bytes\n",
+        s_ref.median_s / s_eng.median_s.max(1e-12),
+        oracle_im2col,
+        engine_im2col,
+        oracle_peak_model as f64 / engine_peak.max(1) as f64,
+    );
+
+    // ---- machine-readable summary: BENCH_runtime.json ------------------------
+    let layers: Vec<Json> = engine_out
+        .layer_reports
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("label".into(), Json::Str(r.label.clone()));
+            o.insert("layer_index".into(), Json::Num(r.layer_index as f64));
+            o.insert("seconds".into(), Json::Num(r.seconds));
+            o.insert("im2col_seconds".into(), Json::Num(r.im2col_seconds));
+            o.insert("gemm_seconds".into(), Json::Num(r.gemm_seconds));
+            o.insert("quantize_seconds".into(), Json::Num(r.quantize_seconds));
+            o.insert("peak_resident_bytes".into(), Json::Num(r.peak_resident_bytes as f64));
+            o.insert("neurons".into(), Json::Num(r.neurons as f64));
+            o.insert("n_features".into(), Json::Num(r.n_features as f64));
+            o.insert("m_samples".into(), Json::Num(r.m_samples as f64));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut engine_j = BTreeMap::new();
+    engine_j.insert("median_total_seconds".into(), Json::Num(s_eng.median_s));
+    engine_j.insert("peak_resident_bytes".into(), Json::Num(engine_peak as f64));
+    engine_j.insert("im2col_invocations".into(), Json::Num(engine_im2col as f64));
+    engine_j.insert("layers".into(), Json::Arr(layers));
+    let mut reference_j = BTreeMap::new();
+    reference_j.insert("median_total_seconds".into(), Json::Num(s_ref.median_s));
+    reference_j.insert("peak_resident_bytes_modeled".into(), Json::Num(oracle_peak_model as f64));
+    reference_j.insert("im2col_invocations".into(), Json::Num(oracle_im2col as f64));
+    let mut config_j = BTreeMap::new();
+    config_j.insert(
+        "img".into(),
+        Json::Arr(vec![
+            Json::Num(img.h as f64),
+            Json::Num(img.w as f64),
+            Json::Num(img.c as f64),
+        ]),
+    );
+    config_j.insert(
+        "conv_widths".into(),
+        Json::Arr(widths.iter().map(|&w| Json::Num(w as f64)).collect()),
+    );
+    config_j.insert("fc".into(), Json::Num(fc as f64));
+    config_j.insert("samples".into(), Json::Num(samples as f64));
+    config_j.insert("levels".into(), Json::Num(cfg.levels as f64));
+    config_j.insert("workers".into(), Json::Num(cfg.workers as f64));
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("runtime_cnn_pipeline".into()));
+    root.insert("fast".into(), Json::Bool(fast));
+    root.insert("config".into(), Json::Obj(config_j));
+    root.insert("engine".into(), Json::Obj(engine_j));
+    root.insert("reference".into(), Json::Obj(reference_j));
+    root.insert(
+        "speedup".into(),
+        Json::Num(s_ref.median_s / s_eng.median_s.max(1e-12)),
+    );
+    let path = "BENCH_runtime.json";
+    match std::fs::write(path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => println!("(json written to {path})"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
     }
 }

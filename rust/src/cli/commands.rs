@@ -142,7 +142,16 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     let out = quantize_network(&net, &x_quant, &cfg);
     let mut t = Table::new(
         &format!("{} quantization ({method:?}, M={}, C_alpha={})", spec.name, cfg.levels, cfg.c_alpha),
-        &["layer", "alpha", "fro_err", "median_rel_err", "paths (native/pjrt)", "secs"],
+        &[
+            "layer",
+            "alpha",
+            "fro_err",
+            "median_rel_err",
+            "paths (native/pjrt)",
+            "secs",
+            "im2col/gemm/quant (s)",
+            "peak resident",
+        ],
     );
     for r in &out.layer_reports {
         t.row(vec![
@@ -152,6 +161,8 @@ fn cmd_quantize(args: &Args) -> Result<()> {
             format!("{:.4}", r.median_rel_err),
             format!("{}/{}", r.native_blocks, r.pjrt_blocks),
             format!("{:.2}", r.seconds),
+            format!("{:.2}/{:.2}/{:.2}", r.im2col_seconds, r.gemm_seconds, r.quantize_seconds),
+            format!("{:.1} KiB", r.peak_resident_bytes as f64 / 1024.0),
         ]);
     }
     println!("{}", t.render());

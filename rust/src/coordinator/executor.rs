@@ -75,73 +75,108 @@ impl Executor {
         w: &Matrix,
         a: Alphabet,
     ) -> Result<(Matrix, Vec<Path>)> {
+        if let Some((rt, info)) = self.pjrt_match(y.rows, w.rows, a) {
+            return self.gpfq_pjrt(&rt, &info, y, yq, w, a);
+        }
+        let data = LayerData::new(y, yq);
+        self.gpfq_native(&data, w, a)
+    }
+
+    /// Quantize a full layer from prebuilt walk-order [`LayerData`] — the
+    /// activation engine's entry point: the `Arc`-shared views go straight
+    /// to the neuron-block workers with no copy and no re-transpose.  (The
+    /// PJRT artifact ABI takes row-major activations, so that path — off by
+    /// default — materializes them on demand.)
+    pub fn gpfq_layer_data(
+        &self,
+        data: &LayerData,
+        w: &Matrix,
+        a: Alphabet,
+    ) -> Result<(Matrix, Vec<Path>)> {
+        if let Some((rt, info)) = self.pjrt_match(data.m(), w.rows, a) {
+            let y = data.yt.transpose();
+            let yq = if data.same { y.clone() } else { data.yqt.transpose() };
+            return self.gpfq_pjrt(&rt, &info, &y, &yq, w, a);
+        }
+        self.gpfq_native(data, w, a)
+    }
+
+    /// PJRT eligibility: an artifact for this exact (mq, N, b, M)?
+    fn pjrt_match(
+        &self,
+        m: usize,
+        n: usize,
+        a: Alphabet,
+    ) -> Option<(Arc<Runtime>, crate::runtime::ArtifactInfo)> {
+        if !self.prefer_pjrt {
+            return None;
+        }
+        self.runtime.as_ref().and_then(|rt| {
+            let man = rt.manifest();
+            if m <= man.mq {
+                man.find_gpfq(man.mq, n, self.block_b, a.m).cloned().map(|info| (rt.clone(), info))
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Native path: fan neuron blocks out across the worker pool.
+    fn gpfq_native(
+        &self,
+        data: &LayerData,
+        w: &Matrix,
+        a: Alphabet,
+    ) -> Result<(Matrix, Vec<Path>)> {
         let n_neurons = w.cols;
         let b = self.block_b;
         let n_blocks = n_neurons.div_ceil(b).max(1);
+        let jobs: Vec<usize> = (0..n_blocks).collect();
+        let outputs = run_jobs(self.scheduler, jobs, |_, blk| -> Result<(Matrix, Path)> {
+            let lo = blk * b;
+            let hi = ((blk + 1) * b).min(n_neurons);
+            let res = gpfq_layer_range(data, w, a, lo, hi);
+            Ok((res.q, Path::Native))
+        })?;
+        Ok(stitch_blocks(outputs, w.rows, n_neurons))
+    }
 
-        // PJRT eligibility: an artifact for this exact (mq, N, b, M)?
-        let pjrt = if self.prefer_pjrt {
-            self.runtime.as_ref().and_then(|rt| {
-                let man = rt.manifest();
-                if y.rows <= man.mq {
-                    man.find_gpfq(man.mq, w.rows, b, a.m).cloned().map(|info| (rt.clone(), info))
-                } else {
-                    None
-                }
-            })
-        } else {
-            None
-        };
-
-        // The xla crate's PJRT handles are Rc-based (not Send), so PJRT
-        // blocks execute serially on this thread — the CPU PJRT client
-        // parallelizes internally.  The native path fans out across the
-        // worker pool.
-        let outputs: Vec<(Matrix, Path)> = if let Some((rt, info)) = &pjrt {
-            // pad activation rows up to mq with zero rows (zero rows
-            // contribute nothing to the inner products — see kernel tests).
-            let mq = rt.manifest().mq;
-            let yp = y.pad_to(mq, y.cols);
-            let yqp = yq.pad_to(mq, yq.cols);
-            let mut outs = Vec::with_capacity(n_blocks);
-            for blk in 0..n_blocks {
-                let lo = blk * b;
-                let hi = ((blk + 1) * b).min(n_neurons);
-                // pad the trailing block with zero neurons; sliced off below
-                let mut wblk = Matrix::zeros(w.rows, b);
-                for j in lo..hi {
-                    wblk.set_col(j - lo, &w.col(j));
-                }
-                let out = rt.execute_info(
-                    info,
-                    &[Arg::Mat(&yp), Arg::Mat(&yqp), Arg::Mat(&wblk), Arg::Scalar(a.alpha)],
-                )?;
-                outs.push((out[0].cols_slice(0, hi - lo), Path::Pjrt));
+    /// PJRT path.  The xla crate's PJRT handles are Rc-based (not Send), so
+    /// PJRT blocks execute serially on this thread — the CPU PJRT client
+    /// parallelizes internally.
+    fn gpfq_pjrt(
+        &self,
+        rt: &Arc<Runtime>,
+        info: &crate::runtime::ArtifactInfo,
+        y: &Matrix,
+        yq: &Matrix,
+        w: &Matrix,
+        a: Alphabet,
+    ) -> Result<(Matrix, Vec<Path>)> {
+        let n_neurons = w.cols;
+        let b = self.block_b;
+        let n_blocks = n_neurons.div_ceil(b).max(1);
+        // pad activation rows up to mq with zero rows (zero rows
+        // contribute nothing to the inner products — see kernel tests).
+        let mq = rt.manifest().mq;
+        let yp = y.pad_to(mq, y.cols);
+        let yqp = yq.pad_to(mq, yq.cols);
+        let mut outs = Vec::with_capacity(n_blocks);
+        for blk in 0..n_blocks {
+            let lo = blk * b;
+            let hi = ((blk + 1) * b).min(n_neurons);
+            // pad the trailing block with zero neurons; sliced off below
+            let mut wblk = Matrix::zeros(w.rows, b);
+            for j in lo..hi {
+                wblk.set_col(j - lo, &w.col(j));
             }
-            outs
-        } else {
-            let data = LayerData::new(y, yq);
-            let jobs: Vec<usize> = (0..n_blocks).collect();
-            run_jobs(self.scheduler, jobs, |_, blk| -> Result<(Matrix, Path)> {
-                let lo = blk * b;
-                let hi = ((blk + 1) * b).min(n_neurons);
-                let res = gpfq_layer_range(&data, w, a, lo, hi);
-                Ok((res.q, Path::Native))
-            })?
-        };
-
-        let mut q = Matrix::zeros(w.rows, n_neurons);
-        let mut paths = Vec::with_capacity(n_blocks);
-        let mut col = 0usize;
-        for (blockq, path) in outputs {
-            for j in 0..blockq.cols {
-                q.set_col(col, &blockq.col(j));
-                col += 1;
-            }
-            paths.push(path);
+            let out = rt.execute_info(
+                info,
+                &[Arg::Mat(&yp), Arg::Mat(&yqp), Arg::Mat(&wblk), Arg::Scalar(a.alpha)],
+            )?;
+            outs.push((out[0].cols_slice(0, hi - lo), Path::Pjrt));
         }
-        assert_eq!(col, n_neurons);
-        Ok((q, paths))
+        Ok(stitch_blocks(outs, w.rows, n_neurons))
     }
 
     /// MSQ is data-free; always native (the artifact variant exists for
@@ -149,6 +184,26 @@ impl Executor {
     pub fn msq_layer(&self, w: &Matrix, a: Alphabet) -> Matrix {
         crate::quant::msq::msq_matrix(w, a)
     }
+}
+
+/// Reassemble per-block columns into the layer's Q in submission order.
+fn stitch_blocks(
+    outputs: Vec<(Matrix, Path)>,
+    rows: usize,
+    n_neurons: usize,
+) -> (Matrix, Vec<Path>) {
+    let mut q = Matrix::zeros(rows, n_neurons);
+    let mut paths = Vec::with_capacity(outputs.len());
+    let mut col = 0usize;
+    for (blockq, path) in outputs {
+        for j in 0..blockq.cols {
+            q.set_col(col, &blockq.col(j));
+            col += 1;
+        }
+        paths.push(path);
+    }
+    assert_eq!(col, n_neurons);
+    (q, paths)
 }
 
 #[cfg(test)]
@@ -170,6 +225,23 @@ mod tests {
         assert_eq!(paths.len(), 3); // ceil(10/4)
         let direct = gpfq_layer(&LayerData::new(&y, &yq), &w, a);
         assert_eq!(q.data, direct.q.data);
+    }
+
+    #[test]
+    fn gpfq_layer_data_matches_matrix_entry_point() {
+        // the activation engine hands prebuilt walk-order views straight to
+        // the executor; both entry points must agree to the last bit.
+        let mut rng = Pcg::seed(4);
+        let y = Matrix::from_vec(12, 30, rng.normal_vec(360));
+        let yq = Matrix::from_vec(12, 30, rng.normal_vec(360));
+        let w = Matrix::from_vec(30, 11, rng.uniform_vec(330, -1.0, 1.0));
+        let a = Alphabet::new(0.8, 4);
+        let ex = Executor { block_b: 4, ..Executor::native(3) };
+        let (q_mat, paths_mat) = ex.gpfq_layer(&y, &yq, &w, a).unwrap();
+        let data = LayerData::new(&y, &yq);
+        let (q_data, paths_data) = ex.gpfq_layer_data(&data, &w, a).unwrap();
+        assert_eq!(q_mat.data, q_data.data);
+        assert_eq!(paths_mat, paths_data);
     }
 
     #[test]

@@ -1,15 +1,23 @@
-//! L3 coordinator — the system around the paper's algorithm: a
-//! layer-sequential, neuron-parallel quantization [`pipeline`], a bounded
-//! worker-pool [`scheduler`], dual execution backends ([`executor`]:
-//! PJRT artifacts / native Rust), and the Section 6 cross-validation
-//! [`sweep`] orchestrator.
+//! L3 coordinator — the system around the paper's algorithm: the zero-copy
+//! two-stream [`activation`] engine feeding a layer-sequential,
+//! neuron-parallel quantization [`pipeline`] (staged as a
+//! [`pipeline::QuantizeSession`]), a bounded worker-pool [`scheduler`],
+//! dual execution backends ([`executor`]: PJRT artifacts / native Rust),
+//! the Section 6 cross-validation [`sweep`] orchestrator, and the frozen
+//! pre-refactor [`reference`] oracle that pins bit-parity.
 
+pub mod activation;
 pub mod executor;
 pub mod pipeline;
+pub mod reference;
 pub mod scheduler;
 pub mod sweep;
 
+pub use activation::{ActivationStore, StreamViews};
 pub use executor::{Executor, Path};
-pub use pipeline::{quantize_network, try_quantize_network, Method, PipelineConfig, QuantOutcome};
+pub use pipeline::{
+    quantize_network, try_quantize_network, Method, PipelineConfig, QuantOutcome, QuantizeSession,
+};
+pub use reference::reference_quantize_network;
 pub use scheduler::{run_jobs, SchedulerConfig};
-pub use sweep::{sweep, SweepConfig, SweepPoint, SweepResult};
+pub use sweep::{layer_count_sweep, sweep, LayerCountPoint, SweepConfig, SweepPoint, SweepResult};

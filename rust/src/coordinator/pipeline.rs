@@ -3,21 +3,39 @@
 //! GPFQ quantizes layer ℓ against *two* activation streams (paper eq. (3)):
 //! the analog stream `Y = Φ^(ℓ-1)(X)` and the quantized stream
 //! `Ỹ = Φ̃^(ℓ-1)(X)` produced by the already-quantized prefix of the
-//! network.  The pipeline maintains both streams, shards each layer's
-//! neurons into blocks, dispatches them to the [`Executor`] (PJRT artifact
-//! or native), installs `Q^(ℓ)`, and advances the streams.  This dependence
-//! of layer ℓ on Q^(1..ℓ-1) is what lets GPFQ "error-correct" (Figure 1b) —
-//! and is why layers must be sequential while neurons are parallel.
+//! network.  The [`ActivationStore`] owns both streams and materializes
+//! each layer's walk-order view (the im2col patch matrix for conv layers)
+//! exactly once per stream, shared zero-copy between the quantizer and the
+//! forward pass.  This dependence of layer ℓ on Q^(1..ℓ-1) is what lets
+//! GPFQ "error-correct" (Figure 1b) — and is why layers must be sequential
+//! while neurons are parallel.
+//!
+//! The pipeline is staged as a [`QuantizeSession`]: *stream advance* (walk
+//! the streams to the next quantization point) → *layer-job build* (views,
+//! bias augmentation, alphabet) → *dispatch* (neuron blocks to the
+//! [`Executor`]) → *report* (install Q^(ℓ), error metrics, timing splits,
+//! peak resident bytes).  [`try_quantize_network`] drives the session to
+//! completion; `sweep::layer_count_sweep` steps it one quantization point
+//! at a time, reusing the shared quantized-prefix streams instead of
+//! re-running the pipeline per layer count.
+//!
+//! Every step is bit-identical to the naive double-forward pipeline; the
+//! frozen oracle in [`crate::coordinator::reference`] and
+//! `tests/test_activation_engine.rs` pin that guarantee (the PR-1
+//! determinism contract).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::Result;
 
+use crate::coordinator::activation::ActivationStore;
 use crate::coordinator::executor::{Executor, Path};
 use crate::nn::matrix::Matrix;
 use crate::nn::network::{Layer, Network};
 use crate::quant::alphabet::Alphabet;
-use crate::quant::error::layer_fro_error;
+use crate::quant::error::{layer_fro_error_walk, layer_rel_errors_walk};
+use crate::quant::gpfq::LayerData;
 use crate::util::stats::median;
 
 /// Quantization method.
@@ -84,7 +102,9 @@ pub struct LayerReport {
     pub fro_err: f64,
     /// median per-neuron relative error
     pub median_rel_err: f64,
-    /// wall-clock seconds spent quantizing this layer
+    /// wall-clock seconds spent quantizing this layer (view build +
+    /// dispatch + install; the stream advance is reported in
+    /// `gemm_seconds`)
     pub seconds: f64,
     /// how many neuron blocks ran on each path
     pub native_blocks: usize,
@@ -94,6 +114,21 @@ pub struct LayerReport {
     /// N (features per neuron) and m (quantization samples)
     pub n_features: usize,
     pub m_samples: usize,
+    /// the dense bias row was quantized via the Section-4 augmentation (so
+    /// [`verify_alphabet`] must check it against the alphabet too)
+    pub bias_quantized: bool,
+    /// engine-accounted peak bytes resident for this layer: activations,
+    /// walk views (patches), augmented views, weights and Q — not process
+    /// RSS, but a deterministic measure benches can track across PRs
+    pub peak_resident_bytes: usize,
+    /// seconds building the walk-order views (im2col / transpose + bias
+    /// augmentation)
+    pub im2col_seconds: f64,
+    /// seconds advancing both streams through this layer (shared patches →
+    /// GEMM → next activations)
+    pub gemm_seconds: f64,
+    /// seconds in the quantizer dispatch (scheduler + kernels)
+    pub quantize_seconds: f64,
 }
 
 /// Pipeline output.
@@ -114,111 +149,256 @@ pub fn quantize_network(net: &Network, x_quant: &Matrix, cfg: &PipelineConfig) -
     try_quantize_network(net, x_quant, cfg).expect("quantization pipeline failed")
 }
 
-/// Fallible variant (PJRT errors surface here).
+/// Fallible variant (PJRT errors surface here): drives a [`QuantizeSession`]
+/// to completion.
 pub fn try_quantize_network(
     net: &Network,
     x_quant: &Matrix,
     cfg: &PipelineConfig,
 ) -> Result<QuantOutcome> {
-    assert_eq!(x_quant.cols, net.input.len(), "quantization data width mismatch");
-    let executor = cfg
-        .executor
-        .clone()
-        .unwrap_or_else(|| Executor::native(cfg.workers));
-    let t0 = Instant::now();
-    let mut qnet = net.clone();
-    let mut reports = Vec::new();
-    let mut checkpoints = Vec::new();
-
-    // dual activation streams
-    let mut y = x_quant.clone(); // analog Φ^(ℓ-1)(X)
-    let mut yq = x_quant.clone(); // quantized Φ̃^(ℓ-1)(X)
-    let mut quantized_so_far = 0usize;
-
-    for i in 0..net.layers.len() {
-        let selected = net.layers[i].is_quantizable()
-            && (!cfg.fc_only || matches!(net.layers[i], Layer::Dense { .. }))
-            && cfg.max_layers.map(|k| quantized_so_far < k).unwrap_or(true);
-        if selected {
-            let lt = Instant::now();
-            // bias augmentation (Section 4): treat b as weight row N+1 and
-            // append a constant-1 data column, for dense layers only.
-            let augment_bias = cfg.quantize_bias && matches!(net.layers[i], Layer::Dense { .. });
-            let mut w = net.layers[i].weights().unwrap().clone();
-            let mut data_y = net.quantization_data(i, &y);
-            let mut data_yq = qnet.quantization_data(i, &yq);
-            if augment_bias {
-                if let Layer::Dense { b, .. } = &net.layers[i] {
-                    let mut wb = Matrix::zeros(w.rows + 1, w.cols);
-                    for r in 0..w.rows {
-                        wb.row_mut(r).copy_from_slice(w.row(r));
-                    }
-                    wb.row_mut(w.rows).copy_from_slice(b);
-                    w = wb;
-                }
-                let ones = Matrix::from_fn(data_y.rows, 1, |_, _| 1.0);
-                data_y = data_y.hcat(&ones);
-                data_yq = data_yq.hcat(&ones);
-            }
-            let a = Alphabet::from_median(&w.data, cfg.c_alpha, cfg.levels);
-            let (q, paths) = match cfg.method {
-                Method::Gpfq => executor.gpfq_layer(&data_y, &data_yq, &w, a)?,
-                Method::Msq => {
-                    let q = executor.msq_layer(&w, a);
-                    (q, vec![])
-                }
-            };
-            let rel = crate::quant::error::layer_rel_errors(&data_y, &data_yq, &w, &q);
-            let fro = layer_fro_error(&data_y, &data_yq, &w, &q);
-            if augment_bias {
-                let n = q.rows - 1;
-                qnet.set_weights(i, q.rows_slice(0, n));
-                if let Layer::Dense { b, .. } = &mut qnet.layers[i] {
-                    b.copy_from_slice(q.row(n));
-                }
-            } else {
-                qnet.set_weights(i, q);
-            }
-            reports.push(LayerReport {
-                layer_index: i,
-                label: net.layers[i].label(),
-                alpha: a.alpha,
-                levels: a.m,
-                fro_err: fro,
-                median_rel_err: median(&rel),
-                seconds: lt.elapsed().as_secs_f64(),
-                native_blocks: paths.iter().filter(|&&p| p == Path::Native).count(),
-                pjrt_blocks: paths.iter().filter(|&&p| p == Path::Pjrt).count(),
-                neurons: w.cols,
-                n_features: w.rows,
-                m_samples: data_y.rows,
-            });
-            quantized_so_far += 1;
-            if cfg.capture_checkpoints {
-                checkpoints.push(qnet.clone());
-            }
-        }
-        // advance both streams through layer i
-        y = net.apply_layer(i, &y);
-        yq = qnet.apply_layer(i, &yq);
-    }
-
-    Ok(QuantOutcome {
-        network: qnet,
-        layer_reports: reports,
-        checkpoints,
-        total_seconds: t0.elapsed().as_secs_f64(),
-    })
+    let mut session = QuantizeSession::new(net, x_quant, cfg.clone());
+    while session.step()?.is_some() {}
+    Ok(session.into_outcome())
 }
 
-/// Verify every quantized layer's weights live in its reported alphabet —
-/// the pipeline's core postcondition (used by tests and `gpfq eval`).
+/// A staged, resumable pipeline run: each [`QuantizeSession::step`] advances
+/// the streams to the next quantization point, builds the layer job,
+/// dispatches it and installs the report.  Between steps the session holds
+/// the shared quantized-prefix streams, which is what lets layer-count
+/// sweeps reuse the prefix instead of re-running from scratch.
+pub struct QuantizeSession<'a> {
+    net: &'a Network,
+    cfg: PipelineConfig,
+    executor: Executor,
+    qnet: Network,
+    store: ActivationStore,
+    /// next network layer index the streams have not yet advanced through
+    next_layer: usize,
+    quantized_so_far: usize,
+    reports: Vec<LayerReport>,
+    checkpoints: Vec<Network>,
+    started: Instant,
+}
+
+impl<'a> QuantizeSession<'a> {
+    pub fn new(net: &'a Network, x_quant: &Matrix, cfg: PipelineConfig) -> Self {
+        assert_eq!(x_quant.cols, net.input.len(), "quantization data width mismatch");
+        let executor = cfg.executor.clone().unwrap_or_else(|| Executor::native(cfg.workers));
+        QuantizeSession {
+            net,
+            executor,
+            qnet: net.clone(),
+            store: ActivationStore::new(x_quant),
+            next_layer: 0,
+            quantized_so_far: 0,
+            reports: Vec::new(),
+            checkpoints: Vec::new(),
+            started: Instant::now(),
+            cfg,
+        }
+    }
+
+    /// The quantized network so far (analog weights beyond the prefix).
+    pub fn network(&self) -> &Network {
+        &self.qnet
+    }
+
+    pub fn reports(&self) -> &[LayerReport] {
+        &self.reports
+    }
+
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn selected(&self, i: usize) -> bool {
+        self.net.layers[i].is_quantizable()
+            && (!self.cfg.fc_only || matches!(self.net.layers[i], Layer::Dense { .. }))
+            && self.cfg.max_layers.map(|k| self.quantized_so_far < k).unwrap_or(true)
+    }
+
+    /// Will any further layer be selected for quantization?  When false the
+    /// trailing stream advances are skipped entirely (nothing observes
+    /// them), which is also what caps a layer-count sweep.  The max_layers
+    /// quota inside `selected` is loop-invariant here, so this is exact.
+    fn has_more(&self) -> bool {
+        (self.next_layer..self.net.layers.len()).any(|i| self.selected(i))
+    }
+
+    /// Advance to and quantize the next selected layer.  Returns the fresh
+    /// report, or `None` once no further layer will be selected.
+    pub fn step(&mut self) -> Result<Option<LayerReport>> {
+        if !self.has_more() {
+            return Ok(None);
+        }
+        let sched = self.executor.scheduler;
+        loop {
+            let i = self.next_layer;
+            if !self.selected(i) {
+                // stage: stream advance through a non-quantized layer
+                self.store.advance_plain(self.net, &self.qnet, i, sched)?;
+                self.next_layer += 1;
+                continue;
+            }
+            self.quantize_layer(i)?;
+            self.next_layer = i + 1;
+            return Ok(Some(self.reports.last().expect("report just pushed").clone()));
+        }
+    }
+
+    /// Stages: layer-job build → dispatch → report/install → stream advance.
+    fn quantize_layer(&mut self, i: usize) -> Result<()> {
+        let lt = Instant::now();
+        let augment_bias =
+            self.cfg.quantize_bias && matches!(self.net.layers[i], Layer::Dense { .. });
+        let mut peak_bytes = self.store.resident_bytes();
+
+        // ---- layer-job build: walk views (im2col once per stream), bias
+        // augmentation (Section 4), alphabet ---------------------------------
+        let tv = Instant::now();
+        let views = self.store.take_views(self.net, i);
+        // inside take_views the freshly built walk views coexist with the
+        // standard-layout activations they were built from, so the true
+        // high-water mark of this window is their sum
+        peak_bytes += views.bytes();
+        let mut w = self.net.layers[i].weights().unwrap().clone();
+        let (ty, tyq) = if augment_bias {
+            if let Layer::Dense { b, .. } = &self.net.layers[i] {
+                let mut wb = Matrix::zeros(w.rows + 1, w.cols);
+                for r in 0..w.rows {
+                    wb.row_mut(r).copy_from_slice(w.row(r));
+                }
+                wb.row_mut(w.rows).copy_from_slice(b);
+                w = wb;
+            }
+            let ty = Arc::new(append_ones_row(&views.ty));
+            let tyq = if views.shared() {
+                ty.clone()
+            } else {
+                Arc::new(append_ones_row(&views.tyq))
+            };
+            (ty, tyq)
+        } else {
+            (views.ty.clone(), views.tyq.clone())
+        };
+        let im2col_seconds = tv.elapsed().as_secs_f64();
+        let m_samples = ty.cols;
+        let a = Alphabet::from_median(&w.data, self.cfg.c_alpha, self.cfg.levels);
+
+        let aug_bytes = if augment_bias {
+            let shared_aug = Arc::ptr_eq(&ty, &tyq);
+            ty.data.len() * 4 + if shared_aug { 0 } else { tyq.data.len() * 4 }
+        } else {
+            0
+        };
+        let weight_bytes = 2 * w.data.len() * 4; // W and Q
+        peak_bytes = peak_bytes.max(views.bytes() + aug_bytes + weight_bytes);
+
+        // ---- dispatch: neuron blocks to the executor -----------------------
+        // (MSQ is data-free, so the denom/cross precompute in LayerData is
+        // built only on the GPFQ path; error metrics below read the raw
+        // views either way)
+        let tq = Instant::now();
+        let (q, paths) = match self.cfg.method {
+            Method::Gpfq => {
+                let data = LayerData::from_transposed(ty.clone(), tyq.clone());
+                self.executor.gpfq_layer_data(&data, &w, a)?
+            }
+            Method::Msq => {
+                let q = self.executor.msq_layer(&w, a);
+                (q, vec![])
+            }
+        };
+        let quantize_seconds = tq.elapsed().as_secs_f64();
+
+        // ---- report/install ------------------------------------------------
+        let rel = layer_rel_errors_walk(&ty, &tyq, &w, &q);
+        let fro = layer_fro_error_walk(&ty, &tyq, &w, &q);
+        if augment_bias {
+            let n = q.rows - 1;
+            self.qnet.set_weights(i, q.rows_slice(0, n));
+            if let Layer::Dense { b, .. } = &mut self.qnet.layers[i] {
+                b.copy_from_slice(q.row(n));
+            }
+        } else {
+            self.qnet.set_weights(i, q);
+        }
+        let seconds = lt.elapsed().as_secs_f64();
+
+        // ---- stream advance: shared patches → GEMM → next activations ------
+        let tg = Instant::now();
+        drop((ty, tyq)); // keep only the unaugmented views resident for the GEMM
+        let view_bytes = views.bytes();
+        self.store.advance_from_views(self.net, &self.qnet, i, views, self.executor.scheduler)?;
+        let gemm_seconds = tg.elapsed().as_secs_f64();
+        peak_bytes = peak_bytes.max(view_bytes + self.store.resident_bytes());
+
+        let wl = self.net.layers[i].weights().unwrap();
+        self.reports.push(LayerReport {
+            layer_index: i,
+            label: self.net.layers[i].label(),
+            alpha: a.alpha,
+            levels: a.m,
+            fro_err: fro,
+            median_rel_err: median(&rel),
+            seconds,
+            native_blocks: paths.iter().filter(|&&p| p == Path::Native).count(),
+            pjrt_blocks: paths.iter().filter(|&&p| p == Path::Pjrt).count(),
+            neurons: wl.cols,
+            n_features: if augment_bias { wl.rows + 1 } else { wl.rows },
+            m_samples,
+            bias_quantized: augment_bias,
+            peak_resident_bytes: peak_bytes,
+            im2col_seconds,
+            gemm_seconds,
+            quantize_seconds,
+        });
+        self.quantized_so_far += 1;
+        if self.cfg.capture_checkpoints {
+            self.checkpoints.push(self.qnet.clone());
+        }
+        Ok(())
+    }
+
+    /// Consume the session into the final outcome.
+    pub fn into_outcome(self) -> QuantOutcome {
+        QuantOutcome {
+            network: self.qnet,
+            layer_reports: self.reports,
+            checkpoints: self.checkpoints,
+            total_seconds: self.started.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+/// Append the Section-4 constant-1 walk direction as an extra bottom row
+/// (the transposed image of `data.hcat(ones)`).
+fn append_ones_row(t: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(t.rows + 1, t.cols);
+    out.data[..t.data.len()].copy_from_slice(&t.data);
+    out.row_mut(t.rows).fill(1.0);
+    out
+}
+
+/// Verify every quantized layer's weights — and, when the Section-4 bias
+/// augmentation ran, its quantized bias row — live in the layer's reported
+/// alphabet: the pipeline's core postcondition (used by tests and
+/// `gpfq eval`).
 pub fn verify_alphabet(outcome: &QuantOutcome) -> bool {
     for rep in &outcome.layer_reports {
         let a = Alphabet::new(rep.alpha, rep.levels);
-        let w = outcome.network.layers[rep.layer_index].weights().unwrap();
-        if !w.data.iter().all(|&v| a.contains(v, 1e-4 * a.alpha.max(1.0))) {
+        let tol = 1e-4 * a.alpha.max(1.0);
+        let layer = &outcome.network.layers[rep.layer_index];
+        let w = layer.weights().unwrap();
+        if !w.data.iter().all(|&v| a.contains(v, tol)) {
             return false;
+        }
+        if rep.bias_quantized {
+            if let Layer::Dense { b, .. } = layer {
+                if !b.iter().all(|&v| a.contains(v, tol)) {
+                    return false;
+                }
+            }
         }
     }
     true
@@ -267,6 +447,34 @@ mod tests {
         for rep in &out.layer_reports {
             assert!(rep.fro_err < 1.0, "layer {} fro err {}", rep.label, rep.fro_err);
             assert!(rep.pjrt_blocks == 0, "native test should not hit pjrt");
+            assert!(rep.peak_resident_bytes > 0, "layer {} peak bytes", rep.label);
+            assert!(rep.im2col_seconds >= 0.0 && rep.gemm_seconds >= 0.0);
+            assert!(rep.quantize_seconds >= 0.0);
+        }
+    }
+
+    #[test]
+    fn staged_session_matches_monolithic_run() {
+        let (net, tr, _) = trained_mlp();
+        let x = tr.x.rows_slice(0, 100);
+        let cfg = PipelineConfig { c_alpha: 3.0, ..Default::default() };
+        let full = quantize_network(&net, &x, &cfg);
+        let mut session = QuantizeSession::new(&net, &x, cfg);
+        let mut steps = 0;
+        while let Some(rep) = session.step().unwrap() {
+            steps += 1;
+            assert_eq!(rep.layer_index, full.layer_reports[steps - 1].layer_index);
+            // after k steps the prefix is quantized, the suffix still analog
+            let prefix_w = session.network().layers[rep.layer_index].weights().unwrap();
+            let full_w = full.network.layers[rep.layer_index].weights().unwrap();
+            assert_eq!(prefix_w.data, full_w.data, "step {steps}");
+        }
+        assert_eq!(steps, full.layer_reports.len());
+        let out = session.into_outcome();
+        for (l_out, l_full) in out.network.layers.iter().zip(&full.network.layers) {
+            if let (Some(a), Some(b)) = (l_out.weights(), l_full.weights()) {
+                assert_eq!(a.data, b.data);
+            }
         }
     }
 
@@ -365,8 +573,11 @@ mod tests {
         let x = tr.x.rows_slice(0, 150);
         let cfg = PipelineConfig { quantize_bias: true, c_alpha: 3.0, ..Default::default() };
         let out = quantize_network(&net, &x, &cfg);
-        // every dense bias must now live in that layer's alphabet
+        // every dense bias must now live in that layer's alphabet, and
+        // verify_alphabet must check exactly that
+        assert!(verify_alphabet(&out));
         for rep in &out.layer_reports {
+            assert!(rep.bias_quantized);
             let a = Alphabet::new(rep.alpha, rep.levels);
             if let Layer::Dense { b, .. } = &out.network.layers[rep.layer_index] {
                 for &v in b {
@@ -379,6 +590,22 @@ mod tests {
         // and the network should still work
         let q_acc = accuracy(&out.network, &te);
         assert!(q_acc > 0.5, "bias-quantized acc {q_acc}");
+    }
+
+    #[test]
+    fn verify_alphabet_catches_out_of_alphabet_bias() {
+        let (net, tr, _) = trained_mlp();
+        let x = tr.x.rows_slice(0, 80);
+        let cfg = PipelineConfig { quantize_bias: true, c_alpha: 3.0, ..Default::default() };
+        let mut out = quantize_network(&net, &x, &cfg);
+        assert!(verify_alphabet(&out));
+        // corrupt one quantized bias: the satellite fix must catch it (the
+        // pre-fix verify_alphabet only looked at the weight matrix)
+        let idx = out.layer_reports[0].layer_index;
+        if let Layer::Dense { b, .. } = &mut out.network.layers[idx] {
+            b[0] = 12345.0;
+        }
+        assert!(!verify_alphabet(&out), "out-of-alphabet bias must fail verification");
     }
 
     #[test]

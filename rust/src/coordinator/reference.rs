@@ -1,0 +1,127 @@
+//! Frozen pre-refactor pipeline — the activation engine's parity oracle.
+//!
+//! This is the naive double-forward pipeline exactly as it stood before the
+//! zero-copy two-stream activation engine replaced it: the im2col patch
+//! matrix is materialized once for `quantization_data` and again inside
+//! `apply_layer`'s forward, per stream, and `LayerData::new` re-transposes
+//! both streams.  **Do not optimize or "fix" this module** — its entire
+//! value is that it computes the answer the slow way.  The golden parity
+//! tests (`tests/test_activation_engine.rs`) assert the engine's quantized
+//! networks are bit-identical to this oracle, and `bench_runtime` measures
+//! the engine's wall-clock and peak-resident-bytes advantage against it.
+
+use std::time::Instant;
+
+use crate::error::Result;
+
+use crate::coordinator::executor::{Executor, Path};
+use crate::coordinator::pipeline::{LayerReport, Method, PipelineConfig, QuantOutcome};
+use crate::nn::matrix::Matrix;
+use crate::nn::network::{Layer, Network};
+use crate::quant::alphabet::Alphabet;
+use crate::quant::error::layer_fro_error;
+use crate::util::stats::median;
+
+/// The pre-refactor `try_quantize_network`, preserved verbatim (modulo the
+/// `LayerReport` fields added since, which it fills with their inert
+/// defaults).
+pub fn reference_quantize_network(
+    net: &Network,
+    x_quant: &Matrix,
+    cfg: &PipelineConfig,
+) -> Result<QuantOutcome> {
+    assert_eq!(x_quant.cols, net.input.len(), "quantization data width mismatch");
+    let executor = cfg
+        .executor
+        .clone()
+        .unwrap_or_else(|| Executor::native(cfg.workers));
+    let t0 = Instant::now();
+    let mut qnet = net.clone();
+    let mut reports = Vec::new();
+    let mut checkpoints = Vec::new();
+
+    // dual activation streams, recomputed and recopied the historical way
+    let mut y = x_quant.clone(); // analog Φ^(ℓ-1)(X)
+    let mut yq = x_quant.clone(); // quantized Φ̃^(ℓ-1)(X)
+    let mut quantized_so_far = 0usize;
+
+    for i in 0..net.layers.len() {
+        let selected = net.layers[i].is_quantizable()
+            && (!cfg.fc_only || matches!(net.layers[i], Layer::Dense { .. }))
+            && cfg.max_layers.map(|k| quantized_so_far < k).unwrap_or(true);
+        if selected {
+            let lt = Instant::now();
+            // bias augmentation (Section 4): treat b as weight row N+1 and
+            // append a constant-1 data column, for dense layers only.
+            let augment_bias = cfg.quantize_bias && matches!(net.layers[i], Layer::Dense { .. });
+            let mut w = net.layers[i].weights().unwrap().clone();
+            let mut data_y = net.quantization_data(i, &y);
+            let mut data_yq = qnet.quantization_data(i, &yq);
+            if augment_bias {
+                if let Layer::Dense { b, .. } = &net.layers[i] {
+                    let mut wb = Matrix::zeros(w.rows + 1, w.cols);
+                    for r in 0..w.rows {
+                        wb.row_mut(r).copy_from_slice(w.row(r));
+                    }
+                    wb.row_mut(w.rows).copy_from_slice(b);
+                    w = wb;
+                }
+                let ones = Matrix::from_fn(data_y.rows, 1, |_, _| 1.0);
+                data_y = data_y.hcat(&ones);
+                data_yq = data_yq.hcat(&ones);
+            }
+            let a = Alphabet::from_median(&w.data, cfg.c_alpha, cfg.levels);
+            let (q, paths) = match cfg.method {
+                Method::Gpfq => executor.gpfq_layer(&data_y, &data_yq, &w, a)?,
+                Method::Msq => {
+                    let q = executor.msq_layer(&w, a);
+                    (q, vec![])
+                }
+            };
+            let rel = crate::quant::error::layer_rel_errors(&data_y, &data_yq, &w, &q);
+            let fro = layer_fro_error(&data_y, &data_yq, &w, &q);
+            if augment_bias {
+                let n = q.rows - 1;
+                qnet.set_weights(i, q.rows_slice(0, n));
+                if let Layer::Dense { b, .. } = &mut qnet.layers[i] {
+                    b.copy_from_slice(q.row(n));
+                }
+            } else {
+                qnet.set_weights(i, q);
+            }
+            reports.push(LayerReport {
+                layer_index: i,
+                label: net.layers[i].label(),
+                alpha: a.alpha,
+                levels: a.m,
+                fro_err: fro,
+                median_rel_err: median(&rel),
+                seconds: lt.elapsed().as_secs_f64(),
+                native_blocks: paths.iter().filter(|&&p| p == Path::Native).count(),
+                pjrt_blocks: paths.iter().filter(|&&p| p == Path::Pjrt).count(),
+                neurons: w.cols,
+                n_features: w.rows,
+                m_samples: data_y.rows,
+                bias_quantized: augment_bias,
+                peak_resident_bytes: 0,
+                im2col_seconds: 0.0,
+                gemm_seconds: 0.0,
+                quantize_seconds: 0.0,
+            });
+            quantized_so_far += 1;
+            if cfg.capture_checkpoints {
+                checkpoints.push(qnet.clone());
+            }
+        }
+        // advance both streams through layer i
+        y = net.apply_layer(i, &y);
+        yq = qnet.apply_layer(i, &yq);
+    }
+
+    Ok(QuantOutcome {
+        network: qnet,
+        layer_reports: reports,
+        checkpoints,
+        total_seconds: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,10 +1,16 @@
 //! Cross-validation sweep orchestrator (paper Section 6): grid over
 //! alphabet size M (bit budget) × alphabet scalar C_alpha, for both GPFQ
 //! and the MSQ baseline, scoring test accuracy — the machinery behind
-//! Figure 1a, Table 1 and Table 2.
+//! Figure 1a, Table 1 and Table 2 — plus the layer-count sweep behind
+//! Figures 1b/2a, which steps one staged [`QuantizeSession`] and scores
+//! each quantized prefix instead of re-running the full pipeline per layer
+//! count.
 
-use crate::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
+use crate::coordinator::pipeline::{
+    quantize_network, Method, PipelineConfig, QuantizeSession,
+};
 use crate::data::dataset::Dataset;
+use crate::error::Result;
 use crate::eval::metrics::{accuracy, topk_accuracy};
 use crate::nn::network::Network;
 
@@ -117,6 +123,51 @@ pub fn sweep(
     SweepResult { analog_top1, analog_top5, points }
 }
 
+/// One point of a layer-count sweep: accuracy with the first
+/// `layers_quantized` quantizable layers quantized and the rest analog.
+#[derive(Debug, Clone)]
+pub struct LayerCountPoint {
+    pub layers_quantized: usize,
+    pub top1: f64,
+    pub top5: f64,
+    /// cumulative pipeline seconds up to this prefix
+    pub seconds: f64,
+}
+
+/// Accuracy as layers are quantized successively (Figures 1b/2a), from a
+/// **single** staged pipeline run: each [`QuantizeSession::step`] quantizes
+/// one more layer on top of the shared quantized-prefix streams, and the
+/// prefix network is scored after every step.  Equivalent — bit for bit —
+/// to running the full pipeline once per `max_layers = k`, at 1/k the cost.
+/// `cfg.max_layers` (when set) caps the sweep.
+pub fn layer_count_sweep(
+    net: &Network,
+    x_quant: &crate::nn::matrix::Matrix,
+    test: &Dataset,
+    cfg: &PipelineConfig,
+    topk: bool,
+) -> Result<Vec<LayerCountPoint>> {
+    let mut session = QuantizeSession::new(net, x_quant, cfg.clone());
+    let mut points = Vec::new();
+    // time only the step() calls: the per-point accuracy scoring below must
+    // not pollute the reported quantization cost
+    let mut quant_seconds = 0.0f64;
+    loop {
+        let t = std::time::Instant::now();
+        if session.step()?.is_none() {
+            break;
+        }
+        quant_seconds += t.elapsed().as_secs_f64();
+        points.push(LayerCountPoint {
+            layers_quantized: session.reports().len(),
+            top1: accuracy(session.network(), test),
+            top5: if topk { topk_accuracy(session.network(), test, 5) } else { 0.0 },
+            seconds: quant_seconds,
+        });
+    }
+    Ok(points)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +208,40 @@ mod tests {
         let best_m = res.best(Method::Msq).unwrap();
         assert!(best_g.top1 >= best_m.top1 - 0.05, "gpfq {} msq {}", best_g.top1, best_m.top1);
         assert!(best_g.top1 > 0.5, "best gpfq {}", best_g.top1);
+    }
+
+    #[test]
+    fn layer_count_sweep_matches_independent_max_layers_runs() {
+        let (net, tr, te) = setup();
+        let x = tr.x.rows_slice(0, 80);
+        let cfg = PipelineConfig { c_alpha: 2.5, ..Default::default() };
+        let points = layer_count_sweep(&net, &x, &te, &cfg, false).unwrap();
+        assert_eq!(points.len(), 2); // mnist_mlp(2, 64, &[32], 3): 2 dense layers
+        for p in &points {
+            let full = quantize_network(
+                &net,
+                &x,
+                &PipelineConfig { max_layers: Some(p.layers_quantized), ..cfg.clone() },
+            );
+            let independent = accuracy(&full.network, &te);
+            assert!(
+                (p.top1 - independent).abs() < 1e-12,
+                "prefix reuse diverged at k={}: {} vs {}",
+                p.layers_quantized,
+                p.top1,
+                independent
+            );
+        }
+        // and max_layers caps the sweep
+        let capped = layer_count_sweep(
+            &net,
+            &x,
+            &te,
+            &PipelineConfig { max_layers: Some(1), ..cfg },
+            false,
+        )
+        .unwrap();
+        assert_eq!(capped.len(), 1);
     }
 
     #[test]

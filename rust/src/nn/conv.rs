@@ -13,7 +13,20 @@
 //! patch flattens (dy, dx, channel) — identical to `python/compile/model.py
 //! ::im2col`, which pytest cross-checks against `lax.conv`.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::nn::matrix::Matrix;
+
+/// Global count of patch-matrix constructions (both layouts, process-wide).
+/// The activation engine's contract is "im2col at most once per conv layer
+/// per stream"; tests pin that by reading this counter around a pipeline
+/// run, and benches report it as coverage evidence.
+static IM2COL_INVOCATIONS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total patch-matrix constructions ([`im2col`] + [`im2col_walk`]) so far.
+pub fn im2col_invocations() -> usize {
+    IM2COL_INVOCATIONS.load(Ordering::Relaxed)
+}
 
 /// Spatial shape of conv activations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +57,7 @@ pub fn conv_out(h: usize, k: usize, stride: usize) -> usize {
 
 /// Extract conv patches: input (batch, h*w*c) → (batch*oh*ow, kh*kw*c).
 pub fn im2col(x: &Matrix, shape: ImgShape, kh: usize, kw: usize, stride: usize) -> Matrix {
+    IM2COL_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
     assert_eq!(x.cols, shape.len(), "activation width != shape");
     let oh = conv_out(shape.h, kh, stride);
     let ow = conv_out(shape.w, kw, stride);
@@ -65,6 +79,46 @@ pub fn im2col(x: &Matrix, shape: ImgShape, kh: usize, kw: usize, stride: usize) 
                         let src = shape.idx(y, x0, 0);
                         dst[k..k + shape.c].copy_from_slice(&row[src..src + shape.c]);
                         k += shape.c;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Extract conv patches directly in **walk order** (transposed):
+/// input (batch, h*w*c) → (kh*kw*c, batch*oh*ow).
+///
+/// Row t is walk direction t (patch feature (dy, dx, channel)); column s is
+/// patch s in the same (sample, out_y, out_x) order as [`im2col`]'s rows —
+/// i.e. `im2col_walk(x, ..) == im2col(x, ..).transpose()` bit for bit, but
+/// built in a single pass with contiguous row writes.  This is the layout
+/// [`crate::quant::gpfq::LayerData`] wants, so the activation engine builds
+/// the patch matrix exactly once per stream and shares it between the
+/// quantizer and the forward GEMM ([`Matrix::matmul_tn`]).
+pub fn im2col_walk(x: &Matrix, shape: ImgShape, kh: usize, kw: usize, stride: usize) -> Matrix {
+    IM2COL_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
+    assert_eq!(x.cols, shape.len(), "activation width != shape");
+    let oh = conv_out(shape.h, kh, stride);
+    let ow = conv_out(shape.w, kw, stride);
+    let patch_len = kh * kw * shape.c;
+    let m = x.rows * oh * ow;
+    let mut out = Matrix::zeros(patch_len, m);
+    for dy in 0..kh {
+        for dx in 0..kw {
+            for ch in 0..shape.c {
+                let t = (dy * kw + dx) * shape.c + ch;
+                let dst = out.row_mut(t);
+                let mut s = 0usize;
+                for b in 0..x.rows {
+                    let row = x.row(b);
+                    for oy in 0..oh {
+                        let y = oy * stride + dy;
+                        for ox in 0..ow {
+                            dst[s] = row[shape.idx(y, ox * stride + dx, ch)];
+                            s += 1;
+                        }
                     }
                 }
             }
@@ -191,6 +245,35 @@ mod tests {
         let got = fold_output(im2col(&x, shape, kh, kw, stride).matmul(&kmat), 2);
         let want = conv_direct(&x, shape, &kflat, kh, kw, cout, stride);
         assert!(got.sub(&want).fro_norm() < 1e-4);
+    }
+
+    #[test]
+    fn im2col_walk_is_exact_transpose() {
+        let mut rng = Pcg::seed(11);
+        for (shape, kh, kw, stride) in [
+            (ImgShape { h: 6, w: 5, c: 2 }, 3, 2, 1),
+            (ImgShape { h: 8, w: 8, c: 1 }, 2, 2, 2),
+            (ImgShape { h: 4, w: 4, c: 3 }, 3, 3, 1),
+        ] {
+            let x = Matrix::from_vec(3, shape.len(), rng.normal_vec(3 * shape.len()));
+            let plain = im2col(&x, shape, kh, kw, stride);
+            let walk = im2col_walk(&x, shape, kh, kw, stride);
+            assert_eq!((walk.rows, walk.cols), (plain.cols, plain.rows));
+            assert_eq!(walk.data, plain.transpose().data, "{shape:?} k{kh}x{kw} s{stride}");
+        }
+    }
+
+    #[test]
+    fn im2col_invocation_counter_advances() {
+        let shape = ImgShape { h: 4, w: 4, c: 1 };
+        let x = Matrix::zeros(1, shape.len());
+        let before = im2col_invocations();
+        let _ = im2col(&x, shape, 2, 2, 1);
+        let _ = im2col_walk(&x, shape, 2, 2, 1);
+        // other tests run concurrently in this process, so only a lower
+        // bound is exact here; the precise per-pipeline count is pinned in
+        // tests/test_activation_engine.rs under a serial lock.
+        assert!(im2col_invocations() >= before + 2);
     }
 
     #[test]

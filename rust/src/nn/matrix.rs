@@ -108,6 +108,34 @@ impl Matrix {
         out
     }
 
+    /// `self^T · other` without materializing the transpose: `self` is
+    /// (k × m) in walk order, `other` is (k × n), result is (m × n).
+    ///
+    /// The per-output-element operation sequence (ascending k, skip on a
+    /// zero left coefficient) is identical to [`Matrix::matmul`], so
+    /// `a.transpose().matmul(b)` and `a.matmul_tn(b)` are **bit-identical**
+    /// — the activation engine relies on this to advance streams from the
+    /// walk-order views the quantizer uses, without a second transpose.
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch {self:?}^T x {other:?}");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for kk in 0..k {
+            let a_row = self.row(kk);
+            let b_row = &other.data[kk * n..(kk + 1) * n];
+            for (i, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
     pub fn add_assign(&mut self, other: &Matrix) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -272,6 +300,29 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn matmul_tn_bit_identical_to_transpose_matmul() {
+        // the activation-engine invariant: walk-order GEMM must equal the
+        // row-major path to the last bit, including zero entries (the
+        // zero-skip must fire identically on both paths).
+        let mut a = Matrix::from_fn(7, 5, |r, c| ((r * 31 + c * 17) % 13) as f32 - 6.0);
+        let b = Matrix::from_fn(7, 4, |r, c| ((r * 7 + c * 3) % 11) as f32 * 0.25 - 1.0);
+        a.data[3] = 0.0;
+        a.data[12] = 0.0;
+        let via_transpose = a.transpose().matmul(&b);
+        let direct = a.matmul_tn(&b);
+        assert_eq!((direct.rows, direct.cols), (5, 4));
+        assert_eq!(via_transpose.data, direct.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_tn shape mismatch")]
+    fn matmul_tn_shape_check() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(3, 2);
+        let _ = a.matmul_tn(&b);
     }
 
     #[test]

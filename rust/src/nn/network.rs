@@ -10,7 +10,7 @@
 use crate::data::rng::Pcg;
 use crate::nn::activations::Activation;
 use crate::nn::batchnorm::BatchNorm;
-use crate::nn::conv::{conv_out, fold_output, im2col, ImgShape};
+use crate::nn::conv::{conv_out, fold_output, im2col, im2col_walk, ImgShape};
 use crate::nn::matrix::Matrix;
 use crate::nn::pool::maxpool_forward;
 
@@ -183,6 +183,45 @@ impl Network {
             Layer::Dense { .. } => layer_input.clone(),
             Layer::Conv { kh, kw, stride, in_shape, .. } => {
                 im2col(layer_input, *in_shape, *kh, *kw, *stride)
+            }
+            _ => panic!("layer {i} ({}) is not quantizable", self.layers[i].label()),
+        }
+    }
+
+    /// The GPFQ data matrix for layer `i` directly in **walk order**
+    /// (features × m): dense layers transpose the activations, conv layers
+    /// build the im2col patch matrix transposed in one pass.  Bit-identical
+    /// to `quantization_data(i, ..).transpose()`, without materializing the
+    /// row-major intermediate — the activation engine builds this view once
+    /// per stream and shares it between the quantizer and the forward pass.
+    pub fn quantization_walk(&self, i: usize, layer_input: &Matrix) -> Matrix {
+        match &self.layers[i] {
+            Layer::Dense { .. } => layer_input.transpose(),
+            Layer::Conv { kh, kw, stride, in_shape, .. } => {
+                im2col_walk(layer_input, *in_shape, *kh, *kw, *stride)
+            }
+            _ => panic!("layer {i} ({}) is not quantizable", self.layers[i].label()),
+        }
+    }
+
+    /// Apply quantizable layer `i` from its walk-order view (the matrix
+    /// [`Network::quantization_walk`] returns), replacing the forward pass's
+    /// second im2col with a shared-patch GEMM.  `batch` is the sample count
+    /// of the underlying activations.  Bit-identical to `apply_layer` on the
+    /// untransposed activations (see [`Matrix::matmul_tn`]).
+    pub fn apply_layer_from_walk(&self, i: usize, view: &Matrix, batch: usize) -> Matrix {
+        match &self.layers[i] {
+            Layer::Dense { w, b, act } => {
+                let mut z = view.matmul_tn(w);
+                z.add_row_vec(b);
+                act.apply(&mut z);
+                z
+            }
+            Layer::Conv { k, b, act, .. } => {
+                let mut z = view.matmul_tn(k);
+                z.add_row_vec(b);
+                act.apply(&mut z);
+                fold_output(z, batch)
             }
             _ => panic!("layer {i} ({}) is not quantizable", self.layers[i].label()),
         }
@@ -423,6 +462,47 @@ mod tests {
         let x = Matrix::zeros(2, img.len());
         let d = net.quantization_data(0, &x);
         assert_eq!((d.rows, d.cols), (2 * 16, 9));
+    }
+
+    #[test]
+    fn quantization_walk_is_transposed_quantization_data() {
+        let img = ImgShape { h: 6, w: 6, c: 2 };
+        let mut b = NetworkBuilder::new(Shape::Img(img), 1);
+        b.conv(3, 3, 4, 1, Activation::Relu).flatten().dense(5, Activation::None);
+        let net = b.build();
+        let x = Matrix::from_fn(3, img.len(), |r, c| ((r * 7 + c) % 9) as f32 * 0.5 - 2.0);
+        let walk = net.quantization_walk(0, &x);
+        assert_eq!(walk.data, net.quantization_data(0, &x).transpose().data);
+        let h1 = net.apply_layer(0, &x);
+        let walk1 = net.quantization_walk(2, &h1);
+        assert_eq!(walk1.data, net.quantization_data(2, &h1).transpose().data);
+    }
+
+    #[test]
+    fn apply_layer_from_walk_bit_identical_to_apply_layer() {
+        let img = ImgShape { h: 6, w: 6, c: 1 };
+        let mut b = NetworkBuilder::new(Shape::Img(img), 2);
+        b.conv(3, 3, 3, 1, Activation::Relu).flatten().dense(4, Activation::Relu);
+        let net = b.build();
+        let x = Matrix::from_fn(2, img.len(), |r, c| ((r * 13 + c * 3) % 11) as f32 * 0.3 - 1.5);
+        // conv layer: shared patch view drives the same GEMM
+        let view0 = net.quantization_walk(0, &x);
+        assert_eq!(net.apply_layer_from_walk(0, &view0, x.rows).data, net.apply_layer(0, &x).data);
+        // dense layer
+        let h = net.apply_layer(0, &x);
+        let view2 = net.quantization_walk(2, &h);
+        assert_eq!(net.apply_layer_from_walk(2, &view2, h.rows).data, net.apply_layer(2, &h).data);
+    }
+
+    #[test]
+    #[should_panic(expected = "is not quantizable")]
+    fn quantization_walk_rejects_pool() {
+        let img = ImgShape { h: 4, w: 4, c: 1 };
+        let mut b = NetworkBuilder::new(Shape::Img(img), 3);
+        b.maxpool(2);
+        let net = b.build();
+        let x = Matrix::zeros(1, img.len());
+        net.quantization_walk(0, &x);
     }
 
     #[test]

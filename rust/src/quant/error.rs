@@ -8,9 +8,21 @@ pub fn layer_rel_errors(y: &Matrix, yq: &Matrix, w: &Matrix, q: &Matrix) -> Vec<
     assert_eq!(w.rows, y.cols);
     assert_eq!(q.rows, yq.cols);
     assert_eq!(w.cols, q.cols);
-    let yw = y.matmul(w);
-    let yqq = yq.matmul(q);
-    (0..w.cols)
+    rel_errors_from_products(&y.matmul(w), &yq.matmul(q))
+}
+
+/// [`layer_rel_errors`] from **walk-order** (N × m) activation views — the
+/// layout the activation engine and [`crate::quant::gpfq::LayerData`] hold.
+/// Bit-identical to the row-major variant (`matmul_tn` matches `matmul`).
+pub fn layer_rel_errors_walk(yt: &Matrix, yqt: &Matrix, w: &Matrix, q: &Matrix) -> Vec<f64> {
+    assert_eq!(w.rows, yt.rows);
+    assert_eq!(q.rows, yqt.rows);
+    assert_eq!(w.cols, q.cols);
+    rel_errors_from_products(&yt.matmul_tn(w), &yqt.matmul_tn(q))
+}
+
+fn rel_errors_from_products(yw: &Matrix, yqq: &Matrix) -> Vec<f64> {
+    (0..yw.cols)
         .map(|j| {
             let num: f64 = (0..yw.rows)
                 .map(|r| ((yw.at(r, j) - yqq.at(r, j)) as f64).powi(2))
@@ -29,9 +41,16 @@ pub fn layer_rel_errors(y: &Matrix, yq: &Matrix, w: &Matrix, q: &Matrix) -> Vec<
 /// Relative Frobenius error of the whole layer output:
 /// ‖YW − ỸQ‖_F / ‖YW‖_F (the quantity ‖Φ(X) − Φ̃(X)‖_F the paper controls).
 pub fn layer_fro_error(y: &Matrix, yq: &Matrix, w: &Matrix, q: &Matrix) -> f64 {
-    let yw = y.matmul(w);
-    let yqq = yq.matmul(q);
-    let num = yw.sub(&yqq).fro_norm();
+    fro_error_from_products(&y.matmul(w), &yq.matmul(q))
+}
+
+/// [`layer_fro_error`] from walk-order (N × m) views; bit-identical.
+pub fn layer_fro_error_walk(yt: &Matrix, yqt: &Matrix, w: &Matrix, q: &Matrix) -> f64 {
+    fro_error_from_products(&yt.matmul_tn(w), &yqt.matmul_tn(q))
+}
+
+fn fro_error_from_products(yw: &Matrix, yqq: &Matrix) -> f64 {
+    let num = yw.sub(yqq).fro_norm();
     let den = yw.fro_norm();
     if den > 0.0 {
         num / den
@@ -76,6 +95,26 @@ mod tests {
         let e_small = layer_fro_error(&y, &y, &w, &q_small);
         let e_big = layer_fro_error(&y, &y, &w, &q_big);
         assert!(e_big > 5.0 * e_small, "{e_big} vs {e_small}");
+    }
+
+    #[test]
+    fn walk_variants_bit_identical_to_row_major() {
+        let mut rng = Pcg::seed(3);
+        let (m, n, neurons) = (7, 11, 4);
+        let y = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+        let yq = Matrix::from_vec(m, n, rng.normal_vec(m * n));
+        let w = Matrix::from_vec(n, neurons, rng.normal_vec(n * neurons));
+        let mut q = w.clone();
+        for v in q.data.iter_mut() {
+            *v = (*v * 2.0).round() * 0.5;
+        }
+        let yt = y.transpose();
+        let yqt = yq.transpose();
+        assert_eq!(
+            layer_rel_errors(&y, &yq, &w, &q),
+            layer_rel_errors_walk(&yt, &yqt, &w, &q)
+        );
+        assert_eq!(layer_fro_error(&y, &yq, &w, &q), layer_fro_error_walk(&yt, &yqt, &w, &q));
     }
 
     #[test]

@@ -20,6 +20,8 @@
 //! and the per-step column norms ‖Ỹ_t‖² and cross-correlations ⟨Ỹ_t, Y_t⟩
 //! are computed once per layer and shared across all neurons.
 
+use std::sync::Arc;
+
 use crate::nn::matrix::{axpy, dot, norm_sq, Matrix};
 use crate::quant::alphabet::Alphabet;
 
@@ -32,12 +34,16 @@ pub const DENOM_EPS: f32 = 1e-12;
 ///
 /// `yt` / `yqt` are the activations stored **transposed** (N×m, rows are
 /// the walk directions), so the per-step dot/axpy run over contiguous
-/// memory.
+/// memory.  They are `Arc`-shared: the activation engine hands the same
+/// walk-order views to this struct and to the forward pass, so building a
+/// `LayerData` from views never copies or re-transposes activation data
+/// (`from_transposed`), and the identical-streams case shares one buffer
+/// instead of cloning it.
 pub struct LayerData {
     /// analog activations, transposed: row t = Y_t ∈ R^m
-    pub yt: Matrix,
+    pub yt: Arc<Matrix>,
     /// quantized-net activations, transposed: row t = Ỹ_t ∈ R^m
-    pub yqt: Matrix,
+    pub yqt: Arc<Matrix>,
     /// ‖Ỹ_t‖² per step
     pub denom: Vec<f32>,
     /// ⟨Ỹ_t, Y_t⟩ per step
@@ -48,12 +54,24 @@ pub struct LayerData {
 }
 
 impl LayerData {
-    /// Build from (m × N) activation matrices.
+    /// Build from (m × N) activation matrices (transposes both; prefer
+    /// [`LayerData::from_transposed`] when walk-order data already exists).
     pub fn new(y: &Matrix, yq: &Matrix) -> Self {
         assert_eq!((y.rows, y.cols), (yq.rows, yq.cols), "activation shape mismatch");
         let same = y.data == yq.data;
-        let yt = y.transpose();
-        let yqt = if same { yt.clone() } else { yq.transpose() };
+        let yt = Arc::new(y.transpose());
+        let yqt = if same { yt.clone() } else { Arc::new(yq.transpose()) };
+        Self::from_transposed(yt, yqt)
+    }
+
+    /// Build from activations **already in walk order** (N × m) — the
+    /// zero-copy path: no transpose, no clone.  `same` is detected by
+    /// pointer identity first (engine-shared streams) and data equality
+    /// second (matching `new`'s semantics when separately-computed streams
+    /// happen to coincide), so results are bit-identical either way.
+    pub fn from_transposed(yt: Arc<Matrix>, yqt: Arc<Matrix>) -> Self {
+        assert_eq!((yt.rows, yt.cols), (yqt.rows, yqt.cols), "activation shape mismatch");
+        let same = Arc::ptr_eq(&yt, &yqt) || yt.data == yqt.data;
         let n = yt.rows;
         let mut denom = Vec::with_capacity(n);
         let mut cross = Vec::with_capacity(n);
@@ -432,6 +450,42 @@ mod tests {
             let want = gpfq_neuron_bruteforce(&y, &yq, &w, a);
             assert_eq!(got, want, "trial {trial}");
         }
+    }
+
+    #[test]
+    fn from_transposed_matches_new_bit_for_bit() {
+        let mut rng = Pcg::seed(30);
+        let (m, n) = (9, 21);
+        let y = rand_matrix(&mut rng, m, n);
+        let mut yq = y.clone();
+        for v in yq.data.iter_mut() {
+            *v += 0.04 * rng.normal() as f32;
+        }
+        let a = Alphabet::ternary(0.9);
+        let w = rand_weights(&mut rng, n, 5);
+        let base = LayerData::new(&y, &yq);
+        let walk =
+            LayerData::from_transposed(Arc::new(y.transpose()), Arc::new(yq.transpose()));
+        assert_eq!(base.denom, walk.denom);
+        assert_eq!(base.cross, walk.cross);
+        assert_eq!(base.same, walk.same);
+        assert_eq!(gpfq_layer(&base, &w, a).q.data, gpfq_layer(&walk, &w, a).q.data);
+        // identical streams: shared Arc and separately-equal data must both
+        // take the `same` fast path and agree with `new(y, y)`
+        let ref_same = LayerData::new(&y, &y);
+        let shared_arc = Arc::new(y.transpose());
+        let ptr_shared = LayerData::from_transposed(shared_arc.clone(), shared_arc);
+        let data_equal =
+            LayerData::from_transposed(Arc::new(y.transpose()), Arc::new(y.transpose()));
+        assert!(ptr_shared.same && data_equal.same);
+        assert_eq!(
+            gpfq_layer(&ref_same, &w, a).q.data,
+            gpfq_layer(&ptr_shared, &w, a).q.data
+        );
+        assert_eq!(
+            gpfq_layer(&ref_same, &w, a).q.data,
+            gpfq_layer(&data_equal, &w, a).q.data
+        );
     }
 
     #[test]

@@ -1,0 +1,227 @@
+//! Activation-engine guarantees, pinned hard:
+//!
+//! 1. **Golden parity** — the zero-copy two-stream engine produces
+//!    quantized networks *bit-identical* to the frozen pre-refactor
+//!    pipeline ([`gpfq::coordinator::reference`]) on an MLP and a conv net,
+//!    seeded, across worker counts, with and without bias augmentation
+//!    (the PR-1 determinism contract extended through the refactor).
+//! 2. **im2col economy** — conv layers build their patch matrix at most
+//!    once per layer per stream (and only once total while the streams
+//!    still share a prefix), measured through the process-wide invocation
+//!    counter under a serial lock.
+//!
+//! The lock exists because `cargo test` runs tests of one binary
+//! concurrently and the im2col counter is process-global: every test here
+//! that runs conv pipelines holds it, so counter deltas are exact.
+
+use std::sync::Mutex;
+
+use gpfq::coordinator::pipeline::{
+    quantize_network, verify_alphabet, Method, PipelineConfig,
+};
+use gpfq::coordinator::reference::reference_quantize_network;
+use gpfq::data::rng::Pcg;
+use gpfq::nn::conv::{im2col_invocations, ImgShape};
+use gpfq::nn::matrix::Matrix;
+use gpfq::nn::network::{cifar_cnn, mnist_mlp, vgg_like, Layer, Network};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn rand_input(seed: u64, rows: usize, cols: usize) -> Matrix {
+    let mut rng = Pcg::seed(seed);
+    Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols))
+}
+
+/// Assert two networks agree bit for bit in every weight and bias.
+fn assert_networks_identical(a: &Network, b: &Network, tag: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{tag}: layer count");
+    for (i, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        match (la.weights(), lb.weights()) {
+            (Some(wa), Some(wb)) => assert_eq!(wa.data, wb.data, "{tag}: layer {i} weights"),
+            (None, None) => {}
+            _ => panic!("{tag}: layer {i} kind mismatch"),
+        }
+        if let (Layer::Dense { b: ba, .. }, Layer::Dense { b: bb, .. }) = (la, lb) {
+            assert_eq!(ba, bb, "{tag}: layer {i} bias");
+        }
+    }
+}
+
+fn assert_parity(net: &Network, x: &Matrix, cfg: &PipelineConfig, tag: &str) {
+    let engine = quantize_network(net, x, cfg);
+    let oracle = reference_quantize_network(net, x, cfg).unwrap();
+    assert_networks_identical(&engine.network, &oracle.network, tag);
+    assert_eq!(engine.layer_reports.len(), oracle.layer_reports.len(), "{tag}: report count");
+    for (e, o) in engine.layer_reports.iter().zip(&oracle.layer_reports) {
+        assert_eq!(e.layer_index, o.layer_index, "{tag}");
+        assert_eq!(e.label, o.label, "{tag}");
+        assert_eq!(e.alpha, o.alpha, "{tag}: alpha");
+        assert_eq!(e.fro_err, o.fro_err, "{tag}: fro_err must be bit-identical");
+        assert_eq!(e.median_rel_err, o.median_rel_err, "{tag}: median_rel_err");
+        let dims = (e.neurons, e.n_features, e.m_samples);
+        assert_eq!(dims, (o.neurons, o.n_features, o.m_samples), "{tag}");
+    }
+    assert_eq!(engine.checkpoints.len(), oracle.checkpoints.len(), "{tag}: checkpoints");
+    for (k, (ce, co)) in engine.checkpoints.iter().zip(&oracle.checkpoints).enumerate() {
+        assert_networks_identical(ce, co, &format!("{tag}: checkpoint {k}"));
+    }
+}
+
+#[test]
+fn golden_parity_mlp_multi_worker() {
+    let net = mnist_mlp(41, 40, &[32, 16], 4);
+    let x = rand_input(7, 60, 40);
+    for workers in [1usize, 3, 8] {
+        assert_parity(
+            &net,
+            &x,
+            &PipelineConfig { workers, c_alpha: 2.5, ..Default::default() },
+            &format!("mlp workers={workers}"),
+        );
+    }
+    // 4-bit alphabet and MSQ take the same staged path
+    assert_parity(
+        &net,
+        &x,
+        &PipelineConfig { levels: 16, c_alpha: 4.0, ..Default::default() },
+        "mlp 4-bit",
+    );
+    assert_parity(
+        &net,
+        &x,
+        &PipelineConfig { method: Method::Msq, ..Default::default() },
+        "mlp msq",
+    );
+}
+
+#[test]
+fn golden_parity_mlp_bias_augmentation() {
+    let net = mnist_mlp(42, 24, &[16], 3);
+    let x = rand_input(8, 40, 24);
+    for workers in [1usize, 4] {
+        assert_parity(
+            &net,
+            &x,
+            &PipelineConfig { quantize_bias: true, c_alpha: 3.0, workers, ..Default::default() },
+            &format!("mlp bias workers={workers}"),
+        );
+    }
+}
+
+#[test]
+fn golden_parity_conv_net_multi_worker() {
+    let _guard = SERIAL.lock().unwrap();
+    let img = ImgShape { h: 10, w: 10, c: 1 };
+    let net = cifar_cnn(43, img, &[3], 12, 3); // conv, bn, conv, mp, bn, dense, bn, dense
+    let x = rand_input(9, 8, img.len());
+    for workers in [1usize, 4] {
+        assert_parity(
+            &net,
+            &x,
+            &PipelineConfig { workers, c_alpha: 2.0, ..Default::default() },
+            &format!("cnn workers={workers}"),
+        );
+    }
+    // checkpoints ride through the staged engine identically
+    assert_parity(
+        &net,
+        &x,
+        &PipelineConfig { capture_checkpoints: true, ..Default::default() },
+        "cnn checkpoints",
+    );
+}
+
+#[test]
+fn golden_parity_vgg_fc_only_and_max_layers() {
+    let _guard = SERIAL.lock().unwrap();
+    let img = ImgShape { h: 10, w: 10, c: 1 };
+    let net = vgg_like(44, img, &[3], &[24, 12], 3);
+    let x = rand_input(10, 6, img.len());
+    assert_parity(
+        &net,
+        &x,
+        &PipelineConfig { fc_only: true, c_alpha: 3.0, ..Default::default() },
+        "vgg fc_only",
+    );
+    for k in [0usize, 1, 2] {
+        assert_parity(
+            &net,
+            &x,
+            &PipelineConfig { max_layers: Some(k), ..Default::default() },
+            &format!("vgg max_layers={k}"),
+        );
+    }
+}
+
+#[test]
+fn conv_im2col_at_most_once_per_layer_per_stream() {
+    let _guard = SERIAL.lock().unwrap();
+    let img = ImgShape { h: 10, w: 10, c: 1 };
+    let net = cifar_cnn(45, img, &[3], 12, 3); // layers: conv, bn, conv, mp, bn, dense, bn, dense
+    let x = rand_input(11, 6, img.len());
+
+    let before = im2col_invocations();
+    let out = quantize_network(&net, &x, &PipelineConfig::default());
+    let engine_calls = im2col_invocations() - before;
+    assert_eq!(out.layer_reports.len(), 4);
+
+    // conv #1 is quantized while the streams still share their prefix: ONE
+    // patch build serves the quantizer and both forward GEMMs.  conv #2 runs
+    // after divergence: one build per stream.  Dense layers never im2col.
+    assert_eq!(
+        engine_calls, 3,
+        "engine must build im2col once per conv layer per distinct stream (1 shared + 2 diverged)"
+    );
+
+    // ceiling check from the satellite spec: never more than once per layer
+    // per stream
+    let conv_layers = 2;
+    let streams = 2;
+    assert!(engine_calls <= conv_layers * streams);
+
+    // the oracle shows what the refactor removed: 2 quantization_data + 2
+    // forward im2cols per conv layer = 8
+    let before_ref = im2col_invocations();
+    let _ = reference_quantize_network(&net, &x, &PipelineConfig::default()).unwrap();
+    let oracle_calls = im2col_invocations() - before_ref;
+    assert_eq!(oracle_calls, 8, "oracle im2col count changed — was the reference edited?");
+}
+
+#[test]
+fn fc_only_conv_forward_im2cols_once_while_shared() {
+    let _guard = SERIAL.lock().unwrap();
+    let img = ImgShape { h: 8, w: 8, c: 1 };
+    let net = vgg_like(46, img, &[2], &[12], 3); // conv, mp, dense, bn, dense
+    let x = rand_input(12, 5, img.len());
+    let before = im2col_invocations();
+    let _ = quantize_network(&net, &x, &PipelineConfig { fc_only: true, ..Default::default() });
+    // the unquantized conv layer is crossed while the streams still share:
+    // exactly one forward im2col for both streams
+    assert_eq!(im2col_invocations() - before, 1);
+}
+
+#[test]
+fn engine_reports_carry_timing_splits_and_peak_bytes() {
+    let _guard = SERIAL.lock().unwrap();
+    let img = ImgShape { h: 8, w: 8, c: 1 };
+    let net = cifar_cnn(47, img, &[2], 8, 3);
+    let x = rand_input(13, 5, img.len());
+    let out = quantize_network(&net, &x, &PipelineConfig::default());
+    assert!(verify_alphabet(&out));
+    for rep in &out.layer_reports {
+        assert!(rep.peak_resident_bytes > 0, "{}: peak bytes missing", rep.label);
+        assert!(rep.im2col_seconds >= 0.0 && rep.gemm_seconds >= 0.0);
+        assert!(rep.quantize_seconds >= 0.0);
+        if rep.label.starts_with("conv") {
+            // a conv layer's peak must at least cover one patch matrix
+            let patch_bytes = rep.n_features * rep.m_samples * 4;
+            assert!(
+                rep.peak_resident_bytes >= patch_bytes,
+                "{}: peak {} < one patch matrix {}",
+                rep.label,
+                rep.peak_resident_bytes,
+                patch_bytes
+            );
+        }
+    }
+}

@@ -10,10 +10,9 @@
 //! intermediate-layer dips (error correction), MSQ does not.
 
 use gpfq::config::preset_mnist;
-use gpfq::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
-use gpfq::coordinator::sweep::{sweep, SweepConfig};
+use gpfq::coordinator::pipeline::{Method, PipelineConfig};
+use gpfq::coordinator::sweep::{layer_count_sweep, sweep, SweepConfig};
 use gpfq::data::synth::{generate, mnist_like_spec};
-use gpfq::eval::metrics::accuracy;
 use gpfq::eval::report::acc;
 use gpfq::train::train;
 use gpfq::util::bench::Table;
@@ -47,8 +46,16 @@ fn main() {
         &["C_alpha", "GPFQ top-1", "MSQ top-1"],
     );
     for &c in &spec.quant.c_alphas {
-        let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha == c).unwrap();
-        let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha == c).unwrap();
+        let g = res
+            .points
+            .iter()
+            .find(|p| p.method == Method::Gpfq && p.c_alpha_requested == c)
+            .unwrap();
+        let m = res
+            .points
+            .iter()
+            .find(|p| p.method == Method::Msq && p.c_alpha_requested == c)
+            .unwrap();
         fig1a.row(vec![format!("{c}"), acc(g.top1), acc(m.top1)]);
     }
     fig1a.emit("fig1a_mnist");
@@ -58,7 +65,9 @@ fn main() {
         res.spread(Method::Msq, 3)
     );
 
-    // Figure 1b at each method's best C_alpha
+    // Figure 1b at each method's best C_alpha, each curve from ONE staged
+    // session run (layer_count_sweep scores the quantized prefixes instead
+    // of re-running the pipeline with capture_checkpoints)
     let mut fig1b = Table::new(
         "Figure 1b — accuracy vs #layers quantized (best C_alpha per method)",
         &["layers quantized", "GPFQ top-1", "MSQ top-1"],
@@ -68,13 +77,12 @@ fn main() {
         let best = res.best(method).unwrap();
         let cfg = PipelineConfig {
             method,
-            c_alpha: best.c_alpha as f32,
-            capture_checkpoints: true,
+            c_alpha: best.c_alpha_f32(),
             workers: spec.quant.workers,
             ..Default::default()
         };
-        let out = quantize_network(&net, &x_quant, &cfg);
-        curves.push(out.checkpoints.iter().map(|n| accuracy(n, &test_set)).collect::<Vec<_>>());
+        let points = layer_count_sweep(&net, &x_quant, &test_set, &cfg, false).unwrap();
+        curves.push(points.iter().map(|p| p.top1).collect::<Vec<_>>());
     }
     for i in 0..curves[0].len() {
         fig1b.row(vec![(i + 1).to_string(), acc(curves[0][i]), acc(curves[1][i])]);

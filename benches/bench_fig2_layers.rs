@@ -3,25 +3,46 @@
 //! (histogram of GPFQ vs MSQ quantized weights at the second conv layer).
 //!
 //! Run with `cargo bench --bench bench_fig2_layers`.  Emits
-//! `results/fig2a_cifar.csv` and `results/fig2b_cifar.csv`.
+//! `results/fig2a_cifar.csv`, `results/fig2b_cifar.csv` and the
+//! machine-readable `BENCH_fig2_layers.json` CI artifact.  Set
+//! `BENCH_FAST=1` (CI) for a seconds-scale run on shrunken dataset sizes.
+//!
+//! Each method's curve comes from ONE staged pipeline run via
+//! `sweep::layer_count_sweep_outcome`: the session's quantized-prefix
+//! streams are scored after every step instead of re-running the whole
+//! pipeline per layer count (bit-identical to independent `max_layers = k`
+//! runs — pinned in `coordinator::sweep` tests — at 1/k the cost), and the
+//! same run's final network supplies the Figure 2b weight histograms.
 //!
 //! Expected shape (paper): both methods dip after early conv layers; GPFQ
 //! recovers in subsequent layers (error correction) while MSQ does not.
 //! The histograms show GPFQ using the outer characters more aggressively.
 
 use gpfq::config::preset_cifar;
-use gpfq::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
+use gpfq::coordinator::pipeline::{Method, PipelineConfig};
+use gpfq::coordinator::sweep::{layer_count_sweep_outcome, LayerCountPoint};
 use gpfq::data::synth::{cifar_like_spec, generate};
 use gpfq::eval::metrics::accuracy;
 use gpfq::eval::report::{acc, dual_histogram_table, weight_histogram};
 use gpfq::train::train;
 use gpfq::util::bench::Table;
+use gpfq::util::json::Json;
+use std::collections::BTreeMap;
 
 fn main() {
+    let fast = std::env::var("BENCH_FAST").is_ok();
     let mut spec = preset_cifar(0);
     // Fig 2 uses the best (4-bit) configs from Table 1; fix them here so the
     // bench runs standalone.
     spec.quant.levels = vec![16];
+    if fast {
+        // seconds-scale CI sizing: smaller sample sets and a short schedule;
+        // the model (and thus the curve's layer axis) is unchanged
+        spec.dataset.n_train = 400;
+        spec.dataset.n_test = 200;
+        spec.dataset.n_quant = 64;
+        spec.train.epochs = 2;
+    }
     let sspec = cifar_like_spec(spec.seed);
     let train_set = generate(&sspec, spec.dataset.n_train, 0, spec.dataset.augment);
     let test_set = generate(&sspec, spec.dataset.n_test, 1, false);
@@ -35,36 +56,40 @@ fn main() {
         &format!("Figure 2a — accuracy vs #layers quantized (4-bit, analog {})", acc(analog)),
         &["layers quantized", "GPFQ top-1", "MSQ top-1"],
     );
-    let mut curves = Vec::new();
+    let mut curves: Vec<Vec<LayerCountPoint>> = Vec::new();
     let mut second_layer_weights = Vec::new();
     for method in [Method::Gpfq, Method::Msq] {
         let cfg = PipelineConfig {
             method,
             levels: 16,
             c_alpha: 4.0,
-            capture_checkpoints: true,
             workers: spec.quant.workers,
             ..Default::default()
         };
-        let out = quantize_network(&net, &x_quant, &cfg);
-        curves.push(out.checkpoints.iter().map(|n| accuracy(n, &test_set)).collect::<Vec<_>>());
+        let (points, out) =
+            layer_count_sweep_outcome(&net, &x_quant, &test_set, &cfg, false).expect("sweep");
         let idx = out.layer_reports[1].layer_index; // 2nd quantized (conv) layer
         second_layer_weights.push(out.network.layers[idx].weights().unwrap().data.clone());
+        curves.push(points);
     }
     for i in 0..curves[0].len() {
-        fig2a.row(vec![(i + 1).to_string(), acc(curves[0][i]), acc(curves[1][i])]);
+        fig2a.row(vec![
+            (i + 1).to_string(),
+            acc(curves[0][i].top1),
+            acc(curves[1][i].top1),
+        ]);
     }
     fig2a.emit("fig2a_cifar");
 
     // error-correction shape check: last >= min for GPFQ
-    let g = &curves[0];
+    let g: Vec<f64> = curves[0].iter().map(|p| p.top1).collect();
     let g_min = g.iter().cloned().fold(f64::MAX, f64::min);
     println!(
         "GPFQ: worst intermediate {} -> final {} (recovery {:+.4}); MSQ final {}",
         acc(g_min),
         acc(*g.last().unwrap()),
         g.last().unwrap() - g_min,
-        acc(*curves[1].last().unwrap()),
+        acc(curves[1].last().unwrap().top1),
     );
 
     println!("{}", weight_histogram("Figure 2b (GPFQ) — 2nd conv layer", &second_layer_weights[0], 17));
@@ -78,4 +103,40 @@ fn main() {
         17,
     )
     .emit("fig2b_cifar");
+
+    // ---- machine-readable summary: BENCH_fig2_layers.json -------------------
+    let curve_json = |points: &[LayerCountPoint]| {
+        Json::Arr(
+            points
+                .iter()
+                .map(|p| {
+                    let mut o = BTreeMap::new();
+                    o.insert("layers_quantized".into(), Json::Num(p.layers_quantized as f64));
+                    o.insert("top1".into(), Json::Num(p.top1));
+                    o.insert("cumulative_quant_seconds".into(), Json::Num(p.seconds));
+                    Json::Obj(o)
+                })
+                .collect(),
+        )
+    };
+    let mut methods = BTreeMap::new();
+    methods.insert("gpfq".into(), curve_json(&curves[0]));
+    methods.insert("msq".into(), curve_json(&curves[1]));
+    let mut config = BTreeMap::new();
+    config.insert("levels".into(), Json::Num(16.0));
+    config.insert("c_alpha".into(), Json::Num(4.0));
+    config.insert("n_quant".into(), Json::Num(x_quant.rows as f64));
+    config.insert("n_test".into(), Json::Num(spec.dataset.n_test as f64));
+    config.insert("workers".into(), Json::Num(spec.quant.workers as f64));
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("fig2_layers".into()));
+    root.insert("fast".into(), Json::Bool(fast));
+    root.insert("analog_top1".into(), Json::Num(analog));
+    root.insert("config".into(), Json::Obj(config));
+    root.insert("methods".into(), Json::Obj(methods));
+    let path = "BENCH_fig2_layers.json";
+    match std::fs::write(path, format!("{}\n", Json::Obj(root))) {
+        Ok(()) => println!("(json written to {path})"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
 }

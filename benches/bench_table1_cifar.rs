@@ -57,12 +57,12 @@ fn main() {
             let g = res
                 .points
                 .iter()
-                .find(|p| p.method == Method::Gpfq && p.levels == m_levels && p.c_alpha == c)
+                .find(|p| p.method == Method::Gpfq && p.levels == m_levels && p.c_alpha_requested == c)
                 .unwrap();
             let m = res
                 .points
                 .iter()
-                .find(|p| p.method == Method::Msq && p.levels == m_levels && p.c_alpha == c)
+                .find(|p| p.method == Method::Msq && p.levels == m_levels && p.c_alpha_requested == c)
                 .unwrap();
             t.row(vec![bits.clone(), format!("{c}"), acc(res.analog_top1), acc(g.top1), acc(m.top1)]);
         }
@@ -88,7 +88,11 @@ fn main() {
         .filter(|g| {
             res.points
                 .iter()
-                .find(|m| m.method == Method::Msq && m.levels == g.levels && m.c_alpha == g.c_alpha)
+                .find(|m| {
+                    m.method == Method::Msq
+                        && m.levels == g.levels
+                        && m.c_alpha_requested == g.c_alpha_requested
+                })
                 .map(|m| g.top1 >= m.top1)
                 .unwrap_or(false)
         })

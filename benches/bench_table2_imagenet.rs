@@ -54,8 +54,8 @@ fn main() {
         &["C_alpha", "Analog top-1", "Analog top-5", "GPFQ top-1", "GPFQ top-5", "MSQ top-1", "MSQ top-5"],
     );
     for &c in &spec.quant.c_alphas {
-        let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha == c).unwrap();
-        let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha == c).unwrap();
+        let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha_requested == c).unwrap();
+        let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha_requested == c).unwrap();
         t.row(vec![
             format!("{c}"),
             acc(res.analog_top1),
@@ -85,8 +85,8 @@ fn main() {
         .c_alphas
         .iter()
         .filter(|&&c| {
-            let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha == c).unwrap();
-            let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha == c).unwrap();
+            let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha_requested == c).unwrap();
+            let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha_requested == c).unwrap();
             g.top1 >= m.top1 && g.top5 >= m.top5
         })
         .count();

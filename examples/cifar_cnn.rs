@@ -51,8 +51,8 @@ fn main() {
     for &m_levels in &spec.quant.levels {
         let bits = if m_levels == 3 { "log2(3)".to_string() } else { format!("{}", (m_levels as f64).log2()) };
         for &c in &spec.quant.c_alphas {
-            let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.levels == m_levels && p.c_alpha == c).unwrap();
-            let m = res.points.iter().find(|p| p.method == Method::Msq && p.levels == m_levels && p.c_alpha == c).unwrap();
+            let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.levels == m_levels && p.c_alpha_requested == c).unwrap();
+            let m = res.points.iter().find(|p| p.method == Method::Msq && p.levels == m_levels && p.c_alpha_requested == c).unwrap();
             table1.row(vec![bits.clone(), format!("{c}"), acc(res.analog_top1), acc(g.top1), acc(m.top1)]);
         }
     }
@@ -75,7 +75,7 @@ fn main() {
         let cfg = PipelineConfig {
             method,
             levels: best.levels,
-            c_alpha: best.c_alpha as f32,
+            c_alpha: best.c_alpha_f32(),
             capture_checkpoints: true,
             ..Default::default()
         };

@@ -43,8 +43,8 @@ fn main() {
         &["C_alpha", "GPFQ top-1", "MSQ top-1"],
     );
     for &c in &spec.quant.c_alphas {
-        let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha == c).unwrap();
-        let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha == c).unwrap();
+        let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha_requested == c).unwrap();
+        let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha_requested == c).unwrap();
         fig1a.row(vec![format!("{c}"), acc(g.top1), acc(m.top1)]);
     }
     fig1a.emit("fig1a_mnist");
@@ -59,7 +59,7 @@ fn main() {
         "Figure 1b — accuracy as layers are successively quantized",
         &["layers quantized", "GPFQ top-1", "MSQ top-1"],
     );
-    let best = |m: Method| res.best(m).map(|p| p.c_alpha as f32).unwrap_or(2.0);
+    let best = |m: Method| res.best(m).map(|p| p.c_alpha_f32()).unwrap_or(2.0);
     let mut cols: Vec<Vec<f64>> = Vec::new();
     for method in [Method::Gpfq, Method::Msq] {
         let cfg = PipelineConfig {

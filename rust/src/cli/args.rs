@@ -25,6 +25,7 @@ common flags:
   --levels <M>               alphabet size (quantize)
   --workers <n>              worker threads
   --quant-samples <n>        samples used to learn the quantization
+  --json <path.json>         write the sweep grid (Fig 1a / Table 1) as JSON
   --save <path.gpfq>         write the quantized model (bit-packed weights)
   --model <path.gpfq>        model file for eval
   --verbose                  chatty output";

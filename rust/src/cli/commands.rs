@@ -5,7 +5,7 @@ use crate::error::{bail, Result};
 use crate::cli::args::{Args, USAGE};
 use crate::config::{preset_cifar, preset_imagenet, preset_mnist, preset_mnist_paper, ExperimentSpec};
 use crate::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
-use crate::coordinator::sweep::{sweep, SweepConfig};
+use crate::coordinator::sweep::{sweep, SweepConfig, SweepPoint, SweepResult};
 use crate::data::synth;
 use crate::eval::metrics::accuracy;
 use crate::eval::report::acc;
@@ -225,29 +225,86 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         topk: true,
     };
     let x_quant = tr.x.rows_slice(0, spec.dataset.n_quant.min(tr.len()));
-    println!("sweeping {} x {} grid ...", cfg.levels.len(), cfg.c_alphas.len());
+    println!(
+        "sweeping {} x {} grid on the shared-session engine ...",
+        cfg.levels.len(),
+        cfg.c_alphas.len()
+    );
     let res = sweep(&net, &x_quant, &te, &cfg);
     let mut t = Table::new(
         &format!("{} sweep (analog top-1 {})", spec.name, acc(res.analog_top1)),
-        &["method", "M", "C_alpha", "top1", "top5", "secs"],
+        &["method", "M", "C_alpha", "top1", "top5", "cell secs"],
     );
     for p in &res.points {
         t.row(vec![
             format!("{:?}", p.method),
             p.levels.to_string(),
-            format!("{}", p.c_alpha),
+            // the grid coordinate as configured; the f32 the quantizer
+            // actually used is in the JSON (`c_alpha`) next to it
+            format!("{}", p.c_alpha_requested),
             acc(p.top1),
             acc(p.top5),
             format!("{:.2}", p.seconds),
         ]);
     }
     t.emit(&format!("sweep_{}", spec.name));
+    println!(
+        "shared analog-stream work: {:.2}s once for {} cells (a per-cell pipeline pays it {} times)",
+        res.shared_seconds,
+        res.points.len(),
+        res.points.len()
+    );
     for m in [Method::Gpfq, Method::Msq] {
         if let Some(best) = res.best(m) {
-            println!("best {:?}: top1 {} at (M={}, C_alpha={})", m, acc(best.top1), best.levels, best.c_alpha);
+            println!(
+                "best {:?}: top1 {} at (M={}, C_alpha={})",
+                m,
+                acc(best.top1),
+                best.levels,
+                best.c_alpha_requested
+            );
         }
     }
+    if let Some(path) = args.get("json") {
+        let doc = sweep_json(&spec.name, &res);
+        std::fs::write(path, format!("{doc}\n"))
+            .map_err(|e| crate::error::format_err!("could not write {path}: {e}"))?;
+        println!("(json written to {path})");
+    }
     Ok(())
+}
+
+/// The Figure 1a / Table 1 grid as machine-readable JSON (the `--json` flag
+/// of `gpfq sweep`; CI uploads it as an artifact).
+fn sweep_json(name: &str, res: &SweepResult) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let point_obj = |p: &SweepPoint| {
+        let mut o = BTreeMap::new();
+        o.insert("method".into(), Json::Str(format!("{:?}", p.method).to_lowercase()));
+        o.insert("levels".into(), Json::Num(p.levels as f64));
+        o.insert("c_alpha".into(), Json::Num(p.c_alpha));
+        o.insert("c_alpha_requested".into(), Json::Num(p.c_alpha_requested));
+        o.insert("top1".into(), Json::Num(p.top1));
+        o.insert("top5".into(), Json::Num(p.top5));
+        o.insert("cell_seconds".into(), Json::Num(p.seconds));
+        Json::Obj(o)
+    };
+    let mut best = BTreeMap::new();
+    for m in [Method::Gpfq, Method::Msq] {
+        if let Some(b) = res.best(m) {
+            best.insert(format!("{m:?}").to_lowercase(), point_obj(b));
+        }
+    }
+    let mut root = BTreeMap::new();
+    root.insert("experiment".into(), Json::Str(name.to_string()));
+    root.insert("figure".into(), Json::Str("fig1a_table1_grid".into()));
+    root.insert("analog_top1".into(), Json::Num(res.analog_top1));
+    root.insert("analog_top5".into(), Json::Num(res.analog_top5));
+    root.insert("shared_seconds".into(), Json::Num(res.shared_seconds));
+    root.insert("points".into(), Json::Arr(res.points.iter().map(point_obj).collect()));
+    root.insert("best".into(), Json::Obj(best));
+    Json::Obj(root)
 }
 
 #[cfg(test)]
@@ -278,6 +335,33 @@ mod tests {
     fn dispatch_help_and_unknown() {
         assert!(dispatch(&args(&["help"])).is_ok());
         assert!(dispatch(&args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn sweep_json_shape() {
+        let res = SweepResult {
+            analog_top1: 0.9,
+            analog_top5: 0.95,
+            shared_seconds: 1.5,
+            points: vec![SweepPoint {
+                method: Method::Gpfq,
+                levels: 3,
+                c_alpha: 2.0,
+                c_alpha_requested: 2.0,
+                top1: 0.8,
+                top5: 0.85,
+                seconds: 0.2,
+            }],
+        };
+        let doc = sweep_json("demo", &res);
+        let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.get("experiment").as_str(), Some("demo"));
+        assert_eq!(parsed.get("analog_top1").as_f64(), Some(0.9));
+        let pts = parsed.get("points").as_arr().unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].get("method").as_str(), Some("gpfq"));
+        assert_eq!(pts[0].get("c_alpha_requested").as_f64(), Some(2.0));
+        assert_eq!(parsed.get("best").get("gpfq").get("top1").as_f64(), Some(0.8));
     }
 
     #[test]

@@ -170,6 +170,118 @@ impl ActivationStore {
     }
 }
 
+/// The sweep engine's **shared analog stream**: one owner, many consumers.
+///
+/// A cross-validation grid (method × M × C_α, paper Section 6) quantizes
+/// the *same* analog network against the *same* sample batch in every cell,
+/// so `Y = Φ^(ℓ-1)(X)` and its walk-order views are identical across cells.
+/// `AnalogStream` owns that stream and advances it **exactly once per layer
+/// per sweep**; the per-cell [`CellStream`]s ride its buffer (`Arc`,
+/// zero-copy) until their first installed Q diverges them — the same
+/// shared-prefix contract [`ActivationStore`] enforces for the two streams
+/// of a single run, generalized to N consumers.
+pub struct AnalogStream {
+    y: Arc<Matrix>,
+    batch: usize,
+    advances: usize,
+    views: usize,
+}
+
+impl AnalogStream {
+    /// Start the stream at the quantization sample batch X (rows are
+    /// samples).
+    pub fn new(x_quant: &Matrix) -> Self {
+        AnalogStream { y: Arc::new(x_quant.clone()), batch: x_quant.rows, advances: 0, views: 0 }
+    }
+
+    /// The current activation buffer, shared zero-copy with any cell that
+    /// has not diverged yet.
+    pub fn buffer(&self) -> Arc<Matrix> {
+        self.y.clone()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Materialize the walk-order view for quantizable layer `i` — once per
+    /// quantization point per sweep, handed (`Arc`) to every grid cell.
+    pub fn view(&mut self, net: &Network, i: usize) -> Arc<Matrix> {
+        self.views += 1;
+        Arc::new(net.quantization_walk(i, &self.y))
+    }
+
+    /// Advance through non-quantized layer `i` (once per sweep).
+    pub fn advance_plain(&mut self, net: &Network, i: usize) {
+        self.y = Arc::new(net.apply_layer(i, &self.y));
+        self.advances += 1;
+    }
+
+    /// Advance through quantized layer `i` from its walk view (once per
+    /// sweep; patches → GEMM, no second im2col).
+    pub fn advance_from_view(&mut self, net: &Network, i: usize, view: &Matrix) {
+        self.y = Arc::new(net.apply_layer_from_walk(i, view, self.batch));
+        self.advances += 1;
+    }
+
+    /// Layers this stream has advanced through.  The sweep engine's
+    /// once-per-layer-per-sweep contract is that this never scales with the
+    /// cell count (pinned by `tests/test_sweep_grid.rs`).
+    pub fn advances(&self) -> usize {
+        self.advances
+    }
+
+    /// Walk-order views materialized from this stream (== quantization
+    /// points crossed, never × cells).
+    pub fn views_built(&self) -> usize {
+        self.views
+    }
+}
+
+/// One sweep cell's quantized stream Ỹ.  `None` while the cell still shares
+/// the analog prefix (no Q installed yet, so Φ̃ == Φ); owns its buffer from
+/// the first quantization point on.
+pub struct CellStream {
+    yq: Option<Arc<Matrix>>,
+}
+
+impl CellStream {
+    /// A stream that shares the analog prefix (no layer quantized yet).
+    pub fn shared() -> Self {
+        CellStream { yq: None }
+    }
+
+    pub fn is_diverged(&self) -> bool {
+        self.yq.is_some()
+    }
+
+    /// Walk-order view at quantization point `i`: the shared analog view
+    /// while the prefix is common (zero-copy `Arc` clone), the cell's own
+    /// otherwise.
+    pub fn view(&self, net: &Network, i: usize, analog_view: &Arc<Matrix>) -> Arc<Matrix> {
+        match &self.yq {
+            None => analog_view.clone(),
+            Some(yq) => Arc::new(net.quantization_walk(i, yq)),
+        }
+    }
+
+    /// Advance through non-quantized layer `i`.  While shared this is free —
+    /// the cell keeps tracking the analog stream, which advanced once for
+    /// every consumer.
+    pub fn advance_plain(&mut self, qnet: &Network, i: usize) {
+        if let Some(yq) = &self.yq {
+            self.yq = Some(Arc::new(qnet.apply_layer(i, yq)));
+        }
+    }
+
+    /// Advance through freshly quantized layer `i` from the walk view.
+    /// This is where a shared cell diverges: `qnet` carries the cell's just
+    /// installed Q^(ℓ), so the output can no longer equal the analog stream.
+    pub fn advance_from_view(&mut self, qnet: &Network, i: usize, view: &Matrix, batch: usize) {
+        self.yq = Some(Arc::new(qnet.apply_layer_from_walk(i, view, batch)));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,5 +349,71 @@ mod tests {
         let mut store = ActivationStore::new(&x);
         let _v1 = store.take_views(&net, 0);
         let _v2 = store.take_views(&net, 0);
+    }
+
+    #[test]
+    fn analog_stream_advances_match_plain_forward() {
+        let net = mnist_mlp(4, 10, &[6], 3);
+        let mut rng = Pcg::seed(3);
+        let x = Matrix::from_vec(4, 10, rng.normal_vec(40));
+        let mut analog = AnalogStream::new(&x);
+        assert_eq!(analog.batch(), 4);
+        // quantization point at layer 0: view + advance-from-view
+        let v0 = analog.view(&net, 0);
+        assert_eq!(v0.data, net.quantization_walk(0, &x).data);
+        analog.advance_from_view(&net, 0, &v0);
+        let h1 = net.apply_layer(0, &x);
+        assert_eq!(analog.buffer().data, h1.data);
+        // plain bn layer
+        analog.advance_plain(&net, 1);
+        assert_eq!(analog.buffer().data, net.apply_layer(1, &h1).data);
+        assert_eq!(analog.advances(), 2);
+        assert_eq!(analog.views_built(), 1);
+    }
+
+    #[test]
+    fn cell_stream_shares_view_until_divergence() {
+        let net = mnist_mlp(5, 8, &[5], 2);
+        let mut rng = Pcg::seed(4);
+        let x = Matrix::from_vec(3, 8, rng.normal_vec(24));
+        let mut analog = AnalogStream::new(&x);
+        let mut cell = CellStream::shared();
+        assert!(!cell.is_diverged());
+        // while shared: plain advances are free, the view IS the analog view
+        cell.advance_plain(&net, 0); // no-op while shared
+        let ty = analog.view(&net, 0);
+        let tyq = cell.view(&net, 0, &ty);
+        assert!(Arc::ptr_eq(&ty, &tyq), "shared cell must reuse the analog view");
+        // install a cell-specific Q and diverge
+        let mut qnet = net.clone();
+        let w = net.layers[0].weights().unwrap();
+        qnet.set_weights(0, w.map(|v| if v > 0.0 { 0.5 } else { -0.5 }));
+        cell.advance_from_view(&qnet, 0, &tyq, analog.batch());
+        analog.advance_from_view(&net, 0, &ty);
+        assert!(cell.is_diverged());
+        // parity with the plain double-forward
+        let want_yq = qnet.apply_layer(0, &x);
+        let ty1 = analog.view(&net, 2);
+        let tyq1 = cell.view(&net, 2, &ty1);
+        assert!(!Arc::ptr_eq(&ty1, &tyq1), "diverged cell builds its own view");
+        assert_eq!(tyq1.data, net.quantization_walk(2, &want_yq).data);
+    }
+
+    #[test]
+    fn diverged_cell_plain_advance_tracks_its_network() {
+        let img = ImgShape { h: 6, w: 6, c: 1 };
+        let net = cifar_cnn(6, img, &[2], 6, 2);
+        let mut rng = Pcg::seed(5);
+        let x = Matrix::from_vec(2, img.len(), rng.normal_vec(2 * img.len()));
+        let mut qnet = net.clone();
+        let w0 = net.layers[0].weights().unwrap();
+        qnet.set_weights(0, w0.map(|v| v.signum() * 0.3));
+        let mut cell = CellStream::shared();
+        let ty = Arc::new(net.quantization_walk(0, &x));
+        cell.advance_from_view(&qnet, 0, &ty, x.rows);
+        let h1 = qnet.apply_layer(0, &x);
+        cell.advance_plain(&qnet, 1); // bn layer
+        let tyq = cell.view(&qnet, 2, &ty);
+        assert_eq!(tyq.data, qnet.quantization_walk(2, &qnet.apply_layer(1, &h1)).data);
     }
 }

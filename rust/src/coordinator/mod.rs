@@ -13,11 +13,14 @@ pub mod reference;
 pub mod scheduler;
 pub mod sweep;
 
-pub use activation::{ActivationStore, StreamViews};
+pub use activation::{ActivationStore, AnalogStream, CellStream, StreamViews};
 pub use executor::{Executor, Path};
 pub use pipeline::{
     quantize_network, try_quantize_network, Method, PipelineConfig, QuantOutcome, QuantizeSession,
 };
 pub use reference::reference_quantize_network;
 pub use scheduler::{run_jobs, SchedulerConfig};
-pub use sweep::{layer_count_sweep, sweep, LayerCountPoint, SweepConfig, SweepPoint, SweepResult};
+pub use sweep::{
+    layer_count_sweep, layer_count_sweep_outcome, sweep, LayerCountPoint, SweepCell, SweepConfig,
+    SweepEngineStats, SweepOutcome, SweepPoint, SweepResult, SweepSession,
+};

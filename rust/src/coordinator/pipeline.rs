@@ -141,6 +141,43 @@ pub struct QuantOutcome {
     pub total_seconds: f64,
 }
 
+/// Is layer `i` selected for quantization under the `fc_only` protocol?
+/// The one selection predicate shared by every consumer of the engine —
+/// [`QuantizeSession`] (which additionally applies its `max_layers` quota)
+/// and the sweep grid engine ([`crate::coordinator::sweep::SweepSession`]),
+/// so a per-cell run and a shared-session sweep can never disagree about
+/// *which* layers get quantized.
+pub fn layer_selected(net: &Network, i: usize, fc_only: bool) -> bool {
+    net.layers[i].is_quantizable()
+        && (!fc_only || matches!(net.layers[i], Layer::Dense { .. }))
+}
+
+/// Alphabet construction + quantizer dispatch for one layer, from walk-order
+/// views — the single definition of what a (method, M, C_alpha) config means
+/// for a weight matrix, shared by [`QuantizeSession`] and the sweep grid
+/// engine so per-cell runs and shared-session sweeps can never drift.
+/// `w` is the (possibly bias-augmented) weight matrix; MSQ is data-free, so
+/// the views are only read on the GPFQ path.
+pub(crate) fn dispatch_layer_quantizer(
+    executor: &Executor,
+    method: Method,
+    w: &Matrix,
+    c_alpha: f32,
+    levels: usize,
+    ty: &Arc<Matrix>,
+    tyq: &Arc<Matrix>,
+) -> Result<(Matrix, Vec<Path>, Alphabet)> {
+    let a = Alphabet::from_median(&w.data, c_alpha, levels);
+    match method {
+        Method::Gpfq => {
+            let data = LayerData::from_transposed(ty.clone(), tyq.clone());
+            let (q, paths) = executor.gpfq_layer_data(&data, w, a)?;
+            Ok((q, paths, a))
+        }
+        Method::Msq => Ok((executor.msq_layer(w, a), vec![], a)),
+    }
+}
+
 /// Quantize a network with the configured method.
 ///
 /// `x_quant` is the quantization sample batch (rows are samples) — the
@@ -212,8 +249,7 @@ impl<'a> QuantizeSession<'a> {
     }
 
     fn selected(&self, i: usize) -> bool {
-        self.net.layers[i].is_quantizable()
-            && (!self.cfg.fc_only || matches!(self.net.layers[i], Layer::Dense { .. }))
+        layer_selected(self.net, i, self.cfg.fc_only)
             && self.cfg.max_layers.map(|k| self.quantized_so_far < k).unwrap_or(true)
     }
 
@@ -283,7 +319,6 @@ impl<'a> QuantizeSession<'a> {
         };
         let im2col_seconds = tv.elapsed().as_secs_f64();
         let m_samples = ty.cols;
-        let a = Alphabet::from_median(&w.data, self.cfg.c_alpha, self.cfg.levels);
 
         let aug_bytes = if augment_bias {
             let shared_aug = Arc::ptr_eq(&ty, &tyq);
@@ -299,16 +334,15 @@ impl<'a> QuantizeSession<'a> {
         // built only on the GPFQ path; error metrics below read the raw
         // views either way)
         let tq = Instant::now();
-        let (q, paths) = match self.cfg.method {
-            Method::Gpfq => {
-                let data = LayerData::from_transposed(ty.clone(), tyq.clone());
-                self.executor.gpfq_layer_data(&data, &w, a)?
-            }
-            Method::Msq => {
-                let q = self.executor.msq_layer(&w, a);
-                (q, vec![])
-            }
-        };
+        let (q, paths, a) = dispatch_layer_quantizer(
+            &self.executor,
+            self.cfg.method,
+            &w,
+            self.cfg.c_alpha,
+            self.cfg.levels,
+            &ty,
+            &tyq,
+        )?;
         let quantize_seconds = tq.elapsed().as_secs_f64();
 
         // ---- report/install ------------------------------------------------

@@ -28,6 +28,15 @@ impl Default for SchedulerConfig {
     }
 }
 
+impl SchedulerConfig {
+    /// A config with `workers` threads and the default backpressure bound —
+    /// the common case for coarse-grained job fan-out (sweep grid cells,
+    /// per-cell accuracy scoring) as opposed to neuron-block dispatch.
+    pub fn with_workers(workers: usize) -> SchedulerConfig {
+        SchedulerConfig { workers, ..Default::default() }
+    }
+}
+
 struct Queue<J> {
     jobs: Mutex<VecDeque<(usize, J)>>,
     available: Condvar,

@@ -5,24 +5,99 @@
 //! Figures 1b/2a, which steps one staged [`QuantizeSession`] and scores
 //! each quantized prefix instead of re-running the full pipeline per layer
 //! count.
+//!
+//! The grid runs on the **shared-session engine** ([`SweepSession`]): every
+//! cell of the (method × M × C_alpha) grid quantizes the *same* analog
+//! network against the *same* sample batch, so the analog activation stream
+//! `Y = Φ^(ℓ-1)(X)` and each layer's walk-order view (the im2col patch
+//! matrix for conv layers) are materialized **once per layer per sweep**
+//! ([`crate::coordinator::activation::AnalogStream`]) and shared zero-copy
+//! (`Arc`) across cells.  Each GPFQ cell keeps only its own quantized
+//! stream ([`crate::coordinator::activation::CellStream`]), which rides the
+//! analog buffer until the cell's first installed Q diverges it — the
+//! single-run two-stream contract of PR 2, generalized to N consumers —
+//! while MSQ cells (data-free) skip stream work entirely.  Cells fan out
+//! as jobs on the existing worker-pool scheduler; results come back in grid
+//! order, so the sweep is deterministic for any worker count and
+//! bit-identical to per-cell [`quantize_network`] runs
+//! (`tests/test_sweep_grid.rs` pins both claims).
 
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::activation::{AnalogStream, CellStream};
+use crate::coordinator::executor::Executor;
 use crate::coordinator::pipeline::{
-    quantize_network, Method, PipelineConfig, QuantizeSession,
+    dispatch_layer_quantizer, layer_selected, Method, PipelineConfig, QuantOutcome,
+    QuantizeSession,
 };
+use crate::coordinator::scheduler::{run_jobs, SchedulerConfig};
 use crate::data::dataset::Dataset;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::eval::metrics::{accuracy, topk_accuracy};
+use crate::nn::matrix::Matrix;
 use crate::nn::network::Network;
+
+/// One grid cell of the (method × M × C_alpha) sweep.  Constructing a cell
+/// is the **config boundary** where the f64 grid coordinate is explicitly
+/// narrowed to the pipeline's f32 scalar — everything downstream (alphabet
+/// radius, reports, reproduction configs) sees the narrowed value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepCell {
+    pub method: Method,
+    pub levels: usize,
+    /// the f64 grid coordinate as configured
+    pub c_alpha_requested: f64,
+    /// the f32 scalar the quantizer actually uses
+    pub c_alpha: f32,
+}
+
+impl SweepCell {
+    pub fn new(method: Method, levels: usize, c_alpha: f64) -> SweepCell {
+        // explicit narrowing: PipelineConfig::c_alpha is f32
+        SweepCell { method, levels, c_alpha_requested: c_alpha, c_alpha: c_alpha as f32 }
+    }
+
+    /// The pipeline config an independent per-cell run would use — the
+    /// parity oracle configuration for this cell.
+    pub fn pipeline_config(&self, fc_only: bool, workers: usize) -> PipelineConfig {
+        PipelineConfig {
+            method: self.method,
+            levels: self.levels,
+            c_alpha: self.c_alpha,
+            fc_only,
+            workers,
+            ..Default::default()
+        }
+    }
+}
 
 /// One grid cell result.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
     pub method: Method,
     pub levels: usize,
+    /// the alphabet scalar the quantizer **actually used** (the pipeline is
+    /// f32; this is that value widened losslessly back to f64 for reporting)
     pub c_alpha: f64,
+    /// the f64 grid coordinate as configured — may differ from `c_alpha` in
+    /// the low bits when the requested value is not representable in f32;
+    /// grid lookups key on this
+    pub c_alpha_requested: f64,
     pub top1: f64,
     pub top5: f64,
+    /// seconds attributable to this cell alone (its quantize dispatch and
+    /// quantized-stream advances); the analog-stream work shared by the
+    /// whole grid is in [`SweepResult::shared_seconds`]
     pub seconds: f64,
+}
+
+impl SweepPoint {
+    /// The f32 scalar to hand to [`PipelineConfig`] for a reproduction run
+    /// (round-trips exactly: `c_alpha` was widened from this value).
+    pub fn c_alpha_f32(&self) -> f32 {
+        self.c_alpha as f32
+    }
 }
 
 /// Sweep results plus the analog reference accuracy.
@@ -30,16 +105,22 @@ pub struct SweepPoint {
 pub struct SweepResult {
     pub analog_top1: f64,
     pub analog_top5: f64,
+    /// analog-stream + shared-view seconds, paid once for the whole grid
+    /// (a per-cell pipeline would pay this per cell)
+    pub shared_seconds: f64,
     pub points: Vec<SweepPoint>,
 }
 
 impl SweepResult {
-    /// Best point for a method (by top-1).
+    /// Best point for a method (by top-1).  Points whose score came back
+    /// NaN are excluded rather than poisoning the comparison (the pre-fix
+    /// `partial_cmp().unwrap()` panicked here; `total_cmp` alone would rank
+    /// positive NaN above every real score).
     pub fn best(&self, method: Method) -> Option<&SweepPoint> {
         self.points
             .iter()
-            .filter(|p| p.method == method)
-            .max_by(|a, b| a.top1.partial_cmp(&b.top1).unwrap())
+            .filter(|p| p.method == method && !p.top1.is_nan())
+            .max_by(|a, b| a.top1.total_cmp(&b.top1))
     }
 
     /// Accuracy spread (max − min) across C_alpha for a method at fixed M —
@@ -61,6 +142,7 @@ impl SweepResult {
 }
 
 /// Sweep configuration.
+#[derive(Clone)]
 pub struct SweepConfig {
     pub levels: Vec<usize>,
     pub c_alphas: Vec<f64>,
@@ -84,8 +166,271 @@ impl Default for SweepConfig {
     }
 }
 
-/// Run the full grid.  `x_quant` are the samples used to learn the
-/// quantization; `test` scores each quantized network.
+impl SweepConfig {
+    /// The grid cells in canonical order (method-major, then M, then
+    /// C_alpha) — the order [`sweep`] reports points in.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let n = self.methods.len() * self.levels.len() * self.c_alphas.len();
+        let mut cells = Vec::with_capacity(n);
+        for &method in &self.methods {
+            for &levels in &self.levels {
+                for &c_alpha in &self.c_alphas {
+                    cells.push(SweepCell::new(method, levels, c_alpha));
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// Counters the grid-parity tests pin: the point of the shared-session
+/// engine is that the analog numbers **never scale with the cell count**.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SweepEngineStats {
+    /// analog-stream layer advances (== layers crossed, not × cells)
+    pub analog_advances: usize,
+    /// analog walk views materialized (== quantization points, not × cells)
+    pub analog_views: usize,
+    /// per-cell walk views (only diverged GPFQ cells build their own;
+    /// shared cells reuse the analog view zero-copy, and MSQ cells are
+    /// data-free so they never build views at all)
+    pub cell_views: usize,
+}
+
+/// Per-cell mutable state carried through the sweep.
+struct CellState {
+    cell: SweepCell,
+    qnet: Network,
+    stream: CellStream,
+    seconds: f64,
+    views_built: usize,
+}
+
+/// What a completed [`SweepSession`] hands back.
+pub struct SweepOutcome {
+    /// `(cell, quantized network, per-cell seconds)`, in grid order
+    pub networks: Vec<(SweepCell, Network, f64)>,
+    pub stats: SweepEngineStats,
+    /// analog-stream + shared-view seconds (paid once for the whole grid)
+    pub shared_seconds: f64,
+}
+
+/// The shared-session grid engine: advances the analog stream and
+/// materializes each layer's walk-order view **exactly once per sweep**,
+/// then fans the (method × M × C_alpha) cells out across the worker-pool
+/// scheduler.  Each cell job reuses the shared analog view zero-copy
+/// (`Arc`) and keeps only its own quantized stream, so the per-layer cost
+/// is `1 analog advance + N cell advances` instead of `2N` stream advances
+/// and `N` redundant analog im2cols.
+///
+/// Bit-parity: every operation a GPFQ cell sees is the operation the
+/// two-stream [`QuantizeSession`] would perform for that cell's config, in
+/// the same order on the same values (the shared
+/// [`dispatch_layer_quantizer`] step is literally the same code), so the
+/// quantized networks are bit-identical to independent [`quantize_network`]
+/// runs (pinned in `tests/test_sweep_grid.rs`, worker counts and `fc_only`
+/// included).  MSQ cells are data-free: they quantize straight from the
+/// analog weights and skip stream work entirely — same bits, zero stream
+/// cost.
+///
+/// Scope: the engine covers [`sweep`]'s config surface (method × M ×
+/// C_alpha, `fc_only`).  Per-run pipeline extras (`quantize_bias`,
+/// `max_layers`, checkpoints) remain [`QuantizeSession`] features.
+///
+/// Memory: all cell networks are live for the whole sweep (they ARE the
+/// grid's output) plus one activation buffer per diverged GPFQ cell, so
+/// peak residency scales with the grid size where the per-cell loop peaked
+/// at one network + two streams.  That is the deliberate trade for the
+/// wall-clock win; paper-scale grids that must bound memory can run the
+/// grid in chunks of cells (each chunk re-pays the analog stream once —
+/// see ROADMAP).
+pub struct SweepSession<'a> {
+    net: &'a Network,
+    fc_only: bool,
+    sched: SchedulerConfig,
+    /// worker threads each cell job's inner neuron-block dispatch gets:
+    /// `workers / n_cells` (≥ 1), so a 1-cell grid keeps the full
+    /// neuron-block parallelism a per-cell run would have had, while a
+    /// grid wider than the pool runs its neuron blocks serially per cell
+    /// (`run_jobs`' workers==1 fast path — no nested thread pool).  The
+    /// split cannot change bits (PR-1 determinism contract).
+    cell_workers: usize,
+    analog: AnalogStream,
+    cells: Vec<CellState>,
+    next_layer: usize,
+    shared_seconds: f64,
+}
+
+impl<'a> SweepSession<'a> {
+    pub fn new(
+        net: &'a Network,
+        x_quant: &Matrix,
+        cells: Vec<SweepCell>,
+        fc_only: bool,
+        workers: usize,
+    ) -> Self {
+        assert_eq!(x_quant.cols, net.input.len(), "quantization data width mismatch");
+        let cell_workers = (workers / cells.len().max(1)).max(1);
+        let cells = cells
+            .into_iter()
+            .map(|cell| CellState {
+                cell,
+                qnet: net.clone(),
+                stream: CellStream::shared(),
+                seconds: 0.0,
+                views_built: 0,
+            })
+            .collect();
+        SweepSession {
+            net,
+            fc_only,
+            sched: SchedulerConfig::with_workers(workers),
+            cell_workers,
+            analog: AnalogStream::new(x_quant),
+            cells,
+            next_layer: 0,
+            shared_seconds: 0.0,
+        }
+    }
+
+    pub fn stats(&self) -> SweepEngineStats {
+        SweepEngineStats {
+            analog_advances: self.analog.advances(),
+            analog_views: self.analog.views_built(),
+            cell_views: self.cells.iter().map(|c| c.views_built).sum(),
+        }
+    }
+
+    pub fn shared_seconds(&self) -> f64 {
+        self.shared_seconds
+    }
+
+    /// Will any further layer be quantized?  Trailing stream advances past
+    /// the last quantization point are skipped entirely (nothing observes
+    /// them) — the same early-out [`QuantizeSession`] performs.
+    fn has_more(&self) -> bool {
+        (self.next_layer..self.net.layers.len())
+            .any(|i| layer_selected(self.net, i, self.fc_only))
+    }
+
+    /// Advance every stream through the next layer, quantizing it in every
+    /// cell when selected.  Returns `false` once no further layer will be
+    /// quantized.
+    pub fn step(&mut self) -> Result<bool> {
+        if self.cells.is_empty() || !self.has_more() {
+            return Ok(false);
+        }
+        let i = self.next_layer;
+        if layer_selected(self.net, i, self.fc_only) {
+            self.quantize_layer(i)?;
+        } else {
+            // ONE analog advance serves every cell that still shares the
+            // prefix; cells that already diverged follow concurrently on
+            // the worker pool.
+            let t = Instant::now();
+            self.analog.advance_plain(self.net, i);
+            self.shared_seconds += t.elapsed().as_secs_f64();
+            if self.cells.iter().any(|c| c.stream.is_diverged()) {
+                let cells = std::mem::take(&mut self.cells);
+                self.cells =
+                    run_jobs(self.sched, cells, |_, mut c| -> Result<CellState, Error> {
+                        let t = Instant::now();
+                        c.stream.advance_plain(&c.qnet, i);
+                        c.seconds += t.elapsed().as_secs_f64();
+                        Ok(c)
+                    })?;
+            }
+        }
+        self.next_layer = i + 1;
+        Ok(true)
+    }
+
+    /// Quantization point: ONE analog view + at most ONE analog advance
+    /// serve the whole grid; the cells fan out as jobs on the worker pool,
+    /// each building at most its own quantized-stream view.
+    fn quantize_layer(&mut self, i: usize) -> Result<()> {
+        // at the LAST quantization point the post-install stream advances
+        // are unread (scoring uses the cell networks, never the streams) —
+        // skip them, the stream-level analogue of has_more()'s early-out
+        let last = !((i + 1)..self.net.layers.len())
+            .any(|j| layer_selected(self.net, j, self.fc_only));
+        let t = Instant::now();
+        let ty = self.analog.view(self.net, i);
+        let batch = self.analog.batch();
+        if !last {
+            self.analog.advance_from_view(self.net, i, &ty);
+        }
+        self.shared_seconds += t.elapsed().as_secs_f64();
+
+        let net = self.net;
+        let w = net.layers[i].weights().expect("selected layer has weights");
+        let cell_workers = self.cell_workers;
+        let cells = std::mem::take(&mut self.cells);
+        self.cells = run_jobs(self.sched, cells, |_, mut c| -> Result<CellState, Error> {
+            let t = Instant::now();
+            match c.cell.method {
+                Method::Gpfq => {
+                    let tyq = c.stream.view(net, i, &ty);
+                    if !Arc::ptr_eq(&tyq, &ty) {
+                        c.views_built += 1;
+                    }
+                    // inner neuron-block dispatch gets the workers the grid
+                    // width leaves idle (see `cell_workers`); the partition
+                    // cannot change bits (the PR-1 determinism contract)
+                    let (q, _, _) = dispatch_layer_quantizer(
+                        &Executor::native(cell_workers),
+                        Method::Gpfq,
+                        w,
+                        c.cell.c_alpha,
+                        c.cell.levels,
+                        &ty,
+                        &tyq,
+                    )?;
+                    c.qnet.set_weights(i, q);
+                    if !last {
+                        c.stream.advance_from_view(&c.qnet, i, &tyq, batch);
+                    }
+                }
+                Method::Msq => {
+                    // MSQ is data-free: quantize straight from the analog
+                    // weights and leave the cell's stream untouched — an
+                    // MSQ cell never diverges and costs zero stream work
+                    // for the whole sweep, with bit-identical output
+                    let (q, _, _) = dispatch_layer_quantizer(
+                        &Executor::native(cell_workers),
+                        Method::Msq,
+                        w,
+                        c.cell.c_alpha,
+                        c.cell.levels,
+                        &ty,
+                        &ty,
+                    )?;
+                    c.qnet.set_weights(i, q);
+                }
+            }
+            c.seconds += t.elapsed().as_secs_f64();
+            Ok(c)
+        })?;
+        Ok(())
+    }
+
+    /// Drive the grid to completion and hand back each cell's quantized
+    /// network (grid order preserved).
+    pub fn run(mut self) -> Result<SweepOutcome> {
+        while self.step()? {}
+        let stats = self.stats();
+        let shared_seconds = self.shared_seconds;
+        Ok(SweepOutcome {
+            networks: self.cells.into_iter().map(|c| (c.cell, c.qnet, c.seconds)).collect(),
+            stats,
+            shared_seconds,
+        })
+    }
+}
+
+/// Run the full grid on the shared-session engine.  `x_quant` are the
+/// samples used to learn the quantization; `test` scores each quantized
+/// network (scoring also fans out across the worker pool).
 pub fn sweep(
     net: &Network,
     x_quant: &crate::nn::matrix::Matrix,
@@ -94,33 +439,27 @@ pub fn sweep(
 ) -> SweepResult {
     let analog_top1 = accuracy(net, test);
     let analog_top5 = if cfg.topk { topk_accuracy(net, test, 5) } else { 0.0 };
-    let mut points = Vec::new();
-    for &method in &cfg.methods {
-        for &levels in &cfg.levels {
-            for &c_alpha in &cfg.c_alphas {
-                let pcfg = PipelineConfig {
-                    method,
-                    levels,
-                    c_alpha: c_alpha as f32,
-                    fc_only: cfg.fc_only,
-                    workers: cfg.workers,
-                    ..Default::default()
-                };
-                let out = quantize_network(net, x_quant, &pcfg);
-                let top1 = accuracy(&out.network, test);
-                let top5 = if cfg.topk { topk_accuracy(&out.network, test, 5) } else { 0.0 };
-                points.push(SweepPoint {
-                    method,
-                    levels,
-                    c_alpha,
-                    top1,
-                    top5,
-                    seconds: out.total_seconds,
-                });
-            }
-        }
-    }
-    SweepResult { analog_top1, analog_top5, points }
+    let session = SweepSession::new(net, x_quant, cfg.cells(), cfg.fc_only, cfg.workers);
+    let SweepOutcome { networks, shared_seconds, .. } =
+        session.run().expect("sweep session failed");
+    let topk = cfg.topk;
+    let points = run_jobs(
+        SchedulerConfig::with_workers(cfg.workers),
+        networks,
+        |_, (cell, qnet, seconds)| -> Result<SweepPoint, Error> {
+            Ok(SweepPoint {
+                method: cell.method,
+                levels: cell.levels,
+                c_alpha: f64::from(cell.c_alpha),
+                c_alpha_requested: cell.c_alpha_requested,
+                top1: accuracy(&qnet, test),
+                top5: if topk { topk_accuracy(&qnet, test, 5) } else { 0.0 },
+                seconds,
+            })
+        },
+    )
+    .expect("sweep scoring failed");
+    SweepResult { analog_top1, analog_top5, shared_seconds, points }
 }
 
 /// One point of a layer-count sweep: accuracy with the first
@@ -147,13 +486,27 @@ pub fn layer_count_sweep(
     cfg: &PipelineConfig,
     topk: bool,
 ) -> Result<Vec<LayerCountPoint>> {
+    Ok(layer_count_sweep_outcome(net, x_quant, test, cfg, topk)?.0)
+}
+
+/// [`layer_count_sweep`] variant that also hands back the session's final
+/// [`QuantOutcome`] (fully quantized network + per-layer reports) so
+/// consumers that need the quantized weights — e.g. `bench_fig2_layers`'
+/// Figure 2b histograms — do not re-run the pipeline to get them.
+pub fn layer_count_sweep_outcome(
+    net: &Network,
+    x_quant: &crate::nn::matrix::Matrix,
+    test: &Dataset,
+    cfg: &PipelineConfig,
+    topk: bool,
+) -> Result<(Vec<LayerCountPoint>, QuantOutcome)> {
     let mut session = QuantizeSession::new(net, x_quant, cfg.clone());
     let mut points = Vec::new();
     // time only the step() calls: the per-point accuracy scoring below must
     // not pollute the reported quantization cost
     let mut quant_seconds = 0.0f64;
     loop {
-        let t = std::time::Instant::now();
+        let t = Instant::now();
         if session.step()?.is_none() {
             break;
         }
@@ -165,12 +518,13 @@ pub fn layer_count_sweep(
             seconds: quant_seconds,
         });
     }
-    Ok(points)
+    Ok((points, session.into_outcome()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pipeline::quantize_network;
     use crate::data::synth::{generate, SynthSpec};
     use crate::nn::conv::ImgShape;
     use crate::nn::network::mnist_mlp;
@@ -192,6 +546,18 @@ mod tests {
         (net, tr, te)
     }
 
+    fn point(top1: f64) -> SweepPoint {
+        SweepPoint {
+            method: Method::Gpfq,
+            levels: 3,
+            c_alpha: 1.0,
+            c_alpha_requested: 1.0,
+            top1,
+            top5: 0.0,
+            seconds: 0.0,
+        }
+    }
+
     #[test]
     fn sweep_covers_grid_and_picks_best() {
         let (net, tr, te) = setup();
@@ -208,6 +574,85 @@ mod tests {
         let best_m = res.best(Method::Msq).unwrap();
         assert!(best_g.top1 >= best_m.top1 - 0.05, "gpfq {} msq {}", best_g.top1, best_m.top1);
         assert!(best_g.top1 > 0.5, "best gpfq {}", best_g.top1);
+    }
+
+    #[test]
+    fn best_survives_nan_points() {
+        // regression: a NaN-scored cell used to panic best() through
+        // partial_cmp().unwrap(); now it is excluded from the ranking
+        let res = SweepResult {
+            analog_top1: 0.9,
+            analog_top5: 0.0,
+            shared_seconds: 0.0,
+            points: vec![point(0.4), point(f64::NAN), point(0.7), point(0.1)],
+        };
+        let best = res.best(Method::Gpfq).expect("finite points exist");
+        assert_eq!(best.top1, 0.7);
+        // all-NaN: no best rather than a NaN "winner"
+        let res = SweepResult {
+            analog_top1: 0.9,
+            analog_top5: 0.0,
+            shared_seconds: 0.0,
+            points: vec![point(f64::NAN), point(f64::NAN)],
+        };
+        assert!(res.best(Method::Gpfq).is_none());
+        assert!(res.best(Method::Msq).is_none());
+    }
+
+    #[test]
+    fn c_alpha_narrowing_is_explicit_and_reported() {
+        // 0.1 is not representable in f32: the cell must narrow once at the
+        // config boundary and report the value actually used
+        let cell = SweepCell::new(Method::Gpfq, 3, 0.1);
+        assert_eq!(cell.c_alpha, 0.1f32);
+        assert_eq!(cell.c_alpha_requested, 0.1f64);
+        assert_ne!(f64::from(cell.c_alpha), 0.1f64, "narrowing must be observable");
+        assert_eq!(cell.pipeline_config(false, 1).c_alpha, 0.1f32);
+
+        let (net, tr, te) = setup();
+        let x = tr.x.rows_slice(0, 60);
+        let cfg = SweepConfig {
+            levels: vec![3],
+            c_alphas: vec![0.1],
+            methods: vec![Method::Gpfq],
+            ..Default::default()
+        };
+        let res = sweep(&net, &x, &te, &cfg);
+        let p = &res.points[0];
+        assert_eq!(p.c_alpha, f64::from(0.1f32), "report the value actually used");
+        assert_eq!(p.c_alpha_requested, 0.1f64);
+        assert_eq!(p.c_alpha_f32(), 0.1f32);
+        // and the reported accuracy is exactly what that f32 produces
+        let pcfg = PipelineConfig { c_alpha: 0.1, ..Default::default() };
+        let single = quantize_network(&net, &x, &pcfg);
+        assert_eq!(p.top1, accuracy(&single.network, &te));
+    }
+
+    #[test]
+    fn sweep_session_networks_match_per_cell_pipeline() {
+        let (net, tr, _) = setup();
+        let x = tr.x.rows_slice(0, 80);
+        let cells = vec![
+            SweepCell::new(Method::Gpfq, 3, 2.0),
+            SweepCell::new(Method::Gpfq, 16, 4.0),
+            SweepCell::new(Method::Msq, 3, 2.0),
+        ];
+        let outcome =
+            SweepSession::new(&net, &x, cells.clone(), false, 2).run().unwrap();
+        assert_eq!(outcome.networks.len(), 3);
+        // analog work never scales with the cell count; the advance at the
+        // last quantization point (layer 2) is skipped as unread
+        assert_eq!(outcome.stats.analog_views, 2, "one view per quantization point");
+        assert_eq!(outcome.stats.analog_advances, 2, "layers crossed, not x cells");
+        for ((cell, qnet, _), want) in outcome.networks.iter().zip(&cells) {
+            assert_eq!(cell, want, "grid order preserved");
+            let single = quantize_network(&net, &x, &cell.pipeline_config(false, 1));
+            for (a, b) in qnet.layers.iter().zip(&single.network.layers) {
+                if let (Some(wa), Some(wb)) = (a.weights(), b.weights()) {
+                    assert_eq!(wa.data, wb.data, "cell {cell:?}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -237,23 +682,42 @@ mod tests {
             &net,
             &x,
             &te,
-            &PipelineConfig { max_layers: Some(1), ..cfg },
+            &PipelineConfig { max_layers: Some(1), ..cfg.clone() },
             false,
         )
         .unwrap();
         assert_eq!(capped.len(), 1);
+        // the outcome variant hands back the fully quantized network
+        let (pts, out) = layer_count_sweep_outcome(&net, &x, &te, &cfg, false).unwrap();
+        assert_eq!(pts.len(), out.layer_reports.len());
+        let full = quantize_network(&net, &x, &cfg);
+        for (a, b) in out.network.layers.iter().zip(&full.network.layers) {
+            if let (Some(wa), Some(wb)) = (a.weights(), b.weights()) {
+                assert_eq!(wa.data, wb.data);
+            }
+        }
     }
 
     #[test]
     fn spread_computation() {
+        let mk = |method, c_alpha: f64, top1| SweepPoint {
+            method,
+            levels: 3,
+            c_alpha,
+            c_alpha_requested: c_alpha,
+            top1,
+            top5: 0.0,
+            seconds: 0.0,
+        };
         let res = SweepResult {
             analog_top1: 0.9,
             analog_top5: 0.0,
+            shared_seconds: 0.0,
             points: vec![
-                SweepPoint { method: Method::Gpfq, levels: 3, c_alpha: 1.0, top1: 0.8, top5: 0.0, seconds: 0.0 },
-                SweepPoint { method: Method::Gpfq, levels: 3, c_alpha: 2.0, top1: 0.85, top5: 0.0, seconds: 0.0 },
-                SweepPoint { method: Method::Msq, levels: 3, c_alpha: 1.0, top1: 0.2, top5: 0.0, seconds: 0.0 },
-                SweepPoint { method: Method::Msq, levels: 3, c_alpha: 2.0, top1: 0.7, top5: 0.0, seconds: 0.0 },
+                mk(Method::Gpfq, 1.0, 0.8),
+                mk(Method::Gpfq, 2.0, 0.85),
+                mk(Method::Msq, 1.0, 0.2),
+                mk(Method::Msq, 2.0, 0.7),
             ],
         };
         assert!((res.spread(Method::Gpfq, 3) - 0.05).abs() < 1e-12);

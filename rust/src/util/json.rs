@@ -295,7 +295,12 @@ fn write(v: &Json, out: &mut String) {
         Json::Null => out.push_str("null"),
         Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Json::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 1e15 {
+            if !n.is_finite() {
+                // JSON has no NaN/Infinity literals: serialize as null so
+                // exported documents (sweep/bench artifacts with NaN
+                // scores) stay parseable instead of emitting bare `NaN`
+                out.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 1e15 {
                 out.push_str(&format!("{}", *n as i64));
             } else {
                 out.push_str(&format!("{n}"));
@@ -371,6 +376,19 @@ mod tests {
         let v = parse(src).unwrap();
         let back = parse(&v.to_string()).unwrap();
         assert_eq!(v, back);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        // a NaN-scored sweep point must still yield a parseable document
+        let mut o = BTreeMap::new();
+        o.insert("top1".to_string(), Json::Num(f64::NAN));
+        let doc = Json::Obj(o).to_string();
+        assert_eq!(doc, r#"{"top1":null}"#);
+        assert!(parse(&doc).is_ok());
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Sweep-grid engine guarantees, pinned hard:
+//!
+//! 1. **Grid parity** — the shared-session [`SweepSession`] produces, for
+//!    every (method × M × C_alpha) cell, a quantized network and top-1/top-5
+//!    scores *bit-identical* to an independent `quantize_network` run with
+//!    that cell's config, across worker counts and under `fc_only` (the
+//!    PR-1/PR-2 determinism contract extended to the grid engine).
+//! 2. **Analog economy** — the analog stream advances and its walk-order
+//!    views (im2col for conv layers) are built **once per layer per sweep**,
+//!    never × cells, measured both through the engine's own counters and the
+//!    process-wide im2col invocation counter under a serial lock (the same
+//!    counted-pin pattern as PR 2's 3-vs-8 im2col test).
+//!
+//! The lock exists because `cargo test` runs tests of one binary
+//! concurrently and the im2col counter is process-global: every test here
+//! that counts conv pipelines holds it, so counter deltas are exact.
+
+use std::sync::Mutex;
+
+use gpfq::coordinator::pipeline::{quantize_network, Method};
+use gpfq::coordinator::sweep::{sweep, SweepCell, SweepConfig, SweepSession};
+use gpfq::data::rng::Pcg;
+use gpfq::data::synth::{generate, SynthSpec};
+use gpfq::eval::metrics::{accuracy, topk_accuracy};
+use gpfq::nn::conv::{im2col_invocations, ImgShape};
+use gpfq::nn::matrix::Matrix;
+use gpfq::nn::network::{cifar_cnn, mnist_mlp, vgg_like, Network};
+use gpfq::train::{train, TrainConfig};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn rand_input(seed: u64, rows: usize, cols: usize) -> Matrix {
+    let mut rng = Pcg::seed(seed);
+    Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols))
+}
+
+fn trained_mlp() -> (Network, gpfq::data::Dataset, gpfq::data::Dataset) {
+    let spec = SynthSpec {
+        classes: 4,
+        shape: ImgShape { h: 8, w: 8, c: 1 },
+        blobs: 4,
+        noise: 0.15,
+        max_shift: 1,
+        seed: 31,
+    };
+    let tr = generate(&spec, 260, 0, false);
+    let te = generate(&spec, 130, 1, false);
+    let mut net = mnist_mlp(3, 64, &[40, 20], 4);
+    train(
+        &mut net,
+        &tr,
+        &TrainConfig { epochs: 8, batch: 32, lr: 0.05, momentum: 0.9, seed: 3, verbose: false },
+    );
+    (net, tr, te)
+}
+
+/// Assert two networks agree bit for bit in every quantizable weight.
+fn assert_weights_identical(a: &Network, b: &Network, tag: &str) {
+    assert_eq!(a.layers.len(), b.layers.len(), "{tag}: layer count");
+    for (i, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        match (la.weights(), lb.weights()) {
+            (Some(wa), Some(wb)) => assert_eq!(wa.data, wb.data, "{tag}: layer {i} weights"),
+            (None, None) => {}
+            _ => panic!("{tag}: layer {i} kind mismatch"),
+        }
+    }
+}
+
+#[test]
+fn grid_parity_top1_top5_across_worker_counts() {
+    let (net, tr, te) = trained_mlp();
+    let x = tr.x.rows_slice(0, 120);
+    let grid = SweepConfig {
+        levels: vec![3, 16],
+        c_alphas: vec![2.0, 4.0],
+        methods: vec![Method::Gpfq, Method::Msq],
+        fc_only: false,
+        topk: true,
+        workers: 1,
+    };
+    let base = sweep(&net, &x, &te, &grid);
+    assert_eq!(base.points.len(), 8);
+    // every cell's scores are bit-identical to an independent per-cell run
+    for p in &base.points {
+        let cell = SweepCell::new(p.method, p.levels, p.c_alpha_requested);
+        assert_eq!(cell.c_alpha, p.c_alpha_f32());
+        let single = quantize_network(&net, &x, &cell.pipeline_config(false, 2));
+        let top1 = accuracy(&single.network, &te);
+        let top5 = topk_accuracy(&single.network, &te, 5);
+        assert_eq!(p.top1, top1, "cell {:?}/M{}/C{}", p.method, p.levels, p.c_alpha);
+        assert_eq!(p.top5, top5, "cell {:?}/M{}/C{}", p.method, p.levels, p.c_alpha);
+    }
+    // and the grid is deterministic across worker counts
+    for workers in [2usize, 4] {
+        let res = sweep(&net, &x, &te, &SweepConfig { workers, ..grid.clone() });
+        for (a, b) in res.points.iter().zip(&base.points) {
+            assert_eq!(a.top1, b.top1, "workers={workers}");
+            assert_eq!(a.top5, b.top5, "workers={workers}");
+            assert_eq!(a.c_alpha, b.c_alpha, "workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn grid_parity_fc_only_networks_bit_identical() {
+    let _guard = SERIAL.lock().unwrap();
+    let img = ImgShape { h: 10, w: 10, c: 1 };
+    let net = vgg_like(54, img, &[3], &[24, 12], 3); // conv, mp, dense, bn, dense, bn, dense
+    let x = rand_input(17, 6, img.len());
+    let cells = vec![
+        SweepCell::new(Method::Gpfq, 3, 2.0),
+        SweepCell::new(Method::Gpfq, 3, 4.0),
+        SweepCell::new(Method::Msq, 16, 3.0),
+    ];
+    for workers in [1usize, 4] {
+        let outcome =
+            SweepSession::new(&net, &x, cells.clone(), true, workers).run().unwrap();
+        for (cell, qnet, _) in &outcome.networks {
+            let single = quantize_network(&net, &x, &cell.pipeline_config(true, workers));
+            let tag =
+                format!("fc_only {:?}/M{}/C{} w={workers}", cell.method, cell.levels, cell.c_alpha);
+            assert_weights_identical(qnet, &single.network, &tag);
+        }
+        // fc_only: 3 dense quantization points, conv crossed plain
+        assert_eq!(outcome.stats.analog_views, 3);
+    }
+}
+
+#[test]
+fn sweep_builds_analog_views_once_per_layer_not_per_cell() {
+    let _guard = SERIAL.lock().unwrap();
+    let img = ImgShape { h: 10, w: 10, c: 1 };
+    // layers: conv, bn, conv, mp, bn, dense, bn, dense — 4 quantization points
+    let net = cifar_cnn(55, img, &[3], 12, 3);
+    let x = rand_input(18, 6, img.len());
+    let cells: Vec<SweepCell> = [1.5f64, 2.0, 3.0, 4.0]
+        .iter()
+        .map(|&c| SweepCell::new(Method::Gpfq, 3, c))
+        .collect();
+    let n_cells = cells.len();
+
+    let before = im2col_invocations();
+    let outcome = SweepSession::new(&net, &x, cells.clone(), false, 2).run().unwrap();
+    let sweep_calls = im2col_invocations() - before;
+
+    // analog side never scales with the cell count:
+    //   conv #1 is the first quantization point — every cell still shares
+    //   the analog prefix, so ONE patch build serves the whole grid; conv #2
+    //   runs after divergence: 1 analog build + one per cell.
+    assert_eq!(
+        sweep_calls,
+        2 + n_cells,
+        "sweep im2col must be analog-once-per-layer plus one per diverged cell"
+    );
+    assert_eq!(outcome.stats.analog_views, 4, "one analog view per quantization point");
+    // layers 0..=6 crossed once each; the advance at the last quantization
+    // point (layer 7) is skipped because nothing reads the streams after it
+    assert_eq!(outcome.stats.analog_advances, 7, "layers crossed once, not x cells");
+    // diverged cells build their own views at the 3 post-divergence points
+    assert_eq!(outcome.stats.cell_views, 3 * n_cells);
+
+    // the per-cell baseline the engine replaces: each independent engine run
+    // costs 3 im2cols (PR 2's pin), so the grid costs 3 x cells
+    let before = im2col_invocations();
+    for cell in &cells {
+        let single = quantize_network(&net, &x, &cell.pipeline_config(false, 2));
+        let (_, qnet, _) = &outcome.networks[outcome
+            .networks
+            .iter()
+            .position(|(c, _, _)| c == cell)
+            .unwrap()];
+        assert_weights_identical(qnet, &single.network, &format!("cnn C{}", cell.c_alpha));
+    }
+    let per_cell_calls = im2col_invocations() - before;
+    assert_eq!(per_cell_calls, 3 * n_cells, "per-cell baseline im2col count changed");
+    assert!(sweep_calls < per_cell_calls, "shared session must do strictly less im2col work");
+
+    // analog counters are independent of the cell count: a 1-cell session
+    // reports the same analog numbers as the 4-cell session above
+    let one = SweepSession::new(&net, &x, cells[..1].to_vec(), false, 2).run().unwrap();
+    assert_eq!(one.stats.analog_views, outcome.stats.analog_views);
+    assert_eq!(one.stats.analog_advances, outcome.stats.analog_advances);
+}
+
+#[test]
+fn msq_cells_are_data_free_and_do_zero_stream_work() {
+    let _guard = SERIAL.lock().unwrap();
+    let img = ImgShape { h: 10, w: 10, c: 1 };
+    let net = cifar_cnn(57, img, &[3], 12, 3);
+    let x = rand_input(20, 6, img.len());
+    let cells: Vec<SweepCell> =
+        (2..=4).map(|i| SweepCell::new(Method::Msq, 3, i as f64)).collect();
+    let before = im2col_invocations();
+    let outcome = SweepSession::new(&net, &x, cells.clone(), false, 2).run().unwrap();
+    // analog side only: one walk view per conv quantization point; MSQ cells
+    // never build views, never diverge, never advance a stream
+    assert_eq!(im2col_invocations() - before, 2);
+    assert_eq!(outcome.stats.cell_views, 0);
+    for (cell, qnet, _) in &outcome.networks {
+        let single = quantize_network(&net, &x, &cell.pipeline_config(false, 1));
+        assert_weights_identical(qnet, &single.network, &format!("msq C{}", cell.c_alpha));
+    }
+}
+
+#[test]
+fn fc_only_sweep_crosses_shared_conv_once_for_all_cells() {
+    let _guard = SERIAL.lock().unwrap();
+    let img = ImgShape { h: 8, w: 8, c: 1 };
+    let net = vgg_like(56, img, &[2], &[12], 3); // conv, mp, dense, bn, dense
+    let x = rand_input(19, 5, img.len());
+    let cells: Vec<SweepCell> =
+        (1..=3).map(|i| SweepCell::new(Method::Gpfq, 3, i as f64)).collect();
+    let before = im2col_invocations();
+    let outcome = SweepSession::new(&net, &x, cells.clone(), true, 2).run().unwrap();
+    // the unquantized conv layer is crossed while every stream still shares
+    // the analog prefix: exactly ONE forward im2col for the whole grid
+    assert_eq!(im2col_invocations() - before, 1);
+    assert_eq!(outcome.stats.analog_views, 2, "two dense quantization points");
+
+    // per-cell runs pay that conv im2col once each
+    let before = im2col_invocations();
+    for cell in &cells {
+        let _ = quantize_network(&net, &x, &cell.pipeline_config(true, 1));
+    }
+    assert_eq!(im2col_invocations() - before, cells.len());
+}
+
+#[test]
+fn sweep_function_reports_shared_seconds_and_grid_order() {
+    let (net, tr, te) = trained_mlp();
+    let x = tr.x.rows_slice(0, 80);
+    let cfg = SweepConfig {
+        levels: vec![3],
+        c_alphas: vec![2.0, 3.0],
+        methods: vec![Method::Gpfq, Method::Msq],
+        fc_only: false,
+        workers: 2,
+        topk: false,
+    };
+    let res = sweep(&net, &x, &te, &cfg);
+    assert_eq!(res.points.len(), 4);
+    // canonical grid order: method-major, then M, then C_alpha
+    let want: Vec<(Method, f64)> = vec![
+        (Method::Gpfq, 2.0),
+        (Method::Gpfq, 3.0),
+        (Method::Msq, 2.0),
+        (Method::Msq, 3.0),
+    ];
+    for (p, (m, c)) in res.points.iter().zip(&want) {
+        assert_eq!(p.method, *m);
+        assert_eq!(p.c_alpha_requested, *c);
+    }
+    assert!(res.shared_seconds >= 0.0);
+    assert!(res.points.iter().all(|p| p.seconds >= 0.0));
+}

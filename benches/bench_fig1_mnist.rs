@@ -3,15 +3,25 @@
 //! then accuracy as layers are quantized successively at the best C_alpha).
 //!
 //! Run with `cargo bench --bench bench_fig1_mnist`.  Emits
-//! `results/fig1a_mnist.csv` and `results/fig1b_mnist.csv`.
+//! `results/fig1a_mnist.csv` and `results/fig1b_mnist.csv`.  Set
+//! `BENCH_FAST=1` (CI) for a seconds-scale run on shrunken sizes.
+//!
+//! Figure 1a now carries the paper's **error bars**: the sweep runs over T
+//! independent quantization sample sets (`TrialSet`: trial 0 is the
+//! training prefix, further trials draw distinct rows on their own PCG
+//! streams) and each cell reports mean ± std over the trials.  The trial
+//! stats also land in `BENCH_sweep_mnist.json` via `gpfq sweep --json
+//! --trials ...` in CI's bench-smoke job.
 //!
 //! Expected shape (paper): GPFQ stays near the analog accuracy over a wide
-//! band of C_alpha while MSQ swings wildly; in Fig 1b GPFQ recovers after
-//! intermediate-layer dips (error correction), MSQ does not.
+//! band of C_alpha while MSQ swings wildly — in both the mean and the
+//! trial-to-trial spread; in Fig 1b GPFQ recovers after intermediate-layer
+//! dips (error correction), MSQ does not.
 
 use gpfq::config::preset_mnist;
 use gpfq::coordinator::pipeline::{Method, PipelineConfig};
-use gpfq::coordinator::sweep::{layer_count_sweep, sweep, SweepConfig};
+use gpfq::coordinator::sweep::{layer_count_sweep, sweep_trials, SweepConfig};
+use gpfq::coordinator::TrialSet;
 use gpfq::data::synth::{generate, mnist_like_spec};
 use gpfq::eval::report::acc;
 use gpfq::train::train;
@@ -19,16 +29,27 @@ use gpfq::util::bench::Table;
 use std::time::Instant;
 
 fn main() {
-    let spec = preset_mnist(0);
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let mut spec = preset_mnist(0);
+    if fast {
+        // seconds-scale CI sizing: smaller sample sets and a short schedule;
+        // the model (and thus the C_alpha axis) is unchanged
+        spec.dataset.n_train = 600;
+        spec.dataset.n_test = 300;
+        spec.dataset.n_quant = 96;
+        spec.train.epochs = 2;
+    }
+    let trials_n = if fast { 2 } else { 5 };
     let sspec = mnist_like_spec(spec.seed);
     let train_set = generate(&sspec, spec.dataset.n_train, 0, false);
     let test_set = generate(&sspec, spec.dataset.n_test, 1, false);
     let mut net = spec.build_network();
     eprintln!("[fig1] training {} ...", net.summary());
     train(&mut net, &train_set, &spec.train);
-    let x_quant = train_set.x.rows_slice(0, spec.dataset.n_quant.min(train_set.len()));
+    let n_quant = spec.dataset.n_quant.min(train_set.len());
+    let trials = TrialSet::draw(&train_set.x, n_quant, trials_n, spec.seed);
 
-    // Figure 1a
+    // Figure 1a: mean ± std over T independent quantization sample sets
     let t0 = Instant::now();
     let cfg = SweepConfig {
         levels: vec![3],
@@ -37,13 +58,14 @@ fn main() {
         workers: spec.quant.workers,
         ..Default::default()
     };
-    let res = sweep(&net, &x_quant, &test_set, &cfg);
+    let res = sweep_trials(&net, &trials, &test_set, &cfg);
     let mut fig1a = Table::new(
         &format!(
-            "Figure 1a — MNIST-like MLP ternary accuracy vs C_alpha (analog {})",
+            "Figure 1a — MNIST-like MLP ternary accuracy vs C_alpha, {} trials (analog {})",
+            res.trials,
             acc(res.analog_top1)
         ),
-        &["C_alpha", "GPFQ top-1", "MSQ top-1"],
+        &["C_alpha", "GPFQ mean", "GPFQ std", "MSQ mean", "MSQ std"],
     );
     for &c in &spec.quant.c_alphas {
         let g = res
@@ -56,7 +78,13 @@ fn main() {
             .iter()
             .find(|p| p.method == Method::Msq && p.c_alpha_requested == c)
             .unwrap();
-        fig1a.row(vec![format!("{c}"), acc(g.top1), acc(m.top1)]);
+        fig1a.row(vec![
+            format!("{c}"),
+            acc(g.top1_stats.mean),
+            format!("{:.4}", g.top1_stats.std),
+            acc(m.top1_stats.mean),
+            format!("{:.4}", m.top1_stats.std),
+        ]);
     }
     fig1a.emit("fig1a_mnist");
     println!(
@@ -64,10 +92,32 @@ fn main() {
         res.spread(Method::Gpfq, 3),
         res.spread(Method::Msq, 3)
     );
+    let mean_std = |m: Method| {
+        let stds: Vec<f64> = res
+            .points
+            .iter()
+            .filter(|p| p.method == m)
+            .map(|p| p.top1_stats.std)
+            .collect();
+        stds.iter().sum::<f64>() / stds.len().max(1) as f64
+    };
+    println!(
+        "error bars: mean per-cell std over {} trials — GPFQ {:.4} vs MSQ {:.4}",
+        res.trials,
+        mean_std(Method::Gpfq),
+        mean_std(Method::Msq)
+    );
+    println!(
+        "peak resident (engine-accounted): {:.1} KiB with {} cells in flight",
+        res.peak_resident_bytes as f64 / 1024.0,
+        res.chunk_cells
+    );
 
-    // Figure 1b at each method's best C_alpha, each curve from ONE staged
-    // session run (layer_count_sweep scores the quantized prefixes instead
-    // of re-running the pipeline with capture_checkpoints)
+    // Figure 1b at each method's best C_alpha (trial 0 — the deterministic
+    // prefix sample set), each curve from ONE staged session run
+    // (layer_count_sweep scores the quantized prefixes instead of
+    // re-running the pipeline with capture_checkpoints)
+    let x_quant = trials.sample_set(0);
     let mut fig1b = Table::new(
         "Figure 1b — accuracy vs #layers quantized (best C_alpha per method)",
         &["layers quantized", "GPFQ top-1", "MSQ top-1"],
@@ -81,7 +131,7 @@ fn main() {
             workers: spec.quant.workers,
             ..Default::default()
         };
-        let points = layer_count_sweep(&net, &x_quant, &test_set, &cfg, false).unwrap();
+        let points = layer_count_sweep(&net, x_quant, &test_set, &cfg, false).unwrap();
         curves.push(points.iter().map(|p| p.top1).collect::<Vec<_>>());
     }
     for i in 0..curves[0].len() {

@@ -58,6 +58,7 @@ fn main() {
     );
     let mut curves: Vec<Vec<LayerCountPoint>> = Vec::new();
     let mut second_layer_weights = Vec::new();
+    let mut peak_resident = 0usize;
     for method in [Method::Gpfq, Method::Msq] {
         let cfg = PipelineConfig {
             method,
@@ -70,6 +71,11 @@ fn main() {
             layer_count_sweep_outcome(&net, &x_quant, &test_set, &cfg, false).expect("sweep");
         let idx = out.layer_reports[1].layer_index; // 2nd quantized (conv) layer
         second_layer_weights.push(out.network.layers[idx].weights().unwrap().data.clone());
+        // worst per-layer engine-accounted residency across both sessions,
+        // tracked in the JSON so the memory trajectory accumulates across
+        // PRs next to the sweep engine's grid-level peak
+        peak_resident = peak_resident
+            .max(out.layer_reports.iter().map(|r| r.peak_resident_bytes).max().unwrap_or(0));
         curves.push(points);
     }
     for i in 0..curves[0].len() {
@@ -132,6 +138,7 @@ fn main() {
     root.insert("bench".into(), Json::Str("fig2_layers".into()));
     root.insert("fast".into(), Json::Bool(fast));
     root.insert("analog_top1".into(), Json::Num(analog));
+    root.insert("peak_resident_bytes".into(), Json::Num(peak_resident as f64));
     root.insert("config".into(), Json::Obj(config));
     root.insert("methods".into(), Json::Obj(methods));
     let path = "BENCH_fig2_layers.json";

@@ -34,12 +34,17 @@ fn main() {
         c_alphas: spec.quant.c_alphas.clone(),
         methods: vec![Method::Gpfq, Method::Msq],
         workers: spec.quant.workers,
+        // 4 levels × 5 scalars × 2 methods = 40 cells: exactly the grid
+        // shape the chunk knob exists for — stream 8 cells at a time so
+        // peak residency is bounded by the chunk, not the grid
+        chunk_cells: Some(8),
         ..Default::default()
     };
     eprintln!(
-        "[table1] sweeping {} levels x {} scalars x 2 methods ...",
+        "[table1] sweeping {} levels x {} scalars x 2 methods (chunks of {}) ...",
         cfg.levels.len(),
-        cfg.c_alphas.len()
+        cfg.c_alphas.len(),
+        cfg.chunk_cells.unwrap()
     );
     let res = sweep(&net, &x_quant, &test_set, &cfg);
 
@@ -99,5 +104,11 @@ fn main() {
         .count();
     let total = res.points.len() / 2;
     println!("GPFQ >= MSQ in {wins}/{total} grid cells (paper: uniformly better)");
+    println!(
+        "peak resident (engine-accounted): {:.1} KiB with {} of {} cells in flight",
+        res.peak_resident_bytes as f64 / 1024.0,
+        res.chunk_cells,
+        res.points.len()
+    );
     println!("[table1] total {:.1}s", t0.elapsed().as_secs_f64());
 }

@@ -46,6 +46,9 @@ fn main() {
         fc_only: true,
         workers: spec.quant.workers,
         topk: true,
+        // VGG's FC head dominates the weights, so resident cell networks
+        // are the memory term here: stream half the grid at a time
+        chunk_cells: Some(4),
     };
     let res = sweep(&net, &x_quant, &test_set, &cfg);
 
@@ -91,4 +94,10 @@ fn main() {
         })
         .count();
     println!("GPFQ >= MSQ (both metrics) at {wins}/{} scalars (paper: uniform)", spec.quant.c_alphas.len());
+    println!(
+        "peak resident (engine-accounted): {:.1} KiB with {} of {} cells in flight",
+        res.peak_resident_bytes as f64 / 1024.0,
+        res.chunk_cells,
+        res.points.len()
+    );
 }

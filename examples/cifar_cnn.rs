@@ -40,10 +40,19 @@ fn main() {
         c_alphas: spec.quant.c_alphas.clone(),
         methods: vec![Method::Gpfq, Method::Msq],
         workers: spec.quant.workers,
+        // the Table 1 grid is 40 cells — stream it through the engine in
+        // bounded chunks so peak residency is O(chunk), not O(grid)
+        chunk_cells: Some(8),
         ..Default::default()
     };
     println!("sweeping {}x{} grid x 2 methods ...", cfg.levels.len(), cfg.c_alphas.len());
     let res = sweep(&net, &x_quant, &test_set, &cfg);
+    println!(
+        "peak resident (engine-accounted): {:.1} KiB with {} of {} cells in flight",
+        res.peak_resident_bytes as f64 / 1024.0,
+        res.chunk_cells,
+        res.points.len()
+    );
     let mut table1 = Table::new(
         "Table 1 — CIFAR-like CNN top-1 test accuracy",
         &["bits", "C_alpha", "Analog", "GPFQ", "MSQ"],

@@ -48,9 +48,18 @@ fn main() {
         fc_only: true,
         workers: spec.quant.workers,
         topk: true,
+        // the FC-dominated VGG makes resident cell networks the memory
+        // term: keep only half the grid in flight
+        chunk_cells: Some(4),
     };
     println!("sweeping C_alpha in {:?}, ternary, FC-only ...", cfg.c_alphas);
     let res = sweep(&net, &x_quant, &test_set, &cfg);
+    println!(
+        "peak resident (engine-accounted): {:.1} KiB with {} of {} cells in flight",
+        res.peak_resident_bytes as f64 / 1024.0,
+        res.chunk_cells,
+        res.points.len()
+    );
 
     let mut t = Table::new(
         "Table 2 — ImageNet-like VGG test accuracy (ternary, FC layers only)",

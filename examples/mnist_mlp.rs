@@ -4,13 +4,16 @@
 //!     cargo run --release --example mnist_mlp [-- --paper-scale]
 //!
 //! Figure 1a: ternary test accuracy vs alphabet scalar C_alpha ∈ {1..10}
-//! for GPFQ vs MSQ.  Figure 1b: test accuracy as layers are quantized one
-//! at a time with each method's best C_alpha — GPFQ "error-corrects"
-//! because layer ℓ is quantized against the Ỹ stream of Q^(1..ℓ-1).
+//! for GPFQ vs MSQ, as **mean ± std over 3 independent draws** of the
+//! quantization sample set (the paper's error bars, via `TrialSet`).
+//! Figure 1b: test accuracy as layers are quantized one at a time with
+//! each method's best C_alpha — GPFQ "error-corrects" because layer ℓ is
+//! quantized against the Ỹ stream of Q^(1..ℓ-1).
 
 use gpfq::config::{preset_mnist, preset_mnist_paper};
 use gpfq::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
-use gpfq::coordinator::sweep::{sweep, SweepConfig};
+use gpfq::coordinator::sweep::{sweep_trials, SweepConfig};
+use gpfq::coordinator::TrialSet;
 use gpfq::data::synth::{generate, mnist_like_spec};
 use gpfq::eval::metrics::accuracy;
 use gpfq::eval::report::acc;
@@ -27,9 +30,13 @@ fn main() {
     let mut net = spec.build_network();
     println!("training {} on {} samples ...", net.summary(), train_set.len());
     train(&mut net, &train_set, &spec.train);
-    let x_quant = train_set.x.rows_slice(0, spec.dataset.n_quant.min(train_set.len()));
+    // trial 0 is the training prefix (the deterministic single-trial sample
+    // set); trials 1–2 draw distinct rows on their own PCG streams
+    let n_quant = spec.dataset.n_quant.min(train_set.len());
+    let trials = TrialSet::draw(&train_set.x, n_quant, 3, spec.seed);
+    let x_quant = trials.sample_set(0);
 
-    // ---- Figure 1a: accuracy vs C_alpha, ternary --------------------------
+    // ---- Figure 1a: accuracy vs C_alpha, ternary, mean ± std over trials --
     let cfg = SweepConfig {
         levels: vec![3],
         c_alphas: spec.quant.c_alphas.clone(),
@@ -37,15 +44,23 @@ fn main() {
         workers: spec.quant.workers,
         ..Default::default()
     };
-    let res = sweep(&net, &x_quant, &test_set, &cfg);
+    let res = sweep_trials(&net, &trials, &test_set, &cfg);
     let mut fig1a = Table::new(
-        &format!("Figure 1a — MNIST-like MLP, ternary (analog top-1 {})", acc(res.analog_top1)),
-        &["C_alpha", "GPFQ top-1", "MSQ top-1"],
+        &format!(
+            "Figure 1a — MNIST-like MLP, ternary, {} trials (analog top-1 {})",
+            res.trials,
+            acc(res.analog_top1)
+        ),
+        &["C_alpha", "GPFQ mean±std", "MSQ mean±std"],
     );
     for &c in &spec.quant.c_alphas {
         let g = res.points.iter().find(|p| p.method == Method::Gpfq && p.c_alpha_requested == c).unwrap();
         let m = res.points.iter().find(|p| p.method == Method::Msq && p.c_alpha_requested == c).unwrap();
-        fig1a.row(vec![format!("{c}"), acc(g.top1), acc(m.top1)]);
+        fig1a.row(vec![
+            format!("{c}"),
+            format!("{:.4}±{:.4}", g.top1_stats.mean, g.top1_stats.std),
+            format!("{:.4}±{:.4}", m.top1_stats.mean, m.top1_stats.std),
+        ]);
     }
     fig1a.emit("fig1a_mnist");
     println!(
@@ -68,7 +83,7 @@ fn main() {
             capture_checkpoints: true,
             ..Default::default()
         };
-        let out = quantize_network(&net, &x_quant, &cfg);
+        let out = quantize_network(&net, x_quant, &cfg);
         cols.push(out.checkpoints.iter().map(|net| accuracy(net, &test_set)).collect());
     }
     for i in 0..cols[0].len() {

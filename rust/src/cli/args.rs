@@ -25,6 +25,12 @@ common flags:
   --levels <M>               alphabet size (quantize)
   --workers <n>              worker threads
   --quant-samples <n>        samples used to learn the quantization
+  --trials <T>               independent quantization sample sets; the sweep
+                             reports mean/std/min/max across them (Fig 1a
+                             error bars; trial 0 is the deterministic prefix)
+  --chunk-cells <n>          stream the sweep grid through the engine at most
+                             n cells at a time (bounds peak resident memory;
+                             each chunk re-pays the analog stream once)
   --json <path.json>         write the sweep grid (Fig 1a / Table 1) as JSON
   --save <path.gpfq>         write the quantized model (bit-packed weights)
   --model <path.gpfq>        model file for eval

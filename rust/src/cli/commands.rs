@@ -4,8 +4,9 @@ use crate::error::{bail, Result};
 
 use crate::cli::args::{Args, USAGE};
 use crate::config::{preset_cifar, preset_imagenet, preset_mnist, preset_mnist_paper, ExperimentSpec};
+use crate::coordinator::activation::TrialSet;
 use crate::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
-use crate::coordinator::sweep::{sweep, SweepConfig, SweepPoint, SweepResult};
+use crate::coordinator::sweep::{sweep_trials, SweepConfig, SweepPoint, SweepResult};
 use crate::data::synth;
 use crate::eval::metrics::accuracy;
 use crate::eval::report::acc;
@@ -216,6 +217,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let mut net = spec.build_network();
     println!("training {} ...", spec.name);
     train(&mut net, &tr, &spec.train);
+    let trials_n = args.usize("trials")?.unwrap_or(1).max(1);
     let cfg = SweepConfig {
         levels: spec.quant.levels.clone(),
         c_alphas: spec.quant.c_alphas.clone(),
@@ -223,20 +225,36 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         fc_only: spec.quant.fc_only,
         workers: spec.quant.workers,
         topk: true,
+        chunk_cells: args.usize("chunk-cells")?,
     };
-    let x_quant = tr.x.rows_slice(0, spec.dataset.n_quant.min(tr.len()));
+    let n_quant = spec.dataset.n_quant.min(tr.len());
+    if trials_n > 1 && n_quant == tr.len() {
+        eprintln!(
+            "warning: --trials {trials_n} with --quant-samples >= the training set ({n_quant}): \
+             every trial draws the whole pool, so the error bars will be exactly zero"
+        );
+    }
+    // trial 0 is the training prefix (the pre-trial engine's sample set);
+    // further trials draw distinct rows from the whole training pool
+    let trials = TrialSet::draw(&tr.x, n_quant, trials_n, spec.seed);
     println!(
-        "sweeping {} x {} grid on the shared-session engine ...",
+        "sweeping {} x {} grid over {} trial(s) on the memory-bounded engine ...",
         cfg.levels.len(),
-        cfg.c_alphas.len()
+        cfg.c_alphas.len(),
+        trials.len()
     );
-    let res = sweep(&net, &x_quant, &te, &cfg);
+    let res = sweep_trials(&net, &trials, &te, &cfg);
+    let multi = res.trials > 1;
+    let mut headers = vec!["method", "M", "C_alpha", "top1", "top5", "cell secs"];
+    if multi {
+        headers.push("top1 mean±std [min,max]");
+    }
     let mut t = Table::new(
         &format!("{} sweep (analog top-1 {})", spec.name, acc(res.analog_top1)),
-        &["method", "M", "C_alpha", "top1", "top5", "cell secs"],
+        &headers,
     );
     for p in &res.points {
-        t.row(vec![
+        let mut row = vec![
             format!("{:?}", p.method),
             p.levels.to_string(),
             // the grid coordinate as configured; the f32 the quantizer
@@ -245,14 +263,27 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             acc(p.top1),
             acc(p.top5),
             format!("{:.2}", p.seconds),
-        ]);
+        ];
+        if multi {
+            row.push(format!(
+                "{:.4}±{:.4} [{:.4},{:.4}]",
+                p.top1_stats.mean, p.top1_stats.std, p.top1_stats.min, p.top1_stats.max
+            ));
+        }
+        t.row(row);
     }
     t.emit(&format!("sweep_{}", spec.name));
     println!(
-        "shared analog-stream work: {:.2}s once for {} cells (a per-cell pipeline pays it {} times)",
+        "shared analog-stream work: {:.2}s for {} cells x {} trial(s) (a per-cell pipeline pays it per cell)",
         res.shared_seconds,
         res.points.len(),
-        res.points.len()
+        res.trials
+    );
+    println!(
+        "peak resident (engine-accounted): {:.1} KiB with {} cell(s) in flight{}",
+        res.peak_resident_bytes as f64 / 1024.0,
+        res.chunk_cells,
+        if res.chunk_cells < res.points.len() { " (chunked)" } else { "" }
     );
     for m in [Method::Gpfq, Method::Msq] {
         if let Some(best) = res.best(m) {
@@ -275,10 +306,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 /// The Figure 1a / Table 1 grid as machine-readable JSON (the `--json` flag
-/// of `gpfq sweep`; CI uploads it as an artifact).
+/// of `gpfq sweep`; CI uploads it as an artifact).  Each point carries its
+/// per-trial scores and the mean/std/min/max aggregates (Fig 1a error
+/// bars); the root records the trial count, chunk size and the measured
+/// engine-accounted peak resident bytes.
 fn sweep_json(name: &str, res: &SweepResult) -> crate::util::json::Json {
     use crate::util::json::Json;
     use std::collections::BTreeMap;
+    let trial_arr = |xs: &[f64]| Json::Arr(xs.iter().map(|&v| Json::Num(v)).collect());
     let point_obj = |p: &SweepPoint| {
         let mut o = BTreeMap::new();
         o.insert("method".into(), Json::Str(format!("{:?}", p.method).to_lowercase()));
@@ -287,6 +322,16 @@ fn sweep_json(name: &str, res: &SweepResult) -> crate::util::json::Json {
         o.insert("c_alpha_requested".into(), Json::Num(p.c_alpha_requested));
         o.insert("top1".into(), Json::Num(p.top1));
         o.insert("top5".into(), Json::Num(p.top5));
+        o.insert("top1_trials".into(), trial_arr(&p.top1_trials));
+        o.insert("top5_trials".into(), trial_arr(&p.top5_trials));
+        o.insert("top1_mean".into(), Json::Num(p.top1_stats.mean));
+        o.insert("top1_std".into(), Json::Num(p.top1_stats.std));
+        o.insert("top1_min".into(), Json::Num(p.top1_stats.min));
+        o.insert("top1_max".into(), Json::Num(p.top1_stats.max));
+        o.insert("top5_mean".into(), Json::Num(p.top5_stats.mean));
+        o.insert("top5_std".into(), Json::Num(p.top5_stats.std));
+        o.insert("top5_min".into(), Json::Num(p.top5_stats.min));
+        o.insert("top5_max".into(), Json::Num(p.top5_stats.max));
         o.insert("cell_seconds".into(), Json::Num(p.seconds));
         Json::Obj(o)
     };
@@ -302,6 +347,12 @@ fn sweep_json(name: &str, res: &SweepResult) -> crate::util::json::Json {
     root.insert("analog_top1".into(), Json::Num(res.analog_top1));
     root.insert("analog_top5".into(), Json::Num(res.analog_top5));
     root.insert("shared_seconds".into(), Json::Num(res.shared_seconds));
+    root.insert("trials".into(), Json::Num(res.trials as f64));
+    root.insert("chunk_cells".into(), Json::Num(res.chunk_cells as f64));
+    root.insert(
+        "peak_resident_bytes".into(),
+        Json::Num(res.peak_resident_bytes as f64),
+    );
     root.insert("points".into(), Json::Arr(res.points.iter().map(point_obj).collect()));
     root.insert("best".into(), Json::Obj(best));
     Json::Obj(root)
@@ -339,10 +390,14 @@ mod tests {
 
     #[test]
     fn sweep_json_shape() {
+        use crate::coordinator::sweep::TrialStats;
         let res = SweepResult {
             analog_top1: 0.9,
             analog_top5: 0.95,
             shared_seconds: 1.5,
+            trials: 2,
+            chunk_cells: 1,
+            peak_resident_bytes: 4096,
             points: vec![SweepPoint {
                 method: Method::Gpfq,
                 levels: 3,
@@ -350,6 +405,10 @@ mod tests {
                 c_alpha_requested: 2.0,
                 top1: 0.8,
                 top5: 0.85,
+                top1_trials: vec![0.8, 0.7],
+                top5_trials: vec![0.85, 0.8],
+                top1_stats: TrialStats::from_samples(&[0.8, 0.7]),
+                top5_stats: TrialStats::from_samples(&[0.85, 0.8]),
                 seconds: 0.2,
             }],
         };
@@ -357,10 +416,24 @@ mod tests {
         let parsed = crate::util::json::parse(&doc.to_string()).unwrap();
         assert_eq!(parsed.get("experiment").as_str(), Some("demo"));
         assert_eq!(parsed.get("analog_top1").as_f64(), Some(0.9));
+        assert_eq!(parsed.get("trials").as_f64(), Some(2.0));
+        assert_eq!(parsed.get("chunk_cells").as_f64(), Some(1.0));
+        assert_eq!(parsed.get("peak_resident_bytes").as_f64(), Some(4096.0));
         let pts = parsed.get("points").as_arr().unwrap();
         assert_eq!(pts.len(), 1);
         assert_eq!(pts[0].get("method").as_str(), Some("gpfq"));
         assert_eq!(pts[0].get("c_alpha_requested").as_f64(), Some(2.0));
+        // per-trial scores and aggregates ride along for the error bars
+        let trials = pts[0].get("top1_trials").as_arr().unwrap();
+        assert_eq!(trials.len(), 2);
+        assert_eq!(trials[0].as_f64(), Some(0.8));
+        assert!((pts[0].get("top1_mean").as_f64().unwrap() - 0.75).abs() < 1e-12);
+        assert!(pts[0].get("top1_std").as_f64().unwrap() > 0.0);
+        assert_eq!(pts[0].get("top1_min").as_f64(), Some(0.7));
+        assert_eq!(pts[0].get("top1_max").as_f64(), Some(0.8));
+        // top-5 (the Table 2 metric) gets the same whiskers
+        assert_eq!(pts[0].get("top5_min").as_f64(), Some(0.8));
+        assert_eq!(pts[0].get("top5_max").as_f64(), Some(0.85));
         assert_eq!(parsed.get("best").get("gpfq").get("top1").as_f64(), Some(0.8));
     }
 

@@ -32,6 +32,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::scheduler::{run_jobs, SchedulerConfig};
+use crate::data::rng::Pcg;
 use crate::error::{Error, Result};
 use crate::nn::matrix::Matrix;
 use crate::nn::network::Network;
@@ -61,7 +62,9 @@ impl StreamViews {
     }
 }
 
-fn mat_bytes(m: &Matrix) -> usize {
+/// Engine-accounted bytes of one activation/view matrix — the unit every
+/// resident-bytes figure in the coordinator is built from.
+pub(crate) fn mat_bytes(m: &Matrix) -> usize {
     m.data.len() * std::mem::size_of::<f32>()
 }
 
@@ -170,6 +173,86 @@ impl ActivationStore {
     }
 }
 
+/// The multi-trial layer above [`AnalogStream`]: T independent quantization
+/// sample sets, one analog stream each.
+///
+/// The paper's Figure 1a and Tables 1–2 report quantization error as
+/// mean ± spread over multiple random draws of the quantization sample set
+/// — draw-to-draw variance is a first-class property of path-following
+/// quantizers.  A `TrialSet` fixes those draws **up front, on the caller's
+/// thread**, so the trial streams are deterministic and can never depend on
+/// worker count or job scheduling:
+///
+/// * **trial 0 is always the deterministic prefix of the pool** — exactly
+///   the sample set the single-trial engine used — so every multi-trial
+///   sweep is bit-comparable to single-trial history on its trial 0;
+/// * each trial t ≥ 1 draws `n_quant` *distinct* pool rows (sorted, so the
+///   set is an ordered subsample) with its own PCG stream keyed by
+///   `(seed, t)` — non-overlapping sequences by construction, stable under
+///   adding more trials (trial t's draw never depends on T).
+///
+/// The sweep engine runs the whole (method × M × C_alpha) grid once per
+/// trial, paying one analog stream per trial per cell-chunk and reusing
+/// the grid cells across trials.
+pub struct TrialSet {
+    sets: Vec<Arc<Matrix>>,
+}
+
+/// PCG stream namespace for trial draws, offset so trial streams can never
+/// collide with the dataset-generation streams (0, 1) or the trainer's.
+const TRIAL_STREAM_BASE: u64 = 0x5EED_CE11;
+
+impl TrialSet {
+    /// A single-trial set holding exactly `x_quant` — the adapter that runs
+    /// the pre-trial API (`sweep(net, x_quant, ..)`) on the trial engine.
+    pub fn single(x_quant: &Matrix) -> TrialSet {
+        TrialSet { sets: vec![Arc::new(x_quant.clone())] }
+    }
+
+    /// Draw `trials` sample sets of `n_quant` rows from `pool` (rows are
+    /// samples; typically the training set).  Trial 0 is `pool`'s first
+    /// `n_quant` rows verbatim; later trials are independent distinct-row
+    /// draws on per-trial PCG streams.
+    ///
+    /// Degenerate case: `n_quant == pool.rows` makes every draw the whole
+    /// pool (a sorted distinct draw of n from n is the prefix), so all T
+    /// trials are identical and every across-trial spread is exactly zero.
+    /// The draw stays well-defined — callers wanting real error bars must
+    /// hand in a pool strictly larger than `n_quant` (the CLI warns).
+    pub fn draw(pool: &Matrix, n_quant: usize, trials: usize, seed: u64) -> TrialSet {
+        assert!(trials >= 1, "need at least one trial");
+        assert!(
+            (1..=pool.rows).contains(&n_quant),
+            "n_quant {} vs pool rows {}",
+            n_quant,
+            pool.rows
+        );
+        let mut sets = Vec::with_capacity(trials);
+        sets.push(Arc::new(pool.rows_slice(0, n_quant)));
+        for t in 1..trials {
+            let mut rng = Pcg::new(seed, TRIAL_STREAM_BASE.wrapping_add(t as u64));
+            let mut idx = rng.choose_indices(pool.rows, n_quant);
+            idx.sort_unstable();
+            sets.push(Arc::new(pool.gather_rows(&idx)));
+        }
+        TrialSet { sets }
+    }
+
+    /// Number of trials.
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+
+    /// Trial t's quantization sample batch.
+    pub fn sample_set(&self, t: usize) -> &Matrix {
+        &self.sets[t]
+    }
+}
+
 /// The sweep engine's **shared analog stream**: one owner, many consumers.
 ///
 /// A cross-validation grid (method × M × C_α, paper Section 6) quantizes
@@ -236,6 +319,12 @@ impl AnalogStream {
     pub fn views_built(&self) -> usize {
         self.views
     }
+
+    /// Engine-accounted bytes of the current analog buffer (counted once,
+    /// however many undiverged cells ride it zero-copy).
+    pub fn resident_bytes(&self) -> usize {
+        mat_bytes(&self.y)
+    }
 }
 
 /// One sweep cell's quantized stream Ỹ.  `None` while the cell still shares
@@ -279,6 +368,13 @@ impl CellStream {
     /// installed Q^(ℓ), so the output can no longer equal the analog stream.
     pub fn advance_from_view(&mut self, qnet: &Network, i: usize, view: &Matrix, batch: usize) {
         self.yq = Some(Arc::new(qnet.apply_layer_from_walk(i, view, batch)));
+    }
+
+    /// Engine-accounted bytes this cell's stream holds beyond the shared
+    /// analog buffer: zero while the cell still rides the analog prefix,
+    /// its own activation buffer once diverged.
+    pub fn resident_bytes(&self) -> usize {
+        self.yq.as_ref().map(|yq| mat_bytes(yq)).unwrap_or(0)
     }
 }
 
@@ -397,6 +493,56 @@ mod tests {
         let tyq1 = cell.view(&net, 2, &ty1);
         assert!(!Arc::ptr_eq(&ty1, &tyq1), "diverged cell builds its own view");
         assert_eq!(tyq1.data, net.quantization_walk(2, &want_yq).data);
+    }
+
+    #[test]
+    fn trial_set_prefix_and_deterministic_draws() {
+        let mut rng = Pcg::seed(9);
+        let pool = Matrix::from_vec(20, 6, rng.normal_vec(120));
+        let ts = TrialSet::draw(&pool, 8, 3, 77);
+        assert_eq!(ts.len(), 3);
+        // trial 0 is the pool prefix — the single-trial engine's sample set
+        assert_eq!(ts.sample_set(0).data, pool.rows_slice(0, 8).data);
+        // draws are reproducible ...
+        let again = TrialSet::draw(&pool, 8, 3, 77);
+        for t in 0..3 {
+            assert_eq!(ts.sample_set(t).data, again.sample_set(t).data, "trial {t}");
+        }
+        // ... prefix-stable in the trial count (trial t never depends on T)
+        let more = TrialSet::draw(&pool, 8, 5, 77);
+        for t in 0..3 {
+            assert_eq!(ts.sample_set(t).data, more.sample_set(t).data, "trial {t}");
+        }
+        // ... and distinct across trials and seeds
+        assert_ne!(ts.sample_set(1).data, ts.sample_set(2).data);
+        let other_seed = TrialSet::draw(&pool, 8, 3, 78);
+        assert_ne!(ts.sample_set(1).data, other_seed.sample_set(1).data);
+        // every trial has the right shape
+        for t in 0..3 {
+            assert_eq!(ts.sample_set(t).rows, 8);
+            assert_eq!(ts.sample_set(t).cols, 6);
+        }
+        // single(): exactly the given batch
+        let one = TrialSet::single(&pool);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one.sample_set(0).data, pool.data);
+    }
+
+    #[test]
+    fn stream_resident_bytes_account_divergence() {
+        let net = mnist_mlp(7, 8, &[5], 2);
+        let mut rng = Pcg::seed(8);
+        let x = Matrix::from_vec(3, 8, rng.normal_vec(24));
+        let mut analog = AnalogStream::new(&x);
+        assert_eq!(analog.resident_bytes(), 24 * 4);
+        let mut cell = CellStream::shared();
+        assert_eq!(cell.resident_bytes(), 0, "shared cell holds no extra buffer");
+        let ty = analog.view(&net, 0);
+        let mut qnet = net.clone();
+        let w = net.layers[0].weights().unwrap();
+        qnet.set_weights(0, w.map(|v| v.signum()));
+        cell.advance_from_view(&qnet, 0, &ty, analog.batch());
+        assert_eq!(cell.resident_bytes(), 3 * 5 * 4, "diverged cell owns its buffer");
     }
 
     #[test]

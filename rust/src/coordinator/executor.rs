@@ -2,6 +2,14 @@
 //! the AOT Pallas artifact; the native path runs `quant::gpfq`.  Every
 //! block records which path served it, and integration tests assert the
 //! two agree to float tolerance.
+//!
+//! Nesting: the sweep engine dispatches whole grid cells as jobs on the
+//! outer worker pool and hands each cell job a **narrowed** native executor
+//! (`Executor::native(workers / cells)`), so the inner neuron-block
+//! dispatch takes `run_jobs`' single-worker serial fast path whenever the
+//! grid (or cell chunk) is at least as wide as the pool — no nested thread
+//! pools, and the block partition cannot change bits (the PR-1 determinism
+//! contract), so the worker split is a pure scheduling choice.
 
 use std::sync::Arc;
 
@@ -33,7 +41,9 @@ pub struct Executor {
 }
 
 impl Executor {
-    /// Native-only executor.
+    /// Native-only executor.  Cheap to construct (no runtime probe) — the
+    /// sweep engine builds one per cell job at every quantization point.
+    #[inline]
     pub fn native(workers: usize) -> Executor {
         Executor {
             runtime: None,

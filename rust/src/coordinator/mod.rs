@@ -1,10 +1,12 @@
 //! L3 coordinator — the system around the paper's algorithm: the zero-copy
-//! two-stream [`activation`] engine feeding a layer-sequential,
+//! two-stream [`activation`] engine (plus the multi-trial
+//! [`activation::TrialSet`] layer above it) feeding a layer-sequential,
 //! neuron-parallel quantization [`pipeline`] (staged as a
-//! [`pipeline::QuantizeSession`]), a bounded worker-pool [`scheduler`],
+//! [`pipeline::QuantizeSession`]), a bounded worker-pool [`scheduler`]
+//! with fused two-stage job graphs ([`scheduler::run_chained_jobs`]),
 //! dual execution backends ([`executor`]: PJRT artifacts / native Rust),
-//! the Section 6 cross-validation [`sweep`] orchestrator, and the frozen
-//! pre-refactor [`reference`] oracle that pins bit-parity.
+//! the Section 6 memory-bounded multi-trial [`sweep`] orchestrator, and
+//! the frozen pre-refactor [`reference`] oracle that pins bit-parity.
 
 pub mod activation;
 pub mod executor;
@@ -13,14 +15,15 @@ pub mod reference;
 pub mod scheduler;
 pub mod sweep;
 
-pub use activation::{ActivationStore, AnalogStream, CellStream, StreamViews};
+pub use activation::{ActivationStore, AnalogStream, CellStream, StreamViews, TrialSet};
 pub use executor::{Executor, Path};
 pub use pipeline::{
     quantize_network, try_quantize_network, Method, PipelineConfig, QuantOutcome, QuantizeSession,
 };
 pub use reference::reference_quantize_network;
-pub use scheduler::{run_jobs, SchedulerConfig};
+pub use scheduler::{pool_seedings, run_chained_jobs, run_jobs, SchedulerConfig};
 pub use sweep::{
-    layer_count_sweep, layer_count_sweep_outcome, sweep, LayerCountPoint, SweepCell, SweepConfig,
-    SweepEngineStats, SweepOutcome, SweepPoint, SweepResult, SweepSession,
+    layer_count_sweep, layer_count_sweep_outcome, sweep, sweep_trials, LayerCountPoint,
+    ScoredOutcome, SweepCell, SweepConfig, SweepEngineStats, SweepOutcome, SweepPoint,
+    SweepResult, SweepSession, TrialStats,
 };

@@ -29,7 +29,7 @@ use std::time::Instant;
 
 use crate::error::Result;
 
-use crate::coordinator::activation::ActivationStore;
+use crate::coordinator::activation::{mat_bytes, ActivationStore};
 use crate::coordinator::executor::{Executor, Path};
 use crate::nn::matrix::Matrix;
 use crate::nn::network::{Layer, Network};
@@ -322,11 +322,11 @@ impl<'a> QuantizeSession<'a> {
 
         let aug_bytes = if augment_bias {
             let shared_aug = Arc::ptr_eq(&ty, &tyq);
-            ty.data.len() * 4 + if shared_aug { 0 } else { tyq.data.len() * 4 }
+            mat_bytes(&ty) + if shared_aug { 0 } else { mat_bytes(&tyq) }
         } else {
             0
         };
-        let weight_bytes = 2 * w.data.len() * 4; // W and Q
+        let weight_bytes = 2 * mat_bytes(&w); // W and Q
         peak_bytes = peak_bytes.max(views.bytes() + aug_bytes + weight_bytes);
 
         // ---- dispatch: neuron blocks to the executor -----------------------

@@ -9,10 +9,30 @@
 //!
 //! Failure semantics: the first job error flips a cancel flag; remaining
 //! queued jobs are skipped and the error is propagated to the caller.
+//!
+//! Two dispatch shapes are offered: [`run_jobs`] (one homogeneous phase)
+//! and [`run_chained_jobs`] (a two-stage fused job graph: each item's
+//! stage-B job is enqueued *by the worker that finished its stage-A job*,
+//! on the same pool, so the pool never drains between the two phases —
+//! the sweep engine chains each grid cell's scoring job behind its final
+//! quantization job this way).  [`pool_seedings`] counts actual thread-pool
+//! spawns so tests can pin "the pool was seeded once for both phases".
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
+
+/// Process-wide count of worker-pool seedings (thread scopes actually
+/// spawned; the single-worker serial fast path never seeds a pool).  Tests
+/// pin fused-graph behavior with deltas of this counter — e.g. "quantize
+/// and score ran on ONE seeding, the pool was not re-seeded between
+/// phases".  Monotonic, never reset.
+static POOL_SEEDINGS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total pools seeded by this process so far (see [`POOL_SEEDINGS`]).
+pub fn pool_seedings() -> usize {
+    POOL_SEEDINGS.load(Ordering::Relaxed)
+}
 
 /// Scheduler configuration.
 #[derive(Debug, Clone, Copy)]
@@ -70,6 +90,7 @@ where
         return Ok(out);
     }
 
+    POOL_SEEDINGS.fetch_add(1, Ordering::Relaxed);
     let queue = Queue {
         jobs: Mutex::new(VecDeque::new()),
         available: Condvar::new(),
@@ -148,6 +169,154 @@ where
     Ok(out)
 }
 
+/// One queued unit of a two-stage job graph.
+enum Stage<J, M> {
+    A(J),
+    B(M),
+}
+
+/// Run a **fused two-stage job graph**: every item flows through
+/// `stage_a` and then `stage_b`, but unlike two [`run_jobs`] calls there is
+/// no barrier and no second pool: the worker that finishes item i's stage-A
+/// job pushes its stage-B job onto the *same* queue (front, so intermediates
+/// are retired eagerly and their memory freed), and the pool is seeded
+/// exactly once for both phases.  A-jobs from the producer still respect
+/// the backpressure cap; worker-pushed B-jobs bypass it (workers never
+/// block on `space`, which is what makes the graph deadlock-free).
+///
+/// Outputs come back in input order regardless of completion order, and the
+/// per-item values are identical to `stage_b(i, stage_a(i, job)?)` run
+/// serially — the fusion changes scheduling, never bits.  First error (from
+/// either stage) cancels the remaining queue, exactly like [`run_jobs`].
+pub fn run_chained_jobs<J, M, T, E, FA, FB>(
+    cfg: SchedulerConfig,
+    jobs: Vec<J>,
+    stage_a: FA,
+    stage_b: FB,
+) -> Result<Vec<T>, E>
+where
+    J: Send,
+    M: Send,
+    T: Send,
+    E: Send,
+    FA: Fn(usize, J) -> Result<M, E> + Sync,
+    FB: Fn(usize, M) -> Result<T, E> + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = cfg.workers.max(1).min(n);
+    if workers == 1 {
+        // serial fast path: still chained per item (B(i) runs before A(i+1)),
+        // still identical results
+        let mut out = Vec::with_capacity(n);
+        for (i, j) in jobs.into_iter().enumerate() {
+            let m = stage_a(i, j)?;
+            out.push(stage_b(i, m)?);
+        }
+        return Ok(out);
+    }
+
+    POOL_SEEDINGS.fetch_add(1, Ordering::Relaxed);
+    let queue = Queue {
+        jobs: Mutex::new(VecDeque::new()),
+        available: Condvar::new(),
+        space: Condvar::new(),
+        closed: AtomicBool::new(false),
+        cancelled: AtomicBool::new(false),
+        cap: cfg.queue_cap.max(1),
+    };
+    let results: Mutex<Vec<Option<Result<T, E>>>> = Mutex::new((0..n).map(|_| None).collect());
+
+    std::thread::scope(|s| {
+        let queue = &queue;
+        let results = &results;
+        let stage_a = &stage_a;
+        let stage_b = &stage_b;
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            handles.push(s.spawn(move || loop {
+                let job = {
+                    let mut q = queue.jobs.lock().unwrap();
+                    loop {
+                        if let Some(j) = q.pop_front() {
+                            queue.space.notify_one();
+                            break Some(j);
+                        }
+                        // `closed` means the producer admitted every A-job;
+                        // a worker still running an A-job keeps the pool
+                        // alive for the B-job it is about to push, so an
+                        // empty closed queue is safe to exit on: any
+                        // not-yet-pushed B belongs to a live worker that
+                        // will pop it itself.
+                        if queue.closed.load(Ordering::Acquire) {
+                            break None;
+                        }
+                        q = queue.available.wait(q).unwrap();
+                    }
+                };
+                let Some((idx, stage)) = job else { return };
+                if queue.cancelled.load(Ordering::Acquire) {
+                    continue; // drain without running
+                }
+                match stage {
+                    Stage::A(input) => match stage_a(idx, input) {
+                        Ok(mid) => {
+                            let mut q = queue.jobs.lock().unwrap();
+                            // front of the queue, past the cap: retire the
+                            // in-flight item before admitting new work
+                            q.push_front((idx, Stage::B(mid)));
+                            drop(q);
+                            queue.available.notify_one();
+                        }
+                        Err(e) => {
+                            queue.cancelled.store(true, Ordering::Release);
+                            results.lock().unwrap()[idx] = Some(Err(e));
+                        }
+                    },
+                    Stage::B(mid) => {
+                        let res = stage_b(idx, mid);
+                        if res.is_err() {
+                            queue.cancelled.store(true, Ordering::Release);
+                        }
+                        results.lock().unwrap()[idx] = Some(res);
+                    }
+                }
+            }));
+        }
+        // producer with backpressure (A-jobs only)
+        for (i, j) in jobs.into_iter().enumerate() {
+            let mut q = queue.jobs.lock().unwrap();
+            while q.len() >= queue.cap {
+                q = queue.space.wait(q).unwrap();
+            }
+            q.push_back((i, Stage::A(j)));
+            drop(q);
+            queue.available.notify_one();
+        }
+        queue.closed.store(true, Ordering::Release);
+        queue.available.notify_all();
+        for h in handles {
+            h.join().expect("scheduler worker panicked");
+        }
+    });
+
+    let slots = results.into_inner().unwrap();
+    let mut out = Vec::with_capacity(n);
+    for slot in slots {
+        match slot {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            None => continue, // skipped due to cancellation
+        }
+    }
+    if out.len() != n {
+        unreachable!("chained scheduler lost results without an error");
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,5 +386,101 @@ mod tests {
         for w in [2, 4, 16] {
             assert_eq!(run(w), base, "workers={w}");
         }
+    }
+
+    #[test]
+    fn chained_jobs_match_serial_composition() {
+        let jobs: Vec<usize> = (0..80).collect();
+        let want: Vec<usize> = jobs.iter().map(|j| (j * 3 + 1) * 2).collect();
+        for workers in [1usize, 2, 5, 16] {
+            let cfg = SchedulerConfig { workers, queue_cap: 4 };
+            let out: Vec<usize> = run_chained_jobs(
+                cfg,
+                jobs.clone(),
+                |_, j| Ok::<_, ()>(j * 3 + 1),
+                |_, m| Ok::<_, ()>(m * 2),
+            )
+            .unwrap();
+            assert_eq!(out, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn chained_jobs_seed_the_pool_once_for_both_phases() {
+        let cfg = SchedulerConfig { workers: 4, queue_cap: 4 };
+        let before = pool_seedings();
+        let _: Vec<usize> = run_chained_jobs(
+            cfg,
+            (0..32).collect(),
+            |_, j: usize| Ok::<_, ()>(j + 1),
+            |_, m| Ok::<_, ()>(m * 2),
+        )
+        .unwrap();
+        // other tests run concurrently in this binary, so the delta is a
+        // lower-bounded exact-on-quiet assertion: at least our one seeding
+        // happened, and our own call contributed exactly one (the two
+        // run_jobs calls an unfused pair would make contribute two — the
+        // exact end-to-end pin lives in tests/test_sweep_grid.rs under its
+        // serial lock)
+        assert!(pool_seedings() >= before + 1);
+        // serial fast path never seeds
+        let before = pool_seedings();
+        let _: Vec<usize> = run_chained_jobs(
+            SchedulerConfig { workers: 1, queue_cap: 4 },
+            (0..8).collect(),
+            |_, j: usize| Ok::<_, ()>(j),
+            |_, m| Ok::<_, ()>(m),
+        )
+        .unwrap();
+        let _: Vec<usize> =
+            run_jobs(SchedulerConfig { workers: 1, queue_cap: 4 }, (0..8).collect(), |_, j| {
+                Ok::<usize, ()>(j)
+            })
+            .unwrap();
+        // no thread scope was spawned by either serial call; concurrent
+        // tests may have seeded pools of their own, so only check that the
+        // counter is monotone (the exact zero-delta pin is in the serial
+        // integration tests)
+        assert!(pool_seedings() >= before);
+    }
+
+    #[test]
+    fn chained_jobs_propagate_stage_a_and_stage_b_errors() {
+        let cfg = SchedulerConfig { workers: 3, queue_cap: 4 };
+        let res: Result<Vec<usize>, String> = run_chained_jobs(
+            cfg,
+            (0..100).collect(),
+            |_, j| if j == 7 { Err(format!("a {j}")) } else { Ok(j) },
+            |_, m| Ok(m),
+        );
+        assert_eq!(res.unwrap_err(), "a 7");
+        let res: Result<Vec<usize>, String> = run_chained_jobs(
+            cfg,
+            (0..100).collect(),
+            |_, j| Ok(j),
+            |_, m| if m == 11 { Err(format!("b {m}")) } else { Ok(m) },
+        );
+        assert_eq!(res.unwrap_err(), "b 11");
+    }
+
+    #[test]
+    fn chained_jobs_survive_backpressure_and_empty_input() {
+        // cap 1 with worker-pushed B jobs bypassing it: must not deadlock
+        let cfg = SchedulerConfig { workers: 2, queue_cap: 1 };
+        let out: Vec<usize> = run_chained_jobs(
+            cfg,
+            (0..40).collect(),
+            |_, j: usize| {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                Ok::<_, ()>(j)
+            },
+            |_, m| Ok::<_, ()>(m + 1),
+        )
+        .unwrap();
+        assert_eq!(out, (1..41).collect::<Vec<_>>());
+        let none: Vec<usize> =
+            run_chained_jobs(cfg, Vec::new(), |_, j: usize| Ok::<_, ()>(j), |_, m| Ok::<_, ()>(m))
+                .unwrap();
+        assert!(none.is_empty());
     }
 }

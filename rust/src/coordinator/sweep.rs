@@ -6,37 +6,56 @@
 //! each quantized prefix instead of re-running the full pipeline per layer
 //! count.
 //!
-//! The grid runs on the **shared-session engine** ([`SweepSession`]): every
-//! cell of the (method × M × C_alpha) grid quantizes the *same* analog
-//! network against the *same* sample batch, so the analog activation stream
-//! `Y = Φ^(ℓ-1)(X)` and each layer's walk-order view (the im2col patch
-//! matrix for conv layers) are materialized **once per layer per sweep**
+//! The grid runs on the **memory-bounded multi-trial engine**:
+//!
+//! * **Trials** ([`crate::coordinator::activation::TrialSet`]): the grid
+//!   runs over T independent quantization sample sets — one analog stream
+//!   per trial, walk views built once per trial per layer, the grid cells
+//!   reused across trials — and every [`SweepPoint`] aggregates
+//!   mean/std/min/max across trials (the paper's Figure 1a error bars).
+//!   Trial 0 is always the pool prefix, bit-identical to a single-trial
+//!   run.
+//! * **Chunked cells** ([`SweepConfig::chunk_cells`]): cells stream through
+//!   the grid in bounded-size chunks; each chunk re-pays the analog stream
+//!   once, so peak resident bytes are O(chunk), not O(grid).  The measured
+//!   engine-accounted peak is surfaced in
+//!   [`SweepResult::peak_resident_bytes`].
+//! * **Fused fan-out** ([`SweepSession::run_scored`] on
+//!   [`crate::coordinator::scheduler::run_chained_jobs`]): each cell's
+//!   scoring job is chained behind its final quantization job on ONE
+//!   worker-pool seeding — the pool never drains between the quantize and
+//!   score phases, and a cell's network dies the moment its score exists.
+//!
+//! Within one chunk the shared-session contract of PR 3 holds unchanged:
+//! every cell quantizes the *same* analog network against the *same* sample
+//! batch, so the analog activation stream `Y = Φ^(ℓ-1)(X)` and each layer's
+//! walk-order view (the im2col patch matrix for conv layers) are
+//! materialized **once per layer per chunk**
 //! ([`crate::coordinator::activation::AnalogStream`]) and shared zero-copy
 //! (`Arc`) across cells.  Each GPFQ cell keeps only its own quantized
 //! stream ([`crate::coordinator::activation::CellStream`]), which rides the
-//! analog buffer until the cell's first installed Q diverges it — the
-//! single-run two-stream contract of PR 2, generalized to N consumers —
-//! while MSQ cells (data-free) skip stream work entirely.  Cells fan out
-//! as jobs on the existing worker-pool scheduler; results come back in grid
-//! order, so the sweep is deterministic for any worker count and
-//! bit-identical to per-cell [`quantize_network`] runs
-//! (`tests/test_sweep_grid.rs` pins both claims).
+//! analog buffer until the cell's first installed Q diverges it, while MSQ
+//! cells (data-free) skip stream work entirely.  Results come back in grid
+//! order, so the sweep is deterministic for any worker count and chunk
+//! size, and bit-identical to per-cell [`quantize_network`] runs
+//! (`tests/test_sweep_grid.rs` pins all of it).
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::activation::{AnalogStream, CellStream};
+use crate::coordinator::activation::{mat_bytes, AnalogStream, CellStream, TrialSet};
 use crate::coordinator::executor::Executor;
 use crate::coordinator::pipeline::{
     dispatch_layer_quantizer, layer_selected, Method, PipelineConfig, QuantOutcome,
     QuantizeSession,
 };
-use crate::coordinator::scheduler::{run_jobs, SchedulerConfig};
+use crate::coordinator::scheduler::{run_chained_jobs, run_jobs, SchedulerConfig};
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
 use crate::eval::metrics::{accuracy, topk_accuracy};
 use crate::nn::matrix::Matrix;
 use crate::nn::network::Network;
+use crate::util::stats::{mean, stddev};
 
 /// One grid cell of the (method × M × C_alpha) sweep.  Constructing a cell
 /// is the **config boundary** where the f64 grid coordinate is explicitly
@@ -72,6 +91,32 @@ impl SweepCell {
     }
 }
 
+/// Mean/spread aggregates of one score across trials.  NaN-scored trials
+/// are excluded (the policy [`SweepResult::best`] established); all-NaN
+/// collapses every field to NaN rather than inventing numbers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrialStats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl TrialStats {
+    pub fn from_samples(xs: &[f64]) -> TrialStats {
+        let finite: Vec<f64> = xs.iter().copied().filter(|v| v.is_finite()).collect();
+        if finite.is_empty() {
+            return TrialStats { mean: f64::NAN, std: f64::NAN, min: f64::NAN, max: f64::NAN };
+        }
+        TrialStats {
+            mean: mean(&finite),
+            std: stddev(&finite),
+            min: finite.iter().copied().fold(f64::INFINITY, f64::min),
+            max: finite.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
 /// One grid cell result.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
@@ -84,11 +129,20 @@ pub struct SweepPoint {
     /// the low bits when the requested value is not representable in f32;
     /// grid lookups key on this
     pub c_alpha_requested: f64,
+    /// trial 0's scores — the pool-prefix sample set, bit-identical to what
+    /// a single-trial engine reports, so history and parity oracles keep
+    /// comparing against these
     pub top1: f64,
     pub top5: f64,
-    /// seconds attributable to this cell alone (its quantize dispatch and
-    /// quantized-stream advances); the analog-stream work shared by the
-    /// whole grid is in [`SweepResult::shared_seconds`]
+    /// per-trial scores, `top1_trials[0] == top1` (length = trial count)
+    pub top1_trials: Vec<f64>,
+    pub top5_trials: Vec<f64>,
+    /// mean ± spread across trials (the paper's error bars)
+    pub top1_stats: TrialStats,
+    pub top5_stats: TrialStats,
+    /// seconds attributable to this cell alone (its quantize dispatches and
+    /// quantized-stream advances), summed across trials; the analog-stream
+    /// work shared by the whole grid is in [`SweepResult::shared_seconds`]
     pub seconds: f64,
 }
 
@@ -105,17 +159,26 @@ impl SweepPoint {
 pub struct SweepResult {
     pub analog_top1: f64,
     pub analog_top5: f64,
-    /// analog-stream + shared-view seconds, paid once for the whole grid
-    /// (a per-cell pipeline would pay this per cell)
+    /// analog-stream + shared-view seconds, paid once per trial per chunk
+    /// (a per-cell pipeline would pay it once per cell per trial)
     pub shared_seconds: f64,
+    /// number of quantization sample sets the grid ran over
+    pub trials: usize,
+    /// cells resident at once (the effective chunk size the sweep used)
+    pub chunk_cells: usize,
+    /// measured engine-accounted peak resident bytes across the whole sweep
+    /// (analog buffer + walk view + per-cell streams and networks) — the
+    /// number `chunk_cells` bounds; not process RSS, but deterministic and
+    /// comparable across configurations and PRs
+    pub peak_resident_bytes: usize,
     pub points: Vec<SweepPoint>,
 }
 
 impl SweepResult {
-    /// Best point for a method (by top-1).  Points whose score came back
-    /// NaN are excluded rather than poisoning the comparison (the pre-fix
-    /// `partial_cmp().unwrap()` panicked here; `total_cmp` alone would rank
-    /// positive NaN above every real score).
+    /// Best point for a method (by trial-0 top-1).  Points whose score came
+    /// back NaN are excluded rather than poisoning the comparison (the
+    /// pre-fix `partial_cmp().unwrap()` panicked here; `total_cmp` alone
+    /// would rank positive NaN above every real score).
     pub fn best(&self, method: Method) -> Option<&SweepPoint> {
         self.points
             .iter()
@@ -125,6 +188,8 @@ impl SweepResult {
 
     /// Accuracy spread (max − min) across C_alpha for a method at fixed M —
     /// the paper's "MSQ is unstable in C_alpha, GPFQ is not" observation.
+    /// Uses trial-0 scores (use [`SweepPoint::top1_stats`] for the
+    /// across-trial spread of a single cell).
     pub fn spread(&self, method: Method, levels: usize) -> f64 {
         let accs: Vec<f64> = self
             .points
@@ -151,6 +216,12 @@ pub struct SweepConfig {
     pub workers: usize,
     /// also compute top-5 (Table 2)
     pub topk: bool,
+    /// stream the grid through the engine at most this many cells at a
+    /// time; each chunk re-pays the analog stream once, in exchange for
+    /// peak resident bytes of O(chunk) instead of O(grid).  `None` (the
+    /// default) keeps the whole grid resident — the fastest configuration
+    /// when it fits.
+    pub chunk_cells: Option<usize>,
 }
 
 impl Default for SweepConfig {
@@ -162,6 +233,7 @@ impl Default for SweepConfig {
             fc_only: false,
             workers: crate::config::default_workers(),
             topk: false,
+            chunk_cells: None,
         }
     }
 }
@@ -204,46 +276,61 @@ struct CellState {
     stream: CellStream,
     seconds: f64,
     views_built: usize,
+    /// engine-accounted weight bytes of `qnet` (constant per cell; the term
+    /// that makes unchunked peak residency scale with the grid size)
+    net_bytes: usize,
 }
 
-/// What a completed [`SweepSession`] hands back.
+/// What a completed [`SweepSession::run`] hands back.
 pub struct SweepOutcome {
     /// `(cell, quantized network, per-cell seconds)`, in grid order
     pub networks: Vec<(SweepCell, Network, f64)>,
     pub stats: SweepEngineStats,
     /// analog-stream + shared-view seconds (paid once for the whole grid)
     pub shared_seconds: f64,
+    /// engine-accounted peak resident bytes over the session's lifetime
+    pub peak_resident_bytes: usize,
 }
 
-/// The shared-session grid engine: advances the analog stream and
-/// materializes each layer's walk-order view **exactly once per sweep**,
-/// then fans the (method × M × C_alpha) cells out across the worker-pool
-/// scheduler.  Each cell job reuses the shared analog view zero-copy
-/// (`Arc`) and keeps only its own quantized stream, so the per-layer cost
-/// is `1 analog advance + N cell advances` instead of `2N` stream advances
-/// and `N` redundant analog im2cols.
+/// What [`SweepSession::run_scored`] hands back: scores instead of
+/// networks — every cell's network was dropped by its chained scoring job.
+pub struct ScoredOutcome<S> {
+    /// `(cell, score, per-cell seconds)`, in grid order
+    pub scored: Vec<(SweepCell, S, f64)>,
+    pub stats: SweepEngineStats,
+    pub shared_seconds: f64,
+    pub peak_resident_bytes: usize,
+}
+
+/// The shared-session grid engine for ONE chunk of cells against ONE
+/// sample set: advances the analog stream and materializes each layer's
+/// walk-order view **exactly once per sweep**, then fans the cells out
+/// across the worker-pool scheduler.  Each cell job reuses the shared
+/// analog view zero-copy (`Arc`) and keeps only its own quantized stream,
+/// so the per-layer cost is `1 analog advance + N cell advances` instead
+/// of `2N` stream advances and `N` redundant analog im2cols.
 ///
 /// Bit-parity: every operation a GPFQ cell sees is the operation the
 /// two-stream [`QuantizeSession`] would perform for that cell's config, in
 /// the same order on the same values (the shared
 /// [`dispatch_layer_quantizer`] step is literally the same code), so the
 /// quantized networks are bit-identical to independent [`quantize_network`]
-/// runs (pinned in `tests/test_sweep_grid.rs`, worker counts and `fc_only`
-/// included).  MSQ cells are data-free: they quantize straight from the
-/// analog weights and skip stream work entirely — same bits, zero stream
-/// cost.
+/// runs (pinned in `tests/test_sweep_grid.rs`, worker counts, chunk sizes
+/// and `fc_only` included).  MSQ cells are data-free: they quantize
+/// straight from the analog weights and skip stream work entirely — same
+/// bits, zero stream cost.  Cells never read each other's state, which is
+/// why chunking the grid cannot change any cell's bits.
 ///
 /// Scope: the engine covers [`sweep`]'s config surface (method × M ×
 /// C_alpha, `fc_only`).  Per-run pipeline extras (`quantize_bias`,
 /// `max_layers`, checkpoints) remain [`QuantizeSession`] features.
 ///
-/// Memory: all cell networks are live for the whole sweep (they ARE the
-/// grid's output) plus one activation buffer per diverged GPFQ cell, so
-/// peak residency scales with the grid size where the per-cell loop peaked
-/// at one network + two streams.  That is the deliberate trade for the
-/// wall-clock win; paper-scale grids that must bound memory can run the
-/// grid in chunks of cells (each chunk re-pays the analog stream once —
-/// see ROADMAP).
+/// Memory: every resident structure is tracked in the engine-accounted
+/// peak ([`SweepOutcome::peak_resident_bytes`]): the analog buffer + the
+/// live walk view, plus per cell its diverged stream buffer and its
+/// network's weights.  All of the per-cell terms scale with the session's
+/// cell count — which is exactly what [`sweep_trials`] bounds by handing
+/// the engine `chunk_cells`-sized slices of the grid at a time.
 pub struct SweepSession<'a> {
     net: &'a Network,
     fc_only: bool,
@@ -259,6 +346,68 @@ pub struct SweepSession<'a> {
     cells: Vec<CellState>,
     next_layer: usize,
     shared_seconds: f64,
+    peak_bytes: usize,
+}
+
+/// The one definition of "quantize layer `i` in cell `c`" — shared by the
+/// streaming fan-out ([`SweepSession::step`]) and the fused final fan-out
+/// ([`SweepSession::run_scored`]), so the two dispatch paths can never
+/// drift.  `advance` is false only at the last quantization point, where
+/// the post-install stream advance is unread (scoring walks the finished
+/// network, never the streams).
+fn quantize_cell(
+    net: &Network,
+    i: usize,
+    w: &Matrix,
+    cell_workers: usize,
+    ty: &Arc<Matrix>,
+    batch: usize,
+    advance: bool,
+    c: &mut CellState,
+) -> Result<()> {
+    let t = Instant::now();
+    match c.cell.method {
+        Method::Gpfq => {
+            let tyq = c.stream.view(net, i, ty);
+            if !Arc::ptr_eq(&tyq, ty) {
+                c.views_built += 1;
+            }
+            // inner neuron-block dispatch gets the workers the grid width
+            // leaves idle (see `cell_workers`); the partition cannot change
+            // bits (the PR-1 determinism contract)
+            let (q, _, _) = dispatch_layer_quantizer(
+                &Executor::native(cell_workers),
+                Method::Gpfq,
+                w,
+                c.cell.c_alpha,
+                c.cell.levels,
+                ty,
+                &tyq,
+            )?;
+            c.qnet.set_weights(i, q);
+            if advance {
+                c.stream.advance_from_view(&c.qnet, i, &tyq, batch);
+            }
+        }
+        Method::Msq => {
+            // MSQ is data-free: quantize straight from the analog weights
+            // and leave the cell's stream untouched — an MSQ cell never
+            // diverges and costs zero stream work for the whole sweep,
+            // with bit-identical output
+            let (q, _, _) = dispatch_layer_quantizer(
+                &Executor::native(cell_workers),
+                Method::Msq,
+                w,
+                c.cell.c_alpha,
+                c.cell.levels,
+                ty,
+                ty,
+            )?;
+            c.qnet.set_weights(i, q);
+        }
+    }
+    c.seconds += t.elapsed().as_secs_f64();
+    Ok(())
 }
 
 impl<'a> SweepSession<'a> {
@@ -271,6 +420,8 @@ impl<'a> SweepSession<'a> {
     ) -> Self {
         assert_eq!(x_quant.cols, net.input.len(), "quantization data width mismatch");
         let cell_workers = (workers / cells.len().max(1)).max(1);
+        let net_bytes: usize =
+            net.layers.iter().filter_map(|l| l.weights()).map(mat_bytes).sum();
         let cells = cells
             .into_iter()
             .map(|cell| CellState {
@@ -279,9 +430,10 @@ impl<'a> SweepSession<'a> {
                 stream: CellStream::shared(),
                 seconds: 0.0,
                 views_built: 0,
+                net_bytes,
             })
             .collect();
-        SweepSession {
+        let mut session = SweepSession {
             net,
             fc_only,
             sched: SchedulerConfig::with_workers(workers),
@@ -290,7 +442,10 @@ impl<'a> SweepSession<'a> {
             cells,
             next_layer: 0,
             shared_seconds: 0.0,
-        }
+            peak_bytes: 0,
+        };
+        session.update_peak(0);
+        session
     }
 
     pub fn stats(&self) -> SweepEngineStats {
@@ -303,6 +458,25 @@ impl<'a> SweepSession<'a> {
 
     pub fn shared_seconds(&self) -> f64 {
         self.shared_seconds
+    }
+
+    /// Engine-accounted peak resident bytes observed so far: analog buffer
+    /// + live walk view + Σ per cell (diverged stream buffer + network
+    /// weights).  Deterministic — it depends only on matrix shapes and the
+    /// layer walk, never on worker count or timing.
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    fn update_peak(&mut self, view_bytes: usize) {
+        let resident = self.analog.resident_bytes()
+            + view_bytes
+            + self
+                .cells
+                .iter()
+                .map(|c| c.stream.resident_bytes() + c.net_bytes)
+                .sum::<usize>();
+        self.peak_bytes = self.peak_bytes.max(resident);
     }
 
     /// Will any further layer be quantized?  Trailing stream advances past
@@ -340,6 +514,7 @@ impl<'a> SweepSession<'a> {
                         Ok(c)
                     })?;
             }
+            self.update_peak(0);
         }
         self.next_layer = i + 1;
         Ok(true)
@@ -361,56 +536,17 @@ impl<'a> SweepSession<'a> {
             self.analog.advance_from_view(self.net, i, &ty);
         }
         self.shared_seconds += t.elapsed().as_secs_f64();
+        self.update_peak(mat_bytes(&ty));
 
         let net = self.net;
         let w = net.layers[i].weights().expect("selected layer has weights");
         let cell_workers = self.cell_workers;
         let cells = std::mem::take(&mut self.cells);
         self.cells = run_jobs(self.sched, cells, |_, mut c| -> Result<CellState, Error> {
-            let t = Instant::now();
-            match c.cell.method {
-                Method::Gpfq => {
-                    let tyq = c.stream.view(net, i, &ty);
-                    if !Arc::ptr_eq(&tyq, &ty) {
-                        c.views_built += 1;
-                    }
-                    // inner neuron-block dispatch gets the workers the grid
-                    // width leaves idle (see `cell_workers`); the partition
-                    // cannot change bits (the PR-1 determinism contract)
-                    let (q, _, _) = dispatch_layer_quantizer(
-                        &Executor::native(cell_workers),
-                        Method::Gpfq,
-                        w,
-                        c.cell.c_alpha,
-                        c.cell.levels,
-                        &ty,
-                        &tyq,
-                    )?;
-                    c.qnet.set_weights(i, q);
-                    if !last {
-                        c.stream.advance_from_view(&c.qnet, i, &tyq, batch);
-                    }
-                }
-                Method::Msq => {
-                    // MSQ is data-free: quantize straight from the analog
-                    // weights and leave the cell's stream untouched — an
-                    // MSQ cell never diverges and costs zero stream work
-                    // for the whole sweep, with bit-identical output
-                    let (q, _, _) = dispatch_layer_quantizer(
-                        &Executor::native(cell_workers),
-                        Method::Msq,
-                        w,
-                        c.cell.c_alpha,
-                        c.cell.levels,
-                        &ty,
-                        &ty,
-                    )?;
-                    c.qnet.set_weights(i, q);
-                }
-            }
-            c.seconds += t.elapsed().as_secs_f64();
+            quantize_cell(net, i, w, cell_workers, &ty, batch, !last, &mut c)?;
             Ok(c)
         })?;
+        self.update_peak(mat_bytes(&ty));
         Ok(())
     }
 
@@ -420,46 +556,191 @@ impl<'a> SweepSession<'a> {
         while self.step()? {}
         let stats = self.stats();
         let shared_seconds = self.shared_seconds;
+        let peak_resident_bytes = self.peak_bytes;
         Ok(SweepOutcome {
             networks: self.cells.into_iter().map(|c| (c.cell, c.qnet, c.seconds)).collect(),
             stats,
             shared_seconds,
+            peak_resident_bytes,
+        })
+    }
+
+    /// Drive the grid to completion with **fused scoring**: each cell's
+    /// scoring job (`score(&qnet)`) is chained behind its final
+    /// quantization job on the same worker-pool seeding
+    /// ([`run_chained_jobs`]), so the pool never drains between the
+    /// quantize and score phases and each cell's network is dropped the
+    /// moment its score exists — nothing outlives the chunk but the
+    /// scores.  Bit-identical to [`SweepSession::run`] followed by scoring
+    /// each network (the fusion changes scheduling, never values).
+    pub fn run_scored<S, F>(mut self, score: F) -> Result<ScoredOutcome<S>>
+    where
+        S: Send,
+        F: Fn(&Network) -> S + Sync,
+    {
+        let last_q = (0..self.net.layers.len())
+            .rev()
+            .find(|&i| layer_selected(self.net, i, self.fc_only));
+        let (Some(last_q), false) = (last_q, self.cells.is_empty()) else {
+            // nothing to quantize (or no cells): one plain scoring fan-out
+            let analog_stats = self.stats();
+            let cells = std::mem::take(&mut self.cells);
+            let scored =
+                run_jobs(self.sched, cells, |_, c| -> Result<(SweepCell, S, f64), Error> {
+                    Ok((c.cell, score(&c.qnet), c.seconds))
+                })?;
+            return Ok(ScoredOutcome {
+                scored,
+                stats: analog_stats,
+                shared_seconds: self.shared_seconds,
+                peak_resident_bytes: self.peak_bytes,
+            });
+        };
+        while self.next_layer < last_q {
+            self.step()?;
+        }
+        debug_assert_eq!(self.next_layer, last_q, "streams must stop at the last point");
+
+        // fused final fan-out: quantize the last layer and score, chained
+        let t = Instant::now();
+        let ty = self.analog.view(self.net, last_q);
+        let batch = self.analog.batch();
+        self.shared_seconds += t.elapsed().as_secs_f64();
+        self.update_peak(mat_bytes(&ty));
+
+        let net = self.net;
+        let w = net.layers[last_q].weights().expect("selected layer has weights");
+        let cell_workers = self.cell_workers;
+        let cells = std::mem::take(&mut self.cells);
+        let score = &score;
+        let results = run_chained_jobs(
+            self.sched,
+            cells,
+            |_, mut c| -> Result<CellState, Error> {
+                quantize_cell(net, last_q, w, cell_workers, &ty, batch, false, &mut c)?;
+                Ok(c)
+            },
+            |_, c| -> Result<(SweepCell, S, f64, usize), Error> {
+                // the chained scoring job: the cell's network dies with `c`
+                // when this returns — only the score survives the chunk
+                let s = score(&c.qnet);
+                Ok((c.cell, s, c.seconds, c.views_built))
+            },
+        )?;
+
+        let mut scored = Vec::with_capacity(results.len());
+        let mut cell_views = 0;
+        for (cell, s, seconds, views) in results {
+            cell_views += views;
+            scored.push((cell, s, seconds));
+        }
+        Ok(ScoredOutcome {
+            scored,
+            stats: SweepEngineStats {
+                analog_advances: self.analog.advances(),
+                analog_views: self.analog.views_built(),
+                cell_views,
+            },
+            shared_seconds: self.shared_seconds,
+            peak_resident_bytes: self.peak_bytes,
         })
     }
 }
 
-/// Run the full grid on the shared-session engine.  `x_quant` are the
-/// samples used to learn the quantization; `test` scores each quantized
-/// network (scoring also fans out across the worker pool).
+/// Per-cell scores gathered by the fused scoring jobs.
+struct CellScore {
+    top1: f64,
+    top5: f64,
+}
+
+/// Run the full grid over every trial's sample set on the memory-bounded
+/// engine.  For each trial × chunk, a fresh [`SweepSession`] advances that
+/// trial's analog stream once and fans the chunk's cells out with fused
+/// quantize→score jobs; only the scores survive a chunk, so peak resident
+/// bytes are bounded by the chunk size (`test` scores every quantized
+/// network; scoring rides the same pool seeding as the final quantize
+/// jobs).
+pub fn sweep_trials(
+    net: &Network,
+    trials: &TrialSet,
+    test: &Dataset,
+    cfg: &SweepConfig,
+) -> SweepResult {
+    let analog_top1 = accuracy(net, test);
+    let analog_top5 = if cfg.topk { topk_accuracy(net, test, 5) } else { 0.0 };
+    let cells = cfg.cells();
+    let n_cells = cells.len();
+    let chunk = cfg.chunk_cells.unwrap_or(n_cells).clamp(1, n_cells.max(1));
+    let topk = cfg.topk;
+
+    let mut top1s: Vec<Vec<f64>> = vec![Vec::with_capacity(trials.len()); n_cells];
+    let mut top5s: Vec<Vec<f64>> = vec![Vec::with_capacity(trials.len()); n_cells];
+    let mut secs = vec![0.0f64; n_cells];
+    let mut shared_seconds = 0.0;
+    let mut peak = 0usize;
+    for t in 0..trials.len() {
+        let x = trials.sample_set(t);
+        for (ci, chunk_cells) in cells.chunks(chunk).enumerate() {
+            let base = ci * chunk;
+            let session = SweepSession::new(net, x, chunk_cells.to_vec(), cfg.fc_only, cfg.workers);
+            let out = session
+                .run_scored(|qnet| CellScore {
+                    top1: accuracy(qnet, test),
+                    top5: if topk { topk_accuracy(qnet, test, 5) } else { 0.0 },
+                })
+                .expect("sweep session failed");
+            shared_seconds += out.shared_seconds;
+            peak = peak.max(out.peak_resident_bytes);
+            for (j, (cell, s, cell_secs)) in out.scored.into_iter().enumerate() {
+                debug_assert_eq!(cell, cells[base + j], "grid order preserved");
+                top1s[base + j].push(s.top1);
+                top5s[base + j].push(s.top5);
+                secs[base + j] += cell_secs;
+            }
+        }
+    }
+
+    let points = cells
+        .iter()
+        .zip(top1s)
+        .zip(top5s)
+        .zip(secs)
+        .map(|(((cell, t1), t5), seconds)| SweepPoint {
+            method: cell.method,
+            levels: cell.levels,
+            c_alpha: f64::from(cell.c_alpha),
+            c_alpha_requested: cell.c_alpha_requested,
+            top1: t1.first().copied().unwrap_or(f64::NAN),
+            top5: t5.first().copied().unwrap_or(0.0),
+            top1_stats: TrialStats::from_samples(&t1),
+            top5_stats: TrialStats::from_samples(&t5),
+            top1_trials: t1,
+            top5_trials: t5,
+            seconds,
+        })
+        .collect();
+    SweepResult {
+        analog_top1,
+        analog_top5,
+        shared_seconds,
+        trials: trials.len(),
+        chunk_cells: chunk,
+        peak_resident_bytes: peak,
+        points,
+    }
+}
+
+/// Run the full grid against one quantization sample set (a single trial) —
+/// the pre-trial API, now a thin adapter over [`sweep_trials`].  `x_quant`
+/// are the samples used to learn the quantization; `test` scores each
+/// quantized network.
 pub fn sweep(
     net: &Network,
     x_quant: &crate::nn::matrix::Matrix,
     test: &Dataset,
     cfg: &SweepConfig,
 ) -> SweepResult {
-    let analog_top1 = accuracy(net, test);
-    let analog_top5 = if cfg.topk { topk_accuracy(net, test, 5) } else { 0.0 };
-    let session = SweepSession::new(net, x_quant, cfg.cells(), cfg.fc_only, cfg.workers);
-    let SweepOutcome { networks, shared_seconds, .. } =
-        session.run().expect("sweep session failed");
-    let topk = cfg.topk;
-    let points = run_jobs(
-        SchedulerConfig::with_workers(cfg.workers),
-        networks,
-        |_, (cell, qnet, seconds)| -> Result<SweepPoint, Error> {
-            Ok(SweepPoint {
-                method: cell.method,
-                levels: cell.levels,
-                c_alpha: f64::from(cell.c_alpha),
-                c_alpha_requested: cell.c_alpha_requested,
-                top1: accuracy(&qnet, test),
-                top5: if topk { topk_accuracy(&qnet, test, 5) } else { 0.0 },
-                seconds,
-            })
-        },
-    )
-    .expect("sweep scoring failed");
-    SweepResult { analog_top1, analog_top5, shared_seconds, points }
+    sweep_trials(net, &TrialSet::single(x_quant), test, cfg)
 }
 
 /// One point of a layer-count sweep: accuracy with the first
@@ -554,7 +835,23 @@ mod tests {
             c_alpha_requested: 1.0,
             top1,
             top5: 0.0,
+            top1_trials: vec![top1],
+            top5_trials: vec![0.0],
+            top1_stats: TrialStats::from_samples(&[top1]),
+            top5_stats: TrialStats::from_samples(&[0.0]),
             seconds: 0.0,
+        }
+    }
+
+    fn result_with(points: Vec<SweepPoint>) -> SweepResult {
+        SweepResult {
+            analog_top1: 0.9,
+            analog_top5: 0.0,
+            shared_seconds: 0.0,
+            trials: 1,
+            chunk_cells: points.len().max(1),
+            peak_resident_bytes: 0,
+            points,
         }
     }
 
@@ -569,34 +866,50 @@ mod tests {
         };
         let res = sweep(&net, &tr.x.rows_slice(0, 120), &te, &cfg);
         assert_eq!(res.points.len(), 4);
+        assert_eq!(res.trials, 1);
+        assert_eq!(res.chunk_cells, 4, "default: whole grid resident");
+        assert!(res.peak_resident_bytes > 0, "peak must be measured");
         assert!(res.analog_top1 > 0.7);
         let best_g = res.best(Method::Gpfq).unwrap();
         let best_m = res.best(Method::Msq).unwrap();
         assert!(best_g.top1 >= best_m.top1 - 0.05, "gpfq {} msq {}", best_g.top1, best_m.top1);
         assert!(best_g.top1 > 0.5, "best gpfq {}", best_g.top1);
+        // single trial: the per-trial vectors collapse onto the scalars
+        for p in &res.points {
+            assert_eq!(p.top1_trials, vec![p.top1]);
+            assert_eq!(p.top1_stats.mean, p.top1);
+            assert_eq!(p.top1_stats.std, 0.0);
+        }
     }
 
     #[test]
     fn best_survives_nan_points() {
         // regression: a NaN-scored cell used to panic best() through
         // partial_cmp().unwrap(); now it is excluded from the ranking
-        let res = SweepResult {
-            analog_top1: 0.9,
-            analog_top5: 0.0,
-            shared_seconds: 0.0,
-            points: vec![point(0.4), point(f64::NAN), point(0.7), point(0.1)],
-        };
+        let res = result_with(vec![point(0.4), point(f64::NAN), point(0.7), point(0.1)]);
         let best = res.best(Method::Gpfq).expect("finite points exist");
         assert_eq!(best.top1, 0.7);
         // all-NaN: no best rather than a NaN "winner"
-        let res = SweepResult {
-            analog_top1: 0.9,
-            analog_top5: 0.0,
-            shared_seconds: 0.0,
-            points: vec![point(f64::NAN), point(f64::NAN)],
-        };
+        let res = result_with(vec![point(f64::NAN), point(f64::NAN)]);
         assert!(res.best(Method::Gpfq).is_none());
         assert!(res.best(Method::Msq).is_none());
+    }
+
+    #[test]
+    fn trial_stats_aggregate_and_survive_nan() {
+        let s = TrialStats::from_samples(&[0.5, 0.7, 0.6]);
+        assert!((s.mean - 0.6).abs() < 1e-12);
+        assert!((s.min - 0.5).abs() < 1e-12);
+        assert!((s.max - 0.7).abs() < 1e-12);
+        assert!(s.std > 0.0 && s.std < 0.1);
+        // NaN trials are excluded, not poisonous
+        let s = TrialStats::from_samples(&[0.5, f64::NAN, 0.7]);
+        assert!((s.mean - 0.6).abs() < 1e-12);
+        assert_eq!(s.min, 0.5);
+        assert_eq!(s.max, 0.7);
+        // all-NaN stays NaN instead of inventing numbers
+        let s = TrialStats::from_samples(&[f64::NAN]);
+        assert!(s.mean.is_nan() && s.std.is_nan() && s.min.is_nan() && s.max.is_nan());
     }
 
     #[test]
@@ -644,6 +957,7 @@ mod tests {
         // last quantization point (layer 2) is skipped as unread
         assert_eq!(outcome.stats.analog_views, 2, "one view per quantization point");
         assert_eq!(outcome.stats.analog_advances, 2, "layers crossed, not x cells");
+        assert!(outcome.peak_resident_bytes > 0);
         for ((cell, qnet, _), want) in outcome.networks.iter().zip(&cells) {
             assert_eq!(cell, want, "grid order preserved");
             let single = quantize_network(&net, &x, &cell.pipeline_config(false, 1));
@@ -653,6 +967,54 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn chunked_sweep_peak_stays_below_unchunked_peak() {
+        // the fast assertion CI's bench-smoke relies on: streaming the grid
+        // in chunks must strictly lower the measured engine-accounted peak
+        let (net, tr, te) = setup();
+        let x = tr.x.rows_slice(0, 80);
+        let cfg = SweepConfig {
+            levels: vec![3],
+            c_alphas: vec![1.0, 2.0, 3.0, 4.0],
+            methods: vec![Method::Gpfq, Method::Msq],
+            ..Default::default()
+        };
+        let full = sweep(&net, &x, &te, &cfg);
+        let chunked =
+            sweep(&net, &x, &te, &SweepConfig { chunk_cells: Some(2), ..cfg.clone() });
+        assert!(full.peak_resident_bytes > 0 && chunked.peak_resident_bytes > 0);
+        assert!(
+            chunked.peak_resident_bytes < full.peak_resident_bytes,
+            "chunked {} must stay below unchunked {}",
+            chunked.peak_resident_bytes,
+            full.peak_resident_bytes
+        );
+        assert_eq!(chunked.chunk_cells, 2);
+        // and chunking never changes any score
+        for (a, b) in chunked.points.iter().zip(&full.points) {
+            assert_eq!(a.top1, b.top1);
+            assert_eq!(a.top5, b.top5);
+        }
+    }
+
+    #[test]
+    fn chunk_size_is_clamped_to_the_grid() {
+        let (net, tr, te) = setup();
+        let x = tr.x.rows_slice(0, 60);
+        let cfg = SweepConfig {
+            levels: vec![3],
+            c_alphas: vec![2.0, 3.0],
+            methods: vec![Method::Msq],
+            chunk_cells: Some(100),
+            ..Default::default()
+        };
+        let res = sweep(&net, &x, &te, &cfg);
+        assert_eq!(res.chunk_cells, 2, "oversized chunk clamps to the grid");
+        let cfg = SweepConfig { chunk_cells: Some(0), ..cfg };
+        let res = sweep(&net, &x, &te, &cfg);
+        assert_eq!(res.chunk_cells, 1, "zero chunk clamps to one cell");
     }
 
     #[test]
@@ -700,26 +1062,25 @@ mod tests {
 
     #[test]
     fn spread_computation() {
-        let mk = |method, c_alpha: f64, top1| SweepPoint {
+        let mk = |method, c_alpha: f64, top1: f64| SweepPoint {
             method,
             levels: 3,
             c_alpha,
             c_alpha_requested: c_alpha,
             top1,
             top5: 0.0,
+            top1_trials: vec![top1],
+            top5_trials: vec![0.0],
+            top1_stats: TrialStats::from_samples(&[top1]),
+            top5_stats: TrialStats::from_samples(&[0.0]),
             seconds: 0.0,
         };
-        let res = SweepResult {
-            analog_top1: 0.9,
-            analog_top5: 0.0,
-            shared_seconds: 0.0,
-            points: vec![
-                mk(Method::Gpfq, 1.0, 0.8),
-                mk(Method::Gpfq, 2.0, 0.85),
-                mk(Method::Msq, 1.0, 0.2),
-                mk(Method::Msq, 2.0, 0.7),
-            ],
-        };
+        let res = result_with(vec![
+            mk(Method::Gpfq, 1.0, 0.8),
+            mk(Method::Gpfq, 2.0, 0.85),
+            mk(Method::Msq, 1.0, 0.2),
+            mk(Method::Msq, 2.0, 0.7),
+        ]);
         assert!((res.spread(Method::Gpfq, 3) - 0.05).abs() < 1e-12);
         assert!((res.spread(Method::Msq, 3) - 0.5).abs() < 1e-12);
         assert_eq!(res.spread(Method::Gpfq, 16), 0.0);

@@ -3,18 +3,32 @@
 //! The paper assumes a *pre-trained* float network; this module is the
 //! substrate that produces one (pure-Rust twin of the AOT `train_step`
 //! artifact — the e2e example drives the artifact, the benches use this).
+//!
+//! The forward caches hold **walk-order views** — the same im2col-once
+//! argument the quantization engine makes (PR 2): a conv layer's patch
+//! matrix is built directly transposed ([`im2col_walk`]) exactly once per
+//! forward, serves the forward GEMM via [`Matrix::matmul_tn`] (bit-
+//! identical to `patches.matmul(k)`), and is then reused *as is* by the
+//! backward weight gradient `dK = patchesᵀ · dpre = walk · dpre` — the
+//! backward pass materializes **zero** transposes where it used to build a
+//! full transposed patch matrix (and a transposed input per dense layer)
+//! every step.  `tests/test_backprop_walk.rs` pins bit-parity against the
+//! frozen pre-walk gradient path.
 
 use crate::nn::activations::softmax_rows;
 use crate::nn::batchnorm::BnCache;
-use crate::nn::conv::{col2im, fold_output, im2col, unfold_output};
+use crate::nn::conv::{col2im, fold_output, im2col_walk, unfold_output};
 use crate::nn::matrix::Matrix;
 use crate::nn::network::{Layer, Network};
 use crate::nn::pool::{maxpool_backward, maxpool_forward};
 
-/// Per-layer forward cache.
+/// Per-layer forward cache.  Dense and conv layers cache the walk-order
+/// (transposed) view of their input — features × samples resp.
+/// features × patch-positions — built once in the forward pass and shared
+/// with the backward weight gradients, never re-transposed.
 pub enum Cache {
-    Dense { input: Matrix, pre: Matrix },
-    Conv { patches: Matrix, pre: Matrix, batch: usize },
+    Dense { tinput: Matrix, pre: Matrix },
+    Conv { walk: Matrix, pre: Matrix, batch: usize },
     Pool { argmax: Vec<usize> },
     Bn(BnCache),
 }
@@ -35,21 +49,27 @@ pub fn forward_train(net: &mut Network, x: &Matrix) -> (Matrix, Vec<Cache>) {
     for layer in &mut net.layers {
         match layer {
             Layer::Dense { w, b, act } => {
-                let mut pre = h.matmul(w);
+                // walk-order view built once; matmul_tn(tinputᵀ · w) is
+                // bit-identical to h.matmul(w) (PR-2 contract), and the
+                // backward dw reuses tinput with no transpose
+                let tinput = h.transpose();
+                let mut pre = tinput.matmul_tn(w);
                 pre.add_row_vec(b);
                 let mut out = pre.clone();
                 act.apply(&mut out);
-                caches.push(Cache::Dense { input: h, pre });
+                caches.push(Cache::Dense { tinput, pre });
                 h = out;
             }
             Layer::Conv { k, b, kh, kw, stride, act, in_shape } => {
-                let patches = im2col(&h, *in_shape, *kh, *kw, *stride);
-                let mut pre = patches.matmul(k);
+                // ONE im2col per conv layer per step, built directly in
+                // walk order; forward GEMM and backward dK both read it
+                let walk = im2col_walk(&h, *in_shape, *kh, *kw, *stride);
+                let mut pre = walk.matmul_tn(k);
                 pre.add_row_vec(b);
                 let mut out = pre.clone();
                 act.apply(&mut out);
                 let batch = h.rows;
-                caches.push(Cache::Conv { patches, pre, batch });
+                caches.push(Cache::Conv { walk, pre, batch });
                 h = fold_output(out, batch);
             }
             Layer::MaxPool { size, in_shape } => {
@@ -95,9 +115,10 @@ pub fn backward(net: &Network, caches: &[Cache], dlogits: Matrix) -> Vec<Grad> {
     let mut d = dlogits;
     for (layer, cache) in net.layers.iter().zip(caches).rev() {
         match (layer, cache) {
-            (Layer::Dense { w, act, .. }, Cache::Dense { input, pre }) => {
+            (Layer::Dense { w, act, .. }, Cache::Dense { tinput, pre }) => {
                 act.backprop(pre, &mut d);
-                let dw = input.transpose().matmul(&d);
+                // the cached walk view IS inputᵀ: dw = inputᵀ·d directly
+                let dw = tinput.matmul(&d);
                 let mut db = vec![0.0f32; w.cols];
                 for r in 0..d.rows {
                     for (c, v) in db.iter_mut().enumerate() {
@@ -108,10 +129,12 @@ pub fn backward(net: &Network, caches: &[Cache], dlogits: Matrix) -> Vec<Grad> {
                 grads.push(Grad::Dense { dw, db });
                 d = dx;
             }
-            (Layer::Conv { k, kh, kw, stride, act, in_shape, .. }, Cache::Conv { patches, pre, batch }) => {
+            (Layer::Conv { k, kh, kw, stride, act, in_shape, .. }, Cache::Conv { walk, pre, batch }) => {
                 let mut dpre = unfold_output(&d, k.cols);
                 act.backprop(pre, &mut dpre);
-                let dk = patches.transpose().matmul(&dpre);
+                // walk == patchesᵀ bit for bit (im2col_walk pin), so the
+                // weight gradient needs no transposed materialization
+                let dk = walk.matmul(&dpre);
                 let mut db = vec![0.0f32; k.cols];
                 for r in 0..dpre.rows {
                     for (c, v) in db.iter_mut().enumerate() {

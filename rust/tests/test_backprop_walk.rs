@@ -1,0 +1,234 @@
+//! Walk-order backprop bit-parity.
+//!
+//! PR 2 taught the *quantization* engine to build each layer's walk-order
+//! view (transposed activations / the im2col patch matrix built directly
+//! transposed) exactly once and share it between the quantizer and the
+//! forward GEMM.  The training path now makes the same im2col-once
+//! argument: `forward_train` caches the walk view, the forward GEMM runs
+//! through `Matrix::matmul_tn` (pinned bit-identical to
+//! `transpose().matmul()`), and `backward` reads the cached view for the
+//! weight gradients with **zero** transposed materializations.
+//!
+//! This file freezes the pre-walk gradient path verbatim (standard-layout
+//! caches, `patches.transpose().matmul(dpre)` / `input.transpose()
+//! .matmul(d)`) as a reference oracle — the same frozen-oracle pattern as
+//! `coordinator::reference` — and pins that logits, every gradient, every
+//! BN statistic and a full SGD step agree **bit for bit**.
+
+use gpfq::data::rng::Pcg;
+use gpfq::nn::activations::softmax_rows;
+use gpfq::nn::batchnorm::BnCache;
+use gpfq::nn::conv::{col2im, fold_output, im2col, unfold_output, ImgShape};
+use gpfq::nn::matrix::Matrix;
+use gpfq::nn::network::{cifar_cnn, mnist_mlp, Layer, Network};
+use gpfq::nn::pool::{maxpool_backward, maxpool_forward};
+use gpfq::train::backprop::{backward, forward_train, Grad, SgdState};
+use gpfq::train::softmax_ce;
+
+// ---------------------------------------------------------------------------
+// Frozen pre-walk reference path (PR 1–3 backprop, verbatim semantics):
+// standard-layout caches, transposes materialized in the backward pass.
+// ---------------------------------------------------------------------------
+
+enum RefCache {
+    Dense { input: Matrix, pre: Matrix },
+    Conv { patches: Matrix, pre: Matrix, batch: usize },
+    Pool { argmax: Vec<usize> },
+    Bn(BnCache),
+}
+
+fn ref_forward_train(net: &mut Network, x: &Matrix) -> (Matrix, Vec<RefCache>) {
+    let mut caches = Vec::with_capacity(net.layers.len());
+    let mut h = x.clone();
+    for layer in &mut net.layers {
+        match layer {
+            Layer::Dense { w, b, act } => {
+                let mut pre = h.matmul(w);
+                pre.add_row_vec(b);
+                let mut out = pre.clone();
+                act.apply(&mut out);
+                caches.push(RefCache::Dense { input: h, pre });
+                h = out;
+            }
+            Layer::Conv { k, b, kh, kw, stride, act, in_shape } => {
+                let patches = im2col(&h, *in_shape, *kh, *kw, *stride);
+                let mut pre = patches.matmul(k);
+                pre.add_row_vec(b);
+                let mut out = pre.clone();
+                act.apply(&mut out);
+                let batch = h.rows;
+                caches.push(RefCache::Conv { patches, pre, batch });
+                h = fold_output(out, batch);
+            }
+            Layer::MaxPool { size, in_shape } => {
+                let (out, argmax, _) = maxpool_forward(&h, *in_shape, *size);
+                caches.push(RefCache::Pool { argmax });
+                h = out;
+            }
+            Layer::BatchNorm(bn) => {
+                let (out, cache) = bn.forward_train(&h);
+                caches.push(RefCache::Bn(cache));
+                h = out;
+            }
+        }
+    }
+    (h, caches)
+}
+
+fn ref_backward(net: &Network, caches: &[RefCache], dlogits: Matrix) -> Vec<Grad> {
+    let mut grads: Vec<Grad> = Vec::with_capacity(net.layers.len());
+    let mut d = dlogits;
+    for (layer, cache) in net.layers.iter().zip(caches).rev() {
+        match (layer, cache) {
+            (Layer::Dense { w, act, .. }, RefCache::Dense { input, pre }) => {
+                act.backprop(pre, &mut d);
+                let dw = input.transpose().matmul(&d);
+                let mut db = vec![0.0f32; w.cols];
+                for r in 0..d.rows {
+                    for (c, v) in db.iter_mut().enumerate() {
+                        *v += d.at(r, c);
+                    }
+                }
+                let dx = d.matmul(&w.transpose());
+                grads.push(Grad::Dense { dw, db });
+                d = dx;
+            }
+            (
+                Layer::Conv { k, kh, kw, stride, act, in_shape, .. },
+                RefCache::Conv { patches, pre, batch },
+            ) => {
+                let mut dpre = unfold_output(&d, k.cols);
+                act.backprop(pre, &mut dpre);
+                let dk = patches.transpose().matmul(&dpre);
+                let mut db = vec![0.0f32; k.cols];
+                for r in 0..dpre.rows {
+                    for (c, v) in db.iter_mut().enumerate() {
+                        *v += dpre.at(r, c);
+                    }
+                }
+                let dpatches = dpre.matmul(&k.transpose());
+                let dx = col2im(&dpatches, *batch, *in_shape, *kh, *kw, *stride);
+                grads.push(Grad::Conv { dk, db });
+                d = dx;
+            }
+            (Layer::MaxPool { in_shape, .. }, RefCache::Pool { argmax }) => {
+                d = maxpool_backward(&d, argmax, *in_shape);
+                grads.push(Grad::Pool);
+            }
+            (Layer::BatchNorm(bn), RefCache::Bn(cache)) => {
+                let mut dgamma = vec![0.0f32; bn.channels];
+                let mut dbeta = vec![0.0f32; bn.channels];
+                d = bn.backward(cache, &d, &mut dgamma, &mut dbeta);
+                grads.push(Grad::Bn { dgamma, dbeta });
+            }
+            _ => unreachable!("cache/layer mismatch"),
+        }
+    }
+    grads.reverse();
+    grads
+}
+
+// ---------------------------------------------------------------------------
+
+fn toy_batch(rng: &mut Pcg, n: usize, dim: usize, classes: usize) -> (Matrix, Matrix) {
+    let x = Matrix::from_vec(n, dim, rng.normal_vec(n * dim));
+    let mut y = Matrix::zeros(n, classes);
+    for r in 0..n {
+        *y.at_mut(r, rng.below(classes)) = 1.0;
+    }
+    (x, y)
+}
+
+fn assert_grads_identical(a: &[Grad], b: &[Grad], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: grad count");
+    for (i, (ga, gb)) in a.iter().zip(b).enumerate() {
+        match (ga, gb) {
+            (Grad::Dense { dw: wa, db: ba }, Grad::Dense { dw: wb, db: bb })
+            | (Grad::Conv { dk: wa, db: ba }, Grad::Conv { dk: wb, db: bb }) => {
+                assert_eq!(wa.data, wb.data, "{tag}: layer {i} weight grad");
+                assert_eq!(ba, bb, "{tag}: layer {i} bias grad");
+            }
+            (Grad::Pool, Grad::Pool) => {}
+            (
+                Grad::Bn { dgamma: ga_, dbeta: be_ },
+                Grad::Bn { dgamma: gb_, dbeta: bb_ },
+            ) => {
+                assert_eq!(ga_, gb_, "{tag}: layer {i} dgamma");
+                assert_eq!(be_, bb_, "{tag}: layer {i} dbeta");
+            }
+            _ => panic!("{tag}: layer {i} grad kind mismatch"),
+        }
+    }
+}
+
+fn assert_networks_identical(a: &Network, b: &Network, tag: &str) {
+    for (i, (la, lb)) in a.layers.iter().zip(&b.layers).enumerate() {
+        match (la, lb) {
+            (Layer::Dense { w: wa, b: ba, .. }, Layer::Dense { w: wb, b: bb, .. })
+            | (Layer::Conv { k: wa, b: ba, .. }, Layer::Conv { k: wb, b: bb, .. }) => {
+                assert_eq!(wa.data, wb.data, "{tag}: layer {i} weights");
+                assert_eq!(ba, bb, "{tag}: layer {i} bias");
+            }
+            (Layer::BatchNorm(na), Layer::BatchNorm(nb)) => {
+                assert_eq!(na.gamma, nb.gamma, "{tag}: layer {i} gamma");
+                assert_eq!(na.beta, nb.beta, "{tag}: layer {i} beta");
+            }
+            (Layer::MaxPool { .. }, Layer::MaxPool { .. }) => {}
+            _ => panic!("{tag}: layer {i} kind mismatch"),
+        }
+    }
+}
+
+/// One full training step (forward → loss → backward → SGD) on both paths,
+/// asserting bit-identity at every stage.
+fn step_parity(mut net: Network, x: &Matrix, y: &Matrix, steps: usize, tag: &str) {
+    let mut refnet = net.clone();
+    let mut sgd = SgdState::new(&net, 0.05, 0.9);
+    let mut ref_sgd = SgdState::new(&refnet, 0.05, 0.9);
+    for step in 0..steps {
+        let (logits, caches) = forward_train(&mut net, x);
+        let (ref_logits, ref_caches) = ref_forward_train(&mut refnet, x);
+        assert_eq!(logits.data, ref_logits.data, "{tag}: step {step} logits");
+        let (loss, dlogits) = softmax_ce(&logits, y);
+        let (ref_loss, ref_dlogits) = softmax_ce(&ref_logits, y);
+        assert_eq!(loss, ref_loss, "{tag}: step {step} loss");
+        let grads = backward(&net, &caches, dlogits);
+        let ref_grads = ref_backward(&refnet, &ref_caches, ref_dlogits);
+        assert_grads_identical(&grads, &ref_grads, &format!("{tag}: step {step}"));
+        sgd.step(&mut net, &grads);
+        ref_sgd.step(&mut refnet, &ref_grads);
+        assert_networks_identical(&net, &refnet, &format!("{tag}: step {step}"));
+    }
+}
+
+#[test]
+fn dense_walk_backprop_bit_identical_to_reference() {
+    let mut rng = Pcg::seed(41);
+    let net = mnist_mlp(11, 12, &[10, 7], 4);
+    let (x, y) = toy_batch(&mut rng, 9, 12, 4);
+    step_parity(net, &x, &y, 4, "mlp");
+}
+
+#[test]
+fn conv_pool_bn_walk_backprop_bit_identical_to_reference() {
+    // cifar_cnn stacks conv, bn, conv, maxpool, bn, dense, bn, dense —
+    // every Cache arm (walk conv, walk dense, pool, bn) is exercised
+    let mut rng = Pcg::seed(42);
+    let img = ImgShape { h: 8, w: 8, c: 1 };
+    let net = cifar_cnn(12, img, &[3], 10, 3);
+    let (x, y) = toy_batch(&mut rng, 5, img.len(), 3);
+    step_parity(net, &x, &y, 3, "cnn");
+}
+
+#[test]
+fn softmax_probabilities_unchanged_by_walk_refactor() {
+    // guard against accidental coupling: the loss path reads logits only,
+    // and identical logits must produce identical probability rows
+    let mut rng = Pcg::seed(43);
+    let logits = Matrix::from_vec(4, 5, rng.normal_vec(20));
+    let p = softmax_rows(&logits);
+    for r in 0..4 {
+        let s: f32 = (0..5).map(|c| p.at(r, c)).sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+}

@@ -10,15 +10,29 @@
 //!    never × cells, measured both through the engine's own counters and the
 //!    process-wide im2col invocation counter under a serial lock (the same
 //!    counted-pin pattern as PR 2's 3-vs-8 im2col test).
+//! 3. **Trial/chunk/fusion invariants** (the memory-bounded multi-trial
+//!    engine): a chunked multi-trial sweep is per-cell bit-identical on its
+//!    trial 0 — raw weights and top-1/top-5 — to the unchunked single-trial
+//!    engine, across worker counts and chunk sizes; trial RNG streams are
+//!    deterministic and non-overlapping whatever the worker count; fused
+//!    quantize→score graphs return exactly what the two-phase path returns,
+//!    and the worker pool is **never re-seeded between the quantize and
+//!    score phases** (one fused fan-out per chunk, pinned through the
+//!    process-global pool-seeding counter); analog im2col scales with the
+//!    trial count, never the cell count.
 //!
 //! The lock exists because `cargo test` runs tests of one binary
-//! concurrently and the im2col counter is process-global: every test here
-//! that counts conv pipelines holds it, so counter deltas are exact.
+//! concurrently and the im2col / pool-seeding counters are process-global:
+//! **every** test in this file holds it, so counter deltas are exact.
 
 use std::sync::Mutex;
 
 use gpfq::coordinator::pipeline::{quantize_network, Method};
-use gpfq::coordinator::sweep::{sweep, SweepCell, SweepConfig, SweepSession};
+use gpfq::coordinator::scheduler::pool_seedings;
+use gpfq::coordinator::sweep::{
+    sweep, sweep_trials, SweepCell, SweepConfig, SweepSession,
+};
+use gpfq::coordinator::TrialSet;
 use gpfq::data::rng::Pcg;
 use gpfq::data::synth::{generate, SynthSpec};
 use gpfq::eval::metrics::{accuracy, topk_accuracy};
@@ -68,6 +82,7 @@ fn assert_weights_identical(a: &Network, b: &Network, tag: &str) {
 
 #[test]
 fn grid_parity_top1_top5_across_worker_counts() {
+    let _guard = SERIAL.lock().unwrap();
     let (net, tr, te) = trained_mlp();
     let x = tr.x.rows_slice(0, 120);
     let grid = SweepConfig {
@@ -77,6 +92,7 @@ fn grid_parity_top1_top5_across_worker_counts() {
         fc_only: false,
         topk: true,
         workers: 1,
+        chunk_cells: None,
     };
     let base = sweep(&net, &x, &te, &grid);
     assert_eq!(base.points.len(), 8);
@@ -227,6 +243,7 @@ fn fc_only_sweep_crosses_shared_conv_once_for_all_cells() {
 
 #[test]
 fn sweep_function_reports_shared_seconds_and_grid_order() {
+    let _guard = SERIAL.lock().unwrap();
     let (net, tr, te) = trained_mlp();
     let x = tr.x.rows_slice(0, 80);
     let cfg = SweepConfig {
@@ -236,6 +253,7 @@ fn sweep_function_reports_shared_seconds_and_grid_order() {
         fc_only: false,
         workers: 2,
         topk: false,
+        chunk_cells: None,
     };
     let res = sweep(&net, &x, &te, &cfg);
     assert_eq!(res.points.len(), 4);
@@ -252,4 +270,242 @@ fn sweep_function_reports_shared_seconds_and_grid_order() {
     }
     assert!(res.shared_seconds >= 0.0);
     assert!(res.points.iter().all(|p| p.seconds >= 0.0));
+}
+
+/// Acceptance pin: a chunked + multi-trial sweep is per-cell bit-identical
+/// — raw weights and top-1/top-5 — to the unchunked single-trial engine on
+/// its trial 0, across worker counts and chunk sizes.
+#[test]
+fn chunked_multi_trial_trial0_bit_identical_to_unchunked_single_trial() {
+    let _guard = SERIAL.lock().unwrap();
+    let (net, tr, te) = trained_mlp();
+    let trials = TrialSet::draw(&tr.x, 100, 3, 17);
+    let grid = SweepConfig {
+        levels: vec![3],
+        c_alphas: vec![2.0, 3.0, 4.0],
+        methods: vec![Method::Gpfq, Method::Msq],
+        fc_only: false,
+        topk: true,
+        workers: 2,
+        chunk_cells: None,
+    };
+    // the PR 3 engine: single trial (the pool prefix), whole grid resident
+    let base = sweep(&net, trials.sample_set(0), &te, &grid);
+    assert_eq!(base.points.len(), 6);
+    for chunk in [1usize, 2, 6] {
+        for workers in [1usize, 4] {
+            let cfg = SweepConfig { chunk_cells: Some(chunk), workers, ..grid.clone() };
+            let res = sweep_trials(&net, &trials, &te, &cfg);
+            assert_eq!(res.trials, 3);
+            assert_eq!(res.chunk_cells, chunk);
+            for (p, b) in res.points.iter().zip(&base.points) {
+                let tag = format!(
+                    "chunk={chunk} workers={workers} cell {:?}/M{}/C{}",
+                    p.method, p.levels, p.c_alpha_requested
+                );
+                assert_eq!(p.top1, b.top1, "{tag}: trial-0 top1");
+                assert_eq!(p.top5, b.top5, "{tag}: trial-0 top5");
+                assert_eq!(p.top1_trials.len(), 3, "{tag}");
+                assert_eq!(p.top1_trials[0], p.top1, "{tag}: trial 0 leads the vector");
+                assert_eq!(p.top5_trials[0], p.top5, "{tag}");
+            }
+        }
+    }
+    // raw weights: chunk-wise sessions on trial 0 equal independent
+    // per-cell pipeline runs bit for bit (cells never read each other's
+    // state, so chunk membership cannot change any cell's bits)
+    let cells = grid.cells();
+    for chunk in [1usize, 2] {
+        for cc in cells.chunks(chunk) {
+            let outcome =
+                SweepSession::new(&net, trials.sample_set(0), cc.to_vec(), false, 2)
+                    .run()
+                    .unwrap();
+            for (cell, qnet, _) in &outcome.networks {
+                let single =
+                    quantize_network(&net, trials.sample_set(0), &cell.pipeline_config(false, 1));
+                assert_weights_identical(
+                    qnet,
+                    &single.network,
+                    &format!("chunk={chunk} cell {cell:?}"),
+                );
+            }
+        }
+    }
+}
+
+/// Trial RNG streams are fixed at construction: deterministic, prefix-
+/// stable in the trial count, distinct across trials — and the engine's
+/// per-trial scores cannot depend on the worker count.
+#[test]
+fn trial_streams_deterministic_and_independent_of_workers() {
+    let _guard = SERIAL.lock().unwrap();
+    let (net, tr, te) = trained_mlp();
+    let trials = TrialSet::draw(&tr.x, 60, 3, 9);
+    let again = TrialSet::draw(&tr.x, 60, 3, 9);
+    for t in 0..3 {
+        assert_eq!(trials.sample_set(t).data, again.sample_set(t).data, "trial {t} draw");
+    }
+    assert_eq!(trials.sample_set(0).data, tr.x.rows_slice(0, 60).data, "trial 0 is the prefix");
+    assert_ne!(trials.sample_set(1).data, trials.sample_set(2).data, "streams must differ");
+    let wider = TrialSet::draw(&tr.x, 60, 5, 9);
+    for t in 0..3 {
+        assert_eq!(trials.sample_set(t).data, wider.sample_set(t).data, "prefix-stable in T");
+    }
+
+    let cfg = SweepConfig {
+        levels: vec![3],
+        c_alphas: vec![2.0, 4.0],
+        methods: vec![Method::Gpfq, Method::Msq],
+        fc_only: false,
+        topk: false,
+        workers: 1,
+        chunk_cells: None,
+    };
+    let base = sweep_trials(&net, &trials, &te, &cfg);
+    for workers in [2usize, 4] {
+        let res = sweep_trials(&net, &trials, &te, &SweepConfig { workers, ..cfg.clone() });
+        for (a, b) in res.points.iter().zip(&base.points) {
+            assert_eq!(a.top1_trials, b.top1_trials, "workers={workers}: per-trial scores");
+            assert_eq!(a.top1_stats, b.top1_stats, "workers={workers}: aggregates");
+        }
+    }
+}
+
+/// The fused quantize→score graph returns exactly what the two-phase path
+/// (run the grid, then score every network) returns — same cells, same
+/// scores, same engine counters, same measured peak.
+#[test]
+fn fused_scoring_parity_with_two_phase_path() {
+    let _guard = SERIAL.lock().unwrap();
+    let (net, tr, te) = trained_mlp();
+    let x = tr.x.rows_slice(0, 80);
+    let cells = vec![
+        SweepCell::new(Method::Gpfq, 3, 2.0),
+        SweepCell::new(Method::Gpfq, 16, 4.0),
+        SweepCell::new(Method::Msq, 3, 3.0),
+    ];
+    let two_phase = SweepSession::new(&net, &x, cells.clone(), false, 2).run().unwrap();
+    let fused = SweepSession::new(&net, &x, cells.clone(), false, 2)
+        .run_scored(|qnet| (accuracy(qnet, &te), topk_accuracy(qnet, &te, 5)))
+        .unwrap();
+    assert_eq!(fused.scored.len(), two_phase.networks.len());
+    for ((ca, (t1, t5), _), (cb, qnet, _)) in fused.scored.iter().zip(&two_phase.networks) {
+        assert_eq!(ca, cb, "grid order preserved through the chained jobs");
+        assert_eq!(*t1, accuracy(qnet, &te), "cell {ca:?} top1");
+        assert_eq!(*t5, topk_accuracy(qnet, &te, 5), "cell {ca:?} top5");
+    }
+    assert_eq!(fused.stats, two_phase.stats, "engine counters agree");
+    assert_eq!(
+        fused.peak_resident_bytes, two_phase.peak_resident_bytes,
+        "the fusion changes scheduling, not residency"
+    );
+}
+
+/// Acceptance pin: ONE fused fan-out phase per chunk — each cell's scoring
+/// job is chained behind its final quantization job on the same pool
+/// seeding, so the pool is never re-seeded between the quantize and score
+/// phases.  trained_mlp has 3 dense quantization points and no plain
+/// layers, so with a threaded pool every chunk seeds exactly once per
+/// quantization point and NOTHING more: the scoring phase adds zero
+/// seedings (the unfused two-phase path pays one extra per chunk).
+#[test]
+fn fused_graph_never_reseeds_pool_between_quantize_and_score() {
+    let _guard = SERIAL.lock().unwrap();
+    let (net, tr, te) = trained_mlp();
+    let trials = TrialSet::draw(&tr.x, 80, 2, 7);
+    let grid = SweepConfig {
+        levels: vec![3],
+        c_alphas: vec![1.5, 2.0, 3.0, 4.0],
+        methods: vec![Method::Gpfq],
+        fc_only: false,
+        topk: false,
+        workers: 2,
+        chunk_cells: None,
+    };
+    // unchunked, single trial: 3 quantization points → 3 seedings, the
+    // final one carrying both the quantize and the chained score jobs
+    let before = pool_seedings();
+    let res = sweep(&net, trials.sample_set(0), &te, &grid);
+    assert_eq!(res.points.len(), 4);
+    assert_eq!(
+        pool_seedings() - before,
+        3,
+        "one seeding per quantization point, score phase chained — not re-seeded"
+    );
+    // chunked: one fused fan-out phase per chunk (2 chunks × 3 points)
+    let before = pool_seedings();
+    let res = sweep(
+        &net,
+        trials.sample_set(0),
+        &te,
+        &SweepConfig { chunk_cells: Some(2), ..grid.clone() },
+    );
+    assert_eq!(res.chunk_cells, 2);
+    assert_eq!(pool_seedings() - before, 6, "3 seedings per chunk, none between phases");
+    // trials multiply the whole schedule, never the per-chunk phase count
+    let before = pool_seedings();
+    let _ = sweep_trials(&net, &trials, &te, &SweepConfig { chunk_cells: Some(2), ..grid.clone() });
+    assert_eq!(pool_seedings() - before, 12, "2 trials x 2 chunks x 3 points");
+    // counterfactual: the two-phase path (run, then score on a fresh pool)
+    // pays one extra seeding for the scoring fan-out
+    let before = pool_seedings();
+    let outcome =
+        SweepSession::new(&net, trials.sample_set(0), grid.cells(), false, 2).run().unwrap();
+    let _scores = gpfq::coordinator::run_jobs(
+        gpfq::coordinator::SchedulerConfig::with_workers(2),
+        outcome.networks,
+        |_, (_, qnet, _)| Ok::<_, ()>(accuracy(&qnet, &te)),
+    )
+    .unwrap();
+    assert_eq!(pool_seedings() - before, 4, "unfused: 3 quantize + 1 score seeding");
+}
+
+/// Analog economy across trials: the analog stream is re-paid once per
+/// trial — its im2col count is T × (per-sweep analog cost), **regardless of
+/// the cell count** (MSQ cells are data-free; GPFQ adds exactly one
+/// im2col per diverged cell per post-divergence conv point).
+#[test]
+fn analog_im2col_scales_with_trials_never_cells() {
+    let _guard = SERIAL.lock().unwrap();
+    let img = ImgShape { h: 10, w: 10, c: 1 };
+    // layers: conv, bn, conv, mp, bn, dense, bn, dense — 2 conv quantization
+    // points (the dense points transpose, never im2col)
+    let net = cifar_cnn(58, img, &[3], 12, 3);
+    let pool = rand_input(23, 12, img.len());
+    let trials = TrialSet::draw(&pool, 6, 2, 5);
+    // MSQ-only grids: analog side only — 2 im2cols per trial, whatever the
+    // cell count
+    for n_cells in [1usize, 3] {
+        let cells: Vec<SweepCell> =
+            (0..n_cells).map(|i| SweepCell::new(Method::Msq, 3, 2.0 + i as f64)).collect();
+        let before = im2col_invocations();
+        for t in 0..trials.len() {
+            let out = SweepSession::new(&net, trials.sample_set(t), cells.clone(), false, 2)
+                .run_scored(|qnet| qnet.weight_count())
+                .unwrap();
+            assert_eq!(out.scored.len(), n_cells);
+        }
+        assert_eq!(
+            im2col_invocations() - before,
+            2 * trials.len(),
+            "msq grid, {n_cells} cells: analog im2col is per-trial, never per-cell"
+        );
+    }
+    // GPFQ grids: T × (2 analog + one per diverged cell at the second conv)
+    for n_cells in [1usize, 3] {
+        let cells: Vec<SweepCell> =
+            (0..n_cells).map(|i| SweepCell::new(Method::Gpfq, 3, 2.0 + i as f64)).collect();
+        let before = im2col_invocations();
+        for t in 0..trials.len() {
+            let _ = SweepSession::new(&net, trials.sample_set(t), cells.clone(), false, 2)
+                .run_scored(|qnet| qnet.weight_count())
+                .unwrap();
+        }
+        assert_eq!(
+            im2col_invocations() - before,
+            trials.len() * (2 + n_cells),
+            "gpfq grid, {n_cells} cells: analog side never scales with cells"
+        );
+    }
 }

@@ -76,6 +76,7 @@ fn main() {
     );
     let best = |m: Method| res.best(m).map(|p| p.c_alpha_f32()).unwrap_or(2.0);
     let mut cols: Vec<Vec<f64>> = Vec::new();
+    let mut gpfq_outcome = None;
     for method in [Method::Gpfq, Method::Msq] {
         let cfg = PipelineConfig {
             method,
@@ -83,8 +84,11 @@ fn main() {
             capture_checkpoints: true,
             ..Default::default()
         };
-        let out = quantize_network(&net, x_quant, &cfg);
+        let out = quantize_network(&net, &x_quant, &cfg);
         cols.push(out.checkpoints.iter().map(|net| accuracy(net, &test_set)).collect());
+        if method == Method::Gpfq {
+            gpfq_outcome = Some(out);
+        }
     }
     for i in 0..cols[0].len() {
         fig1b.row(vec![(i + 1).to_string(), acc(cols[0][i]), acc(cols[1][i])]);
@@ -94,5 +98,20 @@ fn main() {
     let g_min = cols[0].iter().cloned().fold(f64::MAX, f64::min);
     if g_last > g_min {
         println!("GPFQ recovered {:+.4} top-1 after its worst intermediate layer — the Figure 1b error-correction effect.", g_last - g_min);
+    }
+
+    // ---- deployable artifact: pack the best GPFQ network and say how to
+    // ---- serve it (the point of the 20x compression)
+    let out = gpfq_outcome.expect("gpfq ran");
+    let hints = gpfq::nn::serialize::hints_from_outcome(&out);
+    let path = std::path::Path::new("results/mnist_mlp.gpfq");
+    let _ = std::fs::create_dir_all("results");
+    match gpfq::nn::serialize::save_file(&out.network, &hints, path) {
+        Ok(bytes) => {
+            println!("\npacked model written: {} ({bytes} bytes, ternary weights bit-packed)", path.display());
+            println!("serve it:  gpfq serve --model {} --port 8080", path.display());
+            println!("load-test: gpfq bench-serve --model {}", path.display());
+        }
+        Err(e) => eprintln!("warning: could not write {}: {e:#}", path.display()),
     }
 }

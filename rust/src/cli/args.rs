@@ -13,6 +13,10 @@ commands:
   quantize                   quantize a trained network once
   sweep                      cross-validate (M, C_alpha) grids (paper Sec. 6)
   eval                       evaluate a saved .gpfq model (--model path)
+  serve                      serve a .gpfq model over HTTP (--model path)
+  bench-serve                loopback load test of the serving stack; checks
+                             served logits bit-identical to direct forward
+                             and writes BENCH_serve.json
   help                       print this message
 
 common flags:
@@ -33,8 +37,17 @@ common flags:
                              each chunk re-pays the analog stream once)
   --json <path.json>         write the sweep grid (Fig 1a / Table 1) as JSON
   --save <path.gpfq>         write the quantized model (bit-packed weights)
-  --model <path.gpfq>        model file for eval
-  --verbose                  chatty output";
+  --model <path.gpfq>        model file for eval / serve / bench-serve
+  --verbose                  chatty output
+
+serving flags (serve, bench-serve):
+  --port <n>                 listen port (default 8080; serve)
+  --addr <host:port>         full bind address (overrides --port)
+  --max-batch <n>            micro-batcher: max coalesced batch (default 32)
+  --max-wait-us <n>          micro-batcher: max µs the oldest request waits
+                             for co-travellers (default 2000)
+  --requests <n>             bench-serve: total requests to replay
+  --clients <n>              bench-serve: concurrent client threads";
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]

@@ -11,6 +11,7 @@ use crate::data::synth;
 use crate::eval::metrics::accuracy;
 use crate::eval::report::acc;
 use crate::runtime::{Manifest, Runtime};
+use crate::serve::{bench_serve, BatchPolicy, BenchServeConfig, ServeConfig, Server};
 use crate::train::train;
 use crate::util::bench::Table;
 
@@ -25,8 +26,23 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "quantize" => cmd_quantize(args),
         "sweep" => cmd_sweep(args),
         "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
+        "bench-serve" => cmd_bench_serve(args),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
+}
+
+/// Serving knobs shared by `serve` and `bench-serve`.
+fn serve_config_from_args(args: &Args, addr: String) -> Result<ServeConfig> {
+    Ok(ServeConfig {
+        addr,
+        workers: args.usize("workers")?.unwrap_or_else(crate::config::default_workers),
+        batch: BatchPolicy::new(
+            args.usize("max-batch")?.unwrap_or(32),
+            args.usize("max-wait-us")?.unwrap_or(2000) as u64,
+        ),
+        ..Default::default()
+    })
 }
 
 /// Resolve the experiment spec from --config / --preset plus overrides.
@@ -211,6 +227,133 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Serve a saved `.gpfq` model over HTTP until interrupted.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let Some(path) = args.get("model") else {
+        bail!("serve requires --model <path.gpfq> (produce one with `gpfq quantize --save`)");
+    };
+    let net = crate::nn::serialize::load_file(std::path::Path::new(path))?;
+    let addr = match (args.get("addr"), args.usize("port")?) {
+        (Some(a), _) => a.to_string(),
+        (None, Some(p)) => format!("127.0.0.1:{p}"),
+        (None, None) => "127.0.0.1:8080".to_string(),
+    };
+    let cfg = serve_config_from_args(args, addr)?;
+    let server = Server::bind(net, &cfg)?;
+    println!("serving {} on http://{}", path, server.local_addr());
+    println!(
+        "  POST /infer {{\"input\": [f32; d]}}   GET /healthz   GET /stats\n  micro-batch: max {} requests / {}µs wait, {} workers — ctrl-c to stop",
+        cfg.batch.max_batch,
+        cfg.batch.max_wait.as_micros(),
+        cfg.workers
+    );
+    server.run()
+}
+
+/// In-process loopback load test: train-or-load a model, round-trip it
+/// through save→load, serve it, replay the test set, pin bit-parity, and
+/// write `BENCH_serve.json`.
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let mut spec = resolve_spec(args)?;
+    if std::env::var("BENCH_FAST").is_ok() {
+        spec.dataset.n_train = spec.dataset.n_train.min(400);
+        spec.dataset.n_test = spec.dataset.n_test.min(200);
+        spec.dataset.n_quant = spec.dataset.n_quant.min(64);
+        spec.train.epochs = spec.train.epochs.min(2);
+    }
+    // one synthesis serves both phases: the train half feeds the no-model
+    // path below, the test half is the replay set either way
+    let (tr, te) = make_datasets(&spec);
+    let (net, source) = match args.get("model") {
+        Some(path) => {
+            (crate::nn::serialize::load_file(std::path::Path::new(path))?, path.to_string())
+        }
+        None => {
+            // full artifact path: train → quantize → save packed → load
+            // back, so the bench serves exactly what deployment would
+            let mut net = spec.build_network();
+            println!("[bench-serve] training {} ...", net.summary());
+            train(&mut net, &tr, &spec.train);
+            let cfg = PipelineConfig {
+                levels: args.usize("levels")?.unwrap_or(spec.quant.levels[0]),
+                c_alpha: args.f64("c-alpha")?.unwrap_or(spec.quant.c_alphas[0]) as f32,
+                fc_only: spec.quant.fc_only,
+                workers: spec.quant.workers,
+                ..Default::default()
+            };
+            let x_quant = tr.x.rows_slice(0, spec.dataset.n_quant.min(tr.len()));
+            let out = quantize_network(&net, &x_quant, &cfg);
+            let hints = crate::nn::serialize::hints_from_outcome(&out);
+            let path = std::env::temp_dir()
+                .join(format!("gpfq_bench_serve_{}.gpfq", std::process::id()));
+            crate::nn::serialize::save_file(&out.network, &hints, &path)?;
+            let loaded = crate::nn::serialize::load_file(&path)?;
+            let _ = std::fs::remove_file(&path);
+            (loaded, format!("{} (trained + quantized + save/load round trip)", spec.name))
+        }
+    };
+    if te.dim() != net.input.len() {
+        bail!(
+            "model expects input width {}, preset {} provides {}",
+            net.input.len(),
+            spec.name,
+            te.dim()
+        );
+    }
+    let cfg = BenchServeConfig {
+        requests: args.usize("requests")?.unwrap_or(256),
+        clients: args.usize("clients")?.unwrap_or(8),
+        serve: serve_config_from_args(args, "127.0.0.1:0".to_string())?,
+    };
+    println!(
+        "[bench-serve] {} requests from {} clients (max_batch {}, max_wait {}µs, {} workers) against {}",
+        cfg.requests,
+        cfg.clients,
+        cfg.serve.batch.max_batch,
+        cfg.serve.batch.max_wait.as_micros(),
+        cfg.serve.workers,
+        source
+    );
+    let report = bench_serve(net, &te.x, &cfg)?;
+    let mut t = Table::new(
+        "bench-serve — loopback serving latency/throughput",
+        &["metric", "value"],
+    );
+    t.row(vec!["client QPS".into(), format!("{:.1}", report.client_qps)]);
+    t.row(vec!["latency p50".into(), format!("{:.0} µs", report.lat_p50_us)]);
+    t.row(vec!["latency p95".into(), format!("{:.0} µs", report.lat_p95_us)]);
+    t.row(vec!["latency p99".into(), format!("{:.0} µs", report.lat_p99_us)]);
+    t.row(vec!["mean batch".into(), format!("{:.2}", report.server.mean_batch)]);
+    t.row(vec![
+        "batch histogram".into(),
+        report
+            .server
+            .batch_hist
+            .iter()
+            .map(|(size, n)| format!("{size}x{n}"))
+            .collect::<Vec<_>>()
+            .join(" "),
+    ]);
+    let parity = if report.parity_ok {
+        "bit-identical".to_string()
+    } else {
+        format!("{} MISMATCHES", report.mismatches)
+    };
+    t.row(vec!["logits parity".into(), parity]);
+    println!("{}", t.render());
+    let json_path = args.get("json").unwrap_or("BENCH_serve.json");
+    std::fs::write(json_path, format!("{}\n", report.to_json()))
+        .map_err(|e| crate::error::format_err!("could not write {json_path}: {e}"))?;
+    println!("(json written to {json_path})");
+    if !report.parity_ok {
+        bail!(
+            "served logits diverged from direct Network::forward on {} request(s)",
+            report.mismatches
+        );
+    }
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let spec = resolve_spec(args)?;
     let (tr, te) = make_datasets(&spec);
@@ -287,13 +430,26 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     );
     for m in [Method::Gpfq, Method::Msq] {
         if let Some(best) = res.best(m) {
-            println!(
-                "best {:?}: top1 {} at (M={}, C_alpha={})",
-                m,
-                acc(best.top1),
-                best.levels,
-                best.c_alpha_requested
-            );
+            if multi {
+                // ranked by across-trial mean; min/max whiskers alongside
+                println!(
+                    "best {:?}: top1 mean {} [min {:.4}, max {:.4}] at (M={}, C_alpha={})  (ranked by trial mean)",
+                    m,
+                    acc(best.top1_stats.mean),
+                    best.top1_stats.min,
+                    best.top1_stats.max,
+                    best.levels,
+                    best.c_alpha_requested
+                );
+            } else {
+                println!(
+                    "best {:?}: top1 {} at (M={}, C_alpha={})",
+                    m,
+                    acc(best.top1),
+                    best.levels,
+                    best.c_alpha_requested
+                );
+            }
         }
     }
     if let Some(path) = args.get("json") {

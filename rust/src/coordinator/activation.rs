@@ -179,9 +179,9 @@ impl ActivationStore {
 /// The paper's Figure 1a and Tables 1–2 report quantization error as
 /// mean ± spread over multiple random draws of the quantization sample set
 /// — draw-to-draw variance is a first-class property of path-following
-/// quantizers.  A `TrialSet` fixes those draws **up front, on the caller's
-/// thread**, so the trial streams are deterministic and can never depend on
-/// worker count or job scheduling:
+/// quantizers.  A `TrialSet` fixes the *recipe* for those draws at
+/// construction (pool, `n_quant`, seed), so the trial streams are
+/// deterministic and can never depend on worker count or job scheduling:
 ///
 /// * **trial 0 is always the deterministic prefix of the pool** — exactly
 ///   the sample set the single-trial engine used — so every multi-trial
@@ -191,35 +191,59 @@ impl ActivationStore {
 ///   `(seed, t)` — non-overlapping sequences by construction, stable under
 ///   adding more trials (trial t's draw never depends on T).
 ///
+/// **Draws are lazy**: [`TrialSet::sample_set`] materializes trial t's
+/// rows when that trial starts and hands ownership to the caller (`Arc`),
+/// so resident sample memory is 1 × `n_quant` × d — the set being swept —
+/// instead of the T × `n_quant` × d an eager up-front draw held.  Lazy
+/// re-draws are bit-identical to the eager path (each trial's PCG stream
+/// is keyed by `(seed, t)` alone), pinned in `tests/test_sweep_grid.rs`.
+///
 /// The sweep engine runs the whole (method × M × C_alpha) grid once per
 /// trial, paying one analog stream per trial per cell-chunk and reusing
 /// the grid cells across trials.
-pub struct TrialSet {
-    sets: Vec<Arc<Matrix>>,
+pub struct TrialSet<'a> {
+    source: TrialSource<'a>,
+    n_quant: usize,
+    trials: usize,
+    seed: u64,
+}
+
+enum TrialSource<'a> {
+    /// lazy distinct-row draws from the borrowed pool
+    Pool(&'a Matrix),
+    /// one caller-supplied batch (the pre-trial API adapter)
+    Single(Arc<Matrix>),
 }
 
 /// PCG stream namespace for trial draws, offset so trial streams can never
 /// collide with the dataset-generation streams (0, 1) or the trainer's.
 const TRIAL_STREAM_BASE: u64 = 0x5EED_CE11;
 
-impl TrialSet {
+impl<'a> TrialSet<'a> {
     /// A single-trial set holding exactly `x_quant` — the adapter that runs
     /// the pre-trial API (`sweep(net, x_quant, ..)`) on the trial engine.
-    pub fn single(x_quant: &Matrix) -> TrialSet {
-        TrialSet { sets: vec![Arc::new(x_quant.clone())] }
+    pub fn single(x_quant: &Matrix) -> TrialSet<'static> {
+        let n_quant = x_quant.rows;
+        TrialSet {
+            source: TrialSource::Single(Arc::new(x_quant.clone())),
+            n_quant,
+            trials: 1,
+            seed: 0,
+        }
     }
 
-    /// Draw `trials` sample sets of `n_quant` rows from `pool` (rows are
-    /// samples; typically the training set).  Trial 0 is `pool`'s first
-    /// `n_quant` rows verbatim; later trials are independent distinct-row
-    /// draws on per-trial PCG streams.
+    /// Fix the draw recipe: `trials` sample sets of `n_quant` rows from
+    /// `pool` (rows are samples; typically the training set).  Trial 0 is
+    /// `pool`'s first `n_quant` rows verbatim; later trials are
+    /// independent distinct-row draws on per-trial PCG streams.  No rows
+    /// are copied here — [`TrialSet::sample_set`] builds set t on demand.
     ///
     /// Degenerate case: `n_quant == pool.rows` makes every draw the whole
     /// pool (a sorted distinct draw of n from n is the prefix), so all T
     /// trials are identical and every across-trial spread is exactly zero.
     /// The draw stays well-defined — callers wanting real error bars must
     /// hand in a pool strictly larger than `n_quant` (the CLI warns).
-    pub fn draw(pool: &Matrix, n_quant: usize, trials: usize, seed: u64) -> TrialSet {
+    pub fn draw(pool: &Matrix, n_quant: usize, trials: usize, seed: u64) -> TrialSet<'_> {
         assert!(trials >= 1, "need at least one trial");
         assert!(
             (1..=pool.rows).contains(&n_quant),
@@ -227,29 +251,42 @@ impl TrialSet {
             n_quant,
             pool.rows
         );
-        let mut sets = Vec::with_capacity(trials);
-        sets.push(Arc::new(pool.rows_slice(0, n_quant)));
-        for t in 1..trials {
-            let mut rng = Pcg::new(seed, TRIAL_STREAM_BASE.wrapping_add(t as u64));
-            let mut idx = rng.choose_indices(pool.rows, n_quant);
-            idx.sort_unstable();
-            sets.push(Arc::new(pool.gather_rows(&idx)));
-        }
-        TrialSet { sets }
+        TrialSet { source: TrialSource::Pool(pool), n_quant, trials, seed }
     }
 
     /// Number of trials.
     pub fn len(&self) -> usize {
-        self.sets.len()
+        self.trials
     }
 
     pub fn is_empty(&self) -> bool {
-        self.sets.is_empty()
+        self.trials == 0
     }
 
-    /// Trial t's quantization sample batch.
-    pub fn sample_set(&self, t: usize) -> &Matrix {
-        &self.sets[t]
+    /// Rows per sample set.
+    pub fn n_quant(&self) -> usize {
+        self.n_quant
+    }
+
+    /// Materialize trial t's quantization sample batch.  Deterministic in
+    /// `(seed, t)` alone: calling this lazily, repeatedly, or out of order
+    /// returns bit-identical rows every time.  The caller owns the only
+    /// long-lived reference — dropping it after the trial keeps resident
+    /// sample memory at one set, not T.
+    pub fn sample_set(&self, t: usize) -> Arc<Matrix> {
+        assert!(t < self.trials, "trial {t} out of range ({} trials)", self.trials);
+        match &self.source {
+            TrialSource::Single(x) => x.clone(),
+            TrialSource::Pool(pool) => {
+                if t == 0 {
+                    return Arc::new(pool.rows_slice(0, self.n_quant));
+                }
+                let mut rng = Pcg::new(self.seed, TRIAL_STREAM_BASE.wrapping_add(t as u64));
+                let mut idx = rng.choose_indices(pool.rows, self.n_quant);
+                idx.sort_unstable();
+                Arc::new(pool.gather_rows(&idx))
+            }
+        }
     }
 }
 
@@ -526,6 +563,34 @@ mod tests {
         let one = TrialSet::single(&pool);
         assert_eq!(one.len(), 1);
         assert_eq!(one.sample_set(0).data, pool.data);
+    }
+
+    #[test]
+    fn trial_set_lazy_draws_match_the_eager_reference() {
+        // the pre-lazy TrialSet materialized every set at construction with
+        // exactly this recipe; the lazy sample_set must reproduce it bit for
+        // bit, in any call order, as many times as asked
+        let mut rng = Pcg::seed(11);
+        let pool = Matrix::from_vec(30, 5, rng.normal_vec(150));
+        let (n_quant, trials, seed) = (12usize, 4usize, 123u64);
+        let mut eager: Vec<Matrix> = vec![pool.rows_slice(0, n_quant)];
+        for t in 1..trials {
+            let mut rng = Pcg::new(seed, TRIAL_STREAM_BASE.wrapping_add(t as u64));
+            let mut idx = rng.choose_indices(pool.rows, n_quant);
+            idx.sort_unstable();
+            eager.push(pool.gather_rows(&idx));
+        }
+        let lazy = TrialSet::draw(&pool, n_quant, trials, seed);
+        // out-of-order and repeated materialization
+        for &t in &[3usize, 0, 2, 1, 3, 0] {
+            assert_eq!(lazy.sample_set(t).data, eager[t].data, "trial {t}");
+        }
+        // each call hands out an independent Arc: dropping one set cannot
+        // perturb another (the 1×-resident contract)
+        let s1 = lazy.sample_set(1);
+        drop(lazy.sample_set(2));
+        assert_eq!(s1.data, eager[1].data);
+        assert_eq!(lazy.n_quant(), n_quant);
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! [`activation::TrialSet`] layer above it) feeding a layer-sequential,
 //! neuron-parallel quantization [`pipeline`] (staged as a
 //! [`pipeline::QuantizeSession`]), a bounded worker-pool [`scheduler`]
-//! with fused two-stage job graphs ([`scheduler::run_chained_jobs`]),
+//! with fused two-stage job graphs ([`scheduler::run_chained_jobs`]) and a
+//! reusable long-lived pool handle ([`scheduler::WorkerPool`], the serving
+//! subsystem's execution substrate),
 //! dual execution backends ([`executor`]: PJRT artifacts / native Rust),
 //! the Section 6 memory-bounded multi-trial [`sweep`] orchestrator, and
 //! the frozen pre-refactor [`reference`] oracle that pins bit-parity.
@@ -21,7 +23,7 @@ pub use pipeline::{
     quantize_network, try_quantize_network, Method, PipelineConfig, QuantOutcome, QuantizeSession,
 };
 pub use reference::reference_quantize_network;
-pub use scheduler::{pool_seedings, run_chained_jobs, run_jobs, SchedulerConfig};
+pub use scheduler::{pool_seedings, run_chained_jobs, run_jobs, SchedulerConfig, WorkerPool};
 pub use sweep::{
     layer_count_sweep, layer_count_sweep_outcome, sweep, sweep_trials, LayerCountPoint,
     ScoredOutcome, SweepCell, SweepConfig, SweepEngineStats, SweepOutcome, SweepPoint,

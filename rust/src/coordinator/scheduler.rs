@@ -20,7 +20,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Process-wide count of worker-pool seedings (thread scopes actually
 /// spawned; the single-worker serial fast path never seeds a pool).  Tests
@@ -317,6 +317,135 @@ where
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// long-lived worker pool
+// ---------------------------------------------------------------------------
+
+/// A job submitted to a [`WorkerPool`].
+type PoolJob = Box<dyn FnOnce() + Send>;
+
+struct PoolShared {
+    jobs: Mutex<VecDeque<PoolJob>>,
+    available: Condvar,
+    closed: AtomicBool,
+}
+
+/// A **reusable, long-lived** worker pool: where [`run_jobs`] /
+/// [`run_chained_jobs`] seed a scoped pool per call and tear it down when
+/// the fan-out completes, a `WorkerPool` keeps its threads alive across an
+/// unbounded stream of [`WorkerPool::submit`] calls — the shape a
+/// long-running service needs.  The serve subsystem
+/// ([`crate::serve::http`]) runs its batch-executor loops on one pool for
+/// the whole server lifetime instead of paying a pool seeding per batch.
+///
+/// Semantics:
+/// * jobs run in submission order when `workers == 1`; with more workers
+///   they start in submission order but may complete out of order;
+/// * [`WorkerPool::shutdown`] is graceful — it stops accepting jobs, lets
+///   the queue **drain**, and joins every worker (also performed on drop);
+/// * a submit racing shutdown never loses the job: once the pool is
+///   closed, `submit` runs the job **inline on the caller's thread**.
+///
+/// Each pool counts exactly one [`pool_seedings`] increment for its whole
+/// lifetime — the measurable contrast with per-call scoped pools.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers` (≥ 1) threads, alive until shutdown/drop.
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        POOL_SEEDINGS.fetch_add(1, Ordering::Relaxed);
+        let shared = Arc::new(PoolShared {
+            jobs: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            closed: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let mut q = shared.jobs.lock().unwrap();
+                        loop {
+                            if let Some(j) = q.pop_front() {
+                                break Some(j);
+                            }
+                            // closed + empty = drained: exit.  (closed is
+                            // only ever set while holding the jobs lock, so
+                            // this check cannot miss a concurrent submit.)
+                            if shared.closed.load(Ordering::Acquire) {
+                                break None;
+                            }
+                            q = shared.available.wait(q).unwrap();
+                        }
+                    };
+                    match job {
+                        Some(j) => j(),
+                        None => return,
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { shared, handles, workers }
+    }
+
+    /// Threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Jobs queued but not yet picked up (monitoring).
+    pub fn queued(&self) -> usize {
+        self.shared.jobs.lock().unwrap().len()
+    }
+
+    /// Enqueue a job.  After shutdown began the job runs inline on the
+    /// caller's thread instead — submitted work is never silently dropped.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let mut q = self.shared.jobs.lock().unwrap();
+        if self.shared.closed.load(Ordering::Acquire) {
+            drop(q);
+            job();
+            return;
+        }
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Graceful shutdown: stop accepting, drain the queue, join workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_in_place();
+    }
+
+    fn shutdown_in_place(&mut self) {
+        {
+            let _q = self.shared.jobs.lock().unwrap();
+            self.shared.closed.store(true, Ordering::Release);
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            // a panicked worker already reported itself on stderr; this
+            // runs from Drop too, where a second panic would abort the
+            // process (and mask the original error in unwinding tests) —
+            // so swallow the poisoned handle instead of expect()ing it
+            if h.join().is_err() {
+                eprintln!("warning: worker-pool thread panicked (job lost)");
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown_in_place();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -482,5 +611,90 @@ mod tests {
             run_chained_jobs(cfg, Vec::new(), |_, j: usize| Ok::<_, ()>(j), |_, m| Ok::<_, ()>(m))
                 .unwrap();
         assert!(none.is_empty());
+    }
+
+    #[test]
+    fn worker_pool_runs_every_submitted_job() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.workers(), 4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..200 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.shutdown(); // graceful: drains the queue before joining
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn worker_pool_seeds_once_for_its_whole_lifetime() {
+        let before = pool_seedings();
+        let pool = WorkerPool::new(2);
+        let ran = Arc::new(AtomicUsize::new(0));
+        // many submit waves over one pool: still ONE seeding (a scoped
+        // run_jobs per wave would pay one each)
+        for _ in 0..5 {
+            for _ in 0..8 {
+                let r = ran.clone();
+                pool.submit(move || {
+                    r.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        }
+        pool.shutdown();
+        assert_eq!(ran.load(Ordering::Relaxed), 40);
+        // concurrent tests may seed pools of their own: lower-bounded pin,
+        // our pool contributed exactly one
+        assert!(pool_seedings() >= before + 1);
+    }
+
+    #[test]
+    fn worker_pool_submit_after_shutdown_runs_inline() {
+        let pool = WorkerPool::new(2);
+        // shutdown consumes the handle; keep a clone of the shared state by
+        // closing through a second pool-less path: drop-based shutdown
+        let shared = pool.shared.clone();
+        pool.shutdown();
+        assert!(shared.closed.load(Ordering::Acquire));
+        // a fresh pool, shut down, then submitted to via a racing handle is
+        // modeled by calling submit on a pool whose shutdown began: emulate
+        // with a zombie pool built from the same parts
+        let zombie = WorkerPool { shared, handles: Vec::new(), workers: 2 };
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r = ran.clone();
+        zombie.submit(move || {
+            r.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1, "inline fallback ran on this thread");
+    }
+
+    #[test]
+    fn worker_pool_single_worker_preserves_submission_order() {
+        let pool = WorkerPool::new(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..32 {
+            let o = order.clone();
+            pool.submit(move || o.lock().unwrap().push(i));
+        }
+        pool.shutdown();
+        assert_eq!(*order.lock().unwrap(), (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_pool_drop_is_graceful_shutdown() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(2);
+            for _ in 0..50 {
+                let c = counter.clone();
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            // no explicit shutdown: drop must drain and join
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
     }
 }

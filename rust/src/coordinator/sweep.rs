@@ -175,27 +175,43 @@ pub struct SweepResult {
 }
 
 impl SweepResult {
-    /// Best point for a method (by trial-0 top-1).  Points whose score came
-    /// back NaN are excluded rather than poisoning the comparison (the
-    /// pre-fix `partial_cmp().unwrap()` panicked here; `total_cmp` alone
-    /// would rank positive NaN above every real score).
+    /// The score a cell is **ranked** by: trial-0 top-1 for single-trial
+    /// sweeps (bit-comparable to pre-trial history), the across-trial
+    /// top-1 **mean** once real trials ran — one lucky draw must not crown
+    /// a cell whose expected accuracy is worse (reports show the min/max
+    /// whiskers next to it).
+    pub fn ranking_top1(&self, p: &SweepPoint) -> f64 {
+        if self.trials > 1 {
+            p.top1_stats.mean
+        } else {
+            p.top1
+        }
+    }
+
+    /// Best point for a method, ranked by [`SweepResult::ranking_top1`].
+    /// Points whose ranking score came back NaN are excluded rather than
+    /// poisoning the comparison (the pre-fix `partial_cmp().unwrap()`
+    /// panicked here; `total_cmp` alone would rank positive NaN above
+    /// every real score).
     pub fn best(&self, method: Method) -> Option<&SweepPoint> {
         self.points
             .iter()
-            .filter(|p| p.method == method && !p.top1.is_nan())
-            .max_by(|a, b| a.top1.total_cmp(&b.top1))
+            .filter(|p| p.method == method && !self.ranking_top1(p).is_nan())
+            .max_by(|a, b| self.ranking_top1(a).total_cmp(&self.ranking_top1(b)))
     }
 
     /// Accuracy spread (max − min) across C_alpha for a method at fixed M —
     /// the paper's "MSQ is unstable in C_alpha, GPFQ is not" observation.
-    /// Uses trial-0 scores (use [`SweepPoint::top1_stats`] for the
-    /// across-trial spread of a single cell).
+    /// Uses [`SweepResult::ranking_top1`] per point (trial-0 for a single
+    /// trial, the across-trial mean otherwise; use
+    /// [`SweepPoint::top1_stats`] for the across-trial spread of a single
+    /// cell).
     pub fn spread(&self, method: Method, levels: usize) -> f64 {
         let accs: Vec<f64> = self
             .points
             .iter()
             .filter(|p| p.method == method && p.levels == levels)
-            .map(|p| p.top1)
+            .map(|p| self.ranking_top1(p))
             .collect();
         if accs.is_empty() {
             return 0.0;
@@ -679,10 +695,14 @@ pub fn sweep_trials(
     let mut shared_seconds = 0.0;
     let mut peak = 0usize;
     for t in 0..trials.len() {
+        // lazy draw: trial t's sample set is materialized here, when its
+        // trial starts, and dropped at the end of the iteration — resident
+        // sample memory stays at ONE set however many trials run
         let x = trials.sample_set(t);
         for (ci, chunk_cells) in cells.chunks(chunk).enumerate() {
             let base = ci * chunk;
-            let session = SweepSession::new(net, x, chunk_cells.to_vec(), cfg.fc_only, cfg.workers);
+            let session =
+                SweepSession::new(net, &x, chunk_cells.to_vec(), cfg.fc_only, cfg.workers);
             let out = session
                 .run_scored(|qnet| CellScore {
                     top1: accuracy(qnet, test),
@@ -893,6 +913,51 @@ mod tests {
         let res = result_with(vec![point(f64::NAN), point(f64::NAN)]);
         assert!(res.best(Method::Gpfq).is_none());
         assert!(res.best(Method::Msq).is_none());
+    }
+
+    #[test]
+    fn multi_trial_best_and_spread_rank_by_mean_not_trial0() {
+        let mk = |c_alpha: f64, trials: Vec<f64>| SweepPoint {
+            method: Method::Gpfq,
+            levels: 3,
+            c_alpha,
+            c_alpha_requested: c_alpha,
+            top1: trials[0],
+            top5: 0.0,
+            top1_stats: TrialStats::from_samples(&trials),
+            top5_stats: TrialStats::from_samples(&[0.0]),
+            top1_trials: trials,
+            top5_trials: vec![0.0],
+            seconds: 0.0,
+        };
+        // cell A: lucky trial 0 (0.9) but poor mean (0.6);
+        // cell B: modest trial 0 (0.8) but better mean (0.8)
+        let a = mk(1.0, vec![0.9, 0.3]);
+        let b = mk(2.0, vec![0.8, 0.8]);
+        let multi = SweepResult {
+            analog_top1: 0.95,
+            analog_top5: 0.0,
+            shared_seconds: 0.0,
+            trials: 2,
+            chunk_cells: 2,
+            peak_resident_bytes: 0,
+            points: vec![a.clone(), b.clone()],
+        };
+        let best = multi.best(Method::Gpfq).unwrap();
+        assert_eq!(best.c_alpha_requested, 2.0, "mean must outrank a lucky trial 0");
+        assert_eq!(multi.ranking_top1(best), 0.8);
+        // spread follows the same ranking score: |0.8 - 0.6| across C_alpha
+        assert!((multi.spread(Method::Gpfq, 3) - 0.2).abs() < 1e-12);
+        // a NaN mean is excluded from the ranking like a NaN trial-0 was
+        let poisoned = SweepResult {
+            points: vec![mk(1.0, vec![f64::NAN, f64::NAN]), b.clone()],
+            ..multi.clone()
+        };
+        assert_eq!(poisoned.best(Method::Gpfq).unwrap().c_alpha_requested, 2.0);
+        // single trial: trial-0 ranking is unchanged (history stays pinned)
+        let single = SweepResult { trials: 1, points: vec![a, b], ..multi.clone() };
+        assert_eq!(single.best(Method::Gpfq).unwrap().c_alpha_requested, 1.0);
+        assert!((single.spread(Method::Gpfq, 3) - 0.1).abs() < 1e-12);
     }
 
     #[test]

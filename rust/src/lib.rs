@@ -11,7 +11,8 @@
 //!   neuron-parallel pipeline ([`coordinator`]), PJRT artifact runtime
 //!   ([`runtime`]), plus every substrate the paper's experiments assume:
 //!   networks ([`nn`]), training ([`train`]), datasets ([`data`]),
-//!   quantizers and baselines ([`quant`]), theory checks ([`theory`]).
+//!   quantizers and baselines ([`quant`]), theory checks ([`theory`]),
+//!   and the batched HTTP inference service for packed models ([`serve`]).
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained, loading the HLO-text artifacts through the
@@ -27,6 +28,7 @@ pub mod eval;
 pub mod nn;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod theory;
 pub mod train;

@@ -26,6 +26,18 @@ use crate::quant::alphabet::Alphabet;
 const MAGIC: &[u8; 4] = b"GPFQ";
 const VERSION: u32 = 1;
 
+// Load-path hardening caps.  A `.gpfq` file handed to `gpfq serve` is
+// untrusted input: every length field is validated against these bounds
+// *before* any allocation or arithmetic uses it, so a corrupt or malicious
+// header fails with an error instead of an OOM abort, an arithmetic
+// overflow, or an out-of-bounds panic in `unpack_indices`.
+/// cap on any single matrix/bias/channel dimension
+const MAX_DIM: usize = 1 << 24;
+/// cap on total elements of one weight matrix (1 GiB of f32)
+const MAX_ELEMS: usize = 1 << 28;
+/// cap on alphabet size M (bits_per_index stays ≤ 20)
+const MAX_LEVELS: usize = 1 << 20;
+
 const TAG_DENSE: u8 = 1;
 const TAG_CONV: u8 = 2;
 const TAG_POOL: u8 = 3;
@@ -153,19 +165,49 @@ fn write_weights(out: &mut impl Write, w: &Matrix, alpha: Option<Alphabet>) -> i
 fn read_weights(inp: &mut impl Read) -> Result<Matrix> {
     let rows = read_u32(inp)? as usize;
     let cols = read_u32(inp)? as usize;
+    if rows > MAX_DIM || cols > MAX_DIM {
+        bail!("implausible weight shape {rows}x{cols}");
+    }
+    let elems = rows
+        .checked_mul(cols)
+        .filter(|&n| n <= MAX_ELEMS)
+        .ok_or_else(|| crate::error::format_err!("weight matrix {rows}x{cols} exceeds element cap"))?;
     let mut enc = [0u8; 1];
     inp.read_exact(&mut enc)?;
     match enc[0] {
-        ENC_F32 => Ok(Matrix::from_vec(rows, cols, read_f32s(inp, rows * cols)?)),
+        ENC_F32 => Ok(Matrix::from_vec(rows, cols, read_f32s(inp, elems)?)),
         ENC_PACKED => {
             let alpha = read_f32(inp)?;
+            if !alpha.is_finite() || alpha <= 0.0 {
+                bail!("corrupt packed layer: alpha {alpha}");
+            }
             let m = read_u32(inp)? as usize;
+            if !(2..=MAX_LEVELS).contains(&m) {
+                bail!("corrupt packed layer: alphabet size {m}");
+            }
             let a = Alphabet::new(alpha, m);
+            let bits = bits_per_index(m);
             let nbytes = read_u32(inp)? as usize;
+            // the payload length is implied by the shape; a mismatch means
+            // a corrupt stream (and a short one would index out of bounds
+            // inside unpack_indices)
+            let expected = (elems as u64 * bits as u64).div_ceil(8) as usize;
+            if nbytes != expected {
+                bail!("packed payload {nbytes} bytes, shape implies {expected}");
+            }
             let mut bytes = vec![0u8; nbytes];
             inp.read_exact(&mut bytes)?;
-            let idx = unpack_indices(&bytes, bits_per_index(m), rows * cols);
-            let data = idx.into_iter().map(|j| a.level(j)).collect();
+            let idx = unpack_indices(&bytes, bits, elems);
+            // ⌈log₂M⌉ bits can encode indices past M-1 for non-power-of-two
+            // alphabets; a corrupt payload must not hit the assert in
+            // Alphabet::level
+            let mut data = Vec::with_capacity(elems);
+            for j in idx {
+                if j >= m {
+                    bail!("packed index {j} out of range for M={m} alphabet");
+                }
+                data.push(a.level(j));
+            }
             Ok(Matrix::from_vec(rows, cols, data))
         }
         other => bail!("unknown weight encoding {other}"),
@@ -280,10 +322,10 @@ pub fn load(inp: &mut impl Read) -> Result<Network> {
                 let act = if actb[0] == 1 { Activation::Relu } else { Activation::None };
                 let w = read_weights(inp)?;
                 let blen = read_u32(inp)? as usize;
-                let b = read_f32s(inp, blen)?;
                 if w.cols != blen {
                     bail!("layer {li}: bias length {blen} != neurons {}", w.cols);
                 }
+                let b = read_f32s(inp, blen)?;
                 cur = Shape::Flat(w.cols);
                 layers.push(Layer::Dense { w, b, act });
             }
@@ -299,8 +341,28 @@ pub fn load(inp: &mut impl Read) -> Result<Network> {
                     w: read_u32(inp)? as usize,
                     c: read_u32(inp)? as usize,
                 };
+                if in_shape.h > MAX_DIM || in_shape.w > MAX_DIM || in_shape.c > MAX_DIM {
+                    bail!("layer {li}: implausible conv input shape");
+                }
+                if kh == 0 || kw == 0 || stride == 0 || kh > in_shape.h || kw > in_shape.w {
+                    bail!(
+                        "layer {li}: kernel {kh}x{kw} stride {stride} does not fit input {}x{}",
+                        in_shape.h,
+                        in_shape.w
+                    );
+                }
                 let k = read_weights(inp)?;
+                let patch = kh
+                    .checked_mul(kw)
+                    .and_then(|n| n.checked_mul(in_shape.c))
+                    .ok_or_else(|| crate::error::format_err!("layer {li}: patch size overflow"))?;
+                if k.rows != patch {
+                    bail!("layer {li}: kernel rows {} != kh*kw*cin {patch}", k.rows);
+                }
                 let blen = read_u32(inp)? as usize;
+                if blen != k.cols {
+                    bail!("layer {li}: bias length {blen} != channels {}", k.cols);
+                }
                 let b = read_f32s(inp, blen)?;
                 let out_shape = ImgShape {
                     h: crate::nn::conv::conv_out(in_shape.h, kh, stride),
@@ -317,11 +379,21 @@ pub fn load(inp: &mut impl Read) -> Result<Network> {
                     w: read_u32(inp)? as usize,
                     c: read_u32(inp)? as usize,
                 };
+                if in_shape.h > MAX_DIM || in_shape.w > MAX_DIM || in_shape.c > MAX_DIM {
+                    bail!("layer {li}: implausible pool input shape");
+                }
+                if size == 0 || size > in_shape.h || size > in_shape.w {
+                    let (h, w) = (in_shape.h, in_shape.w);
+                    bail!("layer {li}: pool size {size} does not fit {h}x{w}");
+                }
                 cur = Shape::Img(ImgShape { h: in_shape.h / size, w: in_shape.w / size, c: in_shape.c });
                 layers.push(Layer::MaxPool { size, in_shape });
             }
             TAG_BN => {
                 let channels = read_u32(inp)? as usize;
+                if channels == 0 || channels > MAX_DIM {
+                    bail!("layer {li}: implausible BN channel count {channels}");
+                }
                 let mut bn = BatchNorm::new(channels);
                 bn.eps = read_f32(inp)?;
                 bn.gamma = read_f32s(inp, channels)?;
@@ -460,6 +532,126 @@ mod tests {
         save(&mnist_mlp(0, 4, &[3], 2), &AlphabetHints::new(), &mut buf2).unwrap();
         buf2.truncate(buf2.len() / 2);
         assert!(load(&mut &buf2[..]).is_err());
+    }
+
+    /// A writer for hand-crafted malicious headers.
+    fn le32(v: u32) -> [u8; 4] {
+        v.to_le_bytes()
+    }
+
+    fn header(n_layers: u32) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&le32(VERSION));
+        b.extend_from_slice(&le32(0)); // flat input
+        b.extend_from_slice(&le32(8));
+        b.extend_from_slice(&le32(n_layers));
+        b
+    }
+
+    #[test]
+    fn load_rejects_implausible_weight_shapes_without_allocating() {
+        // a dense layer claiming a (2^31 x 2^31) matrix: must error out on
+        // the cap check, never attempt the allocation
+        let mut b = header(1);
+        b.push(TAG_DENSE);
+        b.push(0); // act
+        b.extend_from_slice(&le32(1 << 31));
+        b.extend_from_slice(&le32(1 << 31));
+        let e = load(&mut &b[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("implausible weight shape"), "{e:#}");
+        // plausible dims whose product overflows the element cap
+        let mut b = header(1);
+        b.push(TAG_DENSE);
+        b.push(0);
+        b.extend_from_slice(&le32(1 << 23));
+        b.extend_from_slice(&le32(1 << 23));
+        let e = load(&mut &b[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("element cap"), "{e:#}");
+    }
+
+    #[test]
+    fn load_rejects_huge_bias_before_reading_it() {
+        // 2x2 f32 weights, then a bias length that disagrees with cols —
+        // must fail on the length check, not try to read 4B floats
+        let mut b = header(1);
+        b.push(TAG_DENSE);
+        b.push(0);
+        b.extend_from_slice(&le32(2));
+        b.extend_from_slice(&le32(2));
+        b.push(ENC_F32);
+        for _ in 0..4 {
+            b.extend_from_slice(&0.5f32.to_le_bytes());
+        }
+        b.extend_from_slice(&le32(u32::MAX));
+        let e = load(&mut &b[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("bias length"), "{e:#}");
+    }
+
+    #[test]
+    fn load_rejects_corrupt_packed_payloads() {
+        let packed_layer = |m: u32, nbytes: u32, payload: &[u8], alpha: f32| {
+            let mut b = header(1);
+            b.push(TAG_DENSE);
+            b.push(0);
+            b.extend_from_slice(&le32(2)); // 2x2
+            b.extend_from_slice(&le32(2));
+            b.push(ENC_PACKED);
+            b.extend_from_slice(&alpha.to_le_bytes());
+            b.extend_from_slice(&le32(m));
+            b.extend_from_slice(&le32(nbytes));
+            b.extend_from_slice(payload);
+            b
+        };
+        // payload length disagreeing with the shape (the pre-fix OOB panic
+        // path in unpack_indices)
+        let e = load(&mut &packed_layer(3, 0, &[], 1.0)[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("shape implies"), "{e:#}");
+        // alphabet size 0/1 (Alphabet::new would assert) and absurd M
+        for m in [0u32, 1, 1 << 30] {
+            let e = load(&mut &packed_layer(m, 1, &[0], 1.0)[..]).unwrap_err();
+            assert!(format!("{e:#}").contains("alphabet size"), "M={m}: {e:#}");
+        }
+        // non-finite / non-positive alpha (Alphabet::new would assert)
+        for alpha in [f32::NAN, f32::INFINITY, 0.0, -1.0] {
+            let e = load(&mut &packed_layer(3, 1, &[0], alpha)[..]).unwrap_err();
+            assert!(format!("{e:#}").contains("alpha"), "alpha={alpha}: {e:#}");
+        }
+        // an index past M-1 inside a valid-length payload (M=3 packs 2
+        // bits: index 3 is encodable but invalid) — 4 indices of value 3
+        let e = load(&mut &packed_layer(3, 1, &[0xFF], 1.0)[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("out of range"), "{e:#}");
+    }
+
+    #[test]
+    fn load_rejects_corrupt_conv_pool_bn_records() {
+        // conv kernel that does not fit its input
+        let mut b = header(1);
+        b.push(TAG_CONV);
+        b.push(0);
+        b.extend_from_slice(&le32(5)); // kh
+        b.extend_from_slice(&le32(5)); // kw
+        b.extend_from_slice(&le32(1)); // stride
+        b.extend_from_slice(&le32(3)); // h < kh
+        b.extend_from_slice(&le32(3));
+        b.extend_from_slice(&le32(1));
+        let e = load(&mut &b[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("does not fit"), "{e:#}");
+        // zero-size pool
+        let mut b = header(1);
+        b.push(TAG_POOL);
+        b.extend_from_slice(&le32(0));
+        b.extend_from_slice(&le32(4));
+        b.extend_from_slice(&le32(4));
+        b.extend_from_slice(&le32(1));
+        let e = load(&mut &b[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("pool size"), "{e:#}");
+        // BN claiming 2^31 channels: rejected before the 4 huge reads
+        let mut b = header(1);
+        b.push(TAG_BN);
+        b.extend_from_slice(&le32(1 << 31));
+        let e = load(&mut &b[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("BN channel"), "{e:#}");
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! The micro-batcher: coalesce concurrent inference requests into one
+//! forward-pass batch.
+//!
+//! A packed GPFQ model answers a single request with one GEMV per layer;
+//! `B` concurrent requests answered one by one cost `B` GEMVs, while the
+//! same `B` requests stacked into one matrix cost one GEMM — far better
+//! arithmetic intensity on every backend.  The micro-batcher is the queue
+//! in front of the model that performs that stacking under a latency
+//! budget: requests are admitted FIFO and a batch is released as soon as
+//!
+//! * `max_batch` requests are waiting (the batch is full), or
+//! * the **oldest** waiting request has aged `max_wait` (latency bound:
+//!   no request waits more than `max_wait` for co-travellers), or
+//! * the batcher is shutting down (drain: queued requests still run).
+//!
+//! The scheduling policy lives in [`BatchCore`], a pure state machine
+//! driven by an explicit microsecond clock — every flush rule is unit
+//! tested with synthetic clocks, no sockets or threads involved.
+//! [`MicroBatcher`] wraps the core with a mutex/condvar and real time for
+//! the server ([`crate::serve::http`]), whose batch-executor workers block
+//! in [`MicroBatcher::next_batch`].
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batch release policy: how large a batch may grow and how long the
+/// oldest request may wait for co-travellers.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// released batches contain 1..=max_batch requests
+    pub max_batch: usize,
+    /// the oldest queued request never waits longer than this
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait_us: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch: max_batch.max(1),
+            max_wait: Duration::from_micros(max_wait_us),
+        }
+    }
+}
+
+/// The pure scheduling core: a FIFO of `(item, enqueue_time_us)` plus the
+/// release rules, driven entirely by a caller-supplied microsecond clock.
+/// No threads, no sockets, no real time — fully deterministic under test.
+pub struct BatchCore<T> {
+    queue: VecDeque<(T, u64)>,
+    max_batch: usize,
+    max_wait_us: u64,
+    closed: bool,
+}
+
+impl<T> BatchCore<T> {
+    pub fn new(policy: BatchPolicy) -> BatchCore<T> {
+        BatchCore {
+            queue: VecDeque::new(),
+            max_batch: policy.max_batch.max(1),
+            max_wait_us: policy.max_wait.as_micros() as u64,
+            closed: false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// Admit a request at `now_us`.  Returns the item back if the batcher
+    /// is closed (the caller owns the rejection, e.g. a 503 response).
+    pub fn push(&mut self, item: T, now_us: u64) -> Result<(), T> {
+        if self.closed {
+            return Err(item);
+        }
+        self.queue.push_back((item, now_us));
+        Ok(())
+    }
+
+    /// Stop admitting requests; queued requests still drain through
+    /// [`BatchCore::pop_batch`].
+    pub fn close(&mut self) {
+        self.closed = true;
+    }
+
+    /// Would [`BatchCore::pop_batch`] release a batch at `now_us`?
+    pub fn ready(&self, now_us: u64) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        if self.closed || self.queue.len() >= self.max_batch {
+            return true;
+        }
+        let oldest = self.queue.front().expect("nonempty").1;
+        now_us.saturating_sub(oldest) >= self.max_wait_us
+    }
+
+    /// Release the next batch if one is due at `now_us`: the oldest
+    /// `min(len, max_batch)` requests, in admission order (FIFO — a burst
+    /// larger than `max_batch` is served as consecutive full batches, no
+    /// request can be overtaken by a later one).
+    pub fn pop_batch(&mut self, now_us: u64) -> Option<Vec<T>> {
+        if !self.ready(now_us) {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_batch);
+        Some(self.queue.drain(..n).map(|(item, _)| item).collect())
+    }
+
+    /// Absolute time (µs) at which the currently queued prefix becomes
+    /// releasable by age; `None` when the queue is empty or a batch is
+    /// already due.  The blocking wrapper sleeps until this deadline.
+    pub fn deadline_us(&self, now_us: u64) -> Option<u64> {
+        if self.queue.is_empty() || self.ready(now_us) {
+            return None;
+        }
+        Some(self.queue.front().expect("nonempty").1 + self.max_wait_us)
+    }
+}
+
+/// Thread-safe blocking facade over [`BatchCore`] using real time: HTTP
+/// connection handlers [`MicroBatcher::submit`] requests, batch-executor
+/// workers block in [`MicroBatcher::next_batch`] until a batch is due.
+pub struct MicroBatcher<T> {
+    core: Mutex<BatchCore<T>>,
+    /// signalled on submit and on shutdown
+    available: Condvar,
+    epoch: Instant,
+}
+
+impl<T> MicroBatcher<T> {
+    pub fn new(policy: BatchPolicy) -> MicroBatcher<T> {
+        MicroBatcher {
+            core: Mutex::new(BatchCore::new(policy)),
+            available: Condvar::new(),
+            epoch: Instant::now(),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Queue depth right now (monitoring).
+    pub fn len(&self) -> usize {
+        self.core.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit a request; `Err(item)` after [`MicroBatcher::shutdown`].
+    pub fn submit(&self, item: T) -> Result<(), T> {
+        let now = self.now_us();
+        let res = self.core.lock().unwrap().push(item, now);
+        if res.is_ok() {
+            self.available.notify_one();
+        }
+        res
+    }
+
+    /// Block until a batch is due and return it; `None` once the batcher
+    /// has been shut down **and** the queue has drained — the executor
+    /// workers' exit signal.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let mut core = self.core.lock().unwrap();
+        loop {
+            let now = self.now_us();
+            if let Some(batch) = core.pop_batch(now) {
+                // more requests may already be due (burst > max_batch):
+                // wake a sibling worker before running this batch
+                if core.ready(now) {
+                    self.available.notify_one();
+                }
+                return Some(batch);
+            }
+            if core.is_closed() && core.is_empty() {
+                return None;
+            }
+            core = match core.deadline_us(now) {
+                // queue nonempty: sleep at most until the oldest request's
+                // age deadline (a submit may wake us earlier with a full
+                // batch)
+                Some(deadline) => {
+                    let wait = Duration::from_micros(deadline.saturating_sub(now).max(1));
+                    self.available.wait_timeout(core, wait).unwrap().0
+                }
+                // empty queue: sleep until a submit or shutdown
+                None => self.available.wait(core).unwrap(),
+            };
+        }
+    }
+
+    /// Stop admitting requests and wake every blocked worker; already
+    /// queued requests still come out of [`MicroBatcher::next_batch`]
+    /// (shutdown drains the queue, it never drops work).
+    pub fn shutdown(&self) {
+        self.core.lock().unwrap().close();
+        self.available.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn policy(max_batch: usize, max_wait_us: u64) -> BatchPolicy {
+        BatchPolicy::new(max_batch, max_wait_us)
+    }
+
+    // ---- BatchCore: the pure policy, driven by a synthetic clock ----
+
+    #[test]
+    fn coalesces_up_to_max_batch() {
+        let mut c = BatchCore::new(policy(4, 1000));
+        for i in 0..4 {
+            c.push(i, 10).unwrap();
+        }
+        // full batch releases immediately, no aging required
+        assert!(c.ready(10));
+        assert_eq!(c.pop_batch(10).unwrap(), vec![0, 1, 2, 3]);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn under_full_batch_waits_for_max_wait_then_flushes() {
+        let mut c = BatchCore::new(policy(8, 500));
+        c.push('a', 100).unwrap();
+        c.push('b', 300).unwrap();
+        // not full and the oldest ('a', t=100) hasn't aged 500µs yet
+        assert!(!c.ready(400));
+        assert_eq!(c.pop_batch(400), None);
+        assert_eq!(c.deadline_us(400), Some(600), "oldest enqueue + max_wait");
+        // at t=600 the oldest request's budget is exhausted: flush BOTH
+        assert!(c.ready(600));
+        assert_eq!(c.pop_batch(600).unwrap(), vec!['a', 'b']);
+    }
+
+    #[test]
+    fn fifo_fairness_across_consecutive_batches() {
+        // a burst of 10 into max_batch=4 comes out as 4+4+2, in admission
+        // order — no request is overtaken by a later one
+        let mut c = BatchCore::new(policy(4, 1000));
+        for i in 0..10 {
+            c.push(i, i as u64).unwrap();
+        }
+        assert_eq!(c.pop_batch(10).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(c.pop_batch(10).unwrap(), vec![4, 5, 6, 7]);
+        // remaining 2 are not a full batch: they must age like any others
+        assert_eq!(c.pop_batch(10), None);
+        assert_eq!(c.pop_batch(8 + 1000).unwrap(), vec![8, 9]);
+    }
+
+    #[test]
+    fn close_rejects_new_work_but_drains_the_queue() {
+        let mut c = BatchCore::new(policy(4, 1_000_000));
+        c.push(1, 0).unwrap();
+        c.push(2, 0).unwrap();
+        c.close();
+        assert_eq!(c.push(3, 1).unwrap_err(), 3, "closed: item handed back");
+        // drain releases immediately — no aging, no fill requirement
+        assert!(c.ready(1));
+        assert_eq!(c.pop_batch(1).unwrap(), vec![1, 2]);
+        assert_eq!(c.pop_batch(2), None, "drained");
+    }
+
+    #[test]
+    fn deadline_tracks_the_oldest_request() {
+        let mut c = BatchCore::new(policy(4, 100));
+        assert_eq!(c.deadline_us(0), None, "empty queue has no deadline");
+        c.push('x', 50).unwrap();
+        assert_eq!(c.deadline_us(60), Some(150));
+        c.push('y', 120).unwrap();
+        assert_eq!(c.deadline_us(130), Some(150), "oldest governs, not newest");
+        // once due, deadline_us reports None (pop now, don't sleep)
+        assert_eq!(c.deadline_us(150), None);
+    }
+
+    #[test]
+    fn zero_wait_flushes_every_poll() {
+        // max_wait = 0: every queued request is due immediately — the
+        // batcher degrades to pass-through (still batching bursts)
+        let mut c = BatchCore::new(policy(8, 0));
+        c.push(1, 7).unwrap();
+        assert!(c.ready(7));
+        assert_eq!(c.pop_batch(7).unwrap(), vec![1]);
+    }
+
+    // ---- MicroBatcher: the blocking facade with real time ----
+
+    #[test]
+    fn threaded_coalescing_and_drain() {
+        let mb: Arc<MicroBatcher<usize>> = Arc::new(MicroBatcher::new(policy(4, 500)));
+        let batches: Arc<Mutex<Vec<Vec<usize>>>> = Arc::new(Mutex::new(Vec::new()));
+        let served = Arc::new(AtomicUsize::new(0));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let mb = mb.clone();
+                let batches = batches.clone();
+                let served = served.clone();
+                std::thread::spawn(move || {
+                    while let Some(b) = mb.next_batch() {
+                        served.fetch_add(b.len(), Ordering::Relaxed);
+                        batches.lock().unwrap().push(b);
+                    }
+                })
+            })
+            .collect();
+        for i in 0..25 {
+            mb.submit(i).unwrap();
+        }
+        // shutdown drains: every submitted request is served exactly once
+        mb.shutdown();
+        assert!(mb.submit(99).is_err(), "closed batcher rejects");
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(served.load(Ordering::Relaxed), 25, "drain served everything");
+        let mut all: Vec<usize> = batches.lock().unwrap().iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..25).collect::<Vec<_>>());
+        // batch-size bound holds throughout
+        assert!(batches.lock().unwrap().iter().all(|b| !b.is_empty() && b.len() <= 4));
+    }
+
+    #[test]
+    fn max_wait_flushes_a_lone_request() {
+        // one request, batch never fills: the age deadline must release it
+        let mb: Arc<MicroBatcher<u8>> = Arc::new(MicroBatcher::new(policy(64, 300)));
+        let mb2 = mb.clone();
+        let worker = std::thread::spawn(move || mb2.next_batch());
+        std::thread::sleep(Duration::from_millis(5));
+        let t0 = Instant::now();
+        mb.submit(7).unwrap();
+        let batch = worker.join().unwrap().unwrap();
+        assert_eq!(batch, vec![7]);
+        assert!(t0.elapsed() < Duration::from_secs(2), "flush must not hang");
+        mb.shutdown();
+        assert_eq!(mb.next_batch(), None, "shut down and drained");
+    }
+}

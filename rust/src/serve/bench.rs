@@ -1,0 +1,209 @@
+//! In-process loopback load generator for the serving stack — the
+//! machinery behind `gpfq bench-serve`.
+//!
+//! Starts a real [`Server`] on `127.0.0.1:0`, replays dataset rows as
+//! concurrent HTTP `POST /infer` requests from `clients` client threads,
+//! and checks **every served logits row bit-for-bit** against a direct
+//! in-process [`Network::forward`] on the same rows — the end-to-end proof
+//! that the HTTP + micro-batch + worker-pool path changes scheduling,
+//! never values.  The report carries client-observed latency quantiles,
+//! QPS, the server's batch-size histogram, and the parity verdict; `gpfq
+//! bench-serve` writes it to `BENCH_serve.json` (a CI artifact, so the
+//! serving-latency trajectory accumulates across PRs).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::error::{Context, Result};
+use crate::nn::matrix::Matrix;
+use crate::nn::network::Network;
+use crate::serve::http::{http_json_request, Server, ServeConfig};
+use crate::serve::stats::StatsSnapshot;
+use crate::util::json::Json;
+use crate::util::stats::quantile;
+
+/// Load-generator configuration.
+#[derive(Debug, Clone)]
+pub struct BenchServeConfig {
+    /// total inference requests to replay
+    pub requests: usize,
+    /// concurrent client threads (concurrency is what gives the
+    /// micro-batcher something to coalesce)
+    pub clients: usize,
+    /// the server under test (addr is forced to loopback port 0)
+    pub serve: ServeConfig,
+}
+
+impl Default for BenchServeConfig {
+    fn default() -> Self {
+        BenchServeConfig {
+            requests: 256,
+            clients: 8,
+            serve: ServeConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() },
+        }
+    }
+}
+
+/// What one `bench-serve` run measured.
+#[derive(Debug, Clone)]
+pub struct BenchServeReport {
+    pub model_summary: String,
+    pub requests: usize,
+    pub clients: usize,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    /// client-phase wall clock
+    pub wall_seconds: f64,
+    /// completed requests / wall_seconds, observed from the client side
+    pub client_qps: f64,
+    /// client-observed end-to-end latency (connect → parsed response), µs
+    pub lat_mean_us: f64,
+    pub lat_p50_us: f64,
+    pub lat_p95_us: f64,
+    pub lat_p99_us: f64,
+    pub lat_max_us: f64,
+    /// the server's own metrics (service latency, batch histogram)
+    pub server: StatsSnapshot,
+    /// served logits bit-identical to direct `Network::forward`?
+    pub parity_ok: bool,
+    pub mismatches: usize,
+}
+
+impl BenchServeReport {
+    /// Machine-readable summary (`BENCH_serve.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("bench", Json::Str("serve_loopback".into())),
+            ("model", Json::Str(self.model_summary.clone())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("clients", Json::Num(self.clients as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("max_wait_us", Json::Num(self.max_wait_us as f64)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            ("client_qps", Json::Num(self.client_qps)),
+            ("client_latency_mean_us", Json::Num(self.lat_mean_us)),
+            ("client_latency_p50_us", Json::Num(self.lat_p50_us)),
+            ("client_latency_p95_us", Json::Num(self.lat_p95_us)),
+            ("client_latency_p99_us", Json::Num(self.lat_p99_us)),
+            ("client_latency_max_us", Json::Num(self.lat_max_us)),
+            ("parity_ok", Json::Bool(self.parity_ok)),
+            ("mismatches", Json::Num(self.mismatches as f64)),
+            ("server", self.server.to_json()),
+        ])
+    }
+}
+
+/// Replay `cfg.requests` rows of `data` (cycled) against a loopback server
+/// wrapping `net`, from `cfg.clients` concurrent client threads.  Returns
+/// the measured report; `Err` only on infrastructure failure (bind,
+/// connect, malformed response) — logits mismatches are *reported*, not
+/// errors, so the bench can still write its JSON for a failing build.
+pub fn bench_serve(
+    net: Network,
+    data: &Matrix,
+    cfg: &BenchServeConfig,
+) -> Result<BenchServeReport> {
+    assert!(data.rows > 0, "need at least one replay row");
+    assert_eq!(data.cols, net.input.len(), "replay width mismatch");
+    let requests = cfg.requests.max(1);
+    let clients = cfg.clients.max(1);
+    // the bit-parity reference: direct in-process forward on the same rows
+    let reference = net.forward(data);
+    let model_summary = net.summary();
+
+    let mut serve_cfg = cfg.serve.clone();
+    serve_cfg.addr = "127.0.0.1:0".to_string();
+    let server = Server::bind(net, &serve_cfg)?;
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let stats = server.stats();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(requests));
+    let mismatches = AtomicUsize::new(0);
+    let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let latencies = &latencies;
+            let mismatches = &mismatches;
+            let failures = &failures;
+            let reference = &reference;
+            s.spawn(move || {
+                // client c replays requests c, c+clients, ... (cycled rows)
+                let mut i = c;
+                while i < requests {
+                    let row = i % data.rows;
+                    let body = Json::obj([("input", Json::from_f32s(data.row(row)))]);
+                    let t = Instant::now();
+                    match http_json_request(addr, "POST", "/infer", Some(&body)) {
+                        Ok((200, resp)) => {
+                            latencies.lock().unwrap().push(t.elapsed().as_micros() as f64);
+                            let served = resp.get("logits").as_f32_vec().unwrap_or_default();
+                            let want = reference.row(row);
+                            let same = served.len() == want.len()
+                                && served
+                                    .iter()
+                                    .zip(want)
+                                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                            if !same {
+                                mismatches.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Ok((status, resp)) => {
+                            failures
+                                .lock()
+                                .unwrap()
+                                .push(format!("request {i}: HTTP {status} {resp}"));
+                        }
+                        Err(e) => {
+                            failures.lock().unwrap().push(format!("request {i}: {e:#}"));
+                        }
+                    }
+                    i += clients;
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    // exercise the stats endpoint too (the report uses the shared recorder
+    // directly, but /stats must answer)
+    let (status, _) = http_json_request(addr, "GET", "/stats", None)?;
+    if status != 200 {
+        crate::error::bail!("GET /stats answered HTTP {status}");
+    }
+    handle.shutdown();
+    server_thread
+        .join()
+        .map_err(|_| crate::error::format_err!("server thread panicked"))?
+        .context("server loop failed")?;
+
+    let fails = failures.into_inner().unwrap();
+    if let Some(first) = fails.first() {
+        crate::error::bail!("{} request(s) failed; first: {first}", fails.len());
+    }
+    let lat = latencies.into_inner().unwrap();
+    let mismatches = mismatches.load(Ordering::Relaxed);
+    Ok(BenchServeReport {
+        model_summary,
+        requests,
+        clients,
+        workers: serve_cfg.workers,
+        max_batch: serve_cfg.batch.max_batch,
+        max_wait_us: serve_cfg.batch.max_wait.as_micros() as u64,
+        wall_seconds: wall,
+        client_qps: if wall > 0.0 { lat.len() as f64 / wall } else { 0.0 },
+        lat_mean_us: crate::util::stats::mean(&lat),
+        lat_p50_us: quantile(&lat, 0.50),
+        lat_p95_us: quantile(&lat, 0.95),
+        lat_p99_us: quantile(&lat, 0.99),
+        lat_max_us: lat.iter().copied().fold(0.0, f64::max),
+        server: stats.snapshot(),
+        parity_ok: mismatches == 0,
+        mismatches,
+    })
+}

@@ -1,0 +1,621 @@
+//! The serving loop: a zero-dependency HTTP/1.1 inference server on
+//! `std::net::TcpListener`.
+//!
+//! Architecture (one request's path through the system):
+//!
+//! ```text
+//! client ──TCP──▶ accept loop ──▶ connection thread (parse + validate)
+//!                                      │ submit(row, reply-channel)
+//!                                      ▼
+//!                               MicroBatcher (serve::batch)
+//!                                      │ next_batch() — max_batch / max_wait
+//!                                      ▼
+//!                    batch executors on ONE long-lived WorkerPool
+//!                    (coordinator::scheduler) — stack rows, one
+//!                    Network::forward GEMM, split logits
+//!                                      │ send(logits row)
+//!                                      ▼
+//!                               connection thread ──▶ JSON response
+//! ```
+//!
+//! Endpoints:
+//! * `POST /infer` — body `{"input": [f32; d]}` (one row) or
+//!   `{"inputs": [[f32; d], ...]}` (several rows, each batched
+//!   independently).  Response: `{"logits": [...], "argmax": k}`, or
+//!   `{"outputs": [...]}` with one such object per row.
+//! * `GET /healthz` — liveness + model summary.
+//! * `GET /stats` — the [`crate::serve::stats::StatsSnapshot`] JSON.
+//!
+//! Determinism contract: `Network::forward` computes every output row from
+//! its input row alone, with a fixed per-row summation order — so logits
+//! served through the micro-batch path are **bit-identical** to an
+//! in-process `forward` call, whatever batch a request happens to land in
+//! (pinned in `tests/test_serve.rs`).
+//!
+//! Shutdown is graceful: [`ServerHandle::shutdown`] stops the accept loop,
+//! in-flight connections finish, the batcher drains its queue, and the
+//! worker pool joins — no accepted request is dropped.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::scheduler::WorkerPool;
+use crate::error::{Context, Result};
+use crate::nn::matrix::Matrix;
+use crate::nn::network::Network;
+use crate::serve::batch::{BatchPolicy, MicroBatcher};
+use crate::serve::stats::ServeStats;
+use crate::util::json::{parse as parse_json, Json};
+
+/// Server configuration (the CLI's `gpfq serve` flags map 1:1 onto this).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// bind address; port 0 picks a free port (tests, loopback bench)
+    pub addr: String,
+    /// batch-executor workers on the long-lived scheduler pool
+    pub workers: usize,
+    /// micro-batcher policy: max batch size / max coalescing wait
+    pub batch: BatchPolicy,
+    /// request body cap (a packed model row is small; 16 MiB is generous)
+    pub max_body_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            workers: crate::config::default_workers(),
+            batch: BatchPolicy::default(),
+            max_body_bytes: 16 << 20,
+        }
+    }
+}
+
+/// One admitted inference request: an input row and the channel its logits
+/// go back on.  The connection thread blocks on the receiver; the batch
+/// executor that runs the row's batch sends.
+struct InferJob {
+    input: Vec<f32>,
+    tx: mpsc::SyncSender<Vec<f32>>,
+}
+
+/// Remote control for a running [`Server`] (cloneable across threads).
+#[derive(Clone)]
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Begin graceful shutdown: the accept loop exits, in-flight requests
+    /// complete, the batcher drains, the worker pool joins.  Idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        // unblock the accept() call with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// The inference server: owns the listener, the model, the micro-batcher
+/// and the long-lived worker pool.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    net: Arc<Network>,
+    batcher: Arc<MicroBatcher<InferJob>>,
+    pool: Option<WorkerPool>,
+    stats: Arc<ServeStats>,
+    stop: Arc<AtomicBool>,
+    active_conns: Arc<AtomicUsize>,
+    max_body_bytes: usize,
+}
+
+impl Server {
+    /// Bind the listener and start the batch executors (one per pool
+    /// worker).  The server accepts no connections until [`Server::run`].
+    pub fn bind(net: Network, cfg: &ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let net = Arc::new(net);
+        let batcher = Arc::new(MicroBatcher::new(cfg.batch));
+        let stats = Arc::new(ServeStats::new());
+        let pool = WorkerPool::new(cfg.workers);
+        // one batch-executor loop per worker, alive for the pool lifetime:
+        // each blocks in next_batch() and retires whole batches with one
+        // stacked forward pass
+        for _ in 0..pool.workers() {
+            let batcher = batcher.clone();
+            let net = net.clone();
+            let stats = stats.clone();
+            pool.submit(move || {
+                while let Some(batch) = batcher.next_batch() {
+                    run_batch(&net, &stats, batch);
+                }
+            });
+        }
+        Ok(Server {
+            listener,
+            addr,
+            net,
+            batcher,
+            pool: Some(pool),
+            stats,
+            stop: Arc::new(AtomicBool::new(false)),
+            active_conns: Arc::new(AtomicUsize::new(0)),
+            max_body_bytes: cfg.max_body_bytes,
+        })
+    }
+
+    /// The bound address (the actual port when the config asked for 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A handle that can shut the server down from another thread.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { stop: self.stop.clone(), addr: self.addr }
+    }
+
+    /// Shared metrics recorder (the loopback bench reads it directly).
+    pub fn stats(&self) -> Arc<ServeStats> {
+        self.stats.clone()
+    }
+
+    /// Serve until [`ServerHandle::shutdown`]: accept connections, one
+    /// handler thread each, then drain everything gracefully.
+    pub fn run(mut self) -> Result<()> {
+        loop {
+            let (stream, _) = match self.listener.accept() {
+                Ok(s) => s,
+                Err(e) => {
+                    if self.stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    return Err(crate::error::Error::from(e).context("accept failed"));
+                }
+            };
+            if self.stop.load(Ordering::Acquire) {
+                break; // the shutdown wake-up connection (or a race with it)
+            }
+            let net = self.net.clone();
+            let batcher = self.batcher.clone();
+            let stats = self.stats.clone();
+            let max_body = self.max_body_bytes;
+            let conns = self.active_conns.clone();
+            conns.fetch_add(1, Ordering::AcqRel);
+            std::thread::spawn(move || {
+                let _guard = ConnGuard(conns);
+                handle_connection(stream, &net, &batcher, &stats, max_body);
+            });
+        }
+        // graceful drain: connections finish (their queued jobs are served
+        // by the still-live executors), then the batcher closes and drains,
+        // then the executor loops see None and the pool joins
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while self.active_conns.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        self.batcher.shutdown();
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // a Server dropped without run() must not deadlock: the pool join
+        // (WorkerPool::drop) waits for the executor loops, which only exit
+        // once the batcher closes.  Idempotent on the run() path.
+        self.batcher.shutdown();
+    }
+}
+
+/// Decrements the live-connection count when a handler thread exits (by
+/// any path, including panics).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Stack a batch's rows, run ONE forward pass, scatter the logits back.
+fn run_batch(net: &Network, stats: &ServeStats, batch: Vec<InferJob>) {
+    stats.record_batch(batch.len());
+    let d = net.input.len();
+    let mut data = Vec::with_capacity(batch.len() * d);
+    for job in &batch {
+        debug_assert_eq!(job.input.len(), d, "validated at submit");
+        data.extend_from_slice(&job.input);
+    }
+    let x = Matrix::from_vec(batch.len(), d, data);
+    let logits = net.forward(&x);
+    for (r, job) in batch.into_iter().enumerate() {
+        // a dead receiver (client gone) is not an error worth crashing for
+        let _ = job.tx.send(logits.row(r).to_vec());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection handling
+// ---------------------------------------------------------------------------
+
+/// A parsed HTTP request (the subset the server speaks).
+#[derive(Debug)]
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// Parse failure → HTTP status + message.
+struct HttpError {
+    status: u16,
+    msg: String,
+}
+
+impl HttpError {
+    fn new(status: u16, msg: impl Into<String>) -> HttpError {
+        HttpError { status, msg: msg.into() }
+    }
+}
+
+const MAX_HEADER_BYTES: usize = 16 << 10;
+
+/// Read and parse one HTTP/1.1 request from `stream`.  Generic over
+/// `Read` so the parser is unit-testable on byte slices.
+fn read_request(
+    stream: &mut impl Read,
+    max_body: usize,
+) -> std::result::Result<HttpRequest, HttpError> {
+    // read until the header terminator (body bytes may ride along)
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let header_end = loop {
+        if let Some(pos) = find_header_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(HttpError::new(431, "request header section too large"));
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| HttpError::new(400, format!("read failed: {e}")))?;
+        if n == 0 {
+            return Err(HttpError::new(400, "connection closed mid-request"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| HttpError::new(400, "headers are not utf-8"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, path, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v), None) => (m.to_string(), p.to_string(), v),
+            _ => {
+                return Err(HttpError::new(400, format!("malformed request line {request_line:?}")))
+            }
+        };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::new(505, format!("unsupported version {version}")));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| HttpError::new(400, "bad content-length"))?;
+            }
+        }
+    }
+    if content_length > max_body {
+        return Err(HttpError::new(
+            413,
+            format!("body {content_length} bytes exceeds cap {max_body}"),
+        ));
+    }
+    // body: whatever rode along after the terminator, then the remainder
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let mut chunk = vec![0u8; (content_length - body.len()).min(64 << 10)];
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| HttpError::new(400, format!("body read failed: {e}")))?;
+        if n == 0 {
+            return Err(HttpError::new(400, "connection closed mid-body"));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let body = String::from_utf8(body).map_err(|_| HttpError::new(400, "body is not utf-8"))?;
+    Ok(HttpRequest { method, path, body })
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Response",
+    }
+}
+
+fn write_response(stream: &mut impl Write, status: u16, body: &Json) -> std::io::Result<()> {
+    let payload = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        status_reason(status),
+        payload.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()
+}
+
+fn error_body(msg: &str) -> Json {
+    Json::obj([("error", Json::Str(msg.to_string()))])
+}
+
+fn handle_connection(
+    mut stream: TcpStream,
+    net: &Network,
+    batcher: &MicroBatcher<InferJob>,
+    stats: &ServeStats,
+    max_body: usize,
+) {
+    // a stuck client must not hold the server's graceful drain hostage
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_nodelay(true);
+    let req = match read_request(&mut stream, max_body) {
+        Ok(r) => r,
+        Err(e) => {
+            stats.record_error();
+            let _ = write_response(&mut stream, e.status, &error_body(&e.msg));
+            return;
+        }
+    };
+    let (status, body) = route(&req, net, batcher, stats);
+    if status != 200 {
+        stats.record_error();
+    }
+    let _ = write_response(&mut stream, status, &body);
+}
+
+fn route(
+    req: &HttpRequest,
+    net: &Network,
+    batcher: &MicroBatcher<InferJob>,
+    stats: &ServeStats,
+) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (
+            200,
+            Json::obj([
+                ("status", Json::Str("ok".into())),
+                ("model", Json::Str(net.summary())),
+                ("input_width", Json::Num(net.input.len() as f64)),
+            ]),
+        ),
+        ("GET", "/stats") => (200, stats.snapshot().to_json()),
+        ("POST", "/infer") => infer(req, net, batcher, stats),
+        ("GET", "/infer") => (405, error_body("POST /infer")),
+        _ => (404, error_body(&format!("no route {} {}", req.method, req.path))),
+    }
+}
+
+/// `POST /infer`: validate, submit each row to the micro-batcher, block
+/// for the logits, answer.
+fn infer(
+    req: &HttpRequest,
+    net: &Network,
+    batcher: &MicroBatcher<InferJob>,
+    stats: &ServeStats,
+) -> (u16, Json) {
+    let t0 = Instant::now();
+    let doc = match parse_json(&req.body) {
+        Ok(d) => d,
+        Err(e) => return (400, error_body(&format!("invalid json: {e}"))),
+    };
+    let (rows, single) = match (doc.get("input"), doc.get("inputs")) {
+        (Json::Arr(_), Json::Null) => match doc.get("input").as_f32_vec() {
+            Some(row) => (vec![row], true),
+            None => return (400, error_body("\"input\" must be a numeric array")),
+        },
+        (Json::Null, Json::Arr(items)) => {
+            let mut rows = Vec::with_capacity(items.len());
+            for item in items {
+                match item.as_f32_vec() {
+                    Some(row) => rows.push(row),
+                    None => return (400, error_body("\"inputs\" must be numeric arrays")),
+                }
+            }
+            (rows, false)
+        }
+        _ => return (400, error_body("body needs \"input\" or \"inputs\"")),
+    };
+    if rows.is_empty() {
+        return (400, error_body("no input rows"));
+    }
+    let d = net.input.len();
+    for row in &rows {
+        if row.len() != d {
+            return (
+                400,
+                error_body(&format!("input width {} != model width {d}", row.len())),
+            );
+        }
+    }
+    // submit every row, then collect — rows of one request may land in
+    // different batches (and that cannot change their logits)
+    let mut receivers = Vec::with_capacity(rows.len());
+    for row in rows {
+        let (tx, rx) = mpsc::sync_channel(1);
+        if batcher.submit(InferJob { input: row, tx }).is_err() {
+            return (503, error_body("server is shutting down"));
+        }
+        receivers.push(rx);
+    }
+    let mut outputs = Vec::with_capacity(receivers.len());
+    for rx in receivers {
+        let logits = match rx.recv() {
+            Ok(l) => l,
+            Err(_) => return (500, error_body("batch executor dropped the request")),
+        };
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        outputs.push(Json::obj([
+            ("logits", Json::from_f32s(&logits)),
+            ("argmax", Json::Num(argmax as f64)),
+        ]));
+    }
+    stats.record_request(t0.elapsed().as_micros() as u64);
+    let body = if single {
+        outputs.into_iter().next().expect("one row")
+    } else {
+        Json::obj([("outputs", Json::Arr(outputs))])
+    };
+    (200, body)
+}
+
+// ---------------------------------------------------------------------------
+// minimal client (loopback bench + tests)
+// ---------------------------------------------------------------------------
+
+/// One blocking HTTP/1.1 request against `addr`; returns `(status, body)`.
+/// Used by the in-process loopback load generator and the e2e tests — not
+/// a general-purpose client.
+pub fn http_json_request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+) -> Result<(u16, Json)> {
+    let mut stream = TcpStream::connect(addr).context("connecting")?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_nodelay(true)?;
+    let payload = body.map(|b| b.to_string()).unwrap_or_default();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(payload.as_bytes())?;
+    stream.flush()?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("reading response")?;
+    let text = String::from_utf8(raw).context("response is not utf-8")?;
+    let (head, body_text) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| crate::error::format_err!("response has no header terminator"))?;
+    let status_line = head.lines().next().unwrap_or("");
+    let status: u16 = status_line
+        .split_ascii_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| crate::error::format_err!("bad status line {status_line:?}"))?;
+    let body = parse_json(body_text)
+        .map_err(|e| crate::error::format_err!("bad response body: {e}"))?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_bytes(raw: &[u8]) -> std::result::Result<HttpRequest, HttpError> {
+        let mut cursor = raw;
+        read_request(&mut cursor, 1 << 20)
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /infer HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\nhello world";
+        let req = parse_bytes(raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/infer");
+        assert_eq!(req.body, "hello world");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse_bytes(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.body, "");
+    }
+
+    #[test]
+    fn rejects_malformed_request_line() {
+        assert_eq!(parse_bytes(b"NONSENSE\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(parse_bytes(b"GET /x HTTP/1.1 extra\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(parse_bytes(b"GET /x SPDY/3\r\n\r\n").unwrap_err().status, 505);
+    }
+
+    #[test]
+    fn rejects_truncated_and_oversized() {
+        // connection closed before the header terminator
+        assert_eq!(parse_bytes(b"GET /x HTTP/1.1\r\n").unwrap_err().status, 400);
+        // body larger than the cap
+        let raw = b"POST /infer HTTP/1.1\r\nContent-Length: 999999\r\n\r\n";
+        let mut cursor: &[u8] = raw;
+        assert_eq!(read_request(&mut cursor, 1024).unwrap_err().status, 413);
+        // body shorter than content-length
+        let raw = b"POST /infer HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        assert_eq!(parse_bytes(raw).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn header_cap_is_enforced() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend(std::iter::repeat(b'a').take(MAX_HEADER_BYTES + 8));
+        assert_eq!(parse_bytes(&raw).unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn response_writer_shape() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, &Json::obj([("ok", Json::Bool(true))])).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn content_length_header_is_case_insensitive() {
+        let raw = b"POST /infer HTTP/1.1\r\ncontent-LENGTH: 2\r\n\r\nok";
+        assert_eq!(parse_bytes(raw).unwrap().body, "ok");
+    }
+}

@@ -1,0 +1,35 @@
+//! The serving subsystem: batched inference for packed `.gpfq` models
+//! over HTTP, with zero dependencies beyond `std::net`.
+//!
+//! The paper's point is deployment — GPFQ compresses VGG16 ~20× (Section
+//! 6.1) precisely so the network can be served cheaply — and this module
+//! is the system that does the serving, the first workload behind the
+//! ROADMAP's "serves heavy traffic" north star:
+//!
+//! * [`batch`] — the **micro-batcher**: a pure requests-in → batches-out
+//!   library (policy: `max_batch` / `max_wait`) that coalesces concurrent
+//!   requests into single forward-pass GEMMs; unit-testable with
+//!   synthetic clocks, no sockets involved.
+//! * [`http`] — the **server loop**: minimal HTTP/1.1 on
+//!   `std::net::TcpListener`, JSON via [`crate::util::json`], batch
+//!   execution on one long-lived
+//!   [`crate::coordinator::scheduler::WorkerPool`], graceful shutdown.
+//! * [`stats`] — the **metrics layer**: per-request latency p50/p95/p99,
+//!   QPS, and the batch-size histogram that shows whether coalescing is
+//!   actually happening (`GET /stats`).
+//! * [`bench`] — the **loopback load generator** behind `gpfq
+//!   bench-serve`: replays a dataset through the full network path and
+//!   pins served logits **bit-identical** to in-process
+//!   `Network::forward` (batching changes scheduling, never values).
+//!
+//! CLI: `gpfq serve --model m.gpfq` and `gpfq bench-serve`.
+
+pub mod batch;
+pub mod bench;
+pub mod http;
+pub mod stats;
+
+pub use batch::{BatchCore, BatchPolicy, MicroBatcher};
+pub use bench::{bench_serve, BenchServeConfig, BenchServeReport};
+pub use http::{http_json_request, ServeConfig, Server, ServerHandle};
+pub use stats::{ServeStats, StatsSnapshot};

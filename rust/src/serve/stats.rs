@@ -1,0 +1,283 @@
+//! Serving metrics: per-request latency quantiles, throughput, and the
+//! batch-size histogram that shows whether the micro-batcher is actually
+//! coalescing.
+//!
+//! [`ServeStats`] is the live, thread-shared recorder (atomics + a mutexed
+//! latency reservoir); [`StatsSnapshot`] is the frozen summary it renders —
+//! p50/p95/p99 latency, QPS over the recording window, and a batch-size →
+//! count histogram — exposed by the server's `GET /stats` endpoint and
+//! written into `BENCH_serve.json` by `gpfq bench-serve`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::data::rng::Pcg;
+use crate::util::json::Json;
+
+/// Latency samples kept resident for the quantile estimates.  Bounds the
+/// recorder for a server that runs indefinitely: ~512 KiB, never more.
+const RESERVOIR_CAP: usize = 65_536;
+
+/// Uniform latency reservoir (Vitter's algorithm R): the first
+/// `RESERVOIR_CAP` samples verbatim, then each later sample replaces a
+/// uniformly random slot with probability cap/seen — every recorded value
+/// has equal probability of being resident, so the quantiles stay unbiased
+/// while memory stays O(cap) however long the server runs.
+struct Reservoir {
+    samples: Vec<u64>,
+    seen: u64,
+    rng: Pcg,
+}
+
+impl Reservoir {
+    fn new() -> Reservoir {
+        Reservoir { samples: Vec::new(), seen: 0, rng: Pcg::seed(0x5EE0_57A7) }
+    }
+
+    fn record(&mut self, v: u64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.below(self.seen as usize);
+            if j < RESERVOIR_CAP {
+                self.samples[j] = v;
+            }
+        }
+    }
+}
+
+/// Live metrics recorder, shared (`Arc`) between connection handlers and
+/// batch-executor workers.
+pub struct ServeStats {
+    /// per-request service latency (request parsed → response ready), µs —
+    /// a bounded uniform reservoir, not the full history
+    latencies_us: Mutex<Reservoir>,
+    /// batch size → number of batches released at that size
+    batch_sizes: Mutex<BTreeMap<usize, u64>>,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    started: Instant,
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats {
+            latencies_us: Mutex::new(Reservoir::new()),
+            batch_sizes: Mutex::new(BTreeMap::new()),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one served inference request and its latency.
+    pub fn record_request(&self, latency_us: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().record(latency_us);
+    }
+
+    /// Record one request that failed (parse error, width mismatch, ...).
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one released batch of `size` requests.
+    pub fn record_batch(&self, size: usize) {
+        *self.batch_sizes.lock().unwrap().entry(size).or_insert(0) += 1;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Freeze the counters into a summary.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        // copy the (bounded) reservoir out under the lock, sort ONCE
+        // outside it, and read every quantile off the sorted copy —
+        // record_request is never blocked behind the sorting
+        let mut xs: Vec<f64> = {
+            let lat = self.latencies_us.lock().unwrap();
+            lat.samples.iter().map(|&v| v as f64).collect()
+        };
+        xs.sort_by(|a, b| a.total_cmp(b));
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batch_hist = self.batch_sizes.lock().unwrap().clone();
+        let batches: u64 = batch_hist.values().sum();
+        let batched_requests: u64 =
+            batch_hist.iter().map(|(&size, &n)| size as u64 * n).sum();
+        StatsSnapshot {
+            requests,
+            errors: self.errors.load(Ordering::Relaxed),
+            elapsed_seconds: elapsed,
+            qps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
+            mean_us: crate::util::stats::mean(&xs),
+            p50_us: sorted_quantile(&xs, 0.50),
+            p95_us: sorted_quantile(&xs, 0.95),
+            p99_us: sorted_quantile(&xs, 0.99),
+            max_us: xs.last().copied().unwrap_or(0.0),
+            mean_batch: if batches > 0 { batched_requests as f64 / batches as f64 } else { 0.0 },
+            batch_hist,
+        }
+    }
+}
+
+/// [`crate::util::stats::quantile`] for an **already sorted** slice (same
+/// linear interpolation), so one snapshot sorts once, not per quantile.
+fn sorted_quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Frozen metrics summary (`GET /stats`, `BENCH_serve.json`).
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    pub errors: u64,
+    pub elapsed_seconds: f64,
+    /// served requests / elapsed seconds over the recording window
+    pub qps: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    /// mean released batch size (1.0 = the batcher never coalesced)
+    pub mean_batch: f64,
+    /// batch size → number of batches released at that size
+    pub batch_hist: BTreeMap<usize, u64>,
+}
+
+impl StatsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let mut hist = BTreeMap::new();
+        for (&size, &count) in &self.batch_hist {
+            hist.insert(size.to_string(), Json::Num(count as f64));
+        }
+        let mut o = BTreeMap::new();
+        o.insert("requests".into(), Json::Num(self.requests as f64));
+        o.insert("errors".into(), Json::Num(self.errors as f64));
+        o.insert("elapsed_seconds".into(), Json::Num(self.elapsed_seconds));
+        o.insert("qps".into(), Json::Num(self.qps));
+        o.insert("latency_mean_us".into(), Json::Num(self.mean_us));
+        o.insert("latency_p50_us".into(), Json::Num(self.p50_us));
+        o.insert("latency_p95_us".into(), Json::Num(self.p95_us));
+        o.insert("latency_p99_us".into(), Json::Num(self.p99_us));
+        o.insert("latency_max_us".into(), Json::Num(self.max_us));
+        o.insert("mean_batch".into(), Json::Num(self.mean_batch));
+        o.insert("batch_hist".into(), Json::Obj(hist));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_over_recorded_latencies() {
+        let s = ServeStats::new();
+        // 1..=100 µs: p50 = 50.5 by linear interpolation, p99 = 99.01
+        for v in 1..=100u64 {
+            s.record_request(v);
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 100);
+        assert!((snap.p50_us - 50.5).abs() < 1e-9, "p50 {}", snap.p50_us);
+        assert!((snap.p95_us - 95.05).abs() < 1e-9, "p95 {}", snap.p95_us);
+        assert!((snap.p99_us - 99.01).abs() < 1e-9, "p99 {}", snap.p99_us);
+        assert_eq!(snap.max_us, 100.0);
+        assert!((snap.mean_us - 50.5).abs() < 1e-9);
+        assert!(snap.qps > 0.0, "elapsed window is nonzero");
+    }
+
+    #[test]
+    fn batch_histogram_and_mean() {
+        let s = ServeStats::new();
+        s.record_batch(1);
+        s.record_batch(4);
+        s.record_batch(4);
+        s.record_batch(7);
+        let snap = s.snapshot();
+        assert_eq!(snap.batch_hist.get(&4), Some(&2));
+        assert_eq!(snap.batch_hist.get(&1), Some(&1));
+        assert_eq!(snap.batch_hist.get(&2), None);
+        // (1 + 4 + 4 + 7) / 4 batches
+        assert!((snap.mean_batch - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_reservoir_is_bounded_and_stays_representative() {
+        let s = ServeStats::new();
+        // 3x the cap of a constant latency: memory stays at cap, the
+        // quantiles are exact (every resident sample is the constant)
+        for _ in 0..(3 * RESERVOIR_CAP) {
+            s.record_request(250);
+        }
+        {
+            let lat = s.latencies_us.lock().unwrap();
+            assert_eq!(lat.samples.len(), RESERVOIR_CAP, "reservoir must not grow past cap");
+            assert_eq!(lat.seen, 3 * RESERVOIR_CAP as u64);
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 3 * RESERVOIR_CAP as u64);
+        assert_eq!(snap.p50_us, 250.0);
+        assert_eq!(snap.p99_us, 250.0);
+        assert_eq!(snap.max_us, 250.0);
+    }
+
+    #[test]
+    fn sorted_quantile_matches_util_quantile() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.0, 0.25, 0.5, 0.9, 0.95, 1.0] {
+            assert_eq!(
+                sorted_quantile(&sorted, q),
+                crate::util::stats::quantile(&xs, q),
+                "q={q}"
+            );
+        }
+        assert_eq!(sorted_quantile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_well_defined() {
+        let snap = ServeStats::new().snapshot();
+        assert_eq!(snap.requests, 0);
+        assert_eq!(snap.p50_us, 0.0);
+        assert_eq!(snap.mean_batch, 0.0);
+        assert!(snap.batch_hist.is_empty());
+    }
+
+    #[test]
+    fn snapshot_serializes_to_parseable_json() {
+        let s = ServeStats::new();
+        s.record_request(120);
+        s.record_batch(2);
+        s.record_error();
+        let doc = s.snapshot().to_json().to_string();
+        let v = crate::util::json::parse(&doc).unwrap();
+        assert_eq!(v.get("requests").as_f64(), Some(1.0));
+        assert_eq!(v.get("errors").as_f64(), Some(1.0));
+        assert_eq!(v.get("batch_hist").get("2").as_f64(), Some(1.0));
+        assert_eq!(v.get("latency_p50_us").as_f64(), Some(120.0));
+    }
+}

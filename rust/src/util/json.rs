@@ -62,6 +62,33 @@ impl Json {
             _ => &NULL,
         }
     }
+
+    /// A numeric array parsed into an `f32` vector — the serve path's
+    /// request decoding (`{"input": [...]}`).  `None` if `self` is not an
+    /// array or any element is not a number.
+    pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
+        let arr = self.as_arr()?;
+        let mut out = Vec::with_capacity(arr.len());
+        for v in arr {
+            out.push(v.as_f64()? as f32);
+        }
+        Some(out)
+    }
+
+    /// A JSON array from `f32` samples, widened losslessly to `f64`.  The
+    /// serializer emits the shortest round-tripping decimal, so the full
+    /// f32 → JSON text → f64 → f32 trip is **bit-exact** — what lets the
+    /// serve loopback tests pin served logits bit-identical to in-process
+    /// `Network::forward` ones.
+    pub fn from_f32s(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&v| Json::Num(f64::from(v))).collect())
+    }
+
+    /// Object-literal sugar: `Json::obj([("k", Json::Num(1.0)), ...])` —
+    /// trims the `BTreeMap` boilerplate out of response builders.
+    pub fn obj<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
 }
 
 /// Parse error with byte offset for debuggability.
@@ -300,7 +327,9 @@ fn write(v: &Json, out: &mut String) {
                 // exported documents (sweep/bench artifacts with NaN
                 // scores) stay parseable instead of emitting bare `NaN`
                 out.push_str("null");
-            } else if n.fract() == 0.0 && n.abs() < 1e15 {
+            } else if n.fract() == 0.0 && n.abs() < 1e15 && !(*n == 0.0 && n.is_sign_negative()) {
+                // negative zero is excluded: `as i64` would drop the sign,
+                // and the serve path promises bit-exact f32 round-trips
                 out.push_str(&format!("{}", *n as i64));
             } else {
                 out.push_str(&format!("{n}"));
@@ -389,6 +418,40 @@ mod tests {
         let doc = Json::Obj(o).to_string();
         assert_eq!(doc, r#"{"top1":null}"#);
         assert!(parse(&doc).is_ok());
+    }
+
+    #[test]
+    fn f32_rows_roundtrip_bit_exact() {
+        // the serve-path contract: f32 → JSON text → f64 → f32 is identity,
+        // including awkward values (subnormals, non-representable decimals)
+        let xs = [
+            0.1f32,
+            -3.75,
+            1.0e-40, // subnormal
+            f32::MAX,
+            f32::MIN_POSITIVE,
+            -0.0,
+            1234567.8,
+        ];
+        let doc = Json::from_f32s(&xs).to_string();
+        let back = parse(&doc).unwrap().as_f32_vec().unwrap();
+        assert_eq!(back.len(), xs.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} went through as {b}");
+        }
+    }
+
+    #[test]
+    fn as_f32_vec_rejects_non_numeric_arrays() {
+        assert_eq!(parse("[1, \"x\"]").unwrap().as_f32_vec(), None);
+        assert_eq!(parse("{}").unwrap().as_f32_vec(), None);
+        assert_eq!(parse("[]").unwrap().as_f32_vec(), Some(Vec::new()));
+    }
+
+    #[test]
+    fn obj_builder() {
+        let v = Json::obj([("b", Json::Num(2.0)), ("a", Json::Bool(true))]);
+        assert_eq!(v.to_string(), r#"{"a":true,"b":2}"#);
     }
 
     #[test]

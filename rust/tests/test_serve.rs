@@ -1,0 +1,280 @@
+//! End-to-end guarantees of the serving subsystem, pinned hard:
+//!
+//! 1. **Loopback parity** — logits served through the full
+//!    save → load → HTTP → micro-batch → worker-pool path are
+//!    **bit-identical** to a direct in-process `Network::forward` on the
+//!    loaded model, for batched (concurrent clients) and single-request
+//!    traffic, across server worker counts, on an MNIST-shaped MLP and a
+//!    CIFAR-shaped CNN (conv + maxpool + batchnorm on the request path).
+//! 2. **Protocol behavior** — /healthz and /stats answer; malformed JSON,
+//!    wrong input width, unknown routes and wrong methods produce the
+//!    right HTTP errors and never take the server down.
+//! 3. **Lifecycle** — graceful shutdown completes with requests in flight
+//!    and the server loop returns cleanly.
+//!
+//! The micro-batcher's scheduling policy itself is unit-tested with
+//! synthetic clocks in `serve::batch`; these tests are the sockets-and-all
+//! integration layer above it.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+use gpfq::coordinator::pipeline::{quantize_network, PipelineConfig};
+use gpfq::data::rng::Pcg;
+use gpfq::nn::conv::ImgShape;
+use gpfq::nn::matrix::Matrix;
+use gpfq::nn::network::{cifar_cnn, mnist_mlp, Network};
+use gpfq::nn::serialize::{hints_from_outcome, load_file, save_file};
+use gpfq::serve::{
+    bench_serve, http_json_request, BatchPolicy, BenchServeConfig, ServeConfig, Server,
+    ServerHandle,
+};
+use gpfq::util::json::Json;
+
+/// Quantize `net`, round-trip it through the packed on-disk format, and
+/// hand back the **loaded** network — the bytes a deployment would serve.
+fn packed_round_trip(net: &Network, x_quant: &Matrix, tag: &str) -> Network {
+    let out =
+        quantize_network(net, x_quant, &PipelineConfig { c_alpha: 2.0, ..Default::default() });
+    let hints = hints_from_outcome(&out);
+    let path = std::env::temp_dir()
+        .join(format!("gpfq_test_serve_{}_{}.gpfq", tag, std::process::id()));
+    save_file(&out.network, &hints, &path).expect("save");
+    let loaded = load_file(&path).expect("load");
+    let _ = std::fs::remove_file(&path);
+    loaded
+}
+
+fn start_server(
+    net: Network,
+    workers: usize,
+    max_batch: usize,
+    max_wait_us: u64,
+) -> (ServerHandle, SocketAddr, std::thread::JoinHandle<gpfq::error::Result<()>>) {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        batch: BatchPolicy::new(max_batch, max_wait_us),
+        ..Default::default()
+    };
+    let server = Server::bind(net, &cfg).expect("bind");
+    let handle = server.handle();
+    let addr = server.local_addr();
+    let join = std::thread::spawn(move || server.run());
+    (handle, addr, join)
+}
+
+fn infer_one(addr: SocketAddr, row: &[f32]) -> Vec<f32> {
+    let body = Json::obj([("input", Json::from_f32s(row))]);
+    let (status, resp) = http_json_request(addr, "POST", "/infer", Some(&body)).expect("request");
+    assert_eq!(status, 200, "{resp}");
+    resp.get("logits").as_f32_vec().expect("logits array")
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: width");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: logit {i} {x} vs {y}");
+    }
+}
+
+/// Acceptance pin: MLP logits through the full HTTP + micro-batch path are
+/// bit-identical to in-process forward, for concurrent (batched) and
+/// sequential (single-request) traffic, across worker counts.
+#[test]
+fn mlp_loopback_parity_batched_and_single_across_worker_counts() {
+    let mut rng = Pcg::seed(41);
+    let float_net = mnist_mlp(11, 24, &[16, 8], 4);
+    let x_quant = Matrix::from_vec(32, 24, rng.normal_vec(32 * 24));
+    let net = packed_round_trip(&float_net, &x_quant, "mlp");
+    let x = Arc::new(Matrix::from_vec(24, 24, rng.normal_vec(24 * 24)));
+    let reference = Arc::new(net.forward(&x));
+
+    for workers in [1usize, 2, 4] {
+        // max_batch 4 with 6 concurrent clients: real coalescing happens
+        let (handle, addr, join) = start_server(net.clone(), workers, 4, 1500);
+        std::thread::scope(|s| {
+            for c in 0..6usize {
+                let x = x.clone();
+                let reference = reference.clone();
+                s.spawn(move || {
+                    for i in (c..24).step_by(6) {
+                        let served = infer_one(addr, x.row(i));
+                        assert_bits_equal(
+                            &served,
+                            reference.row(i),
+                            &format!("workers={workers} concurrent row {i}"),
+                        );
+                    }
+                });
+            }
+        });
+        // single-request traffic: one client, no co-travellers — the
+        // max_wait flush path must serve identical bits
+        for i in [0usize, 7, 23] {
+            let served = infer_one(addr, x.row(i));
+            let tag = format!("workers={workers} solo row {i}");
+            assert_bits_equal(&served, reference.row(i), &tag);
+        }
+        handle.shutdown();
+        join.join().unwrap().expect("server loop");
+    }
+}
+
+/// Same pin on a CIFAR-shaped CNN: conv, maxpool and batchnorm layers all
+/// sit on the request path, driven through the bench-serve loopback
+/// generator (which also produces the latency/batch report).
+#[test]
+fn cnn_loopback_parity_via_bench_serve() {
+    let mut rng = Pcg::seed(43);
+    let img = ImgShape { h: 8, w: 8, c: 1 };
+    let float_net = cifar_cnn(13, img, &[3], 12, 3);
+    let x_quant = Matrix::from_vec(10, img.len(), rng.normal_vec(10 * img.len()));
+    let net = packed_round_trip(&float_net, &x_quant, "cnn");
+    let replay = Matrix::from_vec(12, img.len(), rng.normal_vec(12 * img.len()));
+    let cfg = BenchServeConfig {
+        requests: 48,
+        clients: 6,
+        serve: ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            batch: BatchPolicy::new(4, 1500),
+            ..Default::default()
+        },
+    };
+    let report = bench_serve(net, &replay, &cfg).expect("bench");
+    assert!(report.parity_ok, "{} served rows diverged from forward()", report.mismatches);
+    assert_eq!(report.mismatches, 0);
+    assert_eq!(report.server.requests, 48, "every request served");
+    assert_eq!(report.server.errors, 0);
+    assert!(report.client_qps > 0.0);
+    assert!(report.lat_p99_us >= report.lat_p50_us);
+    // the batch histogram must account for exactly the served requests
+    let batched: u64 = report.server.batch_hist.iter().map(|(&s, &n)| s as u64 * n).sum();
+    assert_eq!(batched, 48);
+    assert!(
+        report.server.batch_hist.keys().all(|&s| (1..=4).contains(&s)),
+        "batch sizes within policy: {:?}",
+        report.server.batch_hist
+    );
+    // the report serializes to valid JSON with the acceptance fields
+    let doc = gpfq::util::json::parse(&report.to_json().to_string()).unwrap();
+    assert_eq!(doc.get("parity_ok").as_bool(), Some(true));
+    assert!(doc.get("client_latency_p50_us").as_f64().is_some());
+    assert!(doc.get("server").get("batch_hist").as_obj().is_some());
+    assert!(doc.get("client_qps").as_f64().unwrap() > 0.0);
+}
+
+/// Multi-row requests (`{"inputs": [...]}`) batch each row independently
+/// and still return bit-identical logits in request order.
+#[test]
+fn multi_row_requests_preserve_order_and_bits() {
+    let mut rng = Pcg::seed(47);
+    let net = mnist_mlp(17, 12, &[8], 3);
+    let x = Matrix::from_vec(5, 12, rng.normal_vec(60));
+    let reference = net.forward(&x);
+    let (handle, addr, join) = start_server(net, 2, 3, 1000);
+    let rows: Vec<Json> = (0..5).map(|r| Json::from_f32s(x.row(r))).collect();
+    let body = Json::obj([("inputs", Json::Arr(rows))]);
+    let (status, resp) = http_json_request(addr, "POST", "/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let outputs = resp.get("outputs").as_arr().expect("outputs array");
+    assert_eq!(outputs.len(), 5);
+    for (r, out) in outputs.iter().enumerate() {
+        let served = out.get("logits").as_f32_vec().unwrap();
+        assert_bits_equal(&served, reference.row(r), &format!("inputs[{r}]"));
+        let argmax = out.get("argmax").as_usize().unwrap();
+        let want = reference
+            .row(r)
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        assert_eq!(argmax, want, "row {r} argmax");
+    }
+    handle.shutdown();
+    join.join().unwrap().expect("server loop");
+}
+
+#[test]
+fn protocol_endpoints_and_error_paths() {
+    let net = mnist_mlp(19, 10, &[6], 2);
+    let (handle, addr, join) = start_server(net, 1, 8, 500);
+
+    // healthz reports the model
+    let (status, health) = http_json_request(addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(health.get("status").as_str(), Some("ok"));
+    assert_eq!(health.get("input_width").as_usize(), Some(10));
+    assert!(health.get("model").as_str().unwrap().contains("dense"));
+
+    // a good request, so /stats has something to report
+    let row = vec![0.25f32; 10];
+    let body = Json::obj([("input", Json::from_f32s(&row))]);
+    let (status, resp) = http_json_request(addr, "POST", "/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(resp.get("logits").as_f32_vec().unwrap().len(), 2);
+
+    // error paths: each must answer the right status and leave the server up
+    let bad_width = Json::obj([("input", Json::from_f32s(&[1.0, 2.0]))]);
+    let (status, resp) = http_json_request(addr, "POST", "/infer", Some(&bad_width)).unwrap();
+    assert_eq!(status, 400);
+    assert!(resp.get("error").as_str().unwrap().contains("width"));
+
+    let no_input = Json::obj([("wrong", Json::Bool(true))]);
+    let (status, _) = http_json_request(addr, "POST", "/infer", Some(&no_input)).unwrap();
+    assert_eq!(status, 400);
+
+    let text_rows = Json::obj([("input", Json::Arr(vec![Json::Str("x".into())]))]);
+    let (status, _) = http_json_request(addr, "POST", "/infer", Some(&text_rows)).unwrap();
+    assert_eq!(status, 400);
+
+    let (status, _) = http_json_request(addr, "GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http_json_request(addr, "GET", "/infer", None).unwrap();
+    assert_eq!(status, 405);
+
+    // stats counted the one success and the failures
+    let (status, stats) = http_json_request(addr, "GET", "/stats", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(stats.get("requests").as_usize(), Some(1));
+    assert!(stats.get("errors").as_usize().unwrap() >= 4);
+    assert!(stats.get("batch_hist").get("1").as_usize().unwrap() >= 1);
+    assert!(stats.get("latency_p50_us").as_f64().unwrap() > 0.0);
+
+    // the server survives all of the above and still shuts down cleanly
+    let (status, _) = http_json_request(addr, "POST", "/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+    handle.shutdown();
+    join.join().unwrap().expect("server loop");
+}
+
+#[test]
+fn graceful_shutdown_with_traffic_in_flight() {
+    let mut rng = Pcg::seed(53);
+    let net = mnist_mlp(23, 8, &[6], 2);
+    let x = Matrix::from_vec(4, 8, rng.normal_vec(32));
+    let reference = net.forward(&x);
+    // large max_wait: in-flight requests sit in the batcher when shutdown
+    // lands, and the drain must still answer them
+    let (handle, addr, join) = start_server(net, 2, 64, 50_000);
+    std::thread::scope(|s| {
+        for c in 0..4usize {
+            let reference = &reference;
+            let x = &x;
+            s.spawn(move || {
+                let served = infer_one(addr, x.row(c));
+                assert_bits_equal(&served, reference.row(c), &format!("in-flight row {c}"));
+            });
+        }
+        // give the clients a moment to be queued, then pull the plug while
+        // their requests are still sitting in the batcher: the graceful
+        // drain must answer every accepted request before the loop exits
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        handle.shutdown();
+    });
+    join.join().unwrap().expect("server loop returns Ok after drain");
+    // the listener is gone afterwards
+    assert!(http_json_request(addr, "GET", "/healthz", None).is_err());
+}

@@ -290,7 +290,7 @@ fn chunked_multi_trial_trial0_bit_identical_to_unchunked_single_trial() {
         chunk_cells: None,
     };
     // the PR 3 engine: single trial (the pool prefix), whole grid resident
-    let base = sweep(&net, trials.sample_set(0), &te, &grid);
+    let base = sweep(&net, &trials.sample_set(0), &te, &grid);
     assert_eq!(base.points.len(), 6);
     for chunk in [1usize, 2, 6] {
         for workers in [1usize, 4] {
@@ -318,12 +318,12 @@ fn chunked_multi_trial_trial0_bit_identical_to_unchunked_single_trial() {
     for chunk in [1usize, 2] {
         for cc in cells.chunks(chunk) {
             let outcome =
-                SweepSession::new(&net, trials.sample_set(0), cc.to_vec(), false, 2)
+                SweepSession::new(&net, &trials.sample_set(0), cc.to_vec(), false, 2)
                     .run()
                     .unwrap();
             for (cell, qnet, _) in &outcome.networks {
                 let single =
-                    quantize_network(&net, trials.sample_set(0), &cell.pipeline_config(false, 1));
+                    quantize_network(&net, &trials.sample_set(0), &cell.pipeline_config(false, 1));
                 assert_weights_identical(
                     qnet,
                     &single.network,
@@ -368,6 +368,28 @@ fn trial_streams_deterministic_and_independent_of_workers() {
         for (a, b) in res.points.iter().zip(&base.points) {
             assert_eq!(a.top1_trials, b.top1_trials, "workers={workers}: per-trial scores");
             assert_eq!(a.top1_stats, b.top1_stats, "workers={workers}: aggregates");
+        }
+    }
+
+    // lazy-draw bit-parity with the eager path: materializing every set up
+    // front (what TrialSet did before the lazy refactor) and sweeping each
+    // set through the single-trial engine must reproduce the lazy trial
+    // stream score-for-score, bit for bit
+    let eager_sets: Vec<Matrix> =
+        (0..trials.len()).map(|t| trials.sample_set(t).as_ref().clone()).collect();
+    for (a, b) in
+        TrialSet::draw(&tr.x, 60, 3, 9).sample_set(2).data.iter().zip(&eager_sets[2].data)
+    {
+        assert_eq!(a, b, "re-drawn lazy set must equal the eager copy");
+    }
+    for (t, x) in eager_sets.iter().enumerate() {
+        let single = sweep(&net, x, &te, &cfg);
+        for (p, b) in single.points.iter().zip(&base.points) {
+            assert_eq!(
+                p.top1, b.top1_trials[t],
+                "trial {t} cell {:?}/C{}: eager-set sweep vs lazy trial stream",
+                p.method, p.c_alpha_requested
+            );
         }
     }
 }
@@ -426,7 +448,7 @@ fn fused_graph_never_reseeds_pool_between_quantize_and_score() {
     // unchunked, single trial: 3 quantization points → 3 seedings, the
     // final one carrying both the quantize and the chained score jobs
     let before = pool_seedings();
-    let res = sweep(&net, trials.sample_set(0), &te, &grid);
+    let res = sweep(&net, &trials.sample_set(0), &te, &grid);
     assert_eq!(res.points.len(), 4);
     assert_eq!(
         pool_seedings() - before,
@@ -437,7 +459,7 @@ fn fused_graph_never_reseeds_pool_between_quantize_and_score() {
     let before = pool_seedings();
     let res = sweep(
         &net,
-        trials.sample_set(0),
+        &trials.sample_set(0),
         &te,
         &SweepConfig { chunk_cells: Some(2), ..grid.clone() },
     );
@@ -451,7 +473,7 @@ fn fused_graph_never_reseeds_pool_between_quantize_and_score() {
     // pays one extra seeding for the scoring fan-out
     let before = pool_seedings();
     let outcome =
-        SweepSession::new(&net, trials.sample_set(0), grid.cells(), false, 2).run().unwrap();
+        SweepSession::new(&net, &trials.sample_set(0), grid.cells(), false, 2).run().unwrap();
     let _scores = gpfq::coordinator::run_jobs(
         gpfq::coordinator::SchedulerConfig::with_workers(2),
         outcome.networks,
@@ -481,7 +503,7 @@ fn analog_im2col_scales_with_trials_never_cells() {
             (0..n_cells).map(|i| SweepCell::new(Method::Msq, 3, 2.0 + i as f64)).collect();
         let before = im2col_invocations();
         for t in 0..trials.len() {
-            let out = SweepSession::new(&net, trials.sample_set(t), cells.clone(), false, 2)
+            let out = SweepSession::new(&net, &trials.sample_set(t), cells.clone(), false, 2)
                 .run_scored(|qnet| qnet.weight_count())
                 .unwrap();
             assert_eq!(out.scored.len(), n_cells);
@@ -498,7 +520,7 @@ fn analog_im2col_scales_with_trials_never_cells() {
             (0..n_cells).map(|i| SweepCell::new(Method::Gpfq, 3, 2.0 + i as f64)).collect();
         let before = im2col_invocations();
         for t in 0..trials.len() {
-            let _ = SweepSession::new(&net, trials.sample_set(t), cells.clone(), false, 2)
+            let _ = SweepSession::new(&net, &trials.sample_set(t), cells.clone(), false, 2)
                 .run_scored(|qnet| qnet.weight_count())
                 .unwrap();
         }

@@ -24,8 +24,10 @@ use gpfq::coordinator::pipeline::{try_quantize_network, PipelineConfig};
 use gpfq::coordinator::reference::reference_quantize_network;
 use gpfq::data::rng::Pcg;
 use gpfq::nn::conv::{im2col_invocations, ImgShape};
+use gpfq::nn::kernels::{pack_network, packed_layer_count, unpack_network};
 use gpfq::nn::matrix::Matrix;
-use gpfq::nn::network::cifar_cnn;
+use gpfq::nn::network::{cifar_cnn, mnist_mlp};
+use gpfq::nn::serialize::hints_from_outcome;
 use gpfq::quant::alphabet::Alphabet;
 use gpfq::quant::gpfq::{gpfq_layer_parallel, gpfq_neuron, LayerData};
 use gpfq::quant::gsw::{gsw_neuron, gsw_rel_err};
@@ -270,6 +272,67 @@ fn main() {
         oracle_peak_model as f64 / engine_peak.max(1) as f64,
     );
 
+    // ---- E10f: packed-domain kernels vs eager-decode baseline ----------------
+    // PR 6: quantized layers stay index-resident and forward through the
+    // nn::kernels index-domain GEMM.  Measure (a) a packed MLP forward vs
+    // the same model eagerly decoded back to f32 — the one LUT decode per
+    // weight row amortizes over the batch, so packed must not be slower at
+    // serving batch sizes — and (b) the tiled f32 GEMM vs the frozen naive
+    // summation tree.  Both pairs are pinned bit-identical before timing.
+    let (in_dim, hidden, classes, fwd_batch) =
+        if fast { (64usize, vec![32usize], 10usize, 64usize) } else { (256, vec![128, 64], 10, 256) };
+    let float_mlp = mnist_mlp(77, in_dim, &hidden, classes);
+    let xq = rand_matrix(&mut rng, if fast { 32 } else { 128 }, in_dim);
+    let qcfg = PipelineConfig { c_alpha: 2.0, ..Default::default() };
+    let qout = try_quantize_network(&float_mlp, &xq, &qcfg).expect("quantize mlp");
+    let packed = pack_network(&qout.network, &hints_from_outcome(&qout));
+    let n_packed = packed_layer_count(&packed);
+    assert!(n_packed > 0, "bench MLP should have packed layers");
+    let unpacked = unpack_network(&packed);
+    let xf = rand_matrix(&mut rng, fwd_batch, in_dim);
+    let yp = packed.forward(&xf);
+    let yu = unpacked.forward(&xf);
+    assert!(
+        yp.data.iter().zip(&yu.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+        "packed forward must be bit-identical to the eager-decode baseline"
+    );
+    let s_packed = time_fn("packed", 1, iters, |_| packed.forward(&xf).data.len());
+    let s_unpacked = time_fn("unpacked", 1, iters, |_| unpacked.forward(&xf).data.len());
+
+    let (gm, gk, gn) = if fast { (64usize, 256usize, 32usize) } else { (192, 1024, 96) };
+    let ga = rand_matrix(&mut rng, gm, gk);
+    let gb = rand_matrix(&mut rng, gk, gn);
+    let tiled = ga.matmul(&gb);
+    let naive = ga.matmul_naive(&gb);
+    assert!(
+        tiled.data.iter().zip(&naive.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+        "tiled GEMM must be bit-identical to the naive summation tree"
+    );
+    let s_tiled = time_fn("tiled", 1, iters, |_| ga.matmul(&gb).data.len());
+    let s_naive = time_fn("naive", 1, iters, |_| ga.matmul_naive(&gb).data.len());
+
+    let mut t = Table::new(
+        &format!(
+            "E10f — packed kernels (MLP {in_dim}→{hidden:?}→{classes}, batch {fwd_batch}; GEMM {gm}x{gk}x{gn})"
+        ),
+        &["path", "time", "vs baseline"],
+    );
+    let packed_speedup = s_unpacked.median_s / s_packed.median_s.max(1e-12);
+    let tiled_speedup = s_naive.median_s / s_tiled.median_s.max(1e-12);
+    t.row(vec![
+        "packed forward".into(),
+        fmt_secs(s_packed.median_s),
+        format!("{packed_speedup:.2}x"),
+    ]);
+    t.row(vec!["unpacked forward".into(), fmt_secs(s_unpacked.median_s), "1.00x".into()]);
+    t.row(vec!["tiled GEMM".into(), fmt_secs(s_tiled.median_s), format!("{tiled_speedup:.2}x")]);
+    t.row(vec!["naive GEMM".into(), fmt_secs(s_naive.median_s), "1.00x".into()]);
+    t.emit("runtime_packed_kernels");
+    println!(
+        "packed forward speedup: {packed_speedup:.2}x, tiled GEMM speedup: {tiled_speedup:.2}x \
+         (both pinned bit-identical)\n"
+    );
+
     // ---- machine-readable summary: BENCH_runtime.json ------------------------
     let layers: Vec<Json> = engine_out
         .layer_reports
@@ -315,8 +378,19 @@ fn main() {
     config_j.insert("samples".into(), Json::Num(samples as f64));
     config_j.insert("levels".into(), Json::Num(cfg.levels as f64));
     config_j.insert("workers".into(), Json::Num(cfg.workers as f64));
+    let mut packed_j = BTreeMap::new();
+    packed_j.insert("packed_layers".into(), Json::Num(n_packed as f64));
+    packed_j.insert("forward_batch".into(), Json::Num(fwd_batch as f64));
+    packed_j.insert("packed_forward_seconds".into(), Json::Num(s_packed.median_s));
+    packed_j.insert("unpacked_forward_seconds".into(), Json::Num(s_unpacked.median_s));
+    packed_j.insert("packed_speedup".into(), Json::Num(packed_speedup));
+    packed_j.insert("tiled_gemm_seconds".into(), Json::Num(s_tiled.median_s));
+    packed_j.insert("naive_gemm_seconds".into(), Json::Num(s_naive.median_s));
+    packed_j.insert("tiled_speedup".into(), Json::Num(tiled_speedup));
+    packed_j.insert("bit_identical".into(), Json::Bool(true));
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("runtime_cnn_pipeline".into()));
+    root.insert("packed_kernels".into(), Json::Obj(packed_j));
     root.insert("fast".into(), Json::Bool(fast));
     root.insert("config".into(), Json::Obj(config_j));
     root.insert("engine".into(), Json::Obj(engine_j));

@@ -340,6 +340,20 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         format!("{} MISMATCHES", report.mismatches)
     };
     t.row(vec!["logits parity".into(), parity]);
+    t.row(vec!["packed layers".into(), format!("{}", report.packed_layers)]);
+    t.row(vec![
+        "packed forward".into(),
+        format!("{:.1} µs", report.packed_forward_seconds * 1e6),
+    ]);
+    t.row(vec![
+        "unpacked forward".into(),
+        format!("{:.1} µs", report.unpacked_forward_seconds * 1e6),
+    ]);
+    t.row(vec!["packed speedup".into(), format!("{:.2}x", report.packed_speedup)]);
+    t.row(vec![
+        "kernel parity".into(),
+        if report.kernel_parity_ok { "bit-identical".into() } else { "MISMATCH".to_string() },
+    ]);
     println!("{}", t.render());
     let json_path = args.get("json").unwrap_or("BENCH_serve.json");
     std::fs::write(json_path, format!("{}\n", report.to_json()))
@@ -350,6 +364,9 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             "served logits diverged from direct Network::forward on {} request(s)",
             report.mismatches
         );
+    }
+    if !report.kernel_parity_ok {
+        bail!("packed kernel forward diverged bit-wise from the unpacked baseline");
     }
     Ok(())
 }

@@ -1,0 +1,633 @@
+//! Packed-domain inference kernels and the tiled f32 GEMM — the runtime
+//! payoff of quantization.
+//!
+//! Up to PR 5, a `.gpfq` model was unpacked back to f32 at load time and
+//! served through the exact same GEMM as the analog network: quantization
+//! bought file size and nothing at runtime.  This module closes that gap
+//! with two kernel families, both **pinned bit-identical** to the code
+//! they replace:
+//!
+//! 1. **Packed-domain forward** ([`packed_matmul`], [`PackedWeights`]):
+//!    a quantized layer stays resident as bit-packed alphabet *indices*
+//!    (⌈log₂M⌉ bits per weight, ~16× less weight traffic for ternary) and
+//!    the GEMM decodes each weight row through an M-entry f32 level table
+//!    on the fly — once per row per forward, amortized over the whole
+//!    batch.  [`packed_matmul_exact`] goes further for integer-valued
+//!    activations: per-neuron integer accumulation over the raw indices
+//!    with a single `(step, alpha)` scale at the end.
+//! 2. **Tiled f32 GEMM** ([`matmul_tiled`], [`matmul_tn_tiled`]): the
+//!    blocked replacement for the naive inner loops of
+//!    [`Matrix::matmul`] / [`Matrix::matmul_tn`] — the hot path under
+//!    quantize, sweep, train *and* serve.
+//!
+//! # The exactness argument
+//!
+//! Deserializing a packed layer reconstructs every weight as exactly
+//! `Alphabet::level(j) = -alpha + step()*j` — an f32 determined by
+//! `(alpha, M, j)` alone.  [`Matrix::matmul`] computes each output element
+//! `out[i][j] = Σ_k x[i][k] · w[k][j]` by adding terms in **ascending k**,
+//! skipping terms whose *left* (activation) coefficient is exactly `0.0`.
+//! [`packed_matmul`] decodes row `k` of the packed weights through the
+//! level table and replays the identical per-element summation tree
+//! (ascending `k`, same zero-skip), so its output is **bit-identical** to
+//! unpacking the layer and calling `matmul` — floating-point addition is
+//! deterministic once the operand sequence is fixed.  The same argument
+//! covers the tiled GEMM: `k`-blocks are visited in ascending order and
+//! ascending `k` within each block, while the `i`-tiling only reorders
+//! *independent* output rows.  Nothing here is an approximation; the
+//! contract is equality of bits, and `tests/test_kernels.rs` pins it for
+//! MLPs and conv/pool/BN CNNs across worker counts.
+//!
+//! The integer path ([`packed_matmul_exact`]) is *exact in integer
+//! arithmetic* rather than f32-bit-identical: for integer-valued
+//! activations it computes `S1 = Σ_k x_k·j_k` and `S0 = Σ_k x_k` in `i64`
+//! (no rounding at all during accumulation) and emits
+//! `step·S1 − alpha·S0`, paying at most three f32 roundings per output
+//! instead of one per term.  When `alpha` is a power of two and the sums
+//! stay below 2²⁴ (e.g. the ternary `{-1,0,1}` alphabet on small integer
+//! inputs) even those roundings vanish and the result again equals the
+//! f32 path bit for bit.
+//!
+//! # Bit layout
+//!
+//! `PackedWeights` stores the indices of a row-major (fan-in × neurons)
+//! weight matrix LSB-first at `bits_per_index(M)` bits each — the exact
+//! on-disk payload of a `.gpfq` packed layer (see [`crate::nn::serialize`]),
+//! so loading a model is a bounds-check plus a byte copy, never an unpack.
+//!
+//! # Dispatch
+//!
+//! [`crate::nn::network::Layer::PackedDense`] /
+//! [`Layer::PackedConv`](crate::nn::network::Layer::PackedConv) route
+//! through [`packed_matmul`] inside `Network::forward`; float layers keep
+//! using the (now tiled) `Matrix::matmul`.  `serve`, `eval` and the
+//! benches inherit the packed path automatically because
+//! `nn::serialize::load` keeps packed layers resident.
+
+#![deny(missing_docs)]
+
+use crate::coordinator::scheduler::{run_jobs, SchedulerConfig};
+use crate::error::{bail, Result};
+use crate::nn::matrix::Matrix;
+use crate::nn::network::{Layer, Network};
+use crate::nn::serialize::{bits_per_index, pack_indices, unpack_indices};
+use crate::quant::alphabet::Alphabet;
+
+// ---------------------------------------------------------------------------
+// packed weights
+// ---------------------------------------------------------------------------
+
+/// A quantized weight matrix kept resident as bit-packed alphabet indices.
+///
+/// Invariant (enforced by both constructors): every stored index is
+/// `< alphabet.m`, so decoding through the level table can never go out of
+/// bounds even though ⌈log₂M⌉ bits can encode values past `M-1` for
+/// non-power-of-two alphabets.
+#[derive(Clone, PartialEq)]
+pub struct PackedWeights {
+    /// fan-in (rows of the logical weight matrix)
+    rows: usize,
+    /// neurons (columns of the logical weight matrix)
+    cols: usize,
+    /// the alphabet whose levels the indices address
+    alphabet: Alphabet,
+    /// bits per index: `bits_per_index(alphabet.m)`
+    bits: u32,
+    /// LSB-first packed indices, row-major over the logical matrix
+    bytes: Vec<u8>,
+}
+
+impl std::fmt::Debug for PackedWeights {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PackedWeights({}x{}, M={}, {} bytes)",
+            self.rows,
+            self.cols,
+            self.alphabet.m,
+            self.bytes.len()
+        )
+    }
+}
+
+impl PackedWeights {
+    /// Pack a weight matrix whose every entry is (numerically) a character
+    /// of `alphabet`; `None` if any entry is not — the caller falls back
+    /// to f32.  Mirrors the serializer's packing rule, tolerance included.
+    pub fn from_matrix(w: &Matrix, alphabet: Alphabet) -> Option<PackedWeights> {
+        let tol = 1e-4 * alphabet.alpha.max(1e-12);
+        let mut idx = Vec::with_capacity(w.data.len());
+        for &v in &w.data {
+            let j = alphabet.nearest_index(v);
+            if (alphabet.level(j) - v).abs() > tol {
+                return None;
+            }
+            idx.push(j);
+        }
+        let bits = bits_per_index(alphabet.m);
+        Some(PackedWeights {
+            rows: w.rows,
+            cols: w.cols,
+            alphabet,
+            bits,
+            bytes: pack_indices(&idx, bits),
+        })
+    }
+
+    /// Adopt an already-packed payload (the deserializer's path).  Validates
+    /// the byte length against the shape and rejects any index `≥ M` — a
+    /// corrupt payload must fail here, not panic inside a forward pass.
+    pub fn from_raw_parts(
+        rows: usize,
+        cols: usize,
+        alphabet: Alphabet,
+        bytes: Vec<u8>,
+    ) -> Result<PackedWeights> {
+        let bits = bits_per_index(alphabet.m);
+        let elems = rows * cols;
+        let expected = (elems as u64 * bits as u64).div_ceil(8) as usize;
+        if bytes.len() != expected {
+            bail!("packed payload {} bytes, shape implies {expected}", bytes.len());
+        }
+        for j in unpack_indices(&bytes, bits, elems) {
+            if j >= alphabet.m {
+                bail!("packed index {j} out of range for M={} alphabet", alphabet.m);
+            }
+        }
+        Ok(PackedWeights { rows, cols, alphabet, bits, bytes })
+    }
+
+    /// Fan-in: rows of the logical weight matrix.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Neuron count: columns of the logical weight matrix.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The alphabet the packed indices address.
+    pub fn alphabet(&self) -> Alphabet {
+        self.alphabet
+    }
+
+    /// Bits per stored index.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// The raw packed payload (the `.gpfq` on-disk bytes, verbatim).
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// The f32 level table: `lut[j] == alphabet.level(j)` — the exact
+    /// values eager deserialization used to materialize per weight.
+    pub fn level_lut(&self) -> Vec<f32> {
+        (0..self.alphabet.m).map(|j| self.alphabet.level(j)).collect()
+    }
+
+    /// All indices, row-major (test/debug helper; O(rows·cols) memory).
+    pub fn indices(&self) -> Vec<usize> {
+        unpack_indices(&self.bytes, self.bits, self.rows * self.cols)
+    }
+
+    /// Decode logical row `r` (one fan-in position, `cols` weights) into
+    /// `out` through `lut`.  The hot inner decode of [`packed_matmul`].
+    #[inline]
+    pub fn decode_row(&self, r: usize, lut: &[f32], out: &mut [f32]) {
+        debug_assert!(r < self.rows);
+        debug_assert_eq!(out.len(), self.cols);
+        let bits = self.bits as u64;
+        let mask = (1u64 << bits) - 1;
+        let mut bitpos = (r * self.cols) as u64 * bits;
+        for o in out.iter_mut() {
+            let byte = (bitpos >> 3) as usize;
+            let shift = bitpos & 7;
+            // bits ≤ 20, shift ≤ 7 ⇒ at most 27 bits ⇒ 4 bytes suffice;
+            // the tail guard keeps the last partial word in bounds
+            let end = (byte + 4).min(self.bytes.len());
+            let mut word = 0u64;
+            for (bi, &b) in self.bytes[byte..end].iter().enumerate() {
+                word |= (b as u64) << (8 * bi);
+            }
+            let j = ((word >> shift) & mask) as usize;
+            *o = lut[j];
+            bitpos += bits;
+        }
+    }
+
+    /// Decode logical row `r` as raw indices (the integer kernel's view).
+    #[inline]
+    fn decode_row_indices(&self, r: usize, out: &mut [i64]) {
+        debug_assert_eq!(out.len(), self.cols);
+        let bits = self.bits as u64;
+        let mask = (1u64 << bits) - 1;
+        let mut bitpos = (r * self.cols) as u64 * bits;
+        for o in out.iter_mut() {
+            let byte = (bitpos >> 3) as usize;
+            let end = (byte + 4).min(self.bytes.len());
+            let mut word = 0u64;
+            for (bi, &b) in self.bytes[byte..end].iter().enumerate() {
+                word |= (b as u64) << (8 * bi);
+            }
+            *o = ((word >> (bitpos & 7)) & mask) as i64;
+            bitpos += bits;
+        }
+    }
+
+    /// Materialize the full f32 weight matrix — exactly what eager
+    /// deserialization produced before this module existed.
+    pub fn unpack(&self) -> Matrix {
+        let lut = self.level_lut();
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            self.decode_row(r, &lut, out.row_mut(r));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// packed GEMM
+// ---------------------------------------------------------------------------
+
+/// `x · W` where `W` stays packed: bit-identical to
+/// `x.matmul(&w.unpack())` (see the module-level exactness argument),
+/// while reading `bits_per_index(M)` bits per weight instead of 32.
+///
+/// Loop order is `k`-outer so each packed weight row is decoded **once**
+/// per GEMM and reused across the whole batch; per output element the adds
+/// still run in ascending `k` with the activation zero-skip, i.e. the
+/// identical summation tree to [`Matrix::matmul`].
+pub fn packed_matmul(x: &Matrix, w: &PackedWeights) -> Matrix {
+    assert_eq!(x.cols, w.rows, "packed matmul shape mismatch {x:?} x {w:?}");
+    let (m, k, n) = (x.rows, w.rows, w.cols);
+    let lut = w.level_lut();
+    let mut out = Matrix::zeros(m, n);
+    let mut wrow = vec![0.0f32; n];
+    for kk in 0..k {
+        w.decode_row(kk, &lut, &mut wrow);
+        for i in 0..m {
+            let a = x.data[i * k + kk];
+            if a == 0.0 {
+                continue;
+            }
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (o, &b) in out_row.iter_mut().zip(&wrow) {
+                *o += a * b;
+            }
+        }
+    }
+    out
+}
+
+/// Index-domain GEMM for **integer-valued** activations: per neuron,
+/// accumulate `S1 = Σ_k x_k·j_k` and `S0 = Σ_k x_k` in `i64` — no rounding
+/// during accumulation — then emit `step·S1 − alpha·S0`, the algebraic
+/// expansion of `Σ_k x_k·(−alpha + step·j_k)`.
+///
+/// Returns `None` when any activation is not an integer with `|x| ≤ 2³¹`
+/// (the caller falls back to [`packed_matmul`]).  Exact whenever the two
+/// sums and the final scale stay exactly representable — in particular
+/// for ternary `alpha = 1` on small integer inputs, where the result is
+/// bit-identical to the f32 path because both are exact.
+pub fn packed_matmul_exact(x: &Matrix, w: &PackedWeights) -> Option<Matrix> {
+    assert_eq!(x.cols, w.rows, "packed matmul shape mismatch {x:?} x {w:?}");
+    let lim = (1u64 << 31) as f32;
+    let xi: Option<Vec<i64>> = x
+        .data
+        .iter()
+        .map(|&v| (v.fract() == 0.0 && v.abs() <= lim).then_some(v as i64))
+        .collect();
+    let xi = xi?;
+    let (m, k, n) = (x.rows, w.rows, w.cols);
+    let step = w.alphabet.step();
+    let alpha = w.alphabet.alpha;
+    let mut s1 = vec![0i64; m * n];
+    let mut s0 = vec![0i64; m];
+    let mut jrow = vec![0i64; n];
+    for kk in 0..k {
+        w.decode_row_indices(kk, &mut jrow);
+        for i in 0..m {
+            let a = xi[i * k + kk];
+            if a == 0 {
+                continue;
+            }
+            s0[i] += a;
+            let acc = &mut s1[i * n..(i + 1) * n];
+            for (o, &j) in acc.iter_mut().zip(&jrow) {
+                *o += a * j;
+            }
+        }
+    }
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        let base = alpha * s0[i] as f32;
+        for j in 0..n {
+            out.data[i * n + j] = step * s1[i * n + j] as f32 - base;
+        }
+    }
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// tiled f32 GEMM
+// ---------------------------------------------------------------------------
+
+/// Output rows processed per block: keeps `TILE_I` output rows hot while a
+/// `TILE_K`-row panel of `b` streams through cache once per block instead
+/// of once per output row.
+const TILE_I: usize = 8;
+/// Fan-in positions per block (a `TILE_K × n` panel of `b` is ≤ 128 KiB of
+/// f32 at n=512 — comfortably L2-resident on the target containers).
+const TILE_K: usize = 128;
+
+/// Blocked row-major GEMM, bit-identical to the naive
+/// [`Matrix::matmul_naive`]: `k`-blocks ascend and `k` ascends within each
+/// block, so every output element sees the identical add sequence
+/// (including the left-coefficient zero-skip); the `i`-tiling only groups
+/// independent output rows.  `Matrix::matmul` delegates here.
+pub fn matmul_tiled(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch {a:?} x {b:?}");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + TILE_I).min(m);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + TILE_K).min(k);
+            for i in i0..i1 {
+                let a_row = &a.data[i * k..(i + 1) * k];
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let av = a_row[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b.data[kk * n..(kk + 1) * n];
+                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            k0 = k1;
+        }
+        i0 = i1;
+    }
+    out
+}
+
+/// Blocked walk-order GEMM (`aᵀ · b` without materializing the transpose),
+/// bit-identical to [`Matrix::matmul_tn_naive`]: `k` stays globally
+/// ascending (it is the outer stream), the blocking only groups output
+/// rows so a `TILE_I`-row slab of `out` stays hot across the whole `k`
+/// sweep.  `Matrix::matmul_tn` delegates here.
+pub fn matmul_tn_tiled(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch {a:?}^T x {b:?}");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + TILE_I).min(m);
+        for kk in 0..k {
+            let a_row = a.row(kk);
+            let b_row = &b.data[kk * n..(kk + 1) * n];
+            for (i, &av) in a_row.iter().enumerate().take(i1).skip(i0) {
+                if av == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                    *o += av * bv;
+                }
+            }
+        }
+        i0 = i1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// network-level helpers
+// ---------------------------------------------------------------------------
+
+/// Convert every quantized dense/conv layer whose weights check out
+/// against its alphabet hint into its packed-resident form.  Layers
+/// without a hint (or whose weights are not alphabet characters) are left
+/// untouched.  Inverse of [`unpack_network`]; forward passes of the two
+/// networks are bit-identical.
+pub fn pack_network(
+    net: &Network,
+    hints: &crate::nn::serialize::AlphabetHints,
+) -> Network {
+    let mut out = net.clone();
+    for (i, layer) in out.layers.iter_mut().enumerate() {
+        let Some(&a) = hints.get(&i) else { continue };
+        let replacement = match &*layer {
+            Layer::Dense { w, b, act } => PackedWeights::from_matrix(w, a)
+                .map(|p| Layer::PackedDense { w: p, b: b.clone(), act: *act }),
+            Layer::Conv { k, b, kh, kw, stride, act, in_shape } => {
+                PackedWeights::from_matrix(k, a).map(|p| Layer::PackedConv {
+                    k: p,
+                    b: b.clone(),
+                    kh: *kh,
+                    kw: *kw,
+                    stride: *stride,
+                    act: *act,
+                    in_shape: *in_shape,
+                })
+            }
+            _ => None,
+        };
+        if let Some(r) = replacement {
+            *layer = r;
+        }
+    }
+    out
+}
+
+/// Materialize every packed layer back to f32 — the pre-kernel eager
+/// representation.  Forward passes are bit-identical to the packed
+/// network's; the benches use this pair to measure what packing buys.
+pub fn unpack_network(net: &Network) -> Network {
+    let mut out = net.clone();
+    for layer in out.layers.iter_mut() {
+        let replacement = match &*layer {
+            Layer::PackedDense { w, b, act } => {
+                Some(Layer::Dense { w: w.unpack(), b: b.clone(), act: *act })
+            }
+            Layer::PackedConv { k, b, kh, kw, stride, act, in_shape } => Some(Layer::Conv {
+                k: k.unpack(),
+                b: b.clone(),
+                kh: *kh,
+                kw: *kw,
+                stride: *stride,
+                act: *act,
+                in_shape: *in_shape,
+            }),
+            _ => None,
+        };
+        if let Some(r) = replacement {
+            *layer = r;
+        }
+    }
+    out
+}
+
+/// How many layers of `net` are packed-resident.
+pub fn packed_layer_count(net: &Network) -> usize {
+    net.layers
+        .iter()
+        .filter(|l| matches!(l, Layer::PackedDense { .. } | Layer::PackedConv { .. }))
+        .count()
+}
+
+/// Batch-sharded forward pass on the job scheduler: rows of `x` are split
+/// into `workers` contiguous shards, each shard runs `net.forward`
+/// independently, and the logits are restacked in order.  Output rows
+/// never interact, so the result is **bit-identical for every worker
+/// count** — `tests/test_kernels.rs` pins 1/2/4.
+pub fn forward_sharded(net: &Network, x: &Matrix, workers: usize) -> Matrix {
+    let w = workers.max(1);
+    if w == 1 || x.rows <= 1 {
+        return net.forward(x);
+    }
+    let chunk = x.rows.div_ceil(w);
+    let jobs: Vec<Matrix> = (0..x.rows)
+        .step_by(chunk)
+        .map(|s| x.rows_slice(s, (s + chunk).min(x.rows)))
+        .collect();
+    let outs: Vec<Matrix> =
+        run_jobs::<_, _, std::convert::Infallible, _>(
+            SchedulerConfig::with_workers(w),
+            jobs,
+            |_, shard| Ok(net.forward(&shard)),
+        )
+        .unwrap_or_else(|e| match e {});
+    let cols = outs.first().map(|o| o.cols).unwrap_or(net.output_shape().len());
+    let mut data = Vec::with_capacity(x.rows * cols);
+    for o in outs {
+        data.extend_from_slice(&o.data);
+    }
+    Matrix::from_vec(x.rows, cols, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Pcg;
+
+    fn snapped_matrix(rng: &mut Pcg, rows: usize, cols: usize, a: Alphabet) -> Matrix {
+        let raw = Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols));
+        raw.map(|v| a.nearest(v))
+    }
+
+    #[test]
+    fn pack_roundtrip_recovers_levels() {
+        let mut rng = Pcg::seed(1);
+        for m in [2usize, 3, 4, 8, 31] {
+            let a = Alphabet::new(0.7, m);
+            let w = snapped_matrix(&mut rng, 9, 7, a);
+            let p = PackedWeights::from_matrix(&w, a).expect("snapped weights must pack");
+            assert_eq!(p.unpack().data, w.data, "M={m}");
+            assert_eq!(p.indices().len(), 63);
+        }
+    }
+
+    #[test]
+    fn from_matrix_rejects_non_alphabet() {
+        let a = Alphabet::ternary(1.0);
+        let w = Matrix::from_vec(2, 2, vec![1.0, 0.0, -1.0, 0.37]);
+        assert!(PackedWeights::from_matrix(&w, a).is_none());
+    }
+
+    #[test]
+    fn from_raw_parts_validates() {
+        let a = Alphabet::ternary(1.0);
+        // 4 indices at 2 bits: 1 byte; 0xFF decodes to four 3s — out of range
+        assert!(PackedWeights::from_raw_parts(2, 2, a, vec![0xFF]).is_err());
+        // wrong payload length
+        assert!(PackedWeights::from_raw_parts(2, 2, a, vec![0, 0]).is_err());
+        // valid: four 0s
+        let p = PackedWeights::from_raw_parts(2, 2, a, vec![0]).unwrap();
+        assert_eq!(p.unpack().data, vec![-1.0; 4]);
+    }
+
+    #[test]
+    fn packed_matmul_bit_identical_to_unpacked() {
+        let mut rng = Pcg::seed(2);
+        for (m, k, n, levels) in [(5usize, 17usize, 9usize, 3usize), (3, 33, 4, 16), (1, 8, 2, 2)] {
+            let a = Alphabet::new(0.9, levels);
+            let w = snapped_matrix(&mut rng, k, n, a);
+            let p = PackedWeights::from_matrix(&w, a).unwrap();
+            let mut x = Matrix::from_vec(m, k, rng.normal_vec(m * k));
+            x.data[0] = 0.0; // the zero-skip must fire identically
+            let packed = packed_matmul(&x, &p);
+            let unpacked = x.matmul(&p.unpack());
+            let same = packed
+                .data
+                .iter()
+                .zip(&unpacked.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "M={levels} shapes ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packed_matmul_exact_matches_on_integer_inputs() {
+        // ternary alpha=1 on small integers: both paths are exact, so the
+        // integer kernel must agree with the f32 path bit for bit
+        let mut rng = Pcg::seed(3);
+        let a = Alphabet::ternary(1.0);
+        let w = snapped_matrix(&mut rng, 12, 6, a);
+        let p = PackedWeights::from_matrix(&w, a).unwrap();
+        let x = Matrix::from_fn(4, 12, |r, c| ((r * 7 + c * 3) % 11) as f32 - 5.0);
+        let exact = packed_matmul_exact(&x, &p).expect("integer inputs");
+        let f32_path = packed_matmul(&x, &p);
+        assert_eq!(exact.data, f32_path.data);
+        // non-integer activations are refused
+        let xf = Matrix::from_vec(1, 12, vec![0.5; 12]);
+        assert!(packed_matmul_exact(&xf, &p).is_none());
+    }
+
+    #[test]
+    fn tiled_gemms_bit_identical_to_naive() {
+        let mut rng = Pcg::seed(4);
+        // shapes straddling the tile boundaries, zeros included
+        for (m, k, n) in [(1usize, 1usize, 1usize), (7, 129, 5), (9, 256, 3), (17, 300, 31)] {
+            let mut a = Matrix::from_vec(m, k, rng.normal_vec(m * k));
+            let b = Matrix::from_vec(k, n, rng.normal_vec(k * n));
+            a.data[0] = 0.0;
+            if m * k > 10 {
+                a.data[10] = 0.0;
+            }
+            assert_eq!(matmul_tiled(&a, &b).data, a.matmul_naive(&b).data, "({m},{k},{n})");
+            let at = Matrix::from_vec(k, m, rng.normal_vec(k * m));
+            assert_eq!(
+                matmul_tn_tiled(&at, &b).data,
+                at.matmul_tn_naive(&b).data,
+                "tn ({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_row_matches_indices() {
+        let mut rng = Pcg::seed(5);
+        let a = Alphabet::new(1.3, 5); // 3 bits, non-power-of-two
+        let w = snapped_matrix(&mut rng, 6, 11, a);
+        let p = PackedWeights::from_matrix(&w, a).unwrap();
+        let lut = p.level_lut();
+        let idx = p.indices();
+        let mut buf = vec![0.0f32; 11];
+        for r in 0..6 {
+            p.decode_row(r, &lut, &mut buf);
+            for c in 0..11 {
+                assert_eq!(buf[c].to_bits(), lut[idx[r * 11 + c]].to_bits(), "({r},{c})");
+            }
+        }
+    }
+}

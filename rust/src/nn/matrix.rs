@@ -86,9 +86,20 @@ impl Matrix {
         out
     }
 
-    /// Cache-friendly matmul: row-major ikj order so the inner loop is a
-    /// contiguous axpy over the output row — autovectorizes well.
+    /// Cache-blocked matmul (delegates to the tiled kernel in
+    /// [`crate::nn::kernels`]); bit-identical to [`Matrix::matmul_naive`],
+    /// which stays as the reference summation tree — per output element
+    /// the adds run in ascending k with a zero-skip on the left
+    /// coefficient, and the tiling never reorders them.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
+        crate::nn::kernels::matmul_tiled(self, other)
+    }
+
+    /// The pre-tiling reference GEMM: row-major ikj order, contiguous axpy
+    /// over the output row.  Defines the canonical per-element summation
+    /// tree that `matmul`, `matmul_tn`, the tiled kernels and the packed
+    /// kernels all reproduce bit for bit; property tests pin them to this.
+    pub fn matmul_naive(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch {self:?} x {other:?}");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
@@ -117,6 +128,12 @@ impl Matrix {
     /// — the activation engine relies on this to advance streams from the
     /// walk-order views the quantizer uses, without a second transpose.
     pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        crate::nn::kernels::matmul_tn_tiled(self, other)
+    }
+
+    /// The pre-tiling reference for [`Matrix::matmul_tn`]: kk-outer walk
+    /// over `self`, same per-element add order as [`Matrix::matmul_naive`].
+    pub fn matmul_tn_naive(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch {self:?}^T x {other:?}");
         let (k, m, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
@@ -300,6 +317,20 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn matmul_bit_identical_to_naive() {
+        // the tiled delegate must reproduce the reference summation tree,
+        // zero-skips included, across tile-boundary shapes
+        for (m, k, n) in [(1usize, 1usize, 1usize), (3, 130, 4), (9, 257, 7)] {
+            let mut a = Matrix::from_fn(m, k, |r, c| ((r * 31 + c * 17) % 13) as f32 - 6.0);
+            let b = Matrix::from_fn(k, n, |r, c| ((r * 7 + c * 3) % 11) as f32 * 0.25 - 1.0);
+            a.data[0] = 0.0;
+            assert_eq!(a.matmul(&b).data, a.matmul_naive(&b).data, "({m},{k},{n})");
+            let at = a.transpose();
+            assert_eq!(at.matmul_tn(&b).data, at.matmul_tn_naive(&b).data, "tn ({m},{k},{n})");
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub mod activations;
 pub mod batchnorm;
 pub mod conv;
+pub mod kernels;
 pub mod linalg;
 pub mod matrix;
 pub mod network;
@@ -13,5 +14,6 @@ pub mod serialize;
 
 pub use activations::Activation;
 pub use conv::ImgShape;
+pub use kernels::PackedWeights;
 pub use matrix::Matrix;
 pub use network::{cifar_cnn, mnist_mlp, vgg_like, Layer, Network, NetworkBuilder, Shape};

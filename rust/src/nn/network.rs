@@ -11,6 +11,7 @@ use crate::data::rng::Pcg;
 use crate::nn::activations::Activation;
 use crate::nn::batchnorm::BatchNorm;
 use crate::nn::conv::{conv_out, fold_output, im2col, im2col_walk, ImgShape};
+use crate::nn::kernels::{packed_matmul, PackedWeights};
 use crate::nn::matrix::Matrix;
 use crate::nn::pool::maxpool_forward;
 
@@ -57,6 +58,29 @@ pub enum Layer {
         in_shape: ImgShape,
     },
     BatchNorm(BatchNorm),
+    /// A quantized dense layer kept resident as bit-packed alphabet
+    /// indices; `forward` routes it through the packed-domain kernel
+    /// (`nn::kernels::packed_matmul`), bit-identical to the unpacked
+    /// `Dense` form.  Inference-only: not trainable, not re-quantizable.
+    PackedDense {
+        /// (in × out) weights as packed indices, columns are neurons
+        w: PackedWeights,
+        b: Vec<f32>,
+        act: Activation,
+    },
+    /// A quantized conv layer kept resident as bit-packed alphabet
+    /// indices (flattened kernels, kh*kw*cin × cout); same contract as
+    /// [`Layer::PackedDense`].
+    PackedConv {
+        /// flattened kernels as packed indices, columns are neurons
+        k: PackedWeights,
+        b: Vec<f32>,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        act: Activation,
+        in_shape: ImgShape,
+    },
 }
 
 impl Layer {
@@ -89,6 +113,12 @@ impl Layer {
             Layer::Conv { k, kh, kw, .. } => format!("conv{kh}x{kw}({})", k.cols),
             Layer::MaxPool { size, .. } => format!("maxpool{size}"),
             Layer::BatchNorm(bn) => format!("bn({})", bn.channels),
+            Layer::PackedDense { w, .. } => {
+                format!("pdense({}x{},M={})", w.rows(), w.cols(), w.alphabet().m)
+            }
+            Layer::PackedConv { k, kh, kw, .. } => {
+                format!("pconv{kh}x{kw}({},M={})", k.cols(), k.alphabet().m)
+            }
         }
     }
 }
@@ -150,6 +180,22 @@ impl Network {
             }
             Layer::MaxPool { size, in_shape } => maxpool_forward(x, *in_shape, *size).0,
             Layer::BatchNorm(bn) => bn.forward_infer(x),
+            // packed layers: identical shape pipeline, but the GEMM decodes
+            // the weights from their packed indices (bit-identical to the
+            // unpacked Dense/Conv path — see nn::kernels)
+            Layer::PackedDense { w, b, act } => {
+                let mut z = packed_matmul(x, w);
+                z.add_row_vec(b);
+                act.apply(&mut z);
+                z
+            }
+            Layer::PackedConv { k, b, kh, kw, stride, act, in_shape } => {
+                let patches = im2col(x, *in_shape, *kh, *kw, *stride);
+                let mut z = packed_matmul(&patches, k);
+                z.add_row_vec(b);
+                act.apply(&mut z);
+                fold_output(z, x.rows)
+            }
         }
     }
 

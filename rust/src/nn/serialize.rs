@@ -8,6 +8,13 @@
 //! layer, while float layers (biases, unquantized layers, BN parameters)
 //! stay f32.  `Saved::compression_vs_float()` reports the realized ratio.
 //!
+//! Since PR 6, packed layers stay **resident** after load: `load`
+//! constructs `Layer::PackedDense` / `Layer::PackedConv` holding the
+//! on-disk payload verbatim ([`crate::nn::kernels::PackedWeights`]), and
+//! `Network::forward` computes on the indices directly — deserialization
+//! never materializes the f32 weight matrix, and save→load→save is a byte
+//! round trip for packed layers.
+//!
 //! Format (little-endian):
 //!   magic "GPFQ" | u32 version | u32 layer count | layers...
 //! Layer record: u8 tag, then tag-specific fields (see `write_layer`).
@@ -19,6 +26,7 @@ use crate::error::{bail, Context, Result};
 use crate::nn::activations::Activation;
 use crate::nn::batchnorm::BatchNorm;
 use crate::nn::conv::ImgShape;
+use crate::nn::kernels::PackedWeights;
 use crate::nn::matrix::Matrix;
 use crate::nn::network::{Layer, Network, Shape};
 use crate::quant::alphabet::Alphabet;
@@ -93,19 +101,27 @@ pub fn unpack_indices(bytes: &[u8], bits: u32, count: usize) -> Vec<usize> {
 // weight encoding
 // ---------------------------------------------------------------------------
 
-/// Try to express a weight matrix as alphabet indices; None if any entry is
-/// not (numerically) an alphabet character.
-fn to_indices(w: &Matrix, a: Alphabet) -> Option<Vec<usize>> {
-    let tol = 1e-4 * a.alpha.max(1e-12);
-    let mut idx = Vec::with_capacity(w.data.len());
-    for &v in &w.data {
-        let j = a.nearest_index(v);
-        if (a.level(j) - v).abs() > tol {
-            return None;
+/// What a weight record deserializes to: float layers come back as a
+/// matrix, packed layers stay **resident** as their packed indices (no
+/// eager unpack — `nn::kernels` computes on them directly).
+enum ReadWeights {
+    Float(Matrix),
+    Packed(PackedWeights),
+}
+
+impl ReadWeights {
+    fn rows(&self) -> usize {
+        match self {
+            ReadWeights::Float(w) => w.rows,
+            ReadWeights::Packed(p) => p.rows(),
         }
-        idx.push(j);
     }
-    Some(idx)
+    fn cols(&self) -> usize {
+        match self {
+            ReadWeights::Float(w) => w.cols,
+            ReadWeights::Packed(p) => p.cols(),
+        }
+    }
 }
 
 fn write_u32(out: &mut impl Write, v: u32) -> io::Result<()> {
@@ -144,25 +160,31 @@ fn read_f32s(inp: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
 }
 
 fn write_weights(out: &mut impl Write, w: &Matrix, alpha: Option<Alphabet>) -> io::Result<()> {
-    write_u32(out, w.rows as u32)?;
-    write_u32(out, w.cols as u32)?;
     if let Some(a) = alpha {
-        if let Some(idx) = to_indices(w, a) {
-            out.write_all(&[ENC_PACKED])?;
-            write_f32(out, a.alpha)?;
-            write_u32(out, a.m as u32)?;
-            let bits = bits_per_index(a.m);
-            let packed = pack_indices(&idx, bits);
-            write_u32(out, packed.len() as u32)?;
-            out.write_all(&packed)?;
-            return Ok(());
+        if let Some(p) = PackedWeights::from_matrix(w, a) {
+            return write_packed(out, &p);
         }
     }
+    write_u32(out, w.rows as u32)?;
+    write_u32(out, w.cols as u32)?;
     out.write_all(&[ENC_F32])?;
     write_f32s(out, &w.data)
 }
 
-fn read_weights(inp: &mut impl Read) -> Result<Matrix> {
+/// Write an already-packed weight record: the resident payload goes to
+/// disk verbatim, so save→load of a packed-resident network is a byte
+/// round trip.
+fn write_packed(out: &mut impl Write, p: &PackedWeights) -> io::Result<()> {
+    write_u32(out, p.rows() as u32)?;
+    write_u32(out, p.cols() as u32)?;
+    out.write_all(&[ENC_PACKED])?;
+    write_f32(out, p.alphabet().alpha)?;
+    write_u32(out, p.alphabet().m as u32)?;
+    write_u32(out, p.bytes().len() as u32)?;
+    out.write_all(p.bytes())
+}
+
+fn read_weights(inp: &mut impl Read) -> Result<ReadWeights> {
     let rows = read_u32(inp)? as usize;
     let cols = read_u32(inp)? as usize;
     if rows > MAX_DIM || cols > MAX_DIM {
@@ -175,7 +197,7 @@ fn read_weights(inp: &mut impl Read) -> Result<Matrix> {
     let mut enc = [0u8; 1];
     inp.read_exact(&mut enc)?;
     match enc[0] {
-        ENC_F32 => Ok(Matrix::from_vec(rows, cols, read_f32s(inp, elems)?)),
+        ENC_F32 => Ok(ReadWeights::Float(Matrix::from_vec(rows, cols, read_f32s(inp, elems)?))),
         ENC_PACKED => {
             let alpha = read_f32(inp)?;
             if !alpha.is_finite() || alpha <= 0.0 {
@@ -197,18 +219,11 @@ fn read_weights(inp: &mut impl Read) -> Result<Matrix> {
             }
             let mut bytes = vec![0u8; nbytes];
             inp.read_exact(&mut bytes)?;
-            let idx = unpack_indices(&bytes, bits, elems);
-            // ⌈log₂M⌉ bits can encode indices past M-1 for non-power-of-two
-            // alphabets; a corrupt payload must not hit the assert in
-            // Alphabet::level
-            let mut data = Vec::with_capacity(elems);
-            for j in idx {
-                if j >= m {
-                    bail!("packed index {j} out of range for M={m} alphabet");
-                }
-                data.push(a.level(j));
-            }
-            Ok(Matrix::from_vec(rows, cols, data))
+            // the payload stays resident; from_raw_parts re-checks the
+            // length and rejects any index ≥ M (⌈log₂M⌉ bits can encode
+            // past M-1 for non-power-of-two alphabets) so a corrupt
+            // payload fails here, never inside a forward pass
+            Ok(ReadWeights::Packed(PackedWeights::from_raw_parts(rows, cols, a, bytes)?))
         }
         other => bail!("unknown weight encoding {other}"),
     }
@@ -279,6 +294,28 @@ pub fn save(net: &Network, hints: &AlphabetHints, out: &mut impl Write) -> Resul
                 write_f32s(out, &bn.running_mean)?;
                 write_f32s(out, &bn.running_var)?;
             }
+            // packed-resident layers reuse the dense/conv tags: the on-disk
+            // format is unchanged, the payload is just written verbatim
+            Layer::PackedDense { w, b, act } => {
+                out.write_all(&[TAG_DENSE])?;
+                out.write_all(&[matches!(act, Activation::Relu) as u8])?;
+                write_packed(out, w)?;
+                write_u32(out, b.len() as u32)?;
+                write_f32s(out, b)?;
+            }
+            Layer::PackedConv { k, b, kh, kw, stride, act, in_shape } => {
+                out.write_all(&[TAG_CONV])?;
+                out.write_all(&[matches!(act, Activation::Relu) as u8])?;
+                write_u32(out, *kh as u32)?;
+                write_u32(out, *kw as u32)?;
+                write_u32(out, *stride as u32)?;
+                write_u32(out, in_shape.h as u32)?;
+                write_u32(out, in_shape.w as u32)?;
+                write_u32(out, in_shape.c as u32)?;
+                write_packed(out, k)?;
+                write_u32(out, b.len() as u32)?;
+                write_f32s(out, b)?;
+            }
         }
     }
     Ok(())
@@ -322,12 +359,17 @@ pub fn load(inp: &mut impl Read) -> Result<Network> {
                 let act = if actb[0] == 1 { Activation::Relu } else { Activation::None };
                 let w = read_weights(inp)?;
                 let blen = read_u32(inp)? as usize;
-                if w.cols != blen {
-                    bail!("layer {li}: bias length {blen} != neurons {}", w.cols);
+                if w.cols() != blen {
+                    bail!("layer {li}: bias length {blen} != neurons {}", w.cols());
                 }
                 let b = read_f32s(inp, blen)?;
-                cur = Shape::Flat(w.cols);
-                layers.push(Layer::Dense { w, b, act });
+                cur = Shape::Flat(w.cols());
+                // packed weights stay resident: the layer dispatches to the
+                // packed-domain kernel instead of an eager unpack
+                layers.push(match w {
+                    ReadWeights::Float(w) => Layer::Dense { w, b, act },
+                    ReadWeights::Packed(w) => Layer::PackedDense { w, b, act },
+                });
             }
             TAG_CONV => {
                 let mut actb = [0u8; 1];
@@ -356,21 +398,26 @@ pub fn load(inp: &mut impl Read) -> Result<Network> {
                     .checked_mul(kw)
                     .and_then(|n| n.checked_mul(in_shape.c))
                     .ok_or_else(|| crate::error::format_err!("layer {li}: patch size overflow"))?;
-                if k.rows != patch {
-                    bail!("layer {li}: kernel rows {} != kh*kw*cin {patch}", k.rows);
+                if k.rows() != patch {
+                    bail!("layer {li}: kernel rows {} != kh*kw*cin {patch}", k.rows());
                 }
                 let blen = read_u32(inp)? as usize;
-                if blen != k.cols {
-                    bail!("layer {li}: bias length {blen} != channels {}", k.cols);
+                if blen != k.cols() {
+                    bail!("layer {li}: bias length {blen} != channels {}", k.cols());
                 }
                 let b = read_f32s(inp, blen)?;
                 let out_shape = ImgShape {
                     h: crate::nn::conv::conv_out(in_shape.h, kh, stride),
                     w: crate::nn::conv::conv_out(in_shape.w, kw, stride),
-                    c: k.cols,
+                    c: k.cols(),
                 };
                 cur = Shape::Img(out_shape);
-                layers.push(Layer::Conv { k, b, kh, kw, stride, act, in_shape });
+                layers.push(match k {
+                    ReadWeights::Float(k) => Layer::Conv { k, b, kh, kw, stride, act, in_shape },
+                    ReadWeights::Packed(k) => {
+                        Layer::PackedConv { k, b, kh, kw, stride, act, in_shape }
+                    }
+                });
             }
             TAG_POOL => {
                 let size = read_u32(inp)? as usize;
@@ -518,6 +565,29 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max);
         assert!(d < 1e-4, "packed forward mismatch {d}");
+    }
+
+    #[test]
+    fn load_keeps_packed_layers_resident_and_roundtrips_bytes() {
+        let mut rng = Pcg::seed(21);
+        let net = mnist_mlp(22, 40, &[16], 4);
+        let x = Matrix::from_vec(24, 40, rng.normal_vec(24 * 40));
+        let out = quantize_network(&net, &x, &PipelineConfig { c_alpha: 2.0, ..Default::default() });
+        let hints = hints_from_outcome(&out);
+        let mut buf = Vec::new();
+        save(&out.network, &hints, &mut buf).unwrap();
+        let back = load(&mut &buf[..]).unwrap();
+        // quantized layers come back packed-resident, not as f32 matrices
+        assert!(back.summary().contains("pdense"), "summary: {}", back.summary());
+        assert_eq!(crate::nn::kernels::packed_layer_count(&back), out.layer_reports.len());
+        // save→load→save is a byte round trip (payload stays verbatim)
+        let mut buf2 = Vec::new();
+        save(&back, &AlphabetHints::new(), &mut buf2).unwrap();
+        assert_eq!(buf, buf2);
+        // and the packed forward is bit-identical to eager unpacking
+        let xt = Matrix::from_vec(6, 40, rng.normal_vec(240));
+        let unpacked = crate::nn::kernels::unpack_network(&back);
+        assert_eq!(back.forward(&xt).data, unpacked.forward(&xt).data);
     }
 
     #[test]

@@ -17,6 +17,8 @@ pub struct Alphabet {
 }
 
 impl Alphabet {
+    /// The M-character equispaced alphabet `alpha * {-1 + 2j/(M-1)}` of
+    /// paper Section 6.  Panics on `m < 2` or a non-positive radius.
     pub fn new(alpha: f32, m: usize) -> Self {
         assert!(m >= 2, "alphabet needs at least 2 characters, got {m}");
         assert!(alpha > 0.0, "alphabet radius must be positive, got {alpha}");

@@ -88,10 +88,12 @@ impl LayerData {
         Self::new(x, x)
     }
 
+    /// N — weights per neuron (paper's feature dimension).
     pub fn n(&self) -> usize {
         self.yt.rows
     }
 
+    /// m — data samples backing each inner product (paper's batch size).
     pub fn m(&self) -> usize {
         self.yt.cols
     }

@@ -9,6 +9,10 @@
 //! - [`exhaustive`] — the NP-hard optimum of eq. (1) for tiny N (test oracle)
 //! - [`alphabet`] / [`error`] — shared alphabets and metrics
 
+// the quant layer is the paper's contribution — every public item carries
+// the paper-anchored contract it implements
+#![deny(missing_docs)]
+
 pub mod alphabet;
 pub mod error;
 pub mod exhaustive;

@@ -10,6 +10,12 @@
 //! QPS, the server's batch-size histogram, and the parity verdict; `gpfq
 //! bench-serve` writes it to `BENCH_serve.json` (a CI artifact, so the
 //! serving-latency trajectory accumulates across PRs).
+//!
+//! Since PR 6 the report also measures the **packed kernel** directly:
+//! best-of-3 forwards over the replay matrix with packed layers resident
+//! (what the server runs) vs. after [`crate::nn::kernels::unpack_network`]
+//! (the old eager-decode baseline), plus a bit-parity verdict between the
+//! two — see `packed_*` / `kernel_parity_ok` in [`BenchServeReport`].
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -69,6 +75,19 @@ pub struct BenchServeReport {
     /// served logits bit-identical to direct `Network::forward`?
     pub parity_ok: bool,
     pub mismatches: usize,
+    /// layers served through the packed integer-index kernel
+    /// ([`crate::nn::kernels`]); 0 means a float-only model
+    pub packed_layers: usize,
+    /// best-of-3 direct forward over the replay matrix, packed layers
+    /// resident (the path the server actually runs)
+    pub packed_forward_seconds: f64,
+    /// best-of-3 forward after [`crate::nn::kernels::unpack_network`]
+    /// (the pre-PR-6 eager-decode baseline)
+    pub unpacked_forward_seconds: f64,
+    /// `unpacked_forward_seconds / packed_forward_seconds`
+    pub packed_speedup: f64,
+    /// packed forward bit-identical to the unpacked forward?
+    pub kernel_parity_ok: bool,
 }
 
 impl BenchServeReport {
@@ -91,6 +110,11 @@ impl BenchServeReport {
             ("client_latency_max_us", Json::Num(self.lat_max_us)),
             ("parity_ok", Json::Bool(self.parity_ok)),
             ("mismatches", Json::Num(self.mismatches as f64)),
+            ("packed_layers", Json::Num(self.packed_layers as f64)),
+            ("packed_forward_seconds", Json::Num(self.packed_forward_seconds)),
+            ("unpacked_forward_seconds", Json::Num(self.unpacked_forward_seconds)),
+            ("packed_speedup", Json::Num(self.packed_speedup)),
+            ("kernel_parity_ok", Json::Bool(self.kernel_parity_ok)),
             ("server", self.server.to_json()),
         ])
     }
@@ -113,6 +137,36 @@ pub fn bench_serve(
     // the bit-parity reference: direct in-process forward on the same rows
     let reference = net.forward(data);
     let model_summary = net.summary();
+
+    // packed-vs-unpacked kernel comparison, before the server takes `net`:
+    // the packed path is what the server runs; the eager-decode baseline is
+    // the same model with every PackedWeights expanded back to f32
+    let packed_layers = crate::nn::kernels::packed_layer_count(&net);
+    let time_forward = |n: &Network| -> (f64, Matrix) {
+        let mut best = f64::INFINITY;
+        let mut out = n.forward(data);
+        for _ in 0..3 {
+            let t = Instant::now();
+            out = n.forward(data);
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        (best, out)
+    };
+    let unpacked_net = crate::nn::kernels::unpack_network(&net);
+    let (packed_forward_seconds, packed_out) = time_forward(&net);
+    let (unpacked_forward_seconds, unpacked_out) = time_forward(&unpacked_net);
+    let kernel_parity_ok = packed_out.rows == unpacked_out.rows
+        && packed_out.cols == unpacked_out.cols
+        && packed_out
+            .data
+            .iter()
+            .zip(&unpacked_out.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    let packed_speedup = if packed_forward_seconds > 0.0 {
+        unpacked_forward_seconds / packed_forward_seconds
+    } else {
+        0.0
+    };
 
     let mut serve_cfg = cfg.serve.clone();
     serve_cfg.addr = "127.0.0.1:0".to_string();
@@ -205,5 +259,10 @@ pub fn bench_serve(
         server: stats.snapshot(),
         parity_ok: mismatches == 0,
         mismatches,
+        packed_layers,
+        packed_forward_seconds,
+        unpacked_forward_seconds,
+        packed_speedup,
+        kernel_parity_ok,
     })
 }

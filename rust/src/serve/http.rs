@@ -12,7 +12,8 @@
 //!                                      ▼
 //!                    batch executors on ONE long-lived WorkerPool
 //!                    (coordinator::scheduler) — stack rows, one
-//!                    Network::forward GEMM, split logits
+//!                    Network::forward (packed layers dispatch to the
+//!                    nn::kernels index-domain GEMM in place), split logits
 //!                                      │ send(logits row)
 //!                                      ▼
 //!                               connection thread ──▶ JSON response
@@ -30,7 +31,10 @@
 //! its input row alone, with a fixed per-row summation order — so logits
 //! served through the micro-batch path are **bit-identical** to an
 //! in-process `forward` call, whatever batch a request happens to land in
-//! (pinned in `tests/test_serve.rs`).
+//! (pinned in `tests/test_serve.rs`).  The same contract covers the packed
+//! path: quantized layers loaded from `.gpfq` stay index-resident and run
+//! through [`crate::nn::kernels::packed_matmul`], whose summation tree is
+//! pinned bit-identical to the eager-decode float GEMM.
 //!
 //! Shutdown is graceful: [`ServerHandle::shutdown`] stops the accept loop,
 //! in-flight connections finish, the batcher drains its queue, and the

@@ -8,8 +8,9 @@
 //!
 //! * [`batch`] — the **micro-batcher**: a pure requests-in → batches-out
 //!   library (policy: `max_batch` / `max_wait`) that coalesces concurrent
-//!   requests into single forward-pass GEMMs; unit-testable with
-//!   synthetic clocks, no sockets involved.
+//!   requests into single forward passes — packed layers run straight
+//!   through the [`crate::nn::kernels`] index-domain GEMM, no eager
+//!   decode; unit-testable with synthetic clocks, no sockets involved.
 //! * [`http`] — the **server loop**: minimal HTTP/1.1 on
 //!   `std::net::TcpListener`, JSON via [`crate::util::json`], batch
 //!   execution on one long-lived

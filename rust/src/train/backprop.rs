@@ -82,6 +82,14 @@ pub fn forward_train(net: &mut Network, x: &Matrix) -> (Matrix, Vec<Cache>) {
                 caches.push(Cache::Bn(cache));
                 h = out;
             }
+            Layer::PackedDense { .. } | Layer::PackedConv { .. } => {
+                // packed layers carry no f32 weight matrix to take
+                // gradients against; training a deployed model requires
+                // materializing it first
+                panic!(
+                    "packed layers are inference-only — run nn::kernels::unpack_network before training"
+                );
+            }
         }
     }
     (h, caches)

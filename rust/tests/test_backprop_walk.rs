@@ -70,6 +70,7 @@ fn ref_forward_train(net: &mut Network, x: &Matrix) -> (Matrix, Vec<RefCache>) {
                 caches.push(RefCache::Bn(cache));
                 h = out;
             }
+            other => panic!("reference training path supports float layers only, got {}", other.label()),
         }
     }
     (h, caches)

@@ -1,0 +1,108 @@
+//! Exactness pins for the packed-domain inference kernels (`nn::kernels`).
+//!
+//! The PR 6 contract: a packed network's forward pass is **bit-identical**
+//! to the same network eagerly decoded back to f32 — on an MLP and on a
+//! conv/pool/batchnorm CNN, for any batch sharding (worker counts 1/2/4
+//! via `forward_sharded`), and straight off the `.gpfq` save→load path.
+//! The per-GEMM argument (packed/tiled vs the frozen naive summation
+//! tree) is property-tested in `test_properties.rs`; this file pins the
+//! whole-network composition.
+
+use gpfq::coordinator::pipeline::{quantize_network, PipelineConfig};
+use gpfq::data::rng::Pcg;
+use gpfq::nn::conv::ImgShape;
+use gpfq::nn::kernels::{forward_sharded, pack_network, packed_layer_count, unpack_network};
+use gpfq::nn::matrix::Matrix;
+use gpfq::nn::network::{cifar_cnn, mnist_mlp, Network};
+use gpfq::nn::serialize::{hints_from_outcome, load_file, save_file};
+
+fn assert_bits(a: &Matrix, b: &Matrix, tag: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{tag}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: element {i}: {x} vs {y}");
+    }
+}
+
+/// Quantize `net` and return its (packed-resident, eagerly-decoded) twins.
+fn packed_twins(net: &Network, x_quant: &Matrix) -> (Network, Network) {
+    let out =
+        quantize_network(net, x_quant, &PipelineConfig { c_alpha: 2.0, ..Default::default() });
+    let packed = pack_network(&out.network, &hints_from_outcome(&out));
+    assert!(packed_layer_count(&packed) > 0, "quantized net should pack");
+    let unpacked = unpack_network(&packed);
+    assert_eq!(packed_layer_count(&unpacked), 0, "unpack must clear every packed layer");
+    (packed, unpacked)
+}
+
+#[test]
+fn mlp_packed_forward_bit_identical_across_worker_counts() {
+    let mut rng = Pcg::seed(51);
+    let net = mnist_mlp(11, 20, &[14, 9], 4);
+    let xq = Matrix::from_vec(24, 20, rng.normal_vec(24 * 20));
+    let (packed, unpacked) = packed_twins(&net, &xq);
+    assert!(packed.summary().contains("pdense"), "{}", packed.summary());
+    let x = Matrix::from_vec(13, 20, rng.normal_vec(13 * 20));
+    let want = unpacked.forward(&x);
+    for workers in [1usize, 2, 4] {
+        let got = forward_sharded(&packed, &x, workers);
+        assert_bits(&got, &want, &format!("mlp workers={workers}"));
+    }
+}
+
+#[test]
+fn cnn_packed_forward_bit_identical_across_worker_counts() {
+    // conv + maxpool + batchnorm + dense all on the forward path; only the
+    // conv/dense layers pack, the rest must compose around them unchanged
+    let mut rng = Pcg::seed(52);
+    let img = ImgShape { h: 8, w: 8, c: 1 };
+    let net = cifar_cnn(12, img, &[3], 10, 3);
+    let xq = Matrix::from_vec(10, img.len(), rng.normal_vec(10 * img.len()));
+    let (packed, unpacked) = packed_twins(&net, &xq);
+    assert!(packed.summary().contains("pconv"), "{}", packed.summary());
+    let x = Matrix::from_vec(9, img.len(), rng.normal_vec(9 * img.len()));
+    let want = unpacked.forward(&x);
+    for workers in [1usize, 2, 4] {
+        let got = forward_sharded(&packed, &x, workers);
+        assert_bits(&got, &want, &format!("cnn workers={workers}"));
+    }
+}
+
+#[test]
+fn saved_model_serves_packed_and_bit_identical() {
+    // the deployment path: quantize → save → load keeps layers index-
+    // resident, and the loaded net's forward matches the pre-save
+    // float-quantized network bit for bit
+    let mut rng = Pcg::seed(53);
+    let net = mnist_mlp(13, 16, &[10], 3);
+    let xq = Matrix::from_vec(20, 16, rng.normal_vec(20 * 16));
+    let out =
+        quantize_network(&net, &xq, &PipelineConfig { c_alpha: 2.0, ..Default::default() });
+    let hints = hints_from_outcome(&out);
+    let path =
+        std::env::temp_dir().join(format!("gpfq_test_kernels_{}.gpfq", std::process::id()));
+    save_file(&out.network, &hints, &path).expect("save");
+    let loaded = load_file(&path).expect("load");
+    let _ = std::fs::remove_file(&path);
+    assert!(packed_layer_count(&loaded) > 0, "load must keep packed layers resident");
+    let x = Matrix::from_vec(7, 16, rng.normal_vec(7 * 16));
+    assert_bits(&loaded.forward(&x), &out.network.forward(&x), "save/load packed forward");
+}
+
+#[test]
+fn pack_unpack_roundtrip_preserves_weights_exactly() {
+    // Alphabet::nearest and Alphabet::level share one formula
+    // (-alpha + step*j), so decode reproduces the quantizer's f32 output
+    // exactly — not approximately
+    let mut rng = Pcg::seed(54);
+    let net = mnist_mlp(15, 12, &[8], 3);
+    let xq = Matrix::from_vec(16, 12, rng.normal_vec(16 * 12));
+    let out =
+        quantize_network(&net, &xq, &PipelineConfig { c_alpha: 2.0, ..Default::default() });
+    let packed = pack_network(&out.network, &hints_from_outcome(&out));
+    let unpacked = unpack_network(&packed);
+    for (i, (a, b)) in out.network.layers.iter().zip(&unpacked.layers).enumerate() {
+        if let (Some(wa), Some(wb)) = (a.weights(), b.weights()) {
+            assert_eq!(wa.data, wb.data, "layer {i}: decode changed weights");
+        }
+    }
+}

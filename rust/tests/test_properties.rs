@@ -3,6 +3,7 @@
 
 use gpfq::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
 use gpfq::coordinator::scheduler::{run_jobs, SchedulerConfig};
+use gpfq::nn::kernels::{packed_matmul, PackedWeights};
 use gpfq::nn::matrix::{axpy, norm_sq, Matrix};
 use gpfq::nn::network::{mnist_mlp, NetworkBuilder, Shape};
 use gpfq::nn::Activation;
@@ -245,6 +246,76 @@ fn prop_pipeline_msq_ignores_data() {
             a.network.layers[0].weights().unwrap().data == b2.network.layers[0].weights().unwrap().data,
             "msq depended on data".to_string(),
         )
+    });
+}
+
+// ---------------------------------------------------------------------------
+// kernel bit-parity (nn::kernels)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_tiled_gemm_bit_identical_to_naive() {
+    forall("tiled GEMM == naive summation tree", 30, |g| {
+        let m = g.usize_in(1, 12);
+        let k = g.usize_in(1, 300);
+        let n = g.usize_in(1, 40);
+        let mut a = rand_matrix(g, m, k);
+        // plant exact zeros: the canonical tree skips zero left coefficients
+        for v in a.data.iter_mut() {
+            if g.f32_in(0.0, 1.0) < 0.25 {
+                *v = 0.0;
+            }
+        }
+        let b = rand_matrix(g, k, n);
+        let tiled = a.matmul(&b);
+        let naive = a.matmul_naive(&b);
+        let same = tiled.data.iter().zip(&naive.data).all(|(p, q)| p.to_bits() == q.to_bits());
+        prop_assert(same, format!("matmul {m}x{k}x{n} diverged from naive"))
+    });
+}
+
+#[test]
+fn prop_tiled_gemm_tn_bit_identical_to_naive() {
+    forall("tiled TN GEMM == naive summation tree", 30, |g| {
+        let k = g.usize_in(1, 300);
+        let m = g.usize_in(1, 24);
+        let n = g.usize_in(1, 16);
+        let mut at = rand_matrix(g, k, m);
+        for v in at.data.iter_mut() {
+            if g.f32_in(0.0, 1.0) < 0.25 {
+                *v = 0.0;
+            }
+        }
+        let b = rand_matrix(g, k, n);
+        let tiled = at.matmul_tn(&b);
+        let naive = at.matmul_tn_naive(&b);
+        let same = tiled.data.iter().zip(&naive.data).all(|(p, q)| p.to_bits() == q.to_bits());
+        prop_assert(same, format!("matmul_tn ({k}x{m})^T x {k}x{n} diverged from naive"))
+    });
+}
+
+#[test]
+fn prop_packed_matmul_bit_identical_to_decoded_gemm() {
+    forall("packed GEMM == naive GEMM on decoded weights", 30, |g| {
+        let m = *g.choice(&[2usize, 3, 4, 5, 8, 16, 31]);
+        let alpha = g.f32_in(0.05, 3.0);
+        let a = Alphabet::new(alpha, m);
+        let rows = g.usize_in(1, 40); // N features
+        let cols = g.usize_in(1, 12); // p neurons
+        let batch = g.usize_in(1, 9);
+        let levels: Vec<f32> = (0..rows * cols).map(|_| a.level(g.usize_in(0, m - 1))).collect();
+        let w = Matrix::from_vec(rows, cols, levels);
+        let p = PackedWeights::from_matrix(&w, a).expect("alphabet-valued weights must pack");
+        let mut x = rand_matrix(g, batch, rows);
+        for v in x.data.iter_mut() {
+            if g.f32_in(0.0, 1.0) < 0.25 {
+                *v = 0.0;
+            }
+        }
+        let got = packed_matmul(&x, &p);
+        let want = x.matmul_naive(&p.unpack());
+        let same = got.data.iter().zip(&want.data).all(|(s, t)| s.to_bits() == t.to_bits());
+        prop_assert(same, format!("packed {batch}x{rows}x{cols} (M={m}) diverged"))
     });
 }
 

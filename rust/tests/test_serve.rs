@@ -157,12 +157,18 @@ fn cnn_loopback_parity_via_bench_serve() {
         "batch sizes within policy: {:?}",
         report.server.batch_hist
     );
+    // the packed kernel actually served this model, bit-identically
+    assert!(report.packed_layers > 0, "round-tripped net should keep packed layers resident");
+    assert!(report.kernel_parity_ok, "packed kernel diverged from unpacked baseline");
+    assert!(report.packed_forward_seconds > 0.0 && report.unpacked_forward_seconds > 0.0);
     // the report serializes to valid JSON with the acceptance fields
     let doc = gpfq::util::json::parse(&report.to_json().to_string()).unwrap();
     assert_eq!(doc.get("parity_ok").as_bool(), Some(true));
     assert!(doc.get("client_latency_p50_us").as_f64().is_some());
     assert!(doc.get("server").get("batch_hist").as_obj().is_some());
     assert!(doc.get("client_qps").as_f64().unwrap() > 0.0);
+    assert_eq!(doc.get("kernel_parity_ok").as_bool(), Some(true));
+    assert!(doc.get("packed_speedup").as_f64().is_some());
 }
 
 /// Multi-row requests (`{"inputs": [...]}`) batch each row independently

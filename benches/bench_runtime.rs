@@ -24,7 +24,10 @@ use gpfq::coordinator::pipeline::{try_quantize_network, PipelineConfig};
 use gpfq::coordinator::reference::reference_quantize_network;
 use gpfq::data::rng::Pcg;
 use gpfq::nn::conv::{im2col_invocations, ImgShape};
-use gpfq::nn::kernels::{pack_network, packed_layer_count, unpack_network};
+use gpfq::nn::kernels::{
+    forward_sharded, pack_network, packed_layer_count, packed_matmul, unpack_network,
+    PackedWeights,
+};
 use gpfq::nn::matrix::Matrix;
 use gpfq::nn::network::{cifar_cnn, mnist_mlp};
 use gpfq::nn::serialize::hints_from_outcome;
@@ -40,6 +43,32 @@ use std::sync::Arc;
 
 fn rand_matrix(rng: &mut Pcg, rows: usize, cols: usize) -> Matrix {
     Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols))
+}
+
+/// Pre-lane-blocking packed GEMM: identical loop nest and zero-skip to
+/// `nn::kernels::packed_matmul`, but with a scalar inner loop — the
+/// baseline the lane-blocked kernel must match bit-for-bit (each element
+/// sees the same `out + a·b` two-rounding sequence either way) and is
+/// measured against.
+fn packed_matmul_scalar(x: &Matrix, w: &PackedWeights) -> Matrix {
+    let (m, k, n) = (x.rows, w.rows(), w.cols());
+    assert_eq!(x.cols, k);
+    let lut = w.level_lut();
+    let mut out = Matrix::zeros(m, n);
+    let mut wrow = vec![0.0f32; n];
+    for kk in 0..k {
+        w.decode_row(kk, &lut, &mut wrow);
+        for i in 0..m {
+            let a = x.data[i * k + kk];
+            if a == 0.0 {
+                continue;
+            }
+            for (o, &b) in out.data[i * n..(i + 1) * n].iter_mut().zip(&wrow) {
+                *o += a * b;
+            }
+        }
+    }
+    out
 }
 
 fn main() {
@@ -333,6 +362,88 @@ fn main() {
          (both pinned bit-identical)\n"
     );
 
+    // ---- E10g: lane-blocked / fused / sharded ratios -------------------------
+    // PR 7: (a) the lane-blocked packed GEMM vs the scalar inner loop it
+    // replaced, (b) the fused-epilogue forward vs the frozen unfused
+    // oracle (float and packed), (c) the row-sharded batch forward vs the
+    // serial one.  Every pair is asserted bit-identical before timing —
+    // these are optimizations of schedule, never of values.
+    let (lm, lk, ln2) = if fast { (32usize, 128usize, 48usize) } else { (128, 512, 200) };
+    let a5 = Alphabet::new(1.0, 5);
+    let lane_w = {
+        let idx = rng.uniform_vec(lk * ln2, 0.0, (a5.m - 1) as f32);
+        let data: Vec<f32> = idx.iter().map(|&v| a5.level(v.round() as usize)).collect();
+        PackedWeights::from_matrix(&Matrix::from_vec(lk, ln2, data), a5)
+            .expect("alphabet-valued by construction")
+    };
+    let lane_x = {
+        // ~25% planted zeros exercise the kernels' shared zero-skip
+        let data: Vec<f32> =
+            rng.normal_vec(lm * lk).into_iter().map(|v| if v.abs() < 0.3 { 0.0 } else { v }).collect();
+        Matrix::from_vec(lm, lk, data)
+    };
+    let y_lane = packed_matmul(&lane_x, &lane_w);
+    let y_scalar = packed_matmul_scalar(&lane_x, &lane_w);
+    assert!(
+        y_lane.data.iter().zip(&y_scalar.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+        "lane-blocked packed GEMM must be bit-identical to the scalar inner loop"
+    );
+    let s_lane = time_fn("lane", 1, iters, |_| packed_matmul(&lane_x, &lane_w).data.len());
+    let s_scalar =
+        time_fn("scalar", 1, iters, |_| packed_matmul_scalar(&lane_x, &lane_w).data.len());
+    let lane_speedup = s_scalar.median_s / s_lane.median_s.max(1e-12);
+
+    let yf_fused = float_mlp.forward(&xf);
+    let yf_unfused = float_mlp.forward_unfused(&xf);
+    assert!(
+        yf_fused.data.iter().zip(&yf_unfused.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+        "fused float forward must be bit-identical to the unfused oracle"
+    );
+    let yp_fused = packed.forward(&xf);
+    let yp_unfused = packed.forward_unfused(&xf);
+    assert!(
+        yp_fused.data.iter().zip(&yp_unfused.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+        "fused packed forward must be bit-identical to the unfused oracle"
+    );
+    let s_ffused = time_fn("float fused", 1, iters, |_| float_mlp.forward(&xf).data.len());
+    let s_funfused =
+        time_fn("float unfused", 1, iters, |_| float_mlp.forward_unfused(&xf).data.len());
+    let s_pfused = time_fn("packed fused", 1, iters, |_| packed.forward(&xf).data.len());
+    let s_punfused =
+        time_fn("packed unfused", 1, iters, |_| packed.forward_unfused(&xf).data.len());
+    let float_fused_speedup = s_funfused.median_s / s_ffused.median_s.max(1e-12);
+    let packed_fused_speedup = s_punfused.median_s / s_pfused.median_s.max(1e-12);
+
+    let shard_workers = default_workers().max(2);
+    let y_sharded = forward_sharded(&packed, &xf, shard_workers);
+    assert!(
+        y_sharded.data.iter().zip(&yp_fused.data).all(|(p, q)| p.to_bits() == q.to_bits()),
+        "row-sharded forward must be bit-identical to the serial forward"
+    );
+    let s_sharded = time_fn("sharded", 1, iters, |_| {
+        forward_sharded(&packed, &xf, shard_workers).data.len()
+    });
+    let sharded_speedup = s_pfused.median_s / s_sharded.median_s.max(1e-12);
+
+    let mut t = Table::new(
+        &format!(
+            "E10g — lane / fused-epilogue / sharded ratios (GEMM {lm}x{lk}x{ln2}; MLP batch {fwd_batch}; {shard_workers} shards)"
+        ),
+        &["path", "time", "vs baseline"],
+    );
+    t.row(vec!["lane-blocked packed GEMM".into(), fmt_secs(s_lane.median_s), format!("{lane_speedup:.2}x")]);
+    t.row(vec!["scalar packed GEMM".into(), fmt_secs(s_scalar.median_s), "1.00x".into()]);
+    t.row(vec!["float fused forward".into(), fmt_secs(s_ffused.median_s), format!("{float_fused_speedup:.2}x")]);
+    t.row(vec!["float unfused forward".into(), fmt_secs(s_funfused.median_s), "1.00x".into()]);
+    t.row(vec!["packed fused forward".into(), fmt_secs(s_pfused.median_s), format!("{packed_fused_speedup:.2}x")]);
+    t.row(vec!["packed unfused forward".into(), fmt_secs(s_punfused.median_s), "1.00x".into()]);
+    t.row(vec!["sharded forward".into(), fmt_secs(s_sharded.median_s), format!("{sharded_speedup:.2}x")]);
+    t.emit("runtime_lane_fused_sharded");
+    println!(
+        "lane {lane_speedup:.2}x, fused float {float_fused_speedup:.2}x / packed \
+         {packed_fused_speedup:.2}x, sharded {sharded_speedup:.2}x (all pinned bit-identical)\n"
+    );
+
     // ---- machine-readable summary: BENCH_runtime.json ------------------------
     let layers: Vec<Json> = engine_out
         .layer_reports
@@ -388,9 +499,24 @@ fn main() {
     packed_j.insert("naive_gemm_seconds".into(), Json::Num(s_naive.median_s));
     packed_j.insert("tiled_speedup".into(), Json::Num(tiled_speedup));
     packed_j.insert("bit_identical".into(), Json::Bool(true));
+    let mut lfs_j = BTreeMap::new();
+    lfs_j.insert("lane_gemm_seconds".into(), Json::Num(s_lane.median_s));
+    lfs_j.insert("scalar_gemm_seconds".into(), Json::Num(s_scalar.median_s));
+    lfs_j.insert("lane_speedup".into(), Json::Num(lane_speedup));
+    lfs_j.insert("float_fused_forward_seconds".into(), Json::Num(s_ffused.median_s));
+    lfs_j.insert("float_unfused_forward_seconds".into(), Json::Num(s_funfused.median_s));
+    lfs_j.insert("float_fused_speedup".into(), Json::Num(float_fused_speedup));
+    lfs_j.insert("packed_fused_forward_seconds".into(), Json::Num(s_pfused.median_s));
+    lfs_j.insert("packed_unfused_forward_seconds".into(), Json::Num(s_punfused.median_s));
+    lfs_j.insert("packed_fused_speedup".into(), Json::Num(packed_fused_speedup));
+    lfs_j.insert("sharded_forward_seconds".into(), Json::Num(s_sharded.median_s));
+    lfs_j.insert("shard_workers".into(), Json::Num(shard_workers as f64));
+    lfs_j.insert("sharded_speedup".into(), Json::Num(sharded_speedup));
+    lfs_j.insert("bit_identical".into(), Json::Bool(true));
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("runtime_cnn_pipeline".into()));
     root.insert("packed_kernels".into(), Json::Obj(packed_j));
+    root.insert("lane_fused_sharded".into(), Json::Obj(lfs_j));
     root.insert("fast".into(), Json::Bool(fast));
     root.insert("config".into(), Json::Obj(config_j));
     root.insert("engine".into(), Json::Obj(engine_j));

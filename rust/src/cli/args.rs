@@ -46,7 +46,12 @@ serving flags (serve, bench-serve):
   --max-batch <n>            micro-batcher: max coalesced batch (default 32)
   --max-wait-us <n>          micro-batcher: max µs the oldest request waits
                              for co-travellers (default 2000)
-  --requests <n>             bench-serve: total requests to replay
+  --shard-threshold <n>      batches with at least n rows are row-sharded
+                             across the worker pool; smaller ones run a
+                             serial forward (default 4; bit-identical)
+  --requests <n>             bench-serve: total requests to replay (each
+                             replay runs twice: keep-alive, then one
+                             connection per request for the latency delta)
   --clients <n>              bench-serve: concurrent client threads";
 
 /// Parsed command line.

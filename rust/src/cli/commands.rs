@@ -41,6 +41,7 @@ fn serve_config_from_args(args: &Args, addr: String) -> Result<ServeConfig> {
             args.usize("max-batch")?.unwrap_or(32),
             args.usize("max-wait-us")?.unwrap_or(2000) as u64,
         ),
+        shard_threshold: args.usize("shard-threshold")?.unwrap_or(4),
         ..Default::default()
     })
 }
@@ -354,6 +355,24 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         "kernel parity".into(),
         if report.kernel_parity_ok { "bit-identical".into() } else { "MISMATCH".to_string() },
     ]);
+    t.row(vec![
+        "sharded forward".into(),
+        format!("{:.1} µs", report.sharded_forward_seconds * 1e6),
+    ]);
+    t.row(vec!["sharded speedup".into(), format!("{:.2}x", report.sharded_speedup)]);
+    t.row(vec![
+        "sharded parity".into(),
+        if report.sharded_parity_ok { "bit-identical".into() } else { "MISMATCH".to_string() },
+    ]);
+    t.row(vec![
+        "close-mode latency".into(),
+        format!("{:.0} µs mean", report.close_lat_mean_us),
+    ]);
+    t.row(vec![
+        "keep-alive gain".into(),
+        format!("{:.2}x", report.keepalive_latency_ratio),
+    ]);
+    t.row(vec!["pool seedings".into(), format!("{}", report.pool_seedings_delta)]);
     println!("{}", t.render());
     let json_path = args.get("json").unwrap_or("BENCH_serve.json");
     std::fs::write(json_path, format!("{}\n", report.to_json()))
@@ -367,6 +386,15 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     }
     if !report.kernel_parity_ok {
         bail!("packed kernel forward diverged bit-wise from the unpacked baseline");
+    }
+    if !report.sharded_parity_ok {
+        bail!("row-sharded forward diverged bit-wise from the serial forward");
+    }
+    if report.pool_seedings_delta != 1 {
+        bail!(
+            "server seeded its worker pool {} times (contract: exactly once per lifetime)",
+            report.pool_seedings_delta
+        );
     }
     Ok(())
 }

@@ -335,8 +335,10 @@ struct PoolShared {
 /// the fan-out completes, a `WorkerPool` keeps its threads alive across an
 /// unbounded stream of [`WorkerPool::submit`] calls — the shape a
 /// long-running service needs.  The serve subsystem
-/// ([`crate::serve::http`]) runs its batch-executor loops on one pool for
-/// the whole server lifetime instead of paying a pool seeding per batch.
+/// ([`crate::serve::http`]) keeps one pool for the whole server lifetime
+/// and row-shards every coalesced batch across it
+/// (`nn::kernels::forward_sharded_on`) instead of paying a pool seeding
+/// per batch.
 ///
 /// Semantics:
 /// * jobs run in submission order when `workers == 1`; with more workers
@@ -405,6 +407,11 @@ impl WorkerPool {
 
     /// Enqueue a job.  After shutdown began the job runs inline on the
     /// caller's thread instead — submitted work is never silently dropped.
+    ///
+    /// Safe to call from any number of threads at once: the queue is a
+    /// single mutex-guarded FIFO, so concurrent submitters (e.g. several
+    /// serve batch executors sharding batches onto one pool) interleave
+    /// their jobs without loss or duplication.
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
         let mut q = self.shared.jobs.lock().unwrap();
         if self.shared.closed.load(Ordering::Acquire) {
@@ -648,6 +655,30 @@ mod tests {
         // concurrent tests may seed pools of their own: lower-bounded pin,
         // our pool contributed exactly one
         assert!(pool_seedings() >= before + 1);
+    }
+
+    #[test]
+    fn worker_pool_concurrent_submitters_lose_nothing() {
+        // the serve shape: several executor threads sharding batches onto
+        // ONE shared pool at the same time — every job must run exactly once
+        let pool = Arc::new(WorkerPool::new(3));
+        let ran = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                let ran = ran.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let r = ran.clone();
+                        pool.submit(move || {
+                            r.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        Arc::try_unwrap(pool).ok().expect("submitters done").shutdown();
+        assert_eq!(ran.load(Ordering::Relaxed), 200);
     }
 
     #[test]

@@ -13,8 +13,17 @@ pub enum Activation {
 
 impl Activation {
     pub fn apply(&self, z: &mut Matrix) {
+        self.apply_slice(&mut z.data);
+    }
+
+    /// The same per-element clamp as [`Activation::apply`], on a bare
+    /// slice — the fused GEMM epilogue (`nn::kernels::Epilogue`) runs it
+    /// per cache-hot output tile.  Elementwise with no cross-element data
+    /// flow, so any tiling of the slice produces identical bits.
+    #[inline]
+    pub fn apply_slice(&self, z: &mut [f32]) {
         if let Activation::Relu = self {
-            for v in &mut z.data {
+            for v in z {
                 if *v < 0.0 {
                     *v = 0.0;
                 }

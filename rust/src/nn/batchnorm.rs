@@ -48,16 +48,35 @@ impl BatchNorm {
         col % self.channels
     }
 
+    /// Per-channel `1/√(running_var + eps)`, exactly as inference-mode
+    /// forward computes it.  Shared by [`BatchNorm::forward_infer`] and
+    /// the fused GEMM epilogue (`nn::kernels::Epilogue`) so both paths
+    /// start from bit-identical scales.
+    pub fn inv_std_infer(&self) -> Vec<f32> {
+        self.running_var.iter().map(|v| 1.0 / (v + self.eps).sqrt()).collect()
+    }
+
+    /// The inference-mode per-element affine, the single source of truth
+    /// for its f32 expression (association order included):
+    /// `gamma·(v − mean)·inv_std + beta`.  Both [`forward_infer`]
+    /// (unfused, the frozen oracle) and the fused epilogue call this, so
+    /// fused ≡ unfused cannot drift.
+    ///
+    /// [`forward_infer`]: BatchNorm::forward_infer
+    #[inline]
+    pub fn affine_one(&self, v: f32, ch: usize, inv_std: &[f32]) -> f32 {
+        self.gamma[ch] * (v - self.running_mean[ch]) * inv_std[ch] + self.beta[ch]
+    }
+
     /// Inference-mode forward using running statistics.
     pub fn forward_infer(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols % self.channels, 0, "cols {} not divisible by channels {}", x.cols, self.channels);
         let mut out = x.clone();
-        let inv_std: Vec<f32> = self.running_var.iter().map(|v| 1.0 / (v + self.eps).sqrt()).collect();
+        let inv_std = self.inv_std_infer();
         for r in 0..out.rows {
             let row = out.row_mut(r);
             for (c, v) in row.iter_mut().enumerate() {
-                let ch = c % self.channels;
-                *v = self.gamma[ch] * (*v - self.running_mean[ch]) * inv_std[ch] + self.beta[ch];
+                *v = self.affine_one(*v, c % self.channels, &inv_std);
             }
         }
         out

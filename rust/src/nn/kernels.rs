@@ -19,6 +19,21 @@
 //!    blocked replacement for the naive inner loops of
 //!    [`Matrix::matmul`] / [`Matrix::matmul_tn`] — the hot path under
 //!    quantize, sweep, train *and* serve.
+//! 3. **Lane blocking + fused epilogues** ([`LANES`], [`Epilogue`],
+//!    [`matmul_fused`], [`packed_matmul_fused`]): every GEMM inner loop
+//!    walks the output row in fixed-width blocks of `LANES` columns
+//!    accumulated in a stack-resident lane array (contiguous,
+//!    branch-light, fixed trip count — exactly the shape the
+//!    auto-vectorizer wants), and the layer epilogue (bias add,
+//!    activation, and the BatchNorm affine when it directly follows a
+//!    GEMM) is applied per completed output tile while it is still
+//!    cache-hot instead of as one-to-two extra full passes over the
+//!    output matrix.
+//! 4. **Multi-core batches** ([`forward_sharded`],
+//!    [`forward_sharded_on`]): a batch's rows are sharded across worker
+//!    threads — either a scoped pool per call, or (under `serve`) the
+//!    server's one long-lived `WorkerPool`, seeded once per server
+//!    lifetime no matter how many batches it executes.
 //!
 //! # The exactness argument
 //!
@@ -37,6 +52,24 @@
 //! *independent* output rows.  Nothing here is an approximation; the
 //! contract is equality of bits, and `tests/test_kernels.rs` pins it for
 //! MLPs and conv/pool/BN CNNs across worker counts.
+//!
+//! **Why lane blocking cannot change a bit:** output *columns* never
+//! interact — `out[i][j]` is a function of `x` row `i` and `w` column
+//! `j` only.  Processing `LANES` adjacent columns per decoded weight
+//! element reorders work *across* columns but leaves each column's own
+//! operand sequence untouched: per `(i, j)` the adds still run in
+//! ascending `k`, each term is still the two-rounding `out + a·b`
+//! (multiply, then add — no FMA contraction), and the zero-skip still
+//! tests only the *left* (activation) coefficient, dropping the whole
+//! lane block for that `k` at once.  The same independence argument
+//! makes the fused epilogue exact: bias add, ReLU clamp and the
+//! BatchNorm affine are all elementwise with no cross-element data
+//! flow, so applying `bias → activation → BN` per element of a
+//! just-finished tile produces the identical f32 ops, in the identical
+//! per-element order, as the unfused pass-per-stage schedule — only the
+//! *interleaving across independent elements* changes.  `Network::
+//! forward_unfused` keeps the pass-per-stage schedule alive as the
+//! frozen oracle and `tests/test_properties.rs` pins fused ≡ unfused.
 //!
 //! The integer path ([`packed_matmul_exact`]) is *exact in integer
 //! arithmetic* rather than f32-bit-identical: for integer-valued
@@ -66,12 +99,71 @@
 
 #![deny(missing_docs)]
 
-use crate::coordinator::scheduler::{run_jobs, SchedulerConfig};
+use std::sync::{mpsc, Arc};
+
+use crate::coordinator::scheduler::{run_jobs, SchedulerConfig, WorkerPool};
 use crate::error::{bail, Result};
+use crate::nn::activations::Activation;
+use crate::nn::batchnorm::BatchNorm;
 use crate::nn::matrix::Matrix;
 use crate::nn::network::{Layer, Network};
 use crate::nn::serialize::{bits_per_index, pack_indices, unpack_indices};
 use crate::quant::alphabet::Alphabet;
+
+// ---------------------------------------------------------------------------
+// lane-blocked inner loops
+// ---------------------------------------------------------------------------
+
+/// Output columns processed per decoded weight element: the inner loops of
+/// every GEMM here accumulate into a `[f32; LANES]` stack array with a
+/// fixed trip count, which the auto-vectorizer turns into wide SIMD ops.
+/// Columns are independent at fixed summation order, so any lane width is
+/// bit-identical to scalar (see the module-level exactness argument).
+pub const LANES: usize = 8;
+
+/// Lane-blocked `out[j] += a * b[j]` over a full output row — the shared
+/// inner loop of [`packed_matmul`] and the tiled f32 GEMMs.  Per element
+/// this is exactly the scalar two-rounding `out + a·b` (multiply then
+/// add, never an FMA), so it is bit-identical to the scalar loop; the
+/// blocks only make the independence across columns explicit.
+#[inline]
+pub fn axpy_lanes(a: f32, b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(b.len(), out.len());
+    let split = out.len() - out.len() % LANES;
+    let (ob, ot) = out.split_at_mut(split);
+    let (bb, bt) = b.split_at(split);
+    for (o, w) in ob.chunks_exact_mut(LANES).zip(bb.chunks_exact(LANES)) {
+        let mut lane = [0.0f32; LANES];
+        for l in 0..LANES {
+            lane[l] = o[l] + a * w[l];
+        }
+        o.copy_from_slice(&lane);
+    }
+    for (o, &bv) in ot.iter_mut().zip(bt) {
+        *o += a * bv;
+    }
+}
+
+/// Integer twin of [`axpy_lanes`] for the index-domain kernel
+/// ([`packed_matmul_exact`]).  `i64` addition is associative, so here the
+/// blocking is purely a throughput shape, not an exactness concern.
+#[inline]
+fn axpy_lanes_i64(a: i64, b: &[i64], out: &mut [i64]) {
+    debug_assert_eq!(b.len(), out.len());
+    let split = out.len() - out.len() % LANES;
+    let (ob, ot) = out.split_at_mut(split);
+    let (bb, bt) = b.split_at(split);
+    for (o, w) in ob.chunks_exact_mut(LANES).zip(bb.chunks_exact(LANES)) {
+        let mut lane = [0i64; LANES];
+        for l in 0..LANES {
+            lane[l] = o[l] + a * w[l];
+        }
+        o.copy_from_slice(&lane);
+    }
+    for (o, &bv) in ot.iter_mut().zip(bt) {
+        *o += a * bv;
+    }
+}
 
 // ---------------------------------------------------------------------------
 // packed weights
@@ -258,9 +350,11 @@ impl PackedWeights {
 /// while reading `bits_per_index(M)` bits per weight instead of 32.
 ///
 /// Loop order is `k`-outer so each packed weight row is decoded **once**
-/// per GEMM and reused across the whole batch; per output element the adds
-/// still run in ascending `k` with the activation zero-skip, i.e. the
-/// identical summation tree to [`Matrix::matmul`].
+/// per GEMM and reused across the whole batch regardless of lane width;
+/// per output element the adds still run in ascending `k` with the
+/// activation zero-skip, i.e. the identical summation tree to
+/// [`Matrix::matmul`] — the [`LANES`]-blocked inner loop only exploits
+/// column independence (see [`axpy_lanes`]).
 pub fn packed_matmul(x: &Matrix, w: &PackedWeights) -> Matrix {
     assert_eq!(x.cols, w.rows, "packed matmul shape mismatch {x:?} x {w:?}");
     let (m, k, n) = (x.rows, w.rows, w.cols);
@@ -274,10 +368,7 @@ pub fn packed_matmul(x: &Matrix, w: &PackedWeights) -> Matrix {
             if a == 0.0 {
                 continue;
             }
-            let out_row = &mut out.data[i * n..(i + 1) * n];
-            for (o, &b) in out_row.iter_mut().zip(&wrow) {
-                *o += a * b;
-            }
+            axpy_lanes(a, &wrow, &mut out.data[i * n..(i + 1) * n]);
         }
     }
     out
@@ -316,10 +407,7 @@ pub fn packed_matmul_exact(x: &Matrix, w: &PackedWeights) -> Option<Matrix> {
                 continue;
             }
             s0[i] += a;
-            let acc = &mut s1[i * n..(i + 1) * n];
-            for (o, &j) in acc.iter_mut().zip(&jrow) {
-                *o += a * j;
-            }
+            axpy_lanes_i64(a, &jrow, &mut s1[i * n..(i + 1) * n]);
         }
     }
     let mut out = Matrix::zeros(m, n);
@@ -350,6 +438,16 @@ const TILE_K: usize = 128;
 /// (including the left-coefficient zero-skip); the `i`-tiling only groups
 /// independent output rows.  `Matrix::matmul` delegates here.
 pub fn matmul_tiled(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_fused(a, b, &Epilogue::none())
+}
+
+/// [`matmul_tiled`] with the layer epilogue applied per completed
+/// `TILE_I`-row slab while it is still cache-hot: once a slab's final
+/// `k`-block lands, its output rows are finished and bias/activation/BN
+/// run on them immediately, instead of re-streaming the whole output
+/// matrix once per stage afterwards.  Bit-identical to `matmul_tiled`
+/// followed by the unfused passes — see [`Epilogue`].
+pub fn matmul_fused(a: &Matrix, b: &Matrix, epi: &Epilogue<'_>) -> Matrix {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch {a:?} x {b:?}");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut out = Matrix::zeros(m, n);
@@ -367,14 +465,12 @@ pub fn matmul_tiled(a: &Matrix, b: &Matrix) -> Matrix {
                     if av == 0.0 {
                         continue;
                     }
-                    let b_row = &b.data[kk * n..(kk + 1) * n];
-                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                        *o += av * bv;
-                    }
+                    axpy_lanes(av, &b.data[kk * n..(kk + 1) * n], out_row);
                 }
             }
             k0 = k1;
         }
+        epi.apply_rows(&mut out, i0, i1);
         i0 = i1;
     }
     out
@@ -399,14 +495,90 @@ pub fn matmul_tn_tiled(a: &Matrix, b: &Matrix) -> Matrix {
                 if av == 0.0 {
                     continue;
                 }
-                let out_row = &mut out.data[i * n..(i + 1) * n];
-                for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                    *o += av * bv;
-                }
+                axpy_lanes(av, b_row, &mut out.data[i * n..(i + 1) * n]);
             }
         }
         i0 = i1;
     }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// fused epilogues
+// ---------------------------------------------------------------------------
+
+/// The per-element epilogue of a GEMM layer — bias add, activation, and
+/// (when a `BatchNorm` directly consumes the GEMM output) the BN
+/// inference affine — applied per completed output tile instead of as
+/// one full pass over the output matrix per stage.
+///
+/// # Exactness
+///
+/// Every stage is elementwise with no cross-element data flow, and each
+/// per-element op is taken verbatim from the unfused implementation it
+/// replaces — the bias add of `Matrix::add_row_vec`, the clamp of
+/// [`Activation::apply_slice`], and the affine of
+/// [`BatchNorm::affine_one`] (with [`BatchNorm::inv_std_infer`] scales)
+/// — in the same bias → activation → BN order the layer stack applies
+/// them.  Fusing therefore only changes the *interleaving across
+/// independent elements*, never any element's own f32 op sequence, so
+/// fused ≡ unfused bit for bit.  `Network::forward_unfused` keeps the
+/// pass-per-stage schedule alive as the frozen oracle.
+pub struct Epilogue<'a> {
+    bias: Option<&'a [f32]>,
+    act: Activation,
+    bn: Option<(&'a BatchNorm, Vec<f32>)>,
+}
+
+impl<'a> Epilogue<'a> {
+    /// Build an epilogue; the BN inverse-std scales are precomputed once
+    /// per layer application, exactly as `BatchNorm::forward_infer` does.
+    pub fn new(bias: Option<&'a [f32]>, act: Activation, bn: Option<&'a BatchNorm>) -> Epilogue<'a> {
+        Epilogue { bias, act, bn: bn.map(|b| (b, b.inv_std_infer())) }
+    }
+
+    /// The empty epilogue: no bias, identity activation, no BN.
+    /// [`matmul_tiled`] is [`matmul_fused`] with this.
+    pub fn none() -> Epilogue<'static> {
+        Epilogue { bias: None, act: Activation::None, bn: None }
+    }
+
+    /// Does this epilogue fold in a BatchNorm affine (i.e. consume the
+    /// layer after the GEMM)?
+    pub fn has_bn(&self) -> bool {
+        self.bn.is_some()
+    }
+
+    /// Apply the epilogue to the completed tile `out[r0..r1]`.
+    pub fn apply_rows(&self, out: &mut Matrix, r0: usize, r1: usize) {
+        let n = out.cols;
+        for r in r0..r1 {
+            let row = &mut out.data[r * n..(r + 1) * n];
+            if let Some(b) = self.bias {
+                debug_assert_eq!(b.len(), n);
+                for (o, &bv) in row.iter_mut().zip(b) {
+                    *o += bv;
+                }
+            }
+            self.act.apply_slice(row);
+            if let Some((bn, inv_std)) = &self.bn {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = bn.affine_one(*v, c % bn.channels, inv_std);
+                }
+            }
+        }
+    }
+}
+
+/// [`packed_matmul`] plus its layer epilogue.  The decode-once-per-batch
+/// contract forces `k`-outer loop order, so no output row is complete
+/// before the final `k` step — the fusion win here is collapsing the
+/// bias, activation and BN passes into a **single** sweep over the
+/// output rather than one pass per stage.  Bit-identical to
+/// `packed_matmul` followed by the unfused passes (see [`Epilogue`]).
+pub fn packed_matmul_fused(x: &Matrix, w: &PackedWeights, epi: &Epilogue<'_>) -> Matrix {
+    let mut out = packed_matmul(x, w);
+    epi.apply_rows(&mut out, 0, out.rows);
     out
 }
 
@@ -511,6 +683,56 @@ pub fn forward_sharded(net: &Network, x: &Matrix, workers: usize) -> Matrix {
     let mut data = Vec::with_capacity(x.rows * cols);
     for o in outs {
         data.extend_from_slice(&o.data);
+    }
+    Matrix::from_vec(x.rows, cols, data)
+}
+
+/// Row-sharded forward on an **existing, long-lived** [`WorkerPool`] —
+/// the serve path's multi-core batch execution.  Unlike
+/// [`forward_sharded`], which seeds a scoped pool per call, this submits
+/// shard closures to a pool seeded once for its whole lifetime, so
+/// `pool_seedings()` stays flat no matter how many batches execute.
+///
+/// Rows of `x` are split into `shards` contiguous chunks, each chunk runs
+/// `net.forward` independently, and the logits are restacked in request
+/// order.  Output rows never interact, so the result is **bit-identical
+/// to `net.forward(x)` for every shard count**; `shards <= 1` or a
+/// single-row batch short-circuits to the serial forward.  Safe to call
+/// from several threads at once (the pool queue is shared), and safe
+/// during pool shutdown — [`WorkerPool::submit`] then runs the shard
+/// inline on the caller, so no batch is ever dropped mid-drain.
+pub fn forward_sharded_on(
+    pool: &WorkerPool,
+    net: &Arc<Network>,
+    x: &Matrix,
+    shards: usize,
+) -> Matrix {
+    let s = shards.max(1);
+    if s == 1 || x.rows <= 1 {
+        return net.forward(x);
+    }
+    let chunk = x.rows.div_ceil(s);
+    let (tx, rx) = mpsc::channel::<(usize, Matrix)>();
+    let mut jobs = 0usize;
+    for (idx, start) in (0..x.rows).step_by(chunk).enumerate() {
+        let shard = x.rows_slice(start, (start + chunk).min(x.rows));
+        let net = Arc::clone(net);
+        let tx = tx.clone();
+        pool.submit(move || {
+            let _ = tx.send((idx, net.forward(&shard)));
+        });
+        jobs += 1;
+    }
+    drop(tx);
+    let mut outs: Vec<Option<Matrix>> = std::iter::repeat_with(|| None).take(jobs).collect();
+    for _ in 0..jobs {
+        let (idx, o) = rx.recv().expect("shard job dropped its result");
+        outs[idx] = Some(o);
+    }
+    let cols = net.output_shape().len();
+    let mut data = Vec::with_capacity(x.rows * cols);
+    for o in outs {
+        data.extend_from_slice(&o.expect("shard result missing").data);
     }
     Matrix::from_vec(x.rows, cols, data)
 }

@@ -274,15 +274,18 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// y += alpha * x
+///
+/// Delegates to the lane-blocked kernel (`nn::kernels::axpy_lanes`):
+/// per element this is still the two-rounding `y + alpha·x` (multiply
+/// then add, no FMA), and elements are independent, so the blocking is
+/// bit-identical to the scalar loop the quantizer was pinned against.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     if alpha == 0.0 {
         return;
     }
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    crate::nn::kernels::axpy_lanes(alpha, x, y);
 }
 
 /// squared euclidean norm

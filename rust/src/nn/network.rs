@@ -11,7 +11,9 @@ use crate::data::rng::Pcg;
 use crate::nn::activations::Activation;
 use crate::nn::batchnorm::BatchNorm;
 use crate::nn::conv::{conv_out, fold_output, im2col, im2col_walk, ImgShape};
-use crate::nn::kernels::{packed_matmul, PackedWeights};
+use crate::nn::kernels::{
+    matmul_fused, packed_matmul, packed_matmul_fused, Epilogue, PackedWeights,
+};
 use crate::nn::matrix::Matrix;
 use crate::nn::pool::maxpool_forward;
 
@@ -162,7 +164,14 @@ impl Network {
         self.layers.iter().filter_map(|l| l.weights()).map(|w| w.data.len()).sum()
     }
 
-    /// Apply one layer in inference mode.
+    /// Apply one layer in inference mode, one full pass per epilogue
+    /// stage (GEMM, then bias, then activation).
+    ///
+    /// This is the **frozen unfused oracle**: [`Network::forward`] runs
+    /// the fused-epilogue schedule (`nn::kernels::Epilogue`) and is
+    /// pinned bit-identical to composing this method layer by layer
+    /// ([`Network::forward_unfused`]); `forward_capture` and the
+    /// quantization pipeline also build on this per-layer form.
     pub fn apply_layer(&self, i: usize, x: &Matrix) -> Matrix {
         match &self.layers[i] {
             Layer::Dense { w, b, act } => {
@@ -200,13 +209,83 @@ impl Network {
     }
 
     /// Inference forward pass: returns the logits.
+    ///
+    /// Hot path: GEMM layers run with a **fused epilogue** — bias add,
+    /// activation, and the BatchNorm affine of a directly-following BN
+    /// layer are applied per cache-hot output tile instead of as one
+    /// full pass over the output per stage.  Bit-identical to
+    /// [`Network::forward_unfused`] (the frozen pass-per-stage oracle);
+    /// `tests/test_properties.rs` pins the equality.
     pub fn forward(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.input.len(), "input width {} != {}", x.cols, self.input.len());
+        let mut h = x.clone();
+        let mut i = 0;
+        while i < self.layers.len() {
+            let (next, consumed) = self.apply_layer_fused(i, &h);
+            h = next;
+            i += consumed;
+        }
+        h
+    }
+
+    /// Inference forward pass through the unfused per-layer path — the
+    /// frozen reference oracle for the fused schedule of
+    /// [`Network::forward`].  One full pass over each layer's output per
+    /// epilogue stage, exactly as [`Network::apply_layer`] composes them.
+    pub fn forward_unfused(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols, self.input.len(), "input width {} != {}", x.cols, self.input.len());
         let mut h = x.clone();
         for i in 0..self.layers.len() {
             h = self.apply_layer(i, &h);
         }
         h
+    }
+
+    /// A BatchNorm layer directly consuming the output of GEMM layer `i`,
+    /// when its affine can be folded into that GEMM's epilogue.  `cols`
+    /// is the GEMM's per-row output width *before* any conv fold: the
+    /// fold only permutes elements, and `channels | cols` guarantees the
+    /// pre-fold channel of a column equals its post-fold channel, so
+    /// fusing is exact.  Anything else falls back to the unfused path.
+    fn fusable_bn(&self, i: usize, cols: usize) -> Option<&BatchNorm> {
+        match self.layers.get(i + 1) {
+            Some(Layer::BatchNorm(bn)) if cols % bn.channels == 0 => Some(bn),
+            _ => None,
+        }
+    }
+
+    /// Apply layer `i` with the fused epilogue, consuming a
+    /// directly-following BatchNorm when it folds into the GEMM; returns
+    /// the output and how many layers were consumed (1 or 2).
+    /// Bit-identical to the same layers through [`Network::apply_layer`].
+    pub fn apply_layer_fused(&self, i: usize, x: &Matrix) -> (Matrix, usize) {
+        match &self.layers[i] {
+            Layer::Dense { w, b, act } => {
+                let bn = self.fusable_bn(i, w.cols);
+                let epi = Epilogue::new(Some(b), *act, bn);
+                (matmul_fused(x, w, &epi), 1 + usize::from(bn.is_some()))
+            }
+            Layer::Conv { k, b, kh, kw, stride, act, in_shape } => {
+                let bn = self.fusable_bn(i, k.cols);
+                let patches = im2col(x, *in_shape, *kh, *kw, *stride);
+                let epi = Epilogue::new(Some(b), *act, bn);
+                let z = matmul_fused(&patches, k, &epi);
+                (fold_output(z, x.rows), 1 + usize::from(bn.is_some()))
+            }
+            Layer::PackedDense { w, b, act } => {
+                let bn = self.fusable_bn(i, w.cols());
+                let epi = Epilogue::new(Some(b), *act, bn);
+                (packed_matmul_fused(x, w, &epi), 1 + usize::from(bn.is_some()))
+            }
+            Layer::PackedConv { k, b, kh, kw, stride, act, in_shape } => {
+                let bn = self.fusable_bn(i, k.cols());
+                let patches = im2col(x, *in_shape, *kh, *kw, *stride);
+                let epi = Epilogue::new(Some(b), *act, bn);
+                let z = packed_matmul_fused(&patches, k, &epi);
+                (fold_output(z, x.rows), 1 + usize::from(bn.is_some()))
+            }
+            _ => (self.apply_layer(i, x), 1),
+        }
     }
 
     /// Forward pass capturing the input activation of every layer.

@@ -16,15 +16,27 @@
 //! (what the server runs) vs. after [`crate::nn::kernels::unpack_network`]
 //! (the old eager-decode baseline), plus a bit-parity verdict between the
 //! two — see `packed_*` / `kernel_parity_ok` in [`BenchServeReport`].
+//!
+//! Since PR 7 the replay runs **twice**: the primary phase reuses one
+//! connection per client thread ([`HttpClient`], `Connection: keep-alive`
+//! — what a production client does), then a connect-per-request phase
+//! measures what persistent connections save (`keepalive_latency_ratio`).
+//! The report also times the **row-sharded** batch forward
+//! ([`crate::nn::kernels::forward_sharded_on`], the path served batches
+//! at/above `shard_threshold` take) against the serial forward, gated by
+//! its own bit-parity verdict, and records the pool-seedings delta across
+//! the server's lifetime (the one-seeding contract).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::coordinator::scheduler::{pool_seedings, WorkerPool};
 use crate::error::{Context, Result};
+use crate::nn::kernels::forward_sharded_on;
 use crate::nn::matrix::Matrix;
 use crate::nn::network::Network;
-use crate::serve::http::{http_json_request, Server, ServeConfig};
+use crate::serve::http::{http_json_request, HttpClient, Server, ServeConfig};
 use crate::serve::stats::StatsSnapshot;
 use crate::util::json::Json;
 use crate::util::stats::quantile;
@@ -88,6 +100,24 @@ pub struct BenchServeReport {
     pub packed_speedup: f64,
     /// packed forward bit-identical to the unpacked forward?
     pub kernel_parity_ok: bool,
+    /// best-of-3 [`forward_sharded_on`] over the replay matrix with
+    /// `workers` row shards (what a served batch at/above the shard
+    /// threshold runs)
+    pub sharded_forward_seconds: f64,
+    /// `packed_forward_seconds / sharded_forward_seconds` — serial vs
+    /// row-sharded batch forward
+    pub sharded_speedup: f64,
+    /// sharded forward bit-identical to the serial forward?
+    pub sharded_parity_ok: bool,
+    /// mean client latency of the connect-per-request comparison phase, µs
+    pub close_lat_mean_us: f64,
+    /// `close_lat_mean_us / lat_mean_us` — what connection reuse saves
+    /// (the primary latency fields measure the keep-alive phase)
+    pub keepalive_latency_ratio: f64,
+    /// `pool_seedings()` delta across the server's lifetime — the
+    /// one-seeding-per-server contract, observable because the CLI runs
+    /// this bench alone in its process
+    pub pool_seedings_delta: usize,
 }
 
 impl BenchServeReport {
@@ -115,6 +145,12 @@ impl BenchServeReport {
             ("unpacked_forward_seconds", Json::Num(self.unpacked_forward_seconds)),
             ("packed_speedup", Json::Num(self.packed_speedup)),
             ("kernel_parity_ok", Json::Bool(self.kernel_parity_ok)),
+            ("sharded_forward_seconds", Json::Num(self.sharded_forward_seconds)),
+            ("sharded_speedup", Json::Num(self.sharded_speedup)),
+            ("sharded_parity_ok", Json::Bool(self.sharded_parity_ok)),
+            ("close_latency_mean_us", Json::Num(self.close_lat_mean_us)),
+            ("keepalive_latency_ratio", Json::Num(self.keepalive_latency_ratio)),
+            ("pool_seedings_delta", Json::Num(self.pool_seedings_delta as f64)),
             ("server", self.server.to_json()),
         ])
     }
@@ -155,13 +191,12 @@ pub fn bench_serve(
     let unpacked_net = crate::nn::kernels::unpack_network(&net);
     let (packed_forward_seconds, packed_out) = time_forward(&net);
     let (unpacked_forward_seconds, unpacked_out) = time_forward(&unpacked_net);
-    let kernel_parity_ok = packed_out.rows == unpacked_out.rows
-        && packed_out.cols == unpacked_out.cols
-        && packed_out
-            .data
-            .iter()
-            .zip(&unpacked_out.data)
-            .all(|(a, b)| a.to_bits() == b.to_bits());
+    let bits_equal = |a: &Matrix, b: &Matrix| {
+        a.rows == b.rows
+            && a.cols == b.cols
+            && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+    };
+    let kernel_parity_ok = bits_equal(&packed_out, &unpacked_out);
     let packed_speedup = if packed_forward_seconds > 0.0 {
         unpacked_forward_seconds / packed_forward_seconds
     } else {
@@ -170,6 +205,33 @@ pub fn bench_serve(
 
     let mut serve_cfg = cfg.serve.clone();
     serve_cfg.addr = "127.0.0.1:0".to_string();
+
+    // serial vs row-sharded batch forward, on a comparison pool that is
+    // shut down before the server binds (so the server's single seeding
+    // is observable on its own below)
+    let net = Arc::new(net);
+    let shard_pool = WorkerPool::new(serve_cfg.workers);
+    let shards = shard_pool.workers();
+    let mut sharded_forward_seconds = f64::INFINITY;
+    let mut sharded_out = forward_sharded_on(&shard_pool, &net, data, shards);
+    for _ in 0..3 {
+        let t = Instant::now();
+        sharded_out = forward_sharded_on(&shard_pool, &net, data, shards);
+        sharded_forward_seconds = sharded_forward_seconds.min(t.elapsed().as_secs_f64());
+    }
+    shard_pool.shutdown();
+    let sharded_parity_ok = bits_equal(&packed_out, &sharded_out);
+    let sharded_speedup = if sharded_forward_seconds > 0.0 {
+        packed_forward_seconds / sharded_forward_seconds
+    } else {
+        0.0
+    };
+    // the shard pool is joined, so every job closure (and its Arc clone)
+    // is dropped — this unwrap cannot race
+    let net = Arc::try_unwrap(net)
+        .map_err(|_| crate::error::format_err!("network still shared after pool shutdown"))?;
+
+    let seedings_before = pool_seedings();
     let server = Server::bind(net, &serve_cfg)?;
     let addr = server.local_addr();
     let handle = server.handle();
@@ -177,41 +239,79 @@ pub fn bench_serve(
     let server_thread = std::thread::spawn(move || server.run());
 
     let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(requests));
+    let close_latencies: Mutex<Vec<f64>> = Mutex::new(Vec::with_capacity(requests));
     let mismatches = AtomicUsize::new(0);
     let failures: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let check_response = |i: usize, row: usize, status: u16, resp: &Json| {
+        if status != 200 {
+            failures.lock().unwrap().push(format!("request {i}: HTTP {status} {resp}"));
+            return;
+        }
+        let served = resp.get("logits").as_f32_vec().unwrap_or_default();
+        let want = reference.row(row);
+        let same = served.len() == want.len()
+            && served.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits());
+        if !same {
+            mismatches.fetch_add(1, Ordering::Relaxed);
+        }
+    };
+
+    // phase 1 (primary): one persistent connection per client thread —
+    // every request after the first skips connect + teardown
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for c in 0..clients {
             let latencies = &latencies;
-            let mismatches = &mismatches;
             let failures = &failures;
-            let reference = &reference;
+            let check_response = &check_response;
             s.spawn(move || {
+                let mut client = match HttpClient::connect(addr) {
+                    Ok(cl) => cl,
+                    Err(e) => {
+                        failures.lock().unwrap().push(format!("client {c} connect: {e:#}"));
+                        return;
+                    }
+                };
                 // client c replays requests c, c+clients, ... (cycled rows)
                 let mut i = c;
                 while i < requests {
                     let row = i % data.rows;
                     let body = Json::obj([("input", Json::from_f32s(data.row(row)))]);
                     let t = Instant::now();
-                    match http_json_request(addr, "POST", "/infer", Some(&body)) {
-                        Ok((200, resp)) => {
-                            latencies.lock().unwrap().push(t.elapsed().as_micros() as f64);
-                            let served = resp.get("logits").as_f32_vec().unwrap_or_default();
-                            let want = reference.row(row);
-                            let same = served.len() == want.len()
-                                && served
-                                    .iter()
-                                    .zip(want)
-                                    .all(|(a, b)| a.to_bits() == b.to_bits());
-                            if !same {
-                                mismatches.fetch_add(1, Ordering::Relaxed);
-                            }
-                        }
+                    match client.request("POST", "/infer", Some(&body)) {
                         Ok((status, resp)) => {
-                            failures
-                                .lock()
-                                .unwrap()
-                                .push(format!("request {i}: HTTP {status} {resp}"));
+                            latencies.lock().unwrap().push(t.elapsed().as_micros() as f64);
+                            check_response(i, row, status, &resp);
+                        }
+                        Err(e) => {
+                            failures.lock().unwrap().push(format!("request {i}: {e:#}"));
+                            return;
+                        }
+                    }
+                    i += clients;
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    // phase 2 (comparison): the one-shot connect-per-request path — same
+    // rows, same parity check; its mean latency prices the handshake
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let close_latencies = &close_latencies;
+            let failures = &failures;
+            let check_response = &check_response;
+            s.spawn(move || {
+                let mut i = c;
+                while i < requests {
+                    let row = i % data.rows;
+                    let body = Json::obj([("input", Json::from_f32s(data.row(row)))]);
+                    let t = Instant::now();
+                    match http_json_request(addr, "POST", "/infer", Some(&body)) {
+                        Ok((status, resp)) => {
+                            close_latencies.lock().unwrap().push(t.elapsed().as_micros() as f64);
+                            check_response(i, row, status, &resp);
                         }
                         Err(e) => {
                             failures.lock().unwrap().push(format!("request {i}: {e:#}"));
@@ -222,7 +322,6 @@ pub fn bench_serve(
             });
         }
     });
-    let wall = t0.elapsed().as_secs_f64();
 
     // exercise the stats endpoint too (the report uses the shared recorder
     // directly, but /stats must answer)
@@ -236,11 +335,16 @@ pub fn bench_serve(
         .map_err(|_| crate::error::format_err!("server thread panicked"))?
         .context("server loop failed")?;
 
+    let pool_seedings_delta = pool_seedings() - seedings_before;
+
+    drop(check_response); // releases its borrows of the collectors below
     let fails = failures.into_inner().unwrap();
     if let Some(first) = fails.first() {
         crate::error::bail!("{} request(s) failed; first: {first}", fails.len());
     }
     let lat = latencies.into_inner().unwrap();
+    let close_lat = close_latencies.into_inner().unwrap();
+    let close_lat_mean_us = crate::util::stats::mean(&close_lat);
     let mismatches = mismatches.load(Ordering::Relaxed);
     Ok(BenchServeReport {
         model_summary,
@@ -264,5 +368,14 @@ pub fn bench_serve(
         unpacked_forward_seconds,
         packed_speedup,
         kernel_parity_ok,
+        sharded_forward_seconds,
+        sharded_speedup,
+        sharded_parity_ok,
+        close_lat_mean_us,
+        keepalive_latency_ratio: {
+            let ka_mean = crate::util::stats::mean(&lat);
+            if ka_mean > 0.0 { close_lat_mean_us / ka_mean } else { 0.0 }
+        },
+        pool_seedings_delta,
     })
 }

@@ -4,20 +4,30 @@
 //! Architecture (one request's path through the system):
 //!
 //! ```text
-//! client ──TCP──▶ accept loop ──▶ connection thread (parse + validate)
+//! client ═TCP══▶ accept loop ──▶ connection thread (parse + validate,
+//!                                      │           keep-alive loop)
 //!                                      │ submit(row, reply-channel)
 //!                                      ▼
 //!                               MicroBatcher (serve::batch)
 //!                                      │ next_batch() — max_batch / max_wait
 //!                                      ▼
-//!                    batch executors on ONE long-lived WorkerPool
-//!                    (coordinator::scheduler) — stack rows, one
-//!                    Network::forward (packed layers dispatch to the
-//!                    nn::kernels index-domain GEMM in place), split logits
+//!                  batch-executor threads (dedicated) — stack rows, then:
+//!                    rows < shard_threshold → serial Network::forward
+//!                    rows ≥ shard_threshold → forward_sharded_on the ONE
+//!                      long-lived WorkerPool (coordinator::scheduler):
+//!                      row shards run in parallel, one pool seeding per
+//!                      server lifetime (packed layers dispatch to the
+//!                      nn::kernels index-domain GEMM in place)
 //!                                      │ send(logits row)
 //!                                      ▼
 //!                               connection thread ──▶ JSON response
 //! ```
+//!
+//! Connections are **persistent** (HTTP/1.1 keep-alive): the handler
+//! loops reading requests off one connection until the client closes,
+//! asks for `Connection: close`, idles past the keep-alive timeout, or
+//! shutdown begins.  [`HttpClient`] is the matching connection-reusing
+//! client; [`http_json_request`] stays as the one-shot form.
 //!
 //! Endpoints:
 //! * `POST /infer` — body `{"input": [f32; d]}` (one row) or
@@ -48,6 +58,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::scheduler::WorkerPool;
 use crate::error::{Context, Result};
+use crate::nn::kernels::forward_sharded_on;
 use crate::nn::matrix::Matrix;
 use crate::nn::network::Network;
 use crate::serve::batch::{BatchPolicy, MicroBatcher};
@@ -59,12 +70,17 @@ use crate::util::json::{parse as parse_json, Json};
 pub struct ServeConfig {
     /// bind address; port 0 picks a free port (tests, loopback bench)
     pub addr: String,
-    /// batch-executor workers on the long-lived scheduler pool
+    /// worker threads on the long-lived scheduler pool (row shards of a
+    /// batch run here) — also the number of batch-executor threads
     pub workers: usize,
     /// micro-batcher policy: max batch size / max coalescing wait
     pub batch: BatchPolicy,
     /// request body cap (a packed model row is small; 16 MiB is generous)
     pub max_body_bytes: usize,
+    /// batches with at least this many rows are row-sharded across the
+    /// worker pool; smaller batches run a serial forward on the executor
+    /// thread (sharding a 1-row batch only buys channel overhead)
+    pub shard_threshold: usize,
 }
 
 impl Default for ServeConfig {
@@ -74,6 +90,7 @@ impl Default for ServeConfig {
             workers: crate::config::default_workers(),
             batch: BatchPolicy::default(),
             max_body_bytes: 16 << 20,
+            shard_threshold: 4,
         }
     }
 }
@@ -107,14 +124,15 @@ impl ServerHandle {
     }
 }
 
-/// The inference server: owns the listener, the model, the micro-batcher
-/// and the long-lived worker pool.
+/// The inference server: owns the listener, the model, the micro-batcher,
+/// the batch-executor threads and the long-lived worker pool.
 pub struct Server {
     listener: TcpListener,
     addr: SocketAddr,
     net: Arc<Network>,
     batcher: Arc<MicroBatcher<InferJob>>,
-    pool: Option<WorkerPool>,
+    pool: Option<Arc<WorkerPool>>,
+    executors: Vec<std::thread::JoinHandle<()>>,
     stats: Arc<ServeStats>,
     stop: Arc<AtomicBool>,
     active_conns: Arc<AtomicUsize>,
@@ -122,8 +140,12 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind the listener and start the batch executors (one per pool
-    /// worker).  The server accepts no connections until [`Server::run`].
+    /// Bind the listener, seed the worker pool (exactly **once** for the
+    /// server's whole lifetime — `pool_seedings()` counts it) and start
+    /// the batch-executor threads.  Executors are dedicated OS threads,
+    /// *not* pool jobs: the pool's workers stay free to run the row
+    /// shards the executors submit, so a sharded batch can never starve
+    /// itself.  The server accepts no connections until [`Server::run`].
     pub fn bind(net: Network, cfg: &ServeConfig) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
@@ -131,26 +153,31 @@ impl Server {
         let net = Arc::new(net);
         let batcher = Arc::new(MicroBatcher::new(cfg.batch));
         let stats = Arc::new(ServeStats::new());
-        let pool = WorkerPool::new(cfg.workers);
-        // one batch-executor loop per worker, alive for the pool lifetime:
-        // each blocks in next_batch() and retires whole batches with one
-        // stacked forward pass
-        for _ in 0..pool.workers() {
-            let batcher = batcher.clone();
-            let net = net.clone();
-            let stats = stats.clone();
-            pool.submit(move || {
-                while let Some(batch) = batcher.next_batch() {
-                    run_batch(&net, &stats, batch);
-                }
-            });
-        }
+        let pool = Arc::new(WorkerPool::new(cfg.workers));
+        let shard_threshold = cfg.shard_threshold.max(1);
+        // one batch-executor thread per worker: each blocks in
+        // next_batch() and retires whole batches — serially when small,
+        // row-sharded across the shared pool when at/above the threshold
+        let executors = (0..cfg.workers.max(1))
+            .map(|_| {
+                let batcher = batcher.clone();
+                let net = net.clone();
+                let stats = stats.clone();
+                let pool = pool.clone();
+                std::thread::spawn(move || {
+                    while let Some(batch) = batcher.next_batch() {
+                        run_batch(&net, &pool, &stats, batch, shard_threshold);
+                    }
+                })
+            })
+            .collect();
         Ok(Server {
             listener,
             addr,
             net,
             batcher,
             pool: Some(pool),
+            executors,
             stats,
             stop: Arc::new(AtomicBool::new(false)),
             active_conns: Arc::new(AtomicUsize::new(0)),
@@ -193,34 +220,51 @@ impl Server {
             let batcher = self.batcher.clone();
             let stats = self.stats.clone();
             let max_body = self.max_body_bytes;
+            let stop = self.stop.clone();
             let conns = self.active_conns.clone();
             conns.fetch_add(1, Ordering::AcqRel);
             std::thread::spawn(move || {
                 let _guard = ConnGuard(conns);
-                handle_connection(stream, &net, &batcher, &stats, max_body);
+                handle_connection(stream, &net, &batcher, &stats, max_body, &stop);
             });
         }
         // graceful drain: connections finish (their queued jobs are served
-        // by the still-live executors), then the batcher closes and drains,
-        // then the executor loops see None and the pool joins
+        // by the still-live executors; keep-alive loops see the stop flag
+        // or hit the idle timeout), then the batcher closes and drains, the
+        // executor threads see None and exit, and the pool joins
         let deadline = Instant::now() + Duration::from_secs(10);
         while self.active_conns.load(Ordering::Acquire) > 0 && Instant::now() < deadline {
             std::thread::sleep(Duration::from_millis(1));
         }
-        self.batcher.shutdown();
-        if let Some(pool) = self.pool.take() {
-            pool.shutdown();
-        }
+        self.drain();
         Ok(())
+    }
+
+    /// Close the batcher, join the executor threads, shut the pool down.
+    /// Idempotent; also runs from Drop.
+    fn drain(&mut self) {
+        self.batcher.shutdown();
+        for h in self.executors.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(pool) = self.pool.take() {
+            // executors are joined, so this Arc is the last one; if a race
+            // ever kept another clone alive, that holder's drop performs
+            // the same graceful pool shutdown
+            if let Ok(p) = Arc::try_unwrap(pool) {
+                p.shutdown();
+            }
+        }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        // a Server dropped without run() must not deadlock: the pool join
-        // (WorkerPool::drop) waits for the executor loops, which only exit
-        // once the batcher closes.  Idempotent on the run() path.
-        self.batcher.shutdown();
+        // a Server dropped without run() must not deadlock: executors are
+        // dedicated threads that exit once the batcher closes, and only
+        // then does the pool (whose jobs they submit) join.  Idempotent on
+        // the run() path.
+        self.drain();
     }
 }
 
@@ -234,8 +278,17 @@ impl Drop for ConnGuard {
     }
 }
 
-/// Stack a batch's rows, run ONE forward pass, scatter the logits back.
-fn run_batch(net: &Network, stats: &ServeStats, batch: Vec<InferJob>) {
+/// Stack a batch's rows, run ONE forward pass — serial below the shard
+/// threshold, row-sharded across the server's long-lived pool at or above
+/// it — and scatter the logits back.  Output rows never interact, so both
+/// paths are bit-identical for every shard count (`nn::kernels`).
+fn run_batch(
+    net: &Arc<Network>,
+    pool: &WorkerPool,
+    stats: &ServeStats,
+    batch: Vec<InferJob>,
+    shard_threshold: usize,
+) {
     stats.record_batch(batch.len());
     let d = net.input.len();
     let mut data = Vec::with_capacity(batch.len() * d);
@@ -244,7 +297,11 @@ fn run_batch(net: &Network, stats: &ServeStats, batch: Vec<InferJob>) {
         data.extend_from_slice(&job.input);
     }
     let x = Matrix::from_vec(batch.len(), d, data);
-    let logits = net.forward(&x);
+    let logits = if batch.len() >= shard_threshold {
+        forward_sharded_on(pool, net, &x, pool.workers())
+    } else {
+        net.forward(&x)
+    };
     for (r, job) in batch.into_iter().enumerate() {
         // a dead receiver (client gone) is not an error worth crashing for
         let _ = job.tx.send(logits.row(r).to_vec());
@@ -261,21 +318,36 @@ struct HttpRequest {
     method: String,
     path: String,
     body: String,
+    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
+    /// HTTP/1.0 defaults to close unless `Connection: keep-alive`.
+    keep_alive: bool,
 }
 
-/// Parse failure → HTTP status + message.
+/// Parse failure → HTTP status + message.  `quiet` marks a clean
+/// keep-alive close (EOF or idle timeout *between* requests) that
+/// deserves neither an error response nor an error stat.
 struct HttpError {
     status: u16,
     msg: String,
+    quiet: bool,
 }
 
 impl HttpError {
     fn new(status: u16, msg: impl Into<String>) -> HttpError {
-        HttpError { status, msg: msg.into() }
+        HttpError { status, msg: msg.into(), quiet: false }
+    }
+
+    fn quiet_close() -> HttpError {
+        HttpError { status: 0, msg: String::new(), quiet: true }
     }
 }
 
 const MAX_HEADER_BYTES: usize = 16 << 10;
+
+/// How long a keep-alive connection may sit idle between requests before
+/// the server closes it.  Short enough that graceful drain (10 s budget)
+/// always outlives parked connections.
+const KEEP_ALIVE_IDLE: Duration = Duration::from_secs(2);
 
 /// Read and parse one HTTP/1.1 request from `stream`.  Generic over
 /// `Read` so the parser is unit-testable on byte slices.
@@ -293,10 +365,24 @@ fn read_request(
             return Err(HttpError::new(431, "request header section too large"));
         }
         let mut chunk = [0u8; 4096];
-        let n = stream
-            .read(&mut chunk)
-            .map_err(|e| HttpError::new(400, format!("read failed: {e}")))?;
+        let n = stream.read(&mut chunk).map_err(|e| {
+            // idle timeout with nothing read = a parked keep-alive
+            // connection, not a protocol error
+            let timed_out = matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            );
+            if buf.is_empty() && timed_out {
+                HttpError::quiet_close()
+            } else {
+                HttpError::new(400, format!("read failed: {e}"))
+            }
+        })?;
         if n == 0 {
+            if buf.is_empty() {
+                // EOF at a request boundary: the client hung up cleanly
+                return Err(HttpError::quiet_close());
+            }
             return Err(HttpError::new(400, "connection closed mid-request"));
         }
         buf.extend_from_slice(&chunk[..n]);
@@ -317,13 +403,23 @@ fn read_request(
         return Err(HttpError::new(505, format!("unsupported version {version}")));
     }
     let mut content_length = 0usize;
+    // connection persistence: HTTP/1.1 keeps alive by default, 1.0 closes
+    let mut keep_alive = version != "HTTP/1.0";
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
+            let name = name.trim();
+            if name.eq_ignore_ascii_case("content-length") {
                 content_length = value
                     .trim()
                     .parse()
                     .map_err(|_| HttpError::new(400, "bad content-length"))?;
+            } else if name.eq_ignore_ascii_case("connection") {
+                let value = value.trim();
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if value.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
             }
         }
     }
@@ -347,7 +443,7 @@ fn read_request(
     }
     body.truncate(content_length);
     let body = String::from_utf8(body).map_err(|_| HttpError::new(400, "body is not utf-8"))?;
-    Ok(HttpRequest { method, path, body })
+    Ok(HttpRequest { method, path, body, keep_alive })
 }
 
 fn find_header_end(buf: &[u8]) -> Option<usize> {
@@ -369,10 +465,16 @@ fn status_reason(status: u16) -> &'static str {
     }
 }
 
-fn write_response(stream: &mut impl Write, status: u16, body: &Json) -> std::io::Result<()> {
+fn write_response(
+    stream: &mut impl Write,
+    status: u16,
+    body: &Json,
+    keep_alive: bool,
+) -> std::io::Result<()> {
     let payload = body.to_string();
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n",
         status,
         status_reason(status),
         payload.len()
@@ -386,30 +488,51 @@ fn error_body(msg: &str) -> Json {
     Json::obj([("error", Json::Str(msg.to_string()))])
 }
 
+/// Serve requests off one connection until the client closes, asks for
+/// `Connection: close`, idles past [`KEEP_ALIVE_IDLE`], or shutdown
+/// begins.  Each iteration is parse → route → respond; quiet closes
+/// (EOF / idle timeout *between* requests) leave no error stat behind.
 fn handle_connection(
     mut stream: TcpStream,
     net: &Network,
     batcher: &MicroBatcher<InferJob>,
     stats: &ServeStats,
     max_body: usize,
+    stop: &AtomicBool,
 ) {
     // a stuck client must not hold the server's graceful drain hostage
     let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
     let _ = stream.set_nodelay(true);
-    let req = match read_request(&mut stream, max_body) {
-        Ok(r) => r,
-        Err(e) => {
+    let mut first = true;
+    loop {
+        let req = match read_request(&mut stream, max_body) {
+            Ok(r) => r,
+            Err(e) => {
+                if !e.quiet {
+                    stats.record_error();
+                    let _ = write_response(&mut stream, e.status, &error_body(&e.msg), false);
+                }
+                return;
+            }
+        };
+        // honor the client's wish unless we are draining, in which case
+        // the response carries `Connection: close` and the loop ends
+        let keep = req.keep_alive && !stop.load(Ordering::Acquire);
+        let (status, body) = route(&req, net, batcher, stats);
+        if status != 200 {
             stats.record_error();
-            let _ = write_response(&mut stream, e.status, &error_body(&e.msg));
+        }
+        if write_response(&mut stream, status, &body, keep).is_err() || !keep {
             return;
         }
-    };
-    let (status, body) = route(&req, net, batcher, stats);
-    if status != 200 {
-        stats.record_error();
+        if first {
+            // parked keep-alive connections time out quickly so graceful
+            // drain (10 s budget) always outlives them
+            first = false;
+            let _ = stream.set_read_timeout(Some(KEEP_ALIVE_IDLE));
+        }
     }
-    let _ = write_response(&mut stream, status, &body);
 }
 
 fn route(
@@ -553,6 +676,96 @@ pub fn http_json_request(
     Ok((status, body))
 }
 
+/// A connection-reusing HTTP/1.1 client: one TCP connection, many
+/// requests (`Connection: keep-alive`).  Responses are framed by their
+/// `Content-Length`, so the stream never needs to close to delimit a
+/// body.  The loopback bench uses this to measure what persistent
+/// connections save over the connect-per-request path above.
+pub struct HttpClient {
+    stream: TcpStream,
+    addr: SocketAddr,
+    /// bytes read past the previous response (pipelined leftovers)
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    /// Connect to `addr`; the connection persists across [`Self::request`]
+    /// calls until the server closes it or the client is dropped.
+    pub fn connect(addr: SocketAddr) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr).context("connecting")?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_nodelay(true)?;
+        Ok(HttpClient { stream, addr, buf: Vec::new() })
+    }
+
+    /// One request/response exchange on the persistent connection;
+    /// returns `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> Result<(u16, Json)> {
+        let payload = body.map(|b| b.to_string()).unwrap_or_default();
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            self.addr,
+            payload.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(payload.as_bytes())?;
+        self.stream.flush()?;
+        // read up to the header terminator
+        let header_end = loop {
+            if let Some(pos) = find_header_end(&self.buf) {
+                break pos;
+            }
+            let mut chunk = [0u8; 4096];
+            let n = self.stream.read(&mut chunk).context("reading response head")?;
+            if n == 0 {
+                return Err(crate::error::format_err!("server closed the connection"));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = std::str::from_utf8(&self.buf[..header_end])
+            .context("response head is not utf-8")?
+            .to_string();
+        let status_line = head.lines().next().unwrap_or("");
+        let status: u16 = status_line
+            .split_ascii_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| crate::error::format_err!("bad status line {status_line:?}"))?;
+        let mut content_length = 0usize;
+        for line in head.lines().skip(1) {
+            if let Some((name, value)) = line.split_once(':') {
+                if name.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = value
+                        .trim()
+                        .parse()
+                        .map_err(|_| crate::error::format_err!("bad content-length"))?;
+                }
+            }
+        }
+        // read exactly the framed body, leaving any surplus buffered
+        let total = header_end + 4 + content_length;
+        while self.buf.len() < total {
+            let mut chunk = vec![0u8; (total - self.buf.len()).min(64 << 10)];
+            let n = self.stream.read(&mut chunk).context("reading response body")?;
+            if n == 0 {
+                return Err(crate::error::format_err!("connection closed mid-body"));
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let body_text = std::str::from_utf8(&self.buf[header_end + 4..total])
+            .context("response body is not utf-8")?;
+        let parsed = parse_json(body_text)
+            .map_err(|e| crate::error::format_err!("bad response body: {e}"))?;
+        self.buf.drain(..total);
+        Ok((status, parsed))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -609,17 +822,49 @@ mod tests {
     #[test]
     fn response_writer_shape() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, &Json::obj([("ok", Json::Bool(true))])).unwrap();
+        write_response(&mut out, 200, &Json::obj([("ok", Json::Bool(true))]), false).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(text.contains("Content-Type: application/json\r\n"));
         assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
         assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn response_writer_keep_alive_header() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, &Json::obj([("ok", Json::Bool(true))]), true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(!text.contains("Connection: close"));
     }
 
     #[test]
     fn content_length_header_is_case_insensitive() {
         let raw = b"POST /infer HTTP/1.1\r\ncontent-LENGTH: 2\r\n\r\nok";
         assert_eq!(parse_bytes(raw).unwrap().body, "ok");
+    }
+
+    #[test]
+    fn keep_alive_defaults_per_version() {
+        // 1.1 persists unless the client opts out
+        assert!(parse_bytes(b"GET / HTTP/1.1\r\n\r\n").unwrap().keep_alive);
+        assert!(!parse_bytes(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().keep_alive);
+        assert!(!parse_bytes(b"GET / HTTP/1.1\r\nconnection: CLOSE\r\n\r\n").unwrap().keep_alive);
+        // 1.0 closes unless the client opts in
+        assert!(!parse_bytes(b"GET / HTTP/1.0\r\n\r\n").unwrap().keep_alive);
+        assert!(parse_bytes(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().keep_alive);
+    }
+
+    #[test]
+    fn eof_at_request_boundary_is_quiet() {
+        // clean hang-up between keep-alive requests: no error response due
+        let err = parse_bytes(b"").unwrap_err();
+        assert!(err.quiet);
+        // but EOF mid-request is a real protocol error
+        let err = parse_bytes(b"GET /x HTTP/1.1\r\n").unwrap_err();
+        assert!(!err.quiet);
+        assert_eq!(err.status, 400);
     }
 }

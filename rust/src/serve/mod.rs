@@ -32,5 +32,5 @@ pub mod stats;
 
 pub use batch::{BatchCore, BatchPolicy, MicroBatcher};
 pub use bench::{bench_serve, BenchServeConfig, BenchServeReport};
-pub use http::{http_json_request, ServeConfig, Server, ServerHandle};
+pub use http::{http_json_request, HttpClient, ServeConfig, Server, ServerHandle};
 pub use stats::{ServeStats, StatsSnapshot};

@@ -3,9 +3,11 @@
 
 use gpfq::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
 use gpfq::coordinator::scheduler::{run_jobs, SchedulerConfig};
-use gpfq::nn::kernels::{packed_matmul, PackedWeights};
+use gpfq::nn::conv::ImgShape;
+use gpfq::nn::kernels::{axpy_lanes, forward_sharded, pack_network, packed_matmul, PackedWeights, LANES};
 use gpfq::nn::matrix::{axpy, norm_sq, Matrix};
-use gpfq::nn::network::{mnist_mlp, NetworkBuilder, Shape};
+use gpfq::nn::network::{cifar_cnn, mnist_mlp, NetworkBuilder, Shape};
+use gpfq::nn::serialize::hints_from_outcome;
 use gpfq::nn::Activation;
 use gpfq::quant::alphabet::Alphabet;
 use gpfq::quant::exhaustive::exhaustive_neuron;
@@ -316,6 +318,90 @@ fn prop_packed_matmul_bit_identical_to_decoded_gemm() {
         let want = x.matmul_naive(&p.unpack());
         let same = got.data.iter().zip(&want.data).all(|(s, t)| s.to_bits() == t.to_bits());
         prop_assert(same, format!("packed {batch}x{rows}x{cols} (M={m}) diverged"))
+    });
+}
+
+#[test]
+fn prop_axpy_lanes_bit_identical_to_scalar() {
+    // the lane-blocked kernel computes the same `out + a·b` two-rounding
+    // op per element as a scalar loop — only the instruction schedule
+    // differs.  Lengths straddle every LANES remainder (ragged tails).
+    forall("axpy_lanes == scalar axpy", 100, |g| {
+        let n = g.usize_in(1, 4 * LANES + 3);
+        let a = if g.f32_in(0.0, 1.0) < 0.1 { 0.0 } else { g.f32_in(-2.0, 2.0) };
+        let b: Vec<f32> = g.normal_vec(n);
+        let init: Vec<f32> = g.normal_vec(n);
+        let mut lane = init.clone();
+        axpy_lanes(a, &b, &mut lane);
+        let mut scalar = init;
+        for (o, &bv) in scalar.iter_mut().zip(&b) {
+            *o += a * bv;
+        }
+        let same = lane.iter().zip(&scalar).all(|(p, q)| p.to_bits() == q.to_bits());
+        prop_assert(same, format!("axpy_lanes len {n} a={a} diverged"))
+    });
+}
+
+#[test]
+fn prop_fused_forward_bit_identical_to_unfused_mlp() {
+    // the fused epilogue (bias → activation → BN affine applied per
+    // cache-hot tile) vs the frozen per-layer oracle, on MLPs whose
+    // builder interleaves dense+BN — float weights and packed alike
+    forall("fused forward == unfused oracle (MLP, float + packed)", 8, |g| {
+        let in_dim = 8 + g.dim(8);
+        let h1 = 4 + g.dim(8);
+        let net = mnist_mlp(g.usize_in(0, 1000) as u64, in_dim, &[h1], 3);
+        let xq = rand_matrix(g, 12, in_dim);
+        let x = rand_matrix(g, g.usize_in(1, 9), in_dim);
+        let fused = net.forward(&x);
+        let oracle = net.forward_unfused(&x);
+        let same = fused.data.iter().zip(&oracle.data).all(|(p, q)| p.to_bits() == q.to_bits());
+        if !same {
+            return Err("float fused forward diverged from unfused".to_string());
+        }
+        let out = quantize_network(&net, &xq, &PipelineConfig::default());
+        let packed = pack_network(&out.network, &hints_from_outcome(&out));
+        let fused = packed.forward(&x);
+        let oracle = packed.forward_unfused(&x);
+        let same = fused.data.iter().zip(&oracle.data).all(|(p, q)| p.to_bits() == q.to_bits());
+        prop_assert(same, "packed fused forward diverged from unfused".to_string())
+    });
+}
+
+#[test]
+fn prop_fused_forward_bit_identical_to_unfused_cnn() {
+    // conv layers fuse bias+activation into the pre-fold GEMM epilogue
+    // (and BN only when channels divide the GEMM width); the CNN builder
+    // covers conv, pool, BN and the dense head in one net
+    forall("fused forward == unfused oracle (CNN)", 5, |g| {
+        let img = ImgShape { h: 6 + g.dim(3), w: 6 + g.dim(3), c: *g.choice(&[1usize, 3]) };
+        let net = cifar_cnn(g.usize_in(0, 1000) as u64, img, &[*g.choice(&[2usize, 4])], 8, 3);
+        let x = rand_matrix(g, g.usize_in(1, 5), img.len());
+        let fused = net.forward(&x);
+        let oracle = net.forward_unfused(&x);
+        let same = fused.data.iter().zip(&oracle.data).all(|(p, q)| p.to_bits() == q.to_bits());
+        prop_assert(same, "CNN fused forward diverged from unfused".to_string())
+    });
+}
+
+#[test]
+fn prop_sharded_forward_bit_identical_across_worker_counts() {
+    // row-sharded batch execution must be invisible in the bits for every
+    // worker count and every batch size (ragged vs chunking included)
+    forall("forward_sharded == serial forward for workers 1/2/4", 6, |g| {
+        let in_dim = 6 + g.dim(6);
+        let net = mnist_mlp(g.usize_in(0, 1000) as u64, in_dim, &[5], 3);
+        let x = rand_matrix(g, g.usize_in(1, 11), in_dim);
+        let serial = net.forward(&x);
+        for workers in [1usize, 2, 4] {
+            let sharded = forward_sharded(&net, &x, workers);
+            let same =
+                sharded.data.iter().zip(&serial.data).all(|(p, q)| p.to_bits() == q.to_bits());
+            if !same {
+                return Err(format!("sharded forward diverged at {workers} workers"));
+            }
+        }
+        Ok(())
     });
 }
 

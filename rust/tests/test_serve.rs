@@ -20,14 +20,15 @@ use std::net::SocketAddr;
 use std::sync::Arc;
 
 use gpfq::coordinator::pipeline::{quantize_network, PipelineConfig};
+use gpfq::coordinator::scheduler::pool_seedings;
 use gpfq::data::rng::Pcg;
 use gpfq::nn::conv::ImgShape;
 use gpfq::nn::matrix::Matrix;
 use gpfq::nn::network::{cifar_cnn, mnist_mlp, Network};
 use gpfq::nn::serialize::{hints_from_outcome, load_file, save_file};
 use gpfq::serve::{
-    bench_serve, http_json_request, BatchPolicy, BenchServeConfig, ServeConfig, Server,
-    ServerHandle,
+    bench_serve, http_json_request, BatchPolicy, BenchServeConfig, HttpClient, ServeConfig,
+    Server, ServerHandle,
 };
 use gpfq::util::json::Json;
 
@@ -51,10 +52,21 @@ fn start_server(
     max_batch: usize,
     max_wait_us: u64,
 ) -> (ServerHandle, SocketAddr, std::thread::JoinHandle<gpfq::error::Result<()>>) {
+    start_server_sharded(net, workers, max_batch, max_wait_us, ServeConfig::default().shard_threshold)
+}
+
+fn start_server_sharded(
+    net: Network,
+    workers: usize,
+    max_batch: usize,
+    max_wait_us: u64,
+    shard_threshold: usize,
+) -> (ServerHandle, SocketAddr, std::thread::JoinHandle<gpfq::error::Result<()>>) {
     let cfg = ServeConfig {
         addr: "127.0.0.1:0".to_string(),
         workers,
         batch: BatchPolicy::new(max_batch, max_wait_us),
+        shard_threshold,
         ..Default::default()
     };
     let server = Server::bind(net, &cfg).expect("bind");
@@ -252,6 +264,82 @@ fn protocol_endpoints_and_error_paths() {
     // the server survives all of the above and still shuts down cleanly
     let (status, _) = http_json_request(addr, "POST", "/infer", Some(&body)).unwrap();
     assert_eq!(status, 200);
+    handle.shutdown();
+    join.join().unwrap().expect("server loop");
+}
+
+/// Every batch routed through the row-sharded multi-core path
+/// (`shard_threshold` 1 forces it even for singleton batches) serves
+/// logits bit-identical to the serial forward — on a packed model, with
+/// pool workers actually running the shards.
+#[test]
+fn sharded_batch_path_serves_bit_identical_logits() {
+    let mut rng = Pcg::seed(59);
+    let float_net = mnist_mlp(29, 16, &[10, 6], 3);
+    let x_quant = Matrix::from_vec(24, 16, rng.normal_vec(24 * 16));
+    let net = packed_round_trip(&float_net, &x_quant, "sharded");
+    let x = Matrix::from_vec(13, 16, rng.normal_vec(13 * 16));
+    let reference = net.forward(&x);
+    let seedings_before = pool_seedings();
+    let (handle, addr, join) = start_server_sharded(net, 4, 16, 2000, 1);
+    // a multi-row request lands as one 13-row batch ≥ threshold 1 → the
+    // executor runs it through forward_sharded_on across 4 pool workers
+    let rows: Vec<Json> = (0..13).map(|r| Json::from_f32s(x.row(r))).collect();
+    let body = Json::obj([("inputs", Json::Arr(rows))]);
+    let (status, resp) = http_json_request(addr, "POST", "/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let outputs = resp.get("outputs").as_arr().expect("outputs array");
+    assert_eq!(outputs.len(), 13);
+    for (r, out) in outputs.iter().enumerate() {
+        let served = out.get("logits").as_f32_vec().unwrap();
+        assert_bits_equal(&served, reference.row(r), &format!("sharded inputs[{r}]"));
+    }
+    // singleton batches take the same path at threshold 1
+    for i in [0usize, 5, 12] {
+        let served = infer_one(addr, x.row(i));
+        assert_bits_equal(&served, reference.row(i), &format!("sharded solo row {i}"));
+    }
+    handle.shutdown();
+    join.join().unwrap().expect("server loop");
+    // the server seeded its pool (lower bound only: tests in this binary
+    // run in parallel and seed pools of their own; the strict ==1 gate is
+    // bench-serve's, which runs alone in its process)
+    assert!(pool_seedings() >= seedings_before + 1, "server never seeded a pool");
+}
+
+/// Keep-alive: many requests on ONE connection return the same bits as
+/// one-shot connections, mixing infer and control endpoints; a client
+/// that asks `Connection: close` still gets closed.
+#[test]
+fn keep_alive_connection_serves_many_requests_bit_identically() {
+    let mut rng = Pcg::seed(61);
+    let net = mnist_mlp(31, 14, &[8], 3);
+    let x = Matrix::from_vec(6, 14, rng.normal_vec(6 * 14));
+    let reference = net.forward(&x);
+    let (handle, addr, join) = start_server(net, 2, 4, 1000);
+    let mut client = HttpClient::connect(addr).expect("connect");
+    for round in 0..3 {
+        for i in 0..6usize {
+            let body = Json::obj([("input", Json::from_f32s(x.row(i)))]);
+            let (status, resp) = client.request("POST", "/infer", Some(&body)).expect("request");
+            assert_eq!(status, 200, "{resp}");
+            let served = resp.get("logits").as_f32_vec().expect("logits");
+            assert_bits_equal(&served, reference.row(i), &format!("keep-alive r{round} row {i}"));
+        }
+        // control endpoints ride the same connection
+        let (status, health) = client.request("GET", "/healthz", None).expect("healthz");
+        assert_eq!(status, 200);
+        assert_eq!(health.get("status").as_str(), Some("ok"));
+    }
+    // errors answer on the connection without tearing it down
+    let bad = Json::obj([("input", Json::from_f32s(&[1.0]))]);
+    let (status, _) = client.request("POST", "/infer", Some(&bad)).expect("bad width");
+    assert_eq!(status, 400);
+    let (status, _) = client.request("GET", "/healthz", None).expect("still alive");
+    assert_eq!(status, 200);
+    // the connection-per-request path (Connection: close) coexists
+    let served = infer_one(addr, x.row(0));
+    assert_bits_equal(&served, reference.row(0), "close-mode after keep-alive");
     handle.shutdown();
     join.join().unwrap().expect("server loop");
 }

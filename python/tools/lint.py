@@ -1,0 +1,820 @@
+#!/usr/bin/env python3
+"""Mirror runner for `gpfq lint` — the repo-invariant static analysis pass.
+
+The canonical implementation lives in ``rust/src/analysis/`` and runs as
+``gpfq lint``; this file is its faithful Python mirror so the gates run in
+containers without a Rust toolchain (the repo's standing situation — see
+ROADMAP.md).  Both runners share rule names, scopes, the allowlist format
+(``rust/lints.allow``), the oracle manifest format (``rust/oracles.lock``)
+and the fixture corpus (``rust/tests/lint_fixtures/``); any semantic
+divergence between the two is a bug.
+
+Rules (see docs/LINTS.md for rationale):
+
+* ``oracle-freeze``       — SHA-256 manifest over the frozen reference items
+* ``panic-path``          — no unwrap/expect/panic!/slice-index on the
+                            untrusted-input surfaces (serve::http,
+                            nn::serialize)
+* ``lock-discipline``     — no nested ``.lock()`` on one line, no I/O under a
+                            live guard, no condvar wait outside a predicate
+                            loop (scheduler + serve)
+* ``float-determinism``   — no new float reductions / ``+=`` accumulator
+                            loops outside the frozen kernel files
+* ``zero-dep``            — ``[dependencies]`` stays empty; no ``unsafe``
+
+Exit codes: 0 clean, 1 findings, 2 usage/internal error.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+
+# --------------------------------------------------------------------------
+# shared rule specification (keep bit-identical to rust/src/analysis/)
+# --------------------------------------------------------------------------
+
+ALLOWLIST_PATH = "rust/lints.allow"
+MANIFEST_PATH = "rust/oracles.lock"
+FIXTURES_DIR = "rust/tests/lint_fixtures"
+
+# (file, item) pairs frozen by the oracle-freeze rule; "*" = the whole file.
+ORACLE_ITEMS = [
+    ("rust/src/coordinator/reference.rs", "*"),
+    ("rust/src/nn/kernels.rs", "axpy_lanes"),
+    ("rust/src/nn/kernels.rs", "axpy_lanes_i64"),
+    ("rust/src/nn/matrix.rs", "axpy"),
+    ("rust/src/nn/matrix.rs", "matmul_naive"),
+    ("rust/src/nn/matrix.rs", "matmul_tn_naive"),
+    ("rust/src/nn/network.rs", "forward_unfused"),
+]
+
+# untrusted-input surfaces: requests off the wire, model files off disk
+PANIC_PATH_FILES = [
+    "rust/src/nn/serialize.rs",
+    "rust/src/serve/http.rs",
+]
+
+# files holding locks near I/O / condvars
+LOCK_FILES_PREFIXES = [
+    "rust/src/coordinator/scheduler.rs",
+    "rust/src/serve/",
+]
+
+# the frozen summation trees live here; float reductions are legal inside
+FLOAT_EXEMPT_FILES = [
+    "rust/src/nn/kernels.rs",
+    "rust/src/nn/matrix.rs",
+]
+
+# rules whose findings may be allowlisted (oracle-freeze and zero-dep are
+# absolute: fixing them means regenerating the manifest / removing the dep)
+ALLOWLISTABLE = {"panic-path", "lock-discipline", "float-determinism"}
+
+IO_MARKERS = [
+    ".write_all(",
+    ".write_fmt(",
+    ".flush(",
+    ".read(",
+    ".read_exact(",
+    ".read_to_end(",
+    ".read_to_string(",
+    "TcpStream::connect",
+    "File::open",
+    "File::create",
+    "std::fs::",
+]
+
+WAIT_LOOP_WINDOW = 30  # lines searched upward for the predicate loop
+ACC_WINDOW = 40  # lines a float accumulator binding is tracked for `+=`
+
+
+class Finding:
+    def __init__(self, rule, path, line, message, excerpt):
+        self.rule = rule
+        self.path = path
+        self.line = line
+        self.message = message
+        self.excerpt = excerpt
+        self.allowed_by = None
+
+    def as_dict(self):
+        d = {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+            "excerpt": self.excerpt,
+        }
+        if self.allowed_by is not None:
+            d["allowed_by"] = self.allowed_by
+        return d
+
+
+# --------------------------------------------------------------------------
+# source model: comment/string stripping, test regions, brace depth
+# --------------------------------------------------------------------------
+
+
+def strip_source(text):
+    """Blank out comment bodies and string/char-literal contents, keeping the
+    delimiters and every line break, so token scans and brace counting see
+    only code.  Handles nested block comments, escapes, raw strings and
+    lifetimes the way rustc tokenizes them (closely enough for this repo)."""
+    out = []
+    i, n = 0, len(text)
+    mode = "code"  # code | line | block | str | raw | char
+    block_depth = 0
+    raw_hashes = 0
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if mode == "code":
+            if c == "/" and nxt == "/":
+                mode = "line"
+                out.append("  ")
+                i += 2
+                continue
+            if c == "/" and nxt == "*":
+                mode = "block"
+                block_depth = 1
+                out.append("  ")
+                i += 2
+                continue
+            if c == '"':
+                mode = "str"
+                out.append('"')
+                i += 1
+                continue
+            if (c == "r" or (c == "b" and nxt == "r")) and re.match(
+                r'b?r#*"', text[i : i + 8]
+            ):
+                m = re.match(r'(b?r)(#*)"', text[i : i + 8])
+                raw_hashes = len(m.group(2))
+                out.append(m.group(0))
+                i += len(m.group(0))
+                mode = "raw"
+                continue
+            if c == "'":
+                # char literal vs lifetime: a quote closing within 2 chars
+                # (or an escape) is a literal, otherwise it's 'lifetime
+                if nxt == "\\":
+                    j = i + 2
+                    while j < n and text[j] != "'":
+                        j += 1
+                    out.append("'" + " " * (j - i - 1) + "'")
+                    i = j + 1
+                    continue
+                if i + 2 < n and text[i + 2] == "'":
+                    out.append("' '")
+                    i += 3
+                    continue
+                out.append(c)
+                i += 1
+                continue
+            out.append(c)
+            i += 1
+        elif mode == "line":
+            if c == "\n":
+                mode = "code"
+                out.append(c)
+            else:
+                out.append(" ")
+            i += 1
+        elif mode == "block":
+            if c == "/" and nxt == "*":
+                block_depth += 1
+                out.append("  ")
+                i += 2
+            elif c == "*" and nxt == "/":
+                block_depth -= 1
+                out.append("  ")
+                i += 2
+                if block_depth == 0:
+                    mode = "code"
+            else:
+                out.append(c if c == "\n" else " ")
+                i += 1
+        elif mode == "str":
+            if c == "\\":
+                out.append("  " if nxt != "\n" else " \n")
+                i += 2
+            elif c == '"':
+                mode = "code"
+                out.append('"')
+                i += 1
+            else:
+                out.append(c if c == "\n" else " ")
+                i += 1
+        elif mode == "raw":
+            closer = '"' + "#" * raw_hashes
+            if text.startswith(closer, i):
+                out.append(closer)
+                i += len(closer)
+                mode = "code"
+            else:
+                out.append(c if c == "\n" else " ")
+                i += 1
+        elif mode == "char":  # pragma: no cover - folded into "code" above
+            i += 1
+    return "".join(out)
+
+
+class SourceFile:
+    """One scanned file: raw lines, code-only lines, per-line test-region
+    flags and the brace depth at the start of each line."""
+
+    def __init__(self, path, text):
+        self.path = path
+        self.raw_lines = text.split("\n")
+        stripped = strip_source(text)
+        self.code_lines = stripped.split("\n")
+        n = len(self.code_lines)
+        self.depth_before = [0] * n
+        self.is_test = [False] * n
+        depth = 0
+        test_until_depth = None
+        pending_test = False
+        for i, code in enumerate(self.code_lines):
+            self.depth_before[i] = depth
+            if test_until_depth is None and re.search(r"#\[cfg\(test\)\]", code):
+                pending_test = True
+            if pending_test:
+                self.is_test[i] = True
+            opens = code.count("{")
+            closes = code.count("}")
+            if pending_test and opens > 0:
+                test_until_depth = depth
+                pending_test = False
+            depth += opens - closes
+            if test_until_depth is not None:
+                self.is_test[i] = True
+                if depth <= test_until_depth:
+                    test_until_depth = None
+
+    def code_line(self, i):
+        return self.code_lines[i]
+
+    def raw_line(self, i):
+        return self.raw_lines[i] if i < len(self.raw_lines) else ""
+
+
+def load_source(root, rel):
+    path = os.path.join(root, rel)
+    with open(path, encoding="utf-8") as f:
+        return SourceFile(rel, f.read())
+
+
+def rust_sources(root):
+    """All first-party Rust sources under rust/src (the lint scan set)."""
+    out = []
+    base = os.path.join(root, "rust", "src")
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames.sort()
+        for fn in sorted(filenames):
+            if fn.endswith(".rs"):
+                rel = os.path.relpath(os.path.join(dirpath, fn), root)
+                out.append(rel.replace(os.sep, "/"))
+    return out
+
+
+def unsafe_scan_set(root):
+    """rust/src plus tests/benches/examples — everywhere `unsafe` is banned.
+    The fixture corpus is excluded: it deliberately contains violations."""
+    rels = list(rust_sources(root))
+    for extra in ("rust/tests", "benches", "examples"):
+        base = os.path.join(root, extra)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames.sort()
+            for fn in sorted(filenames):
+                if fn.endswith(".rs"):
+                    rel = os.path.relpath(os.path.join(dirpath, fn), root)
+                    rel = rel.replace(os.sep, "/")
+                    if not rel.startswith(FIXTURES_DIR + "/"):
+                        rels.append(rel)
+    return rels
+
+
+# --------------------------------------------------------------------------
+# oracle-freeze
+# --------------------------------------------------------------------------
+
+
+def normalize_span(lines):
+    return "\n".join(ln.rstrip() for ln in lines) + "\n"
+
+
+def extract_item(src, item):
+    """The raw text of `fn <item>` (signature through the matching close
+    brace), or of the whole file for "*".  Returns None if absent."""
+    if item == "*":
+        return normalize_span(src.raw_lines)
+    sig_re = re.compile(r"\bfn\s+" + re.escape(item) + r"\s*[(<]")
+    for i, code in enumerate(src.code_lines):
+        if src.is_test[i] or not sig_re.search(code):
+            continue
+        depth = 0
+        opened = False
+        for j in range(i, len(src.code_lines)):
+            for ch in src.code_lines[j]:
+                if ch == "{":
+                    depth += 1
+                    opened = True
+                elif ch == "}":
+                    depth -= 1
+            if opened and depth <= 0:
+                return normalize_span(src.raw_lines[i : j + 1])
+        return None
+    return None
+
+
+def item_hash(text):
+    return hashlib.sha256(text.encode("utf-8")).hexdigest()
+
+
+def compute_manifest(root):
+    """name → sha256 for every frozen item present under `root`."""
+    entries = {}
+    for rel, item in ORACLE_ITEMS:
+        if not os.path.isfile(os.path.join(root, rel)):
+            continue
+        src = load_source(root, rel)
+        text = extract_item(src, item)
+        if text is not None:
+            entries[f"{rel}::{item}"] = item_hash(text)
+    return entries
+
+
+MANIFEST_HEADER = """\
+# gpfq frozen-oracle manifest (lint rule: oracle-freeze).
+#
+# Each line pins the SHA-256 of one frozen reference item: the naive
+# matmul oracles, the scalar axpy bodies, the unfused forward pass and
+# the whole pre-refactor reference module.  Any edit to those sources
+# fails `gpfq lint` / `python/tools/lint.py` until this manifest is
+# regenerated IN THE SAME CHANGE with:
+#
+#   python3 python/tools/lint.py --fix-manifest    (or: gpfq lint --fix-manifest)
+#
+# which makes oracle drift loud and reviewable instead of silent.
+"""
+
+
+def parse_manifest(path):
+    entries = {}
+    with open(path, encoding="utf-8") as f:
+        for ln in f:
+            ln = ln.strip()
+            if not ln or ln.startswith("#"):
+                continue
+            parts = ln.split()
+            if len(parts) != 2 or not parts[1].startswith("sha256="):
+                raise ValueError(f"malformed manifest line: {ln!r}")
+            entries[parts[0]] = parts[1][len("sha256=") :]
+    return entries
+
+
+def write_manifest(path, entries):
+    lines = [MANIFEST_HEADER]
+    for name in sorted(entries):
+        lines.append(f"{name} sha256={entries[name]}\n")
+    with open(path, "w", encoding="utf-8") as f:
+        f.write("".join(lines))
+
+
+def rule_oracle_freeze(root, findings):
+    current = compute_manifest(root)
+    mpath = os.path.join(root, MANIFEST_PATH)
+    if not os.path.isfile(mpath):
+        if current:
+            findings.append(
+                Finding(
+                    "oracle-freeze",
+                    MANIFEST_PATH,
+                    0,
+                    "manifest missing; run --fix-manifest to freeze the oracles",
+                    "",
+                )
+            )
+        return
+    try:
+        pinned = parse_manifest(mpath)
+    except ValueError as e:
+        findings.append(Finding("oracle-freeze", MANIFEST_PATH, 0, str(e), ""))
+        return
+    for name in sorted(set(pinned) | set(current)):
+        if name not in current:
+            findings.append(
+                Finding(
+                    "oracle-freeze",
+                    MANIFEST_PATH,
+                    0,
+                    f"pinned oracle item {name} no longer exists in the sources",
+                    "",
+                )
+            )
+        elif name not in pinned:
+            findings.append(
+                Finding(
+                    "oracle-freeze",
+                    MANIFEST_PATH,
+                    0,
+                    f"oracle item {name} is not pinned; run --fix-manifest",
+                    "",
+                )
+            )
+        elif pinned[name] != current[name]:
+            findings.append(
+                Finding(
+                    "oracle-freeze",
+                    name.split("::")[0],
+                    0,
+                    f"frozen oracle {name} drifted from its pinned hash "
+                    f"(pinned {pinned[name][:12]}…, source {current[name][:12]}…); "
+                    "if the change is intentional, regenerate with --fix-manifest",
+                    "",
+                )
+            )
+
+
+# --------------------------------------------------------------------------
+# panic-path
+# --------------------------------------------------------------------------
+
+PANIC_TOKENS = [
+    (".unwrap()", "unwrap() on an untrusted-input surface"),
+    (".expect(", "expect() on an untrusted-input surface"),
+    ("panic!(", "panic!() on an untrusted-input surface"),
+    ("unreachable!(", "unreachable!() on an untrusted-input surface"),
+    ("todo!(", "todo!() on an untrusted-input surface"),
+    ("unimplemented!(", "unimplemented!() on an untrusted-input surface"),
+]
+
+INDEX_RE = re.compile(r"[A-Za-z0-9_\)\]]\[")
+
+
+def rule_panic_path(root, findings):
+    for rel in PANIC_PATH_FILES:
+        if not os.path.isfile(os.path.join(root, rel)):
+            continue
+        src = load_source(root, rel)
+        for i, code in enumerate(src.code_lines):
+            if src.is_test[i]:
+                continue
+            for token, msg in PANIC_TOKENS:
+                if token in code:
+                    findings.append(
+                        Finding("panic-path", rel, i + 1, msg, src.raw_line(i).strip())
+                    )
+            if code.lstrip().startswith("#"):
+                continue  # attributes like #[derive(..)] index nothing
+            if INDEX_RE.search(code):
+                findings.append(
+                    Finding(
+                        "panic-path",
+                        rel,
+                        i + 1,
+                        "slice/array index (can panic) on an untrusted-input surface",
+                        src.raw_line(i).strip(),
+                    )
+                )
+
+
+# --------------------------------------------------------------------------
+# lock-discipline
+# --------------------------------------------------------------------------
+
+GUARD_RE = re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*=.*\.lock\(")
+WAIT_RE = re.compile(r"\.wait(_timeout)?\(")
+LOOP_RE = re.compile(r"\b(loop|while)\b")
+
+
+def rule_lock_discipline(root, findings):
+    for rel in rust_sources(root):
+        if not any(
+            rel == p or (p.endswith("/") and rel.startswith(p))
+            for p in LOCK_FILES_PREFIXES
+        ):
+            continue
+        src = load_source(root, rel)
+        live_guards = []  # (name, depth_at_binding, line)
+        for i, code in enumerate(src.code_lines):
+            if src.is_test[i]:
+                continue
+            depth = src.depth_before[i]
+            live_guards = [g for g in live_guards if depth >= g[1]]
+            if code.count(".lock(") >= 2:
+                findings.append(
+                    Finding(
+                        "lock-discipline",
+                        rel,
+                        i + 1,
+                        "nested .lock() acquisitions in one expression",
+                        src.raw_line(i).strip(),
+                    )
+                )
+            if WAIT_RE.search(code):
+                lo = max(0, i - WAIT_LOOP_WINDOW)
+                window = src.code_lines[lo:i]
+                if not any(LOOP_RE.search(w) for w in window):
+                    findings.append(
+                        Finding(
+                            "lock-discipline",
+                            rel,
+                            i + 1,
+                            "condvar wait outside a predicate loop "
+                            "(spurious wakeups break the invariant)",
+                            src.raw_line(i).strip(),
+                        )
+                    )
+            for name, _, bind_line in live_guards:
+                if re.search(r"\bdrop\(\s*" + re.escape(name) + r"\s*\)", code):
+                    live_guards = [g for g in live_guards if g[0] != name]
+                    break
+            if any(m in code for m in IO_MARKERS) and live_guards:
+                g = live_guards[-1]
+                findings.append(
+                    Finding(
+                        "lock-discipline",
+                        rel,
+                        i + 1,
+                        f"I/O while lock guard `{g[0]}` (bound line {g[2]}) is live",
+                        src.raw_line(i).strip(),
+                    )
+                )
+            m = GUARD_RE.search(code)
+            if m:
+                live_guards.append((m.group(1), depth, i + 1))
+
+
+# --------------------------------------------------------------------------
+# float-determinism
+# --------------------------------------------------------------------------
+
+REDUCE_RE = re.compile(
+    r"\.sum::<f(32|64)>\(\)|\.fold\(0(?:\.0(?:f32|f64)?|f32|f64)\s*,"
+)
+ACC_BIND_RE = re.compile(r"\blet\s+mut\s+(\w+)\s*=\s*0(\.0)?(f32|f64)?\s*;")
+
+
+def rule_float_determinism(root, findings):
+    for rel in rust_sources(root):
+        if rel in FLOAT_EXEMPT_FILES:
+            continue
+        src = load_source(root, rel)
+        acc = []  # (name, depth, bind_line)
+        for i, code in enumerate(src.code_lines):
+            if src.is_test[i]:
+                continue
+            depth = src.depth_before[i]
+            acc = [a for a in acc if depth >= a[1] and i - a[2] <= ACC_WINDOW]
+            if REDUCE_RE.search(code):
+                findings.append(
+                    Finding(
+                        "float-determinism",
+                        rel,
+                        i + 1,
+                        "float reduction outside the frozen kernel files "
+                        "(summation order must stay reviewable)",
+                        src.raw_line(i).strip(),
+                    )
+                )
+            for name, _, bind_line in acc:
+                if re.search(r"\b" + re.escape(name) + r"\s*[+-]=", code):
+                    findings.append(
+                        Finding(
+                            "float-determinism",
+                            rel,
+                            i + 1,
+                            f"float `+=` accumulator loop (`{name}` bound line "
+                            f"{bind_line}) outside the frozen kernel files",
+                            src.raw_line(i).strip(),
+                        )
+                    )
+                    acc = [a for a in acc if a[0] != name]
+                    break
+            m = ACC_BIND_RE.search(code)
+            if m and (m.group(2) or m.group(3)):  # 0.0 / 0f32 / 0f64, not `0`
+                acc.append((m.group(1), depth, i))
+
+
+# --------------------------------------------------------------------------
+# zero-dep
+# --------------------------------------------------------------------------
+
+DEP_SECTIONS = (
+    "dependencies",
+    "dev-dependencies",
+    "build-dependencies",
+    "workspace.dependencies",
+)
+
+
+def rule_zero_dep(root, findings):
+    for rel in ("Cargo.toml", "rust/Cargo.toml"):
+        path = os.path.join(root, rel)
+        if not os.path.isfile(path):
+            continue
+        section = None
+        with open(path, encoding="utf-8") as f:
+            for i, ln in enumerate(f, 1):
+                s = ln.split("#", 1)[0].strip()
+                if not s:
+                    continue
+                if s.startswith("["):
+                    section = s.strip("[]").strip()
+                    continue
+                if section in DEP_SECTIONS and "=" in s:
+                    findings.append(
+                        Finding(
+                            "zero-dep",
+                            rel,
+                            i,
+                            f"external dependency in [{section}] — the crate is "
+                            "zero-dep by contract (vendor a stand-in under src/)",
+                            ln.strip(),
+                        )
+                    )
+    unsafe_re = re.compile(r"\bunsafe\b")
+    for rel in unsafe_scan_set(root):
+        src = load_source(root, rel)
+        for i, code in enumerate(src.code_lines):
+            if unsafe_re.search(code):
+                findings.append(
+                    Finding(
+                        "zero-dep",
+                        rel,
+                        i + 1,
+                        "`unsafe` is banned crate-wide (no unsafe has ever "
+                        "been needed; Miri runs only advisory)",
+                        src.raw_line(i).strip(),
+                    )
+                )
+
+
+# --------------------------------------------------------------------------
+# allowlist
+# --------------------------------------------------------------------------
+
+
+class AllowEntry:
+    def __init__(self, rule, path, needle, justification, line):
+        self.rule = rule
+        self.path = path
+        self.needle = needle
+        self.justification = justification
+        self.line = line
+        self.used = False
+
+
+def parse_allowlist(path, findings):
+    entries = []
+    if not os.path.isfile(path):
+        return entries
+    with open(path, encoding="utf-8") as f:
+        for i, ln in enumerate(f, 1):
+            s = ln.strip()
+            if not s or s.startswith("#"):
+                continue
+            parts = [p.strip() for p in s.split("|", 3)]
+            if len(parts) != 4 or not all(parts[:3]):
+                findings.append(
+                    Finding(
+                        "allowlist",
+                        ALLOWLIST_PATH,
+                        i,
+                        "malformed entry: want `rule | path | needle | justification`",
+                        s,
+                    )
+                )
+                continue
+            rule, fpath, needle, just = parts
+            if rule not in ALLOWLISTABLE:
+                findings.append(
+                    Finding(
+                        "allowlist",
+                        ALLOWLIST_PATH,
+                        i,
+                        f"rule {rule!r} cannot be allowlisted",
+                        s,
+                    )
+                )
+                continue
+            if not just:
+                findings.append(
+                    Finding(
+                        "allowlist",
+                        ALLOWLIST_PATH,
+                        i,
+                        "entry has no justification — every exception must say why",
+                        s,
+                    )
+                )
+                continue
+            entries.append(AllowEntry(rule, fpath, needle, just, i))
+    return entries
+
+
+def apply_allowlist(findings, entries):
+    kept = []
+    for f in findings:
+        matched = None
+        for e in entries:
+            if e.rule == f.rule and e.path == f.path and e.needle in f.excerpt:
+                matched = e
+                break
+        if matched is None:
+            kept.append(f)
+        else:
+            matched.used = True
+            f.allowed_by = matched.line
+    return kept
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+
+def run_lint(root):
+    """Run every rule rooted at `root`.  Returns (active, allowed, stale)
+    where `active` are unallowlisted findings (nonzero exit), `allowed` the
+    suppressed ones and `stale` the unused allowlist entries."""
+    findings = []
+    rule_oracle_freeze(root, findings)
+    rule_panic_path(root, findings)
+    rule_lock_discipline(root, findings)
+    rule_float_determinism(root, findings)
+    rule_zero_dep(root, findings)
+    config_findings = []
+    entries = parse_allowlist(os.path.join(root, ALLOWLIST_PATH), config_findings)
+    allowlistable = [f for f in findings if f.rule in ALLOWLISTABLE]
+    absolute = [f for f in findings if f.rule not in ALLOWLISTABLE]
+    active = apply_allowlist(allowlistable, entries)
+    allowed = [f for f in allowlistable if f.allowed_by is not None]
+    stale = [e for e in entries if not e.used]
+    return absolute + config_findings + active, allowed, stale
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="gpfq lint (Python mirror of rust/src/analysis)"
+    )
+    ap.add_argument("--root", default=None, help="repo root (default: autodetect)")
+    ap.add_argument("--json", action="store_true", help="machine-readable report")
+    ap.add_argument(
+        "--fix-manifest",
+        action="store_true",
+        help="regenerate rust/oracles.lock from the current sources",
+    )
+    args = ap.parse_args(argv)
+    root = args.root or os.path.abspath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+    )
+    if not os.path.isdir(os.path.join(root, "rust", "src")):
+        print(f"error: {root} does not look like the repo root", file=sys.stderr)
+        return 2
+
+    if args.fix_manifest:
+        entries = compute_manifest(root)
+        write_manifest(os.path.join(root, MANIFEST_PATH), entries)
+        print(f"wrote {MANIFEST_PATH} ({len(entries)} frozen items)")
+        return 0
+
+    active, allowed, stale = run_lint(root)
+    if args.json:
+        print(
+            json.dumps(
+                {
+                    "findings": [f.as_dict() for f in active],
+                    "allowed": [f.as_dict() for f in allowed],
+                    "stale_allowlist_lines": [e.line for e in stale],
+                    "ok": not active,
+                },
+                indent=2,
+            )
+        )
+    else:
+        for f in active:
+            loc = f"{f.path}:{f.line}" if f.line else f.path
+            print(f"{loc}: [{f.rule}] {f.message}")
+            if f.excerpt:
+                print(f"    {f.excerpt}")
+        for e in stale:
+            print(
+                f"note: {ALLOWLIST_PATH}:{e.line}: allowlist entry matched nothing "
+                f"(stale?): {e.rule} | {e.path} | {e.needle}"
+            )
+        print(
+            f"lint: {len(active)} finding(s), {len(allowed)} allowlisted, "
+            f"{len(stale)} stale allowlist entr(y/ies)"
+        )
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,141 @@
+//! The per-rule allowlist (`rust/lints.allow`): `rule | path | needle |
+//! justification`, one entry per line, `#` comments.  An entry suppresses a
+//! finding of `rule` in `path` whose excerpt contains `needle`; the
+//! justification is mandatory, and only the rules in
+//! [`super::ALLOWLISTABLE`] may appear at all.
+
+use std::path::Path;
+
+use super::{Finding, ALLOWLISTABLE, ALLOWLIST_PATH};
+
+/// One parsed allowlist entry.
+pub struct AllowEntry {
+    /// Rule the entry suppresses.
+    pub rule: String,
+    /// Repo-relative file the entry applies to.
+    pub path: String,
+    /// Substring of the finding's source line that identifies it.
+    pub needle: String,
+    /// Why the exception is sound — mandatory.
+    pub justification: String,
+    /// 1-based line in `rust/lints.allow`.
+    pub line: usize,
+    /// Whether any finding matched the entry this run.
+    pub used: bool,
+}
+
+/// Parse the allowlist at `path`; malformed or unjustified entries become
+/// `allowlist` findings (they gate like any other finding).
+pub fn parse_allowlist(path: &Path, findings: &mut Vec<Finding>) -> Vec<AllowEntry> {
+    let mut entries = Vec::new();
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return entries;
+    };
+    for (i, ln) in text.lines().enumerate() {
+        let s = ln.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = s.splitn(4, '|').map(str::trim).collect();
+        if parts.len() != 4 || parts[..3].iter().any(|p| p.is_empty()) {
+            findings.push(Finding::new(
+                "allowlist",
+                ALLOWLIST_PATH,
+                i + 1,
+                "malformed entry: want `rule | path | needle | justification`",
+                s,
+            ));
+            continue;
+        }
+        let (rule, fpath, needle, just) = (parts[0], parts[1], parts[2], parts[3]);
+        if !ALLOWLISTABLE.contains(&rule) {
+            findings.push(Finding::new(
+                "allowlist",
+                ALLOWLIST_PATH,
+                i + 1,
+                &format!("rule {rule:?} cannot be allowlisted"),
+                s,
+            ));
+            continue;
+        }
+        if just.is_empty() {
+            findings.push(Finding::new(
+                "allowlist",
+                ALLOWLIST_PATH,
+                i + 1,
+                "entry has no justification — every exception must say why",
+                s,
+            ));
+            continue;
+        }
+        entries.push(AllowEntry {
+            rule: rule.to_string(),
+            path: fpath.to_string(),
+            needle: needle.to_string(),
+            justification: just.to_string(),
+            line: i + 1,
+            used: false,
+        });
+    }
+    entries
+}
+
+/// Split `findings` into the still-active set, marking matched entries used
+/// and stamping suppressed findings with the allowing line.
+pub fn apply_allowlist(findings: Vec<Finding>, entries: &mut [AllowEntry]) -> (Vec<Finding>, Vec<Finding>) {
+    let mut active = Vec::new();
+    let mut allowed = Vec::new();
+    for mut f in findings {
+        let hit = entries.iter_mut().find(|e| {
+            e.rule == f.rule && e.path == f.path && f.excerpt.contains(&e.needle)
+        });
+        match hit {
+            Some(e) => {
+                e.used = true;
+                f.allowed_by = Some(e.line);
+                allowed.push(f);
+            }
+            None => active.push(f),
+        }
+    }
+    (active, allowed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &str, path: &str, excerpt: &str) -> Finding {
+        Finding::new(rule, path, 1, "m", excerpt)
+    }
+
+    #[test]
+    fn parses_and_applies() {
+        let dir = std::env::temp_dir()
+            .join(format!("gpfq_allow_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lints.allow");
+        std::fs::write(
+            &path,
+            "# comment\n\
+             panic-path | src/a.rs | buf[..n] | bounds checked above\n\
+             oracle-freeze | src/b.rs | x | cannot allow this rule\n\
+             panic-path | src/a.rs | no-justification |\n",
+        )
+        .unwrap();
+        let mut config = Vec::new();
+        let mut entries = parse_allowlist(&path, &mut config);
+        assert_eq!(entries.len(), 1);
+        assert_eq!(config.len(), 2); // non-allowlistable + missing justification
+        let fs = vec![
+            finding("panic-path", "src/a.rs", "let x = &buf[..n];"),
+            finding("panic-path", "src/a.rs", "other line"),
+        ];
+        let (active, allowed) = apply_allowlist(fs, &mut entries);
+        assert_eq!(active.len(), 1);
+        assert_eq!(allowed.len(), 1);
+        assert!(entries[0].used);
+        assert_eq!(allowed[0].allowed_by, Some(2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

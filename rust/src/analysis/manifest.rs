@@ -1,0 +1,208 @@
+//! The oracle-freeze manifest: SHA-256 pins over the frozen reference items
+//! (`rust/oracles.lock`).  Formats and normalization are shared with the
+//! Python mirror — a span is the item's raw lines, right-trimmed, joined
+//! with `\n` and terminated with one `\n`, hashed as UTF-8.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{format_err, Result};
+
+use super::scan::{is_word, load_source, SourceFile};
+use super::sha256;
+
+/// `(file, item)` pairs frozen by the oracle-freeze rule; `"*"` pins the
+/// whole file.
+pub const ORACLE_ITEMS: &[(&str, &str)] = &[
+    ("rust/src/coordinator/reference.rs", "*"),
+    ("rust/src/nn/kernels.rs", "axpy_lanes"),
+    ("rust/src/nn/kernels.rs", "axpy_lanes_i64"),
+    ("rust/src/nn/matrix.rs", "axpy"),
+    ("rust/src/nn/matrix.rs", "matmul_naive"),
+    ("rust/src/nn/matrix.rs", "matmul_tn_naive"),
+    ("rust/src/nn/network.rs", "forward_unfused"),
+];
+
+/// Header written at the top of a regenerated manifest (kept byte-identical
+/// to the Python mirror so either runner can own the file).
+pub const MANIFEST_HEADER: &str = "\
+# gpfq frozen-oracle manifest (lint rule: oracle-freeze).
+#
+# Each line pins the SHA-256 of one frozen reference item: the naive
+# matmul oracles, the scalar axpy bodies, the unfused forward pass and
+# the whole pre-refactor reference module.  Any edit to those sources
+# fails `gpfq lint` / `python/tools/lint.py` until this manifest is
+# regenerated IN THE SAME CHANGE with:
+#
+#   python3 python/tools/lint.py --fix-manifest    (or: gpfq lint --fix-manifest)
+#
+# which makes oracle drift loud and reviewable instead of silent.
+";
+
+/// Right-trim each line, join with `\n`, terminate with one `\n`.
+pub fn normalize_span(lines: &[String]) -> String {
+    let mut out = String::new();
+    for (i, ln) in lines.iter().enumerate() {
+        if i > 0 {
+            out.push('\n');
+        }
+        out.push_str(ln.trim_end());
+    }
+    out.push('\n');
+    out
+}
+
+/// The raw text of `fn <item>` (signature through the matching close brace)
+/// or of the whole file for `"*"`.  `None` if the item is absent.
+pub fn extract_item(src: &SourceFile, item: &str) -> Option<String> {
+    if item == "*" {
+        return Some(normalize_span(&src.raw_lines));
+    }
+    for (i, code) in src.code_lines.iter().enumerate() {
+        if src.is_test[i] || !has_fn_sig(code, item) {
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut opened = false;
+        for j in i..src.code_lines.len() {
+            for ch in src.code_lines[j].chars() {
+                if ch == '{' {
+                    depth += 1;
+                    opened = true;
+                } else if ch == '}' {
+                    depth -= 1;
+                }
+            }
+            if opened && depth <= 0 {
+                return Some(normalize_span(&src.raw_lines[i..=j]));
+            }
+        }
+        return None;
+    }
+    None
+}
+
+/// `fn <name>` at word boundaries, followed by optional whitespace and an
+/// opening `(` or `<` — mirrors the Python signature regex.
+fn has_fn_sig(code: &str, name: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    let n = chars.len();
+    let mut i = 0;
+    while i + 1 < n {
+        if chars[i] == 'f'
+            && chars[i + 1] == 'n'
+            && (i == 0 || !is_word(chars[i - 1]))
+            && (i + 2 >= n || !is_word(chars[i + 2]))
+        {
+            let mut j = i + 2;
+            let ws_start = j;
+            while j < n && chars[j].is_whitespace() {
+                j += 1;
+            }
+            if j > ws_start {
+                let name_chars: Vec<char> = name.chars().collect();
+                if j + name_chars.len() <= n
+                    && chars[j..j + name_chars.len()] == name_chars[..]
+                {
+                    let mut k = j + name_chars.len();
+                    if k >= n || !is_word(chars[k]) {
+                        while k < n && chars[k].is_whitespace() {
+                            k += 1;
+                        }
+                        if k < n && (chars[k] == '(' || chars[k] == '<') {
+                            return true;
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// `name → sha256` for every frozen item present under `root`.
+pub fn compute_manifest(root: &Path) -> BTreeMap<String, String> {
+    let mut entries = BTreeMap::new();
+    for &(rel, item) in ORACLE_ITEMS {
+        let Ok(src) = load_source(root, rel) else {
+            continue;
+        };
+        if let Some(text) = extract_item(&src, item) {
+            entries.insert(format!("{rel}::{item}"), sha256::hex_digest(text.as_bytes()));
+        }
+    }
+    entries
+}
+
+/// Parse `rust/oracles.lock`: `#` comments and blanks skipped, data lines
+/// are `<file>::<item> sha256=<hex>`.
+pub fn parse_manifest(path: &Path) -> Result<BTreeMap<String, String>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format_err!("reading {}: {e}", path.display()))?;
+    let mut entries = BTreeMap::new();
+    for ln in text.lines() {
+        let ln = ln.trim();
+        if ln.is_empty() || ln.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = ln.split_whitespace().collect();
+        let hash = parts
+            .get(1)
+            .and_then(|p| p.strip_prefix("sha256="))
+            .filter(|_| parts.len() == 2);
+        match hash {
+            Some(h) => {
+                entries.insert(parts[0].to_string(), h.to_string());
+            }
+            None => return Err(format_err!("malformed manifest line: {ln:?}")),
+        }
+    }
+    Ok(entries)
+}
+
+/// Write the manifest (header + sorted `name sha256=<hex>` lines).
+pub fn write_manifest(path: &Path, entries: &BTreeMap<String, String>) -> Result<()> {
+    let mut out = String::from(MANIFEST_HEADER);
+    for (name, hash) in entries {
+        out.push_str(&format!("{name} sha256={hash}\n"));
+    }
+    std::fs::write(path, out).map_err(|e| format_err!("writing {}: {e}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_a_balanced_fn_span() {
+        let src = SourceFile::new("x.rs", "fn f(a: u32) -> u32 {\n    a + 1\n}\nfn g() {}\n");
+        let f = extract_item(&src, "f").unwrap();
+        assert_eq!(f, "fn f(a: u32) -> u32 {\n    a + 1\n}\n");
+        assert!(extract_item(&src, "missing").is_none());
+    }
+
+    #[test]
+    fn whitespace_normalized_but_content_sensitive() {
+        let a = SourceFile::new("x.rs", "fn f() {\n    1;\n}\n");
+        let b = SourceFile::new("x.rs", "fn f() {   \n    1;\n}\n");
+        let c = SourceFile::new("x.rs", "fn f() {\n    2;\n}\n");
+        let ha = sha256::hex_digest(extract_item(&a, "f").unwrap().as_bytes());
+        let hb = sha256::hex_digest(extract_item(&b, "f").unwrap().as_bytes());
+        let hc = sha256::hex_digest(extract_item(&c, "f").unwrap().as_bytes());
+        assert_eq!(ha, hb);
+        assert_ne!(ha, hc);
+    }
+
+    #[test]
+    fn signature_matcher_ignores_tests_and_prefixes() {
+        let src = SourceFile::new(
+            "x.rs",
+            "fn prefix_f() {}\n#[cfg(test)]\nmod t {\n    fn f() {}\n}\n",
+        );
+        assert!(extract_item(&src, "f").is_none());
+        assert!(has_fn_sig("pub fn f<T>(x: T) {", "f"));
+        assert!(!has_fn_sig("pub fn fff(x: u32) {", "f"));
+    }
+}

@@ -1,0 +1,214 @@
+//! Repo-invariant static analysis — the `gpfq lint` engine.
+//!
+//! A zero-dependency, source-level lint pass over `rust/src/**` (plain
+//! line/token scanning — no `syn`, no proc-macros) that mechanizes the
+//! review this repo otherwise does by hand.  The whole correctness story is
+//! that every fast path (tiled / lane / packed / fused / sharded) is pinned
+//! bit-identical to a frozen oracle; these rules make the invariants that
+//! parity rests on *machine-checked*:
+//!
+//! * **oracle-freeze** — a SHA-256 manifest (`rust/oracles.lock`) over the
+//!   frozen reference items (the naive matmuls, scalar axpy bodies, the
+//!   unfused forward pass, all of `coordinator/reference.rs`).  Any drift
+//!   fails the lint until the manifest is regenerated in the same change.
+//! * **panic-path** — no `unwrap()` / `expect()` / `panic!` / slice-index
+//!   on the untrusted-input surfaces (`serve::http` request handling, the
+//!   `nn::serialize` load path) outside the allowlist.
+//! * **lock-discipline** — no nested `.lock()` in one expression, no I/O
+//!   while a guard is live, no condvar wait outside a predicate loop, in
+//!   `coordinator::scheduler` and `serve`.
+//! * **float-determinism** — no new float reductions or `+=` accumulator
+//!   loops outside `nn::kernels` / `nn::matrix`, where the frozen summation
+//!   trees live.
+//! * **zero-dep** — `[dependencies]` stays empty and `unsafe` never
+//!   appears.
+//!
+//! Findings of the middle three rules can be excused via
+//! `rust/lints.allow`, every entry carrying a mandatory justification;
+//! oracle-freeze and zero-dep are absolute.  `python/tools/lint.py` is the
+//! faithful mirror that runs in containers without a Rust toolchain — both
+//! runners share rule semantics, artifact formats and the fixture corpus
+//! under `rust/tests/lint_fixtures/` (see docs/LINTS.md).
+
+#![deny(missing_docs)]
+
+pub mod allow;
+pub mod manifest;
+pub mod rules;
+pub mod scan;
+pub mod sha256;
+
+use std::path::Path;
+
+use crate::error::{bail, Result};
+use crate::util::json::Json;
+
+/// Repo-relative path of the allowlist.
+pub const ALLOWLIST_PATH: &str = "rust/lints.allow";
+/// Repo-relative path of the oracle manifest.
+pub const MANIFEST_PATH: &str = "rust/oracles.lock";
+/// Repo-relative path of the fixture corpus (excluded from the real scan).
+pub const FIXTURES_DIR: &str = "rust/tests/lint_fixtures";
+
+/// Untrusted-input surfaces: requests off the wire, model files off disk.
+pub const PANIC_PATH_FILES: &[&str] =
+    &["rust/src/nn/serialize.rs", "rust/src/serve/http.rs"];
+
+/// Files (or `/`-terminated prefixes) holding locks near I/O and condvars.
+pub const LOCK_FILES_PREFIXES: &[&str] =
+    &["rust/src/coordinator/scheduler.rs", "rust/src/serve/"];
+
+/// The frozen summation trees live here; float reductions are legal inside.
+pub const FLOAT_EXEMPT_FILES: &[&str] =
+    &["rust/src/nn/kernels.rs", "rust/src/nn/matrix.rs"];
+
+/// Rules whose findings may be allowlisted (oracle-freeze and zero-dep are
+/// absolute: fixing them means regenerating the manifest / removing the
+/// dependency).
+pub const ALLOWLISTABLE: &[&str] =
+    &["panic-path", "lock-discipline", "float-determinism"];
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule that fired (or `allowlist` for config problems).
+    pub rule: String,
+    /// Repo-relative file.
+    pub path: String,
+    /// 1-based line, or 0 for file-level findings.
+    pub line: usize,
+    /// Human-readable description.
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub excerpt: String,
+    /// Line in `rust/lints.allow` that suppressed the finding, if any.
+    pub allowed_by: Option<usize>,
+}
+
+impl Finding {
+    /// Build a finding.
+    pub fn new(rule: &str, path: &str, line: usize, message: &str, excerpt: &str) -> Finding {
+        Finding {
+            rule: rule.to_string(),
+            path: path.to_string(),
+            line,
+            message: message.to_string(),
+            excerpt: excerpt.to_string(),
+            allowed_by: None,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("rule", Json::Str(self.rule.clone())),
+            ("path", Json::Str(self.path.clone())),
+            ("line", Json::Num(self.line as f64)),
+            ("message", Json::Str(self.message.clone())),
+            ("excerpt", Json::Str(self.excerpt.clone())),
+        ];
+        if let Some(l) = self.allowed_by {
+            pairs.push(("allowed_by", Json::Num(l as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// The outcome of one lint run.
+pub struct LintReport {
+    /// Unallowlisted findings — any entry here means a nonzero exit.
+    pub active: Vec<Finding>,
+    /// Findings suppressed by the allowlist.
+    pub allowed: Vec<Finding>,
+    /// 1-based `rust/lints.allow` lines that matched nothing this run.
+    pub stale_allowlist_lines: Vec<usize>,
+}
+
+impl LintReport {
+    /// True when the run found nothing actionable.
+    pub fn ok(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    /// The machine-readable report (the `--json` output shape, shared with
+    /// the Python mirror).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("findings", Json::Arr(self.active.iter().map(Finding::to_json).collect())),
+            ("allowed", Json::Arr(self.allowed.iter().map(Finding::to_json).collect())),
+            (
+                "stale_allowlist_lines",
+                Json::Arr(
+                    self.stale_allowlist_lines.iter().map(|&l| Json::Num(l as f64)).collect(),
+                ),
+            ),
+            ("ok", Json::Bool(self.ok())),
+        ])
+    }
+}
+
+/// Run every rule rooted at `root` and fold in the allowlist.
+pub fn run_lint(root: &Path) -> LintReport {
+    let mut findings = Vec::new();
+    rules::rule_oracle_freeze(root, &mut findings);
+    rules::rule_panic_path(root, &mut findings);
+    rules::rule_lock_discipline(root, &mut findings);
+    rules::rule_float_determinism(root, &mut findings);
+    rules::rule_zero_dep(root, &mut findings);
+    let mut config_findings = Vec::new();
+    let mut entries = allow::parse_allowlist(&root.join(ALLOWLIST_PATH), &mut config_findings);
+    let (allowlistable, absolute): (Vec<_>, Vec<_>) =
+        findings.into_iter().partition(|f| ALLOWLISTABLE.contains(&f.rule.as_str()));
+    let (mut active, allowed) = allow::apply_allowlist(allowlistable, &mut entries);
+    let mut all_active = absolute;
+    all_active.append(&mut config_findings);
+    all_active.append(&mut active);
+    LintReport {
+        active: all_active,
+        allowed,
+        stale_allowlist_lines: entries.iter().filter(|e| !e.used).map(|e| e.line).collect(),
+    }
+}
+
+/// The `gpfq lint` subcommand: run the pass (or `--fix-manifest`) rooted at
+/// `--root` (default: the current directory), print the report, and fail
+/// with a lint error when findings remain.
+pub fn cmd_lint(root: Option<&str>, json: bool, fix_manifest: bool) -> Result<()> {
+    let root = Path::new(root.unwrap_or("."));
+    if !root.join("rust").join("src").is_dir() {
+        bail!("{} does not look like the repo root (no rust/src)", root.display());
+    }
+    if fix_manifest {
+        let entries = manifest::compute_manifest(root);
+        manifest::write_manifest(&root.join(MANIFEST_PATH), &entries)?;
+        println!("wrote {MANIFEST_PATH} ({} frozen items)", entries.len());
+        return Ok(());
+    }
+    let report = run_lint(root);
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        for f in &report.active {
+            if f.line > 0 {
+                println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.message);
+            } else {
+                println!("{}: [{}] {}", f.path, f.rule, f.message);
+            }
+            if !f.excerpt.is_empty() {
+                println!("    {}", f.excerpt);
+            }
+        }
+        for &line in &report.stale_allowlist_lines {
+            println!("note: {ALLOWLIST_PATH}:{line}: allowlist entry matched nothing (stale?)");
+        }
+        println!(
+            "lint: {} finding(s), {} allowlisted, {} stale allowlist entr(y/ies)",
+            report.active.len(),
+            report.allowed.len(),
+            report.stale_allowlist_lines.len()
+        );
+    }
+    if !report.ok() {
+        bail!("lint failed with {} finding(s)", report.active.len());
+    }
+    Ok(())
+}

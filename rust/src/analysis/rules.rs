@@ -1,0 +1,497 @@
+//! The five lint rules.  Scopes, messages and match semantics are kept
+//! bit-identical to `python/tools/lint.py`; the shared fixture corpus under
+//! `rust/tests/lint_fixtures/` is the contract between the two runners.
+
+use std::path::Path;
+
+use super::manifest::{compute_manifest, parse_manifest};
+use super::scan::{contains_word, is_word, load_source, rust_sources, unsafe_scan_set};
+use super::{Finding, FLOAT_EXEMPT_FILES, LOCK_FILES_PREFIXES, MANIFEST_PATH, PANIC_PATH_FILES};
+
+/// Lines searched upward for the predicate loop around a condvar wait.
+const WAIT_LOOP_WINDOW: usize = 30;
+/// Lines a float accumulator binding is tracked for `+=` / `-=`.
+const ACC_WINDOW: usize = 40;
+
+const IO_MARKERS: &[&str] = &[
+    ".write_all(",
+    ".write_fmt(",
+    ".flush(",
+    ".read(",
+    ".read_exact(",
+    ".read_to_end(",
+    ".read_to_string(",
+    "TcpStream::connect",
+    "File::open",
+    "File::create",
+    "std::fs::",
+];
+
+const PANIC_TOKENS: &[(&str, &str)] = &[
+    (".unwrap()", "unwrap() on an untrusted-input surface"),
+    (".expect(", "expect() on an untrusted-input surface"),
+    ("panic!(", "panic!() on an untrusted-input surface"),
+    ("unreachable!(", "unreachable!() on an untrusted-input surface"),
+    ("todo!(", "todo!() on an untrusted-input surface"),
+    ("unimplemented!(", "unimplemented!() on an untrusted-input surface"),
+];
+
+/// oracle-freeze: the pinned manifest must agree with the live sources.
+pub fn rule_oracle_freeze(root: &Path, findings: &mut Vec<Finding>) {
+    let current = compute_manifest(root);
+    let mpath = root.join(MANIFEST_PATH);
+    if !mpath.is_file() {
+        if !current.is_empty() {
+            findings.push(Finding::new(
+                "oracle-freeze",
+                MANIFEST_PATH,
+                0,
+                "manifest missing; run --fix-manifest to freeze the oracles",
+                "",
+            ));
+        }
+        return;
+    }
+    let pinned = match parse_manifest(&mpath) {
+        Ok(p) => p,
+        Err(e) => {
+            findings.push(Finding::new("oracle-freeze", MANIFEST_PATH, 0, &format!("{e}"), ""));
+            return;
+        }
+    };
+    let mut names: Vec<&String> = pinned.keys().chain(current.keys()).collect();
+    names.sort();
+    names.dedup();
+    for name in names {
+        match (pinned.get(name), current.get(name)) {
+            (Some(_), None) => findings.push(Finding::new(
+                "oracle-freeze",
+                MANIFEST_PATH,
+                0,
+                &format!("pinned oracle item {name} no longer exists in the sources"),
+                "",
+            )),
+            (None, Some(_)) => findings.push(Finding::new(
+                "oracle-freeze",
+                MANIFEST_PATH,
+                0,
+                &format!("oracle item {name} is not pinned; run --fix-manifest"),
+                "",
+            )),
+            (Some(p), Some(c)) if p != c => {
+                let file = name.split("::").next().unwrap_or(name);
+                findings.push(Finding::new(
+                    "oracle-freeze",
+                    file,
+                    0,
+                    &format!(
+                        "frozen oracle {name} drifted from its pinned hash (pinned {}…, \
+                         source {}…); if the change is intentional, regenerate with \
+                         --fix-manifest",
+                        &p[..12.min(p.len())],
+                        &c[..12.min(c.len())]
+                    ),
+                    "",
+                ));
+            }
+            _ => {}
+        }
+    }
+}
+
+/// panic-path: no unwrap/expect/panic!/slice-index on untrusted surfaces.
+pub fn rule_panic_path(root: &Path, findings: &mut Vec<Finding>) {
+    for &rel in PANIC_PATH_FILES {
+        let Ok(src) = load_source(root, rel) else {
+            continue;
+        };
+        for (i, code) in src.code_lines.iter().enumerate() {
+            if src.is_test[i] {
+                continue;
+            }
+            for &(token, msg) in PANIC_TOKENS {
+                if code.contains(token) {
+                    findings.push(Finding::new("panic-path", rel, i + 1, msg, &src.excerpt(i)));
+                }
+            }
+            if code.trim_start().starts_with('#') {
+                continue; // attributes like #[derive(..)] index nothing
+            }
+            if has_index_expr(code) {
+                findings.push(Finding::new(
+                    "panic-path",
+                    rel,
+                    i + 1,
+                    "slice/array index (can panic) on an untrusted-input surface",
+                    &src.excerpt(i),
+                ));
+            }
+        }
+    }
+}
+
+/// `[` immediately preceded by an identifier char, `)` or `]` — an index
+/// expression rather than a slice type or attribute.
+fn has_index_expr(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    chars.windows(2).any(|w| (is_word(w[0]) || w[0] == ')' || w[0] == ']') && w[1] == '[')
+}
+
+/// lock-discipline: nested `.lock()`, waits without predicate loops, I/O
+/// under a live guard — in scheduler + serve.
+pub fn rule_lock_discipline(root: &Path, findings: &mut Vec<Finding>) {
+    for rel in rust_sources(root) {
+        let in_scope = LOCK_FILES_PREFIXES
+            .iter()
+            .any(|p| rel == *p || (p.ends_with('/') && rel.starts_with(p)));
+        if !in_scope {
+            continue;
+        }
+        let Ok(src) = load_source(root, &rel) else {
+            continue;
+        };
+        // (name, depth at binding, 1-based binding line)
+        let mut live_guards: Vec<(String, i32, usize)> = Vec::new();
+        for (i, code) in src.code_lines.iter().enumerate() {
+            if src.is_test[i] {
+                continue;
+            }
+            let depth = src.depth_before[i];
+            live_guards.retain(|g| depth >= g.1);
+            if code.matches(".lock(").count() >= 2 {
+                findings.push(Finding::new(
+                    "lock-discipline",
+                    &rel,
+                    i + 1,
+                    "nested .lock() acquisitions in one expression",
+                    &src.excerpt(i),
+                ));
+            }
+            if code.contains(".wait(") || code.contains(".wait_timeout(") {
+                let lo = i.saturating_sub(WAIT_LOOP_WINDOW);
+                let looped = src.code_lines[lo..i]
+                    .iter()
+                    .any(|w| contains_word(w, "loop") || contains_word(w, "while"));
+                if !looped {
+                    findings.push(Finding::new(
+                        "lock-discipline",
+                        &rel,
+                        i + 1,
+                        "condvar wait outside a predicate loop (spurious wakeups break \
+                         the invariant)",
+                        &src.excerpt(i),
+                    ));
+                }
+            }
+            if let Some(dropped) =
+                live_guards.iter().find(|g| drops_guard(code, &g.0)).map(|g| g.0.clone())
+            {
+                live_guards.retain(|g| g.0 != dropped);
+            }
+            if IO_MARKERS.iter().any(|m| code.contains(m)) {
+                if let Some(g) = live_guards.last() {
+                    findings.push(Finding::new(
+                        "lock-discipline",
+                        &rel,
+                        i + 1,
+                        &format!("I/O while lock guard `{}` (bound line {}) is live", g.0, g.2),
+                        &src.excerpt(i),
+                    ));
+                }
+            }
+            if let Some(name) = guard_binding(code) {
+                live_guards.push((name, depth, i + 1));
+            }
+        }
+    }
+}
+
+/// `drop( <name> )` at a word boundary, whitespace-tolerant inside the
+/// parentheses.
+fn drops_guard(code: &str, name: &str) -> bool {
+    let mut rest = code;
+    while let Some(pos) = rest.find("drop(") {
+        let bounded = pos == 0 || !is_word(rest[..pos].chars().next_back().unwrap_or(' '));
+        let inner = rest[pos + "drop(".len()..].trim_start();
+        if bounded {
+            if let Some(after) = inner.strip_prefix(name) {
+                if after.trim_start().starts_with(')') {
+                    return true;
+                }
+            }
+        }
+        rest = &rest[pos + "drop(".len()..];
+    }
+    false
+}
+
+/// `let [mut] <name> = … .lock(` — the bound name, if the line binds a
+/// lock guard.
+fn guard_binding(code: &str) -> Option<String> {
+    let chars: Vec<char> = code.chars().collect();
+    let mut i = 0;
+    while i + 3 <= chars.len() {
+        if chars[i] == 'l'
+            && chars[i + 1] == 'e'
+            && chars[i + 2] == 't'
+            && (i == 0 || !is_word(chars[i - 1]))
+            && chars.get(i + 3).is_some_and(|c| c.is_whitespace())
+        {
+            let mut j = i + 3;
+            while j < chars.len() && chars[j].is_whitespace() {
+                j += 1;
+            }
+            // optional `mut ` prefix
+            if chars[j..].starts_with(&['m', 'u', 't'])
+                && chars.get(j + 3).is_some_and(|c| c.is_whitespace())
+            {
+                j += 3;
+                while j < chars.len() && chars[j].is_whitespace() {
+                    j += 1;
+                }
+            }
+            let name_start = j;
+            while j < chars.len() && is_word(chars[j]) {
+                j += 1;
+            }
+            if j > name_start {
+                let mut k = j;
+                while k < chars.len() && chars[k].is_whitespace() {
+                    k += 1;
+                }
+                if chars.get(k) == Some(&'=') {
+                    let rest: String = chars[k..].iter().collect();
+                    if rest.contains(".lock(") {
+                        return Some(chars[name_start..j].iter().collect());
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// float-determinism: no new float reductions or accumulator loops outside
+/// the frozen kernel files.
+pub fn rule_float_determinism(root: &Path, findings: &mut Vec<Finding>) {
+    for rel in rust_sources(root) {
+        if FLOAT_EXEMPT_FILES.contains(&rel.as_str()) {
+            continue;
+        }
+        let Ok(src) = load_source(root, &rel) else {
+            continue;
+        };
+        // (name, depth at binding, 0-based binding line)
+        let mut acc: Vec<(String, i32, usize)> = Vec::new();
+        for (i, code) in src.code_lines.iter().enumerate() {
+            if src.is_test[i] {
+                continue;
+            }
+            let depth = src.depth_before[i];
+            acc.retain(|a| depth >= a.1 && i - a.2 <= ACC_WINDOW);
+            if has_float_reduce(code) {
+                findings.push(Finding::new(
+                    "float-determinism",
+                    &rel,
+                    i + 1,
+                    "float reduction outside the frozen kernel files (summation order \
+                     must stay reviewable)",
+                    &src.excerpt(i),
+                ));
+            }
+            if let Some(pos) = acc.iter().position(|a| has_acc_update(code, &a.0)) {
+                let (name, _, bind_line) = acc.remove(pos);
+                findings.push(Finding::new(
+                    "float-determinism",
+                    &rel,
+                    i + 1,
+                    &format!(
+                        "float `+=` accumulator loop (`{name}` bound line {}) outside \
+                         the frozen kernel files",
+                        bind_line
+                    ),
+                    &src.excerpt(i),
+                ));
+            }
+            if let Some(name) = float_acc_binding(code) {
+                acc.push((name, depth, i));
+            }
+        }
+    }
+}
+
+/// `.sum::<f32>()` / `.sum::<f64>()` or `.fold(0.0,` / `.fold(0f32,` …
+fn has_float_reduce(code: &str) -> bool {
+    if code.contains(".sum::<f32>()") || code.contains(".sum::<f64>()") {
+        return true;
+    }
+    if let Some(pos) = code.find(".fold(0") {
+        let mut rest = &code[pos + ".fold(0".len()..];
+        let mut floaty = false;
+        if let Some(r) = rest.strip_prefix(".0") {
+            rest = r;
+            floaty = true;
+        }
+        for suffix in ["f32", "f64"] {
+            if let Some(r) = rest.strip_prefix(suffix) {
+                rest = r;
+                floaty = true;
+            }
+        }
+        if floaty && rest.trim_start().starts_with(',') {
+            return true;
+        }
+    }
+    false
+}
+
+/// `let mut <name> = 0.0;` (or `0f32;` / `0f64;`, any float-typed zero) —
+/// the bound accumulator name.
+fn float_acc_binding(code: &str) -> Option<String> {
+    let pos = code.find("let mut ")?;
+    if pos > 0 && is_word(code[..pos].chars().next_back()?) {
+        return None;
+    }
+    let rest = &code[pos + "let mut ".len()..];
+    let name: String = rest.chars().take_while(|&c| is_word(c)).collect();
+    if name.is_empty() {
+        return None;
+    }
+    let mut r = rest[name.len()..].trim_start();
+    r = r.strip_prefix('=')?.trim_start();
+    r = r.strip_prefix('0')?;
+    let mut floaty = false;
+    if let Some(s) = r.strip_prefix(".0") {
+        r = s;
+        floaty = true;
+    }
+    for suffix in ["f32", "f64"] {
+        if let Some(s) = r.strip_prefix(suffix) {
+            r = s;
+            floaty = true;
+        }
+    }
+    if floaty && r.trim_start().starts_with(';') {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+/// `<name> +=` / `<name> -=` at a word boundary.
+fn has_acc_update(code: &str, name: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    let target: Vec<char> = name.chars().collect();
+    let n = chars.len();
+    for start in 0..n.saturating_sub(target.len()) {
+        if chars[start..start + target.len()] != target[..] {
+            continue;
+        }
+        if start > 0 && is_word(chars[start - 1]) {
+            continue;
+        }
+        let mut k = start + target.len();
+        if k < n && is_word(chars[k]) {
+            continue;
+        }
+        while k < n && chars[k].is_whitespace() {
+            k += 1;
+        }
+        if k + 1 < n && (chars[k] == '+' || chars[k] == '-') && chars[k + 1] == '=' {
+            return true;
+        }
+    }
+    false
+}
+
+/// zero-dep: `[dependencies]` sections stay empty; no `unsafe` anywhere.
+pub fn rule_zero_dep(root: &Path, findings: &mut Vec<Finding>) {
+    const DEP_SECTIONS: &[&str] =
+        &["dependencies", "dev-dependencies", "build-dependencies", "workspace.dependencies"];
+    for rel in ["Cargo.toml", "rust/Cargo.toml"] {
+        let Ok(text) = std::fs::read_to_string(root.join(rel)) else {
+            continue;
+        };
+        let mut section = String::new();
+        for (i, ln) in text.lines().enumerate() {
+            let s = ln.split('#').next().unwrap_or("").trim();
+            if s.is_empty() {
+                continue;
+            }
+            if s.starts_with('[') {
+                section = s.trim_matches(|c| c == '[' || c == ']').trim().to_string();
+                continue;
+            }
+            if DEP_SECTIONS.contains(&section.as_str()) && s.contains('=') {
+                findings.push(Finding::new(
+                    "zero-dep",
+                    rel,
+                    i + 1,
+                    &format!(
+                        "external dependency in [{section}] — the crate is zero-dep by \
+                         contract (vendor a stand-in under src/)"
+                    ),
+                    ln.trim(),
+                ));
+            }
+        }
+    }
+    for rel in unsafe_scan_set(root) {
+        let Ok(src) = load_source(root, &rel) else {
+            continue;
+        };
+        for (i, code) in src.code_lines.iter().enumerate() {
+            if contains_word(code, "unsafe") {
+                findings.push(Finding::new(
+                    "zero-dep",
+                    &rel,
+                    i + 1,
+                    "`unsafe` is banned crate-wide (no unsafe has ever been needed; \
+                     Miri runs only advisory)",
+                    &src.excerpt(i),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_expr_detection() {
+        assert!(has_index_expr("x = buf[0];"));
+        assert!(has_index_expr("f(a)[1]"));
+        assert!(!has_index_expr("fn f(b: &[u8]) {"));
+        assert!(!has_index_expr("let v: Vec<[u8; 4]> = vec![];"));
+    }
+
+    #[test]
+    fn guard_binding_shapes() {
+        assert_eq!(guard_binding("let g = self.q.lock().unwrap();").as_deref(), Some("g"));
+        assert_eq!(guard_binding("let mut g = m.lock()?;").as_deref(), Some("g"));
+        assert_eq!(guard_binding("let n = queue.len();"), None);
+        assert_eq!(guard_binding("let Ok(g) = m.lock() else {"), None);
+    }
+
+    #[test]
+    fn float_reduce_shapes() {
+        assert!(has_float_reduce("let s = v.iter().sum::<f32>();"));
+        assert!(has_float_reduce("v.iter().fold(0.0, f64::max)"));
+        assert!(has_float_reduce("v.iter().fold(0f32, |a, b| a + b)"));
+        assert!(!has_float_reduce("let s = v.iter().sum::<u32>();"));
+        assert!(!has_float_reduce("v.iter().fold(0, |a, b| a + b)"));
+    }
+
+    #[test]
+    fn float_acc_shapes() {
+        assert_eq!(float_acc_binding("let mut acc = 0.0;").as_deref(), Some("acc"));
+        assert_eq!(float_acc_binding("let mut s = 0f64;").as_deref(), Some("s"));
+        assert_eq!(float_acc_binding("let mut n = 0;"), None);
+        assert!(has_acc_update("acc += x;", "acc"));
+        assert!(has_acc_update("s -= d", "s"));
+        assert!(!has_acc_update("acc2 += x;", "acc"));
+    }
+}

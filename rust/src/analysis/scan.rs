@@ -1,0 +1,346 @@
+//! Source model for the lint rules: comment/string stripping, `#[cfg(test)]`
+//! region tracking and per-line brace depth.
+//!
+//! The stripper blanks comment bodies and string/char-literal contents while
+//! keeping the delimiters and every line break, so token scans and brace
+//! counting see only code.  It follows rustc's tokenization closely enough
+//! for this repo: line and nested block comments, escapes, raw strings
+//! (`r#"…"#`, any hash count up to 6) and the char-literal-vs-lifetime
+//! ambiguity.  Keep the behaviour bit-identical to `strip_source` in
+//! `python/tools/lint.py` — the two runners share the fixture corpus.
+
+/// Blank out comment bodies and string/char-literal contents.
+pub fn strip_source(text: &str) -> String {
+    #[derive(PartialEq)]
+    enum Mode {
+        Code,
+        Line,
+        Block,
+        Str,
+        Raw,
+    }
+    let bytes: Vec<char> = text.chars().collect();
+    let n = bytes.len();
+    let mut out = String::with_capacity(text.len());
+    let mut i = 0;
+    let mut mode = Mode::Code;
+    let mut block_depth = 0usize;
+    let mut raw_hashes = 0usize;
+    while i < n {
+        let c = bytes[i];
+        let nxt = if i + 1 < n { bytes[i + 1] } else { '\0' };
+        match mode {
+            Mode::Code => {
+                if c == '/' && nxt == '/' {
+                    mode = Mode::Line;
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '/' && nxt == '*' {
+                    mode = Mode::Block;
+                    block_depth = 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Str;
+                    out.push('"');
+                    i += 1;
+                } else if let Some((prefix, hashes)) = raw_string_open(&bytes[i..]) {
+                    raw_hashes = hashes;
+                    for k in 0..prefix {
+                        out.push(bytes[i + k]);
+                    }
+                    i += prefix;
+                    mode = Mode::Raw;
+                } else if c == '\'' {
+                    // char literal vs lifetime: a quote closing within two
+                    // chars (or an escape) is a literal, otherwise 'lifetime
+                    if nxt == '\\' {
+                        let mut j = i + 2;
+                        while j < n && bytes[j] != '\'' {
+                            j += 1;
+                        }
+                        out.push('\'');
+                        for _ in 0..j.saturating_sub(i + 1) {
+                            out.push(' ');
+                        }
+                        out.push('\'');
+                        i = j + 1;
+                    } else if i + 2 < n && bytes[i + 2] == '\'' {
+                        out.push_str("' '");
+                        i += 3;
+                    } else {
+                        out.push(c);
+                        i += 1;
+                    }
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Line => {
+                if c == '\n' {
+                    mode = Mode::Code;
+                    out.push(c);
+                } else {
+                    out.push(' ');
+                }
+                i += 1;
+            }
+            Mode::Block => {
+                if c == '/' && nxt == '*' {
+                    block_depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if c == '*' && nxt == '/' {
+                    block_depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                    if block_depth == 0 {
+                        mode = Mode::Code;
+                    }
+                } else {
+                    out.push(if c == '\n' { c } else { ' ' });
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    out.push(' ');
+                    out.push(if nxt == '\n' { '\n' } else { ' ' });
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Code;
+                    out.push('"');
+                    i += 1;
+                } else {
+                    out.push(if c == '\n' { c } else { ' ' });
+                    i += 1;
+                }
+            }
+            Mode::Raw => {
+                if bytes[i] == '"' && closes_raw(&bytes[i..], raw_hashes) {
+                    out.push('"');
+                    for _ in 0..raw_hashes {
+                        out.push('#');
+                    }
+                    i += 1 + raw_hashes;
+                    mode = Mode::Code;
+                } else {
+                    out.push(if c == '\n' { c } else { ' ' });
+                    i += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// If `rest` starts a raw string (`r"`, `br"`, `r#"` …), the opener length
+/// in chars and the hash count.
+fn raw_string_open(rest: &[char]) -> Option<(usize, usize)> {
+    let mut k = 0;
+    if rest.first() == Some(&'b') {
+        k += 1;
+    }
+    if rest.get(k) != Some(&'r') {
+        return None;
+    }
+    k += 1;
+    let mut hashes = 0;
+    while hashes < 6 && rest.get(k + hashes) == Some(&'#') {
+        hashes += 1;
+    }
+    if rest.get(k + hashes) == Some(&'"') {
+        Some((k + hashes + 1, hashes))
+    } else {
+        None
+    }
+}
+
+fn closes_raw(rest: &[char], hashes: usize) -> bool {
+    rest.len() > hashes && rest[1..=hashes].iter().all(|&c| c == '#')
+}
+
+/// One scanned file: raw lines, code-only lines, per-line test-region flags
+/// and the brace depth at the start of each line.
+pub struct SourceFile {
+    /// Repo-relative path, `/`-separated.
+    pub path: String,
+    /// The file's lines exactly as written.
+    pub raw_lines: Vec<String>,
+    /// The same lines with comments and literal contents blanked.
+    pub code_lines: Vec<String>,
+    /// Brace depth at the start of each line.
+    pub depth_before: Vec<i32>,
+    /// Whether each line sits inside a `#[cfg(test)]` region.
+    pub is_test: Vec<bool>,
+}
+
+impl SourceFile {
+    /// Scan `text` (the contents of `path`).
+    pub fn new(path: &str, text: &str) -> SourceFile {
+        let raw_lines: Vec<String> = text.split('\n').map(str::to_string).collect();
+        let code_lines: Vec<String> =
+            strip_source(text).split('\n').map(str::to_string).collect();
+        let n = code_lines.len();
+        let mut depth_before = vec![0i32; n];
+        let mut is_test = vec![false; n];
+        let mut depth = 0i32;
+        let mut test_until_depth: Option<i32> = None;
+        let mut pending_test = false;
+        for (i, code) in code_lines.iter().enumerate() {
+            depth_before[i] = depth;
+            if test_until_depth.is_none() && code.contains("#[cfg(test)]") {
+                pending_test = true;
+            }
+            if pending_test {
+                is_test[i] = true;
+            }
+            let opens = code.matches('{').count() as i32;
+            let closes = code.matches('}').count() as i32;
+            if pending_test && opens > 0 {
+                test_until_depth = Some(depth);
+                pending_test = false;
+            }
+            depth += opens - closes;
+            if let Some(t) = test_until_depth {
+                is_test[i] = true;
+                if depth <= t {
+                    test_until_depth = None;
+                }
+            }
+        }
+        SourceFile { path: path.to_string(), raw_lines, code_lines, depth_before, is_test }
+    }
+
+    /// The raw text of line `i` (0-based), trimmed — finding excerpts.
+    pub fn excerpt(&self, i: usize) -> String {
+        self.raw_lines.get(i).map(|s| s.trim().to_string()).unwrap_or_default()
+    }
+}
+
+/// Read and scan `root/rel`.
+pub fn load_source(root: &std::path::Path, rel: &str) -> std::io::Result<SourceFile> {
+    let text = std::fs::read_to_string(root.join(rel))?;
+    Ok(SourceFile::new(rel, &text))
+}
+
+/// All first-party Rust sources under `rust/src` (the lint scan set),
+/// repo-relative and sorted.
+pub fn rust_sources(root: &std::path::Path) -> Vec<String> {
+    let mut out = Vec::new();
+    walk_rs(root, &root.join("rust").join("src"), &mut out);
+    out.sort();
+    out
+}
+
+/// `rust/src` plus tests/benches/examples — everywhere `unsafe` is banned.
+/// The fixture corpus is excluded: it deliberately contains violations.
+pub fn unsafe_scan_set(root: &std::path::Path) -> Vec<String> {
+    let mut out = rust_sources(root);
+    let mut extra = Vec::new();
+    for dir in ["rust/tests", "benches", "examples"] {
+        walk_rs(root, &root.join(dir), &mut extra);
+    }
+    extra.sort();
+    extra.retain(|rel| !rel.starts_with(&format!("{}/", super::FIXTURES_DIR)));
+    out.extend(extra);
+    out
+}
+
+fn walk_rs(root: &std::path::Path, dir: &std::path::Path, out: &mut Vec<String>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut paths: Vec<_> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    paths.sort();
+    for path in paths {
+        if path.is_dir() {
+            walk_rs(root, &path, out);
+        } else if path.extension() == Some(std::ffi::OsStr::new("rs")) {
+            if let Ok(rel) = path.strip_prefix(root) {
+                out.push(rel.to_string_lossy().replace('\\', "/"));
+            }
+        }
+    }
+}
+
+/// True if the char is part of a Rust identifier.
+pub fn is_word(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Find `word` in `line` at word boundaries (neither neighbour is a word
+/// char).
+pub fn contains_word(line: &str, word: &str) -> bool {
+    let bytes: Vec<char> = line.chars().collect();
+    let w: Vec<char> = word.chars().collect();
+    if w.is_empty() || bytes.len() < w.len() {
+        return false;
+    }
+    for start in 0..=bytes.len() - w.len() {
+        if bytes[start..start + w.len()] != w[..] {
+            continue;
+        }
+        let before_ok = start == 0 || !is_word(bytes[start - 1]);
+        let after = start + w.len();
+        let after_ok = after >= bytes.len() || !is_word(bytes[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripper_blanks_comments_and_strings() {
+        let text = "// unwrap() here\nlet s = \"panic!(x)\";\nreal.unwrap();\n";
+        let out = strip_source(text);
+        let lines: Vec<&str> = out.split('\n').collect();
+        assert!(!lines[0].contains("unwrap"));
+        assert!(!lines[1].contains("panic"));
+        assert!(lines[2].contains(".unwrap()"));
+    }
+
+    #[test]
+    fn stripper_handles_raw_strings_and_lifetimes() {
+        let text = "let r = r#\"has .lock( inside\"#;\nfn f<'a>(x: &'a str) {}\nlet c = '\\'';\n";
+        let out = strip_source(text);
+        let lines: Vec<&str> = out.split('\n').collect();
+        assert!(!lines[0].contains(".lock("));
+        assert!(lines[1].contains("'a"));
+        assert!(!lines[2].contains("\\'"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let out = strip_source("/* outer /* inner */ still */ code()\n");
+        assert!(out.contains("code()"));
+        assert!(!out.contains("inner"));
+        assert!(!out.contains("still"));
+    }
+
+    #[test]
+    fn test_regions_and_depth() {
+        let text = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let src = SourceFile::new("x.rs", text);
+        assert!(!src.is_test[0]);
+        assert!(src.is_test[1]);
+        assert!(src.is_test[3]);
+        assert!(!src.is_test[5]);
+        assert_eq!(src.depth_before[3], 1);
+        assert_eq!(src.depth_before[5], 0);
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("while x {", "while"));
+        assert!(!contains_word("awhile x", "while"));
+        assert!(!contains_word("while_x", "while"));
+        assert!(contains_word("unsafe {", "unsafe"));
+    }
+}

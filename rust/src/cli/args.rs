@@ -17,6 +17,9 @@ commands:
   bench-serve                loopback load test of the serving stack; checks
                              served logits bit-identical to direct forward
                              and writes BENCH_serve.json
+  lint                       repo-invariant static analysis (oracle-freeze,
+                             panic-path, lock-discipline, float-determinism,
+                             zero-dep); mirrored by python/tools/lint.py
   help                       print this message
 
 common flags:
@@ -52,7 +55,13 @@ serving flags (serve, bench-serve):
   --requests <n>             bench-serve: total requests to replay (each
                              replay runs twice: keep-alive, then one
                              connection per request for the latency delta)
-  --clients <n>              bench-serve: concurrent client threads";
+  --clients <n>              bench-serve: concurrent client threads
+
+lint flags:
+  --root <path>              repo root to lint (default: current directory)
+  --json                     machine-readable report
+  --fix-manifest             regenerate rust/oracles.lock from the current
+                             frozen oracle sources";
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]

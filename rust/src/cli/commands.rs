@@ -28,6 +28,11 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
         "bench-serve" => cmd_bench_serve(args),
+        "lint" => crate::analysis::cmd_lint(
+            args.get("root"),
+            args.has("json"),
+            args.has("fix-manifest"),
+        ),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
 }

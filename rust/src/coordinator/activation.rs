@@ -91,6 +91,7 @@ impl ActivationStore {
         Arc::ptr_eq(&self.y, &self.yq)
     }
 
+    /// Rows per activation matrix (the quantization sample count).
     pub fn batch(&self) -> usize {
         self.batch
     }
@@ -259,6 +260,7 @@ impl<'a> TrialSet<'a> {
         self.trials
     }
 
+    /// True when the set holds no trials.
     pub fn is_empty(&self) -> bool {
         self.trials == 0
     }
@@ -320,6 +322,7 @@ impl AnalogStream {
         self.y.clone()
     }
 
+    /// Rows per activation matrix (the quantization sample count).
     pub fn batch(&self) -> usize {
         self.batch
     }
@@ -377,6 +380,7 @@ impl CellStream {
         CellStream { yq: None }
     }
 
+    /// Has the cell quantized a layer yet (own buffer vs shared prefix)?
     pub fn is_diverged(&self) -> bool {
         self.yq.is_some()
     }

@@ -24,7 +24,9 @@ use crate::runtime::{Arg, Runtime};
 /// Which backend executed a block.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Path {
+    /// The in-crate Rust quantizer kernels.
     Native,
+    /// The PJRT artifact runtime (compiled Pallas/HLO).
     Pjrt,
 }
 
@@ -35,6 +37,7 @@ pub struct Executor {
     pub runtime: Option<Arc<Runtime>>,
     /// prefer PJRT when an exactly-matching artifact exists
     pub prefer_pjrt: bool,
+    /// Worker-pool shape for neuron-block dispatch.
     pub scheduler: SchedulerConfig,
     /// neuron-block width (must match the artifacts' `b`)
     pub block_b: usize,

@@ -10,6 +10,8 @@
 //! the Section 6 memory-bounded multi-trial [`sweep`] orchestrator, and
 //! the frozen pre-refactor [`reference`] oracle that pins bit-parity.
 
+#![deny(missing_docs)]
+
 pub mod activation;
 pub mod executor;
 pub mod pipeline;

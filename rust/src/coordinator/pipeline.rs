@@ -50,6 +50,7 @@ pub enum Method {
 /// Pipeline configuration.
 #[derive(Clone)]
 pub struct PipelineConfig {
+    /// Quantizer to run (GPFQ or the MSQ baseline).
     pub method: Method,
     /// alphabet size M (bit budget log2 M)
     pub levels: usize,
@@ -93,10 +94,13 @@ impl Default for PipelineConfig {
 /// Per-layer quantization report.
 #[derive(Debug, Clone)]
 pub struct LayerReport {
+    /// Index of the layer in the network's layer list.
     pub layer_index: usize,
+    /// Human-readable layer label (`dense 256->128`, ...).
     pub label: String,
     /// alphabet actually used
     pub alpha: f32,
+    /// Alphabet size M the layer was quantized with.
     pub levels: usize,
     /// relative Frobenius error ‖YW − ỸQ‖_F / ‖YW‖_F of this layer's output
     pub fro_err: f64,
@@ -108,11 +112,13 @@ pub struct LayerReport {
     pub seconds: f64,
     /// how many neuron blocks ran on each path
     pub native_blocks: usize,
+    /// Neuron blocks dispatched to the PJRT artifact runtime.
     pub pjrt_blocks: usize,
     /// number of neurons
     pub neurons: usize,
     /// N (features per neuron) and m (quantization samples)
     pub n_features: usize,
+    /// Quantization sample rows m the layer saw.
     pub m_samples: usize,
     /// the dense bias row was quantized via the Section-4 augmentation (so
     /// [`verify_alphabet`] must check it against the alphabet too)
@@ -135,9 +141,11 @@ pub struct LayerReport {
 pub struct QuantOutcome {
     /// the quantized network Φ̃
     pub network: Network,
+    /// One report per quantized layer, in quantization order.
     pub layer_reports: Vec<LayerReport>,
     /// snapshots after each quantized layer (when capture_checkpoints)
     pub checkpoints: Vec<Network>,
+    /// End-to-end wall clock for the whole pipeline, seconds.
     pub total_seconds: f64,
 }
 
@@ -218,6 +226,8 @@ pub struct QuantizeSession<'a> {
 }
 
 impl<'a> QuantizeSession<'a> {
+    /// Stage a session over `net` with quantization data `x_quant`; no
+    /// layer is quantized until the first [`QuantizeSession::step`].
     pub fn new(net: &'a Network, x_quant: &Matrix, cfg: PipelineConfig) -> Self {
         assert_eq!(x_quant.cols, net.input.len(), "quantization data width mismatch");
         let executor = cfg.executor.clone().unwrap_or_else(|| Executor::native(cfg.workers));
@@ -240,10 +250,12 @@ impl<'a> QuantizeSession<'a> {
         &self.qnet
     }
 
+    /// Per-layer reports for the layers quantized so far.
     pub fn reports(&self) -> &[LayerReport] {
         &self.reports
     }
 
+    /// Wall clock since the session was staged, seconds.
     pub fn elapsed_seconds(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
     }

@@ -37,6 +37,7 @@ pub fn pool_seedings() -> usize {
 /// Scheduler configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct SchedulerConfig {
+    /// Worker threads in the pool.
     pub workers: usize,
     /// max jobs admitted ahead of the slowest worker (backpressure bound)
     pub queue_cap: usize,

@@ -63,7 +63,9 @@ use crate::util::stats::{mean, stddev};
 /// radius, reports, reproduction configs) sees the narrowed value.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SweepCell {
+    /// Quantizer the cell runs (GPFQ or the MSQ baseline).
     pub method: Method,
+    /// Alphabet size M for the cell.
     pub levels: usize,
     /// the f64 grid coordinate as configured
     pub c_alpha_requested: f64,
@@ -72,6 +74,7 @@ pub struct SweepCell {
 }
 
 impl SweepCell {
+    /// A cell at one grid coordinate, narrowing `c_alpha` to f32 here.
     pub fn new(method: Method, levels: usize, c_alpha: f64) -> SweepCell {
         // explicit narrowing: PipelineConfig::c_alpha is f32
         SweepCell { method, levels, c_alpha_requested: c_alpha, c_alpha: c_alpha as f32 }
@@ -96,13 +99,18 @@ impl SweepCell {
 /// collapses every field to NaN rather than inventing numbers.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TrialStats {
+    /// Mean across finite-scored trials.
     pub mean: f64,
+    /// Population standard deviation across finite-scored trials.
     pub std: f64,
+    /// Smallest finite trial score.
     pub min: f64,
+    /// Largest finite trial score.
     pub max: f64,
 }
 
 impl TrialStats {
+    /// Aggregate per-trial scores, ignoring NaN entries.
     pub fn from_samples(xs: &[f64]) -> TrialStats {
         let finite: Vec<f64> = xs.iter().copied().filter(|v| v.is_finite()).collect();
         if finite.is_empty() {
@@ -120,7 +128,9 @@ impl TrialStats {
 /// One grid cell result.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Quantizer the cell ran.
     pub method: Method,
+    /// Alphabet size M the cell ran with.
     pub levels: usize,
     /// the alphabet scalar the quantizer **actually used** (the pipeline is
     /// f32; this is that value widened losslessly back to f64 for reporting)
@@ -133,12 +143,15 @@ pub struct SweepPoint {
     /// a single-trial engine reports, so history and parity oracles keep
     /// comparing against these
     pub top1: f64,
+    /// Trial 0's top-5 score (NaN when top-5 was not computed).
     pub top5: f64,
     /// per-trial scores, `top1_trials[0] == top1` (length = trial count)
     pub top1_trials: Vec<f64>,
+    /// Per-trial top-5 scores, aligned with `top1_trials`.
     pub top5_trials: Vec<f64>,
     /// mean ± spread across trials (the paper's error bars)
     pub top1_stats: TrialStats,
+    /// Across-trial aggregates of the top-5 scores.
     pub top5_stats: TrialStats,
     /// seconds attributable to this cell alone (its quantize dispatches and
     /// quantized-stream advances), summed across trials; the analog-stream
@@ -157,7 +170,9 @@ impl SweepPoint {
 /// Sweep results plus the analog reference accuracy.
 #[derive(Debug, Clone)]
 pub struct SweepResult {
+    /// Unquantized reference top-1 accuracy.
     pub analog_top1: f64,
+    /// Unquantized reference top-5 accuracy (NaN when not computed).
     pub analog_top5: f64,
     /// analog-stream + shared-view seconds, paid once per trial per chunk
     /// (a per-cell pipeline would pay it once per cell per trial)
@@ -171,6 +186,7 @@ pub struct SweepResult {
     /// number `chunk_cells` bounds; not process RSS, but deterministic and
     /// comparable across configurations and PRs
     pub peak_resident_bytes: usize,
+    /// One result per grid cell, in grid order.
     pub points: Vec<SweepPoint>,
 }
 
@@ -225,10 +241,15 @@ impl SweepResult {
 /// Sweep configuration.
 #[derive(Clone)]
 pub struct SweepConfig {
+    /// Alphabet sizes M to sweep.
     pub levels: Vec<usize>,
+    /// Alphabet radius scalars C_alpha to sweep.
     pub c_alphas: Vec<f64>,
+    /// Quantization methods to sweep.
     pub methods: Vec<Method>,
+    /// Quantize only dense layers (Table 2 / VGG protocol).
     pub fc_only: bool,
+    /// Worker threads shared by the whole grid.
     pub workers: usize,
     /// also compute top-5 (Table 2)
     pub topk: bool,
@@ -301,6 +322,7 @@ struct CellState {
 pub struct SweepOutcome {
     /// `(cell, quantized network, per-cell seconds)`, in grid order
     pub networks: Vec<(SweepCell, Network, f64)>,
+    /// Stream/view counters for the session.
     pub stats: SweepEngineStats,
     /// analog-stream + shared-view seconds (paid once for the whole grid)
     pub shared_seconds: f64,
@@ -313,8 +335,11 @@ pub struct SweepOutcome {
 pub struct ScoredOutcome<S> {
     /// `(cell, score, per-cell seconds)`, in grid order
     pub scored: Vec<(SweepCell, S, f64)>,
+    /// Stream/view counters for the session.
     pub stats: SweepEngineStats,
+    /// Analog-stream + shared-view seconds (paid once for the grid).
     pub shared_seconds: f64,
+    /// Engine-accounted peak resident bytes over the session's lifetime.
     pub peak_resident_bytes: usize,
 }
 
@@ -427,6 +452,8 @@ fn quantize_cell(
 }
 
 impl<'a> SweepSession<'a> {
+    /// Stage a session: one shared analog stream plus a `CellState` per
+    /// grid cell, nothing quantized until the first step.
     pub fn new(
         net: &'a Network,
         x_quant: &Matrix,
@@ -464,6 +491,7 @@ impl<'a> SweepSession<'a> {
         session
     }
 
+    /// Stream/view counters so far.
     pub fn stats(&self) -> SweepEngineStats {
         SweepEngineStats {
             analog_advances: self.analog.advances(),
@@ -472,6 +500,7 @@ impl<'a> SweepSession<'a> {
         }
     }
 
+    /// Analog-stream + shared-view seconds so far.
     pub fn shared_seconds(&self) -> f64 {
         self.shared_seconds
     }
@@ -767,8 +796,11 @@ pub fn sweep(
 /// `layers_quantized` quantizable layers quantized and the rest analog.
 #[derive(Debug, Clone)]
 pub struct LayerCountPoint {
+    /// How many quantizable layers are quantized at this point.
     pub layers_quantized: usize,
+    /// Top-1 accuracy with that prefix quantized.
     pub top1: f64,
+    /// Top-5 accuracy with that prefix quantized (NaN when not computed).
     pub top5: f64,
     /// cumulative pipeline seconds up to this prefix
     pub seconds: f64,

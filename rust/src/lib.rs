@@ -19,6 +19,7 @@
 //! PJRT CPU client (`xla` crate) and falling back to the native [`quant`]
 //! implementations for shapes without artifacts.
 
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

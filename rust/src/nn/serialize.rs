@@ -332,13 +332,36 @@ pub fn load(inp: &mut impl Read) -> Result<Network> {
     if version != VERSION {
         bail!("unsupported model version {version}");
     }
+    // reject image shapes whose element product overflows or exceeds the
+    // allocation cap: `ImgShape::len` multiplies unchecked, so an
+    // unvalidated shape could wrap (or panic in debug) downstream
+    let checked_img = |li: usize, s: ImgShape| -> Result<ImgShape> {
+        if s.h > MAX_DIM || s.w > MAX_DIM || s.c > MAX_DIM {
+            bail!("layer {li}: implausible image shape {}x{}x{}", s.h, s.w, s.c);
+        }
+        s.h.checked_mul(s.w)
+            .and_then(|n| n.checked_mul(s.c))
+            .filter(|&n| n <= MAX_ELEMS)
+            .ok_or_else(|| {
+                crate::error::format_err!(
+                    "layer {li}: image shape {}x{}x{} exceeds element cap",
+                    s.h,
+                    s.w,
+                    s.c
+                )
+            })?;
+        Ok(s)
+    };
     let input = match read_u32(inp)? {
         0 => Shape::Flat(read_u32(inp)? as usize),
-        1 => Shape::Img(ImgShape {
-            h: read_u32(inp)? as usize,
-            w: read_u32(inp)? as usize,
-            c: read_u32(inp)? as usize,
-        }),
+        1 => Shape::Img(checked_img(
+            0,
+            ImgShape {
+                h: read_u32(inp)? as usize,
+                w: read_u32(inp)? as usize,
+                c: read_u32(inp)? as usize,
+            },
+        )?),
         other => bail!("bad input-shape tag {other}"),
     };
     let n_layers = read_u32(inp)? as usize;
@@ -363,6 +386,17 @@ pub fn load(inp: &mut impl Read) -> Result<Network> {
                     bail!("layer {li}: bias length {blen} != neurons {}", w.cols());
                 }
                 let b = read_f32s(inp, blen)?;
+                // the chain invariant: this layer must consume exactly the
+                // width the previous layer produced, or the first forward
+                // pass would assert inside the GEMM (on a serve executor
+                // thread, for a file that "loaded fine")
+                if w.rows() != cur.len() {
+                    bail!(
+                        "layer {li}: dense expects input width {}, chain provides {}",
+                        w.rows(),
+                        cur.len()
+                    );
+                }
                 cur = Shape::Flat(w.cols());
                 // packed weights stay resident: the layer dispatches to the
                 // packed-domain kernel instead of an eager unpack
@@ -378,14 +412,14 @@ pub fn load(inp: &mut impl Read) -> Result<Network> {
                 let kh = read_u32(inp)? as usize;
                 let kw = read_u32(inp)? as usize;
                 let stride = read_u32(inp)? as usize;
-                let in_shape = ImgShape {
-                    h: read_u32(inp)? as usize,
-                    w: read_u32(inp)? as usize,
-                    c: read_u32(inp)? as usize,
-                };
-                if in_shape.h > MAX_DIM || in_shape.w > MAX_DIM || in_shape.c > MAX_DIM {
-                    bail!("layer {li}: implausible conv input shape");
-                }
+                let in_shape = checked_img(
+                    li,
+                    ImgShape {
+                        h: read_u32(inp)? as usize,
+                        w: read_u32(inp)? as usize,
+                        c: read_u32(inp)? as usize,
+                    },
+                )?;
                 if kh == 0 || kw == 0 || stride == 0 || kh > in_shape.h || kw > in_shape.w {
                     bail!(
                         "layer {li}: kernel {kh}x{kw} stride {stride} does not fit input {}x{}",
@@ -406,6 +440,16 @@ pub fn load(inp: &mut impl Read) -> Result<Network> {
                     bail!("layer {li}: bias length {blen} != channels {}", k.cols());
                 }
                 let b = read_f32s(inp, blen)?;
+                // the chain invariant (see the dense arm): im2col asserts
+                // x.cols == in_shape.len(), so a drifted conv input shape
+                // would panic the first forward instead of failing the load
+                if in_shape.len() != cur.len() {
+                    bail!(
+                        "layer {li}: conv input shape {} elements, chain provides {}",
+                        in_shape.len(),
+                        cur.len()
+                    );
+                }
                 let out_shape = ImgShape {
                     h: crate::nn::conv::conv_out(in_shape.h, kh, stride),
                     w: crate::nn::conv::conv_out(in_shape.w, kw, stride),
@@ -421,17 +465,26 @@ pub fn load(inp: &mut impl Read) -> Result<Network> {
             }
             TAG_POOL => {
                 let size = read_u32(inp)? as usize;
-                let in_shape = ImgShape {
-                    h: read_u32(inp)? as usize,
-                    w: read_u32(inp)? as usize,
-                    c: read_u32(inp)? as usize,
-                };
-                if in_shape.h > MAX_DIM || in_shape.w > MAX_DIM || in_shape.c > MAX_DIM {
-                    bail!("layer {li}: implausible pool input shape");
-                }
+                let in_shape = checked_img(
+                    li,
+                    ImgShape {
+                        h: read_u32(inp)? as usize,
+                        w: read_u32(inp)? as usize,
+                        c: read_u32(inp)? as usize,
+                    },
+                )?;
                 if size == 0 || size > in_shape.h || size > in_shape.w {
                     let (h, w) = (in_shape.h, in_shape.w);
                     bail!("layer {li}: pool size {size} does not fit {h}x{w}");
+                }
+                // chain invariant: maxpool_forward asserts
+                // x.cols == in_shape.len()
+                if in_shape.len() != cur.len() {
+                    bail!(
+                        "layer {li}: pool input shape {} elements, chain provides {}",
+                        in_shape.len(),
+                        cur.len()
+                    );
                 }
                 cur = Shape::Img(ImgShape { h: in_shape.h / size, w: in_shape.w / size, c: in_shape.c });
                 layers.push(Layer::MaxPool { size, in_shape });
@@ -440,6 +493,15 @@ pub fn load(inp: &mut impl Read) -> Result<Network> {
                 let channels = read_u32(inp)? as usize;
                 if channels == 0 || channels > MAX_DIM {
                     bail!("layer {li}: implausible BN channel count {channels}");
+                }
+                // BatchNorm::forward_infer asserts cols % channels == 0 —
+                // enforce it at load so a crafted file cannot detonate a
+                // forward pass instead of failing here
+                if cur.len() % channels != 0 {
+                    bail!(
+                        "layer {li}: BN channels {channels} do not divide chain width {}",
+                        cur.len()
+                    );
                 }
                 let mut bn = BatchNorm::new(channels);
                 bn.eps = read_f32(inp)?;
@@ -722,6 +784,81 @@ mod tests {
         b.extend_from_slice(&le32(1 << 31));
         let e = load(&mut &b[..]).unwrap_err();
         assert!(format!("{e:#}").contains("BN channel"), "{e:#}");
+    }
+
+    #[test]
+    fn load_rejects_mismatched_layer_chain() {
+        // each record is self-consistent but disagrees with the running
+        // shape of the chain — such files used to load fine and then
+        // panic inside the first forward pass (on a serve executor
+        // thread), which is exactly the failure mode the panic-path lint
+        // polices on this surface
+        //
+        // dense expecting width 5 after a flat-8 input
+        let mut b = header(1);
+        b.push(TAG_DENSE);
+        b.push(0);
+        b.extend_from_slice(&le32(5)); // rows != 8
+        b.extend_from_slice(&le32(3));
+        b.push(ENC_F32);
+        for _ in 0..15 {
+            b.extend_from_slice(&0.5f32.to_le_bytes());
+        }
+        b.extend_from_slice(&le32(3)); // bias len == cols: self-consistent
+        for _ in 0..3 {
+            b.extend_from_slice(&0.0f32.to_le_bytes());
+        }
+        let e = load(&mut &b[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("chain provides"), "{e:#}");
+
+        // 1x1 conv whose declared input (2x2x1 = 4 elements) disagrees
+        // with the flat-8 chain; kernel and bias are self-consistent
+        let mut b = header(1);
+        b.push(TAG_CONV);
+        b.push(0);
+        for v in [1u32, 1, 1, 2, 2, 1] {
+            b.extend_from_slice(&le32(v)); // kh kw stride h w c
+        }
+        b.extend_from_slice(&le32(1)); // kernel rows = kh*kw*c
+        b.extend_from_slice(&le32(1)); // 1 output channel
+        b.push(ENC_F32);
+        b.extend_from_slice(&0.5f32.to_le_bytes());
+        b.extend_from_slice(&le32(1)); // bias len == channels
+        b.extend_from_slice(&0.0f32.to_le_bytes());
+        let e = load(&mut &b[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("chain provides"), "{e:#}");
+
+        // pool over a 2x2x1 input on the flat-8 chain
+        let mut b = header(1);
+        b.push(TAG_POOL);
+        for v in [2u32, 2, 2, 1] {
+            b.extend_from_slice(&le32(v));
+        }
+        let e = load(&mut &b[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("chain provides"), "{e:#}");
+
+        // BN whose channel count does not divide the chain width
+        let mut b = header(1);
+        b.push(TAG_BN);
+        b.extend_from_slice(&le32(3)); // 3 does not divide 8
+        let e = load(&mut &b[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("do not divide"), "{e:#}");
+    }
+
+    #[test]
+    fn load_rejects_overflowing_image_shapes() {
+        // an image input whose h*w*c overflows usize multiplication: the
+        // unchecked ImgShape::len would wrap (or panic in debug builds)
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&le32(VERSION));
+        b.extend_from_slice(&le32(1)); // img input
+        for _ in 0..3 {
+            b.extend_from_slice(&le32(1 << 24)); // == MAX_DIM, product 2^72
+        }
+        b.extend_from_slice(&le32(1));
+        let e = load(&mut &b[..]).unwrap_err();
+        assert!(format!("{e:#}").contains("element cap"), "{e:#}");
     }
 
     #[test]

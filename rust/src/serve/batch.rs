@@ -41,6 +41,7 @@ impl Default for BatchPolicy {
 }
 
 impl BatchPolicy {
+    /// Policy from CLI-style knobs: a batch cap and a microsecond wait.
     pub fn new(max_batch: usize, max_wait_us: u64) -> BatchPolicy {
         BatchPolicy {
             max_batch: max_batch.max(1),
@@ -60,6 +61,7 @@ pub struct BatchCore<T> {
 }
 
 impl<T> BatchCore<T> {
+    /// An empty, open core obeying `policy`.
     pub fn new(policy: BatchPolicy) -> BatchCore<T> {
         BatchCore {
             queue: VecDeque::new(),
@@ -69,14 +71,17 @@ impl<T> BatchCore<T> {
         }
     }
 
+    /// Requests currently queued.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
 
+    /// True once [`BatchCore::close`] has been called.
     pub fn is_closed(&self) -> bool {
         self.closed
     }
@@ -143,6 +148,7 @@ pub struct MicroBatcher<T> {
 }
 
 impl<T> MicroBatcher<T> {
+    /// A fresh batcher obeying `policy`, with its epoch at construction.
     pub fn new(policy: BatchPolicy) -> MicroBatcher<T> {
         MicroBatcher {
             core: Mutex::new(BatchCore::new(policy)),
@@ -160,6 +166,7 @@ impl<T> MicroBatcher<T> {
         self.core.lock().unwrap().len()
     }
 
+    /// True when no requests are queued (monitoring).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

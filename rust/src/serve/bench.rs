@@ -66,11 +66,17 @@ impl Default for BenchServeConfig {
 /// What one `bench-serve` run measured.
 #[derive(Debug, Clone)]
 pub struct BenchServeReport {
+    /// One-line description of the replayed model.
     pub model_summary: String,
+    /// Total requests replayed per phase.
     pub requests: usize,
+    /// Concurrent client threads.
     pub clients: usize,
+    /// Server worker threads.
     pub workers: usize,
+    /// Micro-batcher batch cap during the run.
     pub max_batch: usize,
+    /// Micro-batcher wait bound (µs) during the run.
     pub max_wait_us: u64,
     /// client-phase wall clock
     pub wall_seconds: f64,
@@ -78,14 +84,20 @@ pub struct BenchServeReport {
     pub client_qps: f64,
     /// client-observed end-to-end latency (connect → parsed response), µs
     pub lat_mean_us: f64,
+    /// Client-observed median latency, µs.
     pub lat_p50_us: f64,
+    /// Client-observed 95th-percentile latency, µs.
     pub lat_p95_us: f64,
+    /// Client-observed 99th-percentile latency, µs.
     pub lat_p99_us: f64,
+    /// Client-observed worst-case latency, µs.
     pub lat_max_us: f64,
     /// the server's own metrics (service latency, batch histogram)
     pub server: StatsSnapshot,
     /// served logits bit-identical to direct `Network::forward`?
     pub parity_ok: bool,
+    /// Responses whose logits differed from the direct forward (0 when
+    /// `parity_ok`).
     pub mismatches: usize,
     /// layers served through the packed integer-index kernel
     /// ([`crate::nn::kernels`]); 0 means a float-only model

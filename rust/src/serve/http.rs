@@ -111,6 +111,7 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
+    /// The bound listen address (the OS-assigned port for `:0` binds).
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
@@ -628,7 +629,12 @@ fn infer(
     }
     stats.record_request(t0.elapsed().as_micros() as u64);
     let body = if single {
-        outputs.into_iter().next().expect("one row")
+        // rows was checked nonempty above, so a missing output means the
+        // handler itself lost a row — answer 500, never panic the worker
+        match outputs.into_iter().next() {
+            Some(one) => one,
+            None => return (500, error_body("no output produced for the request row")),
+        }
     } else {
         Json::obj([("outputs", Json::Arr(outputs))])
     };
@@ -855,6 +861,42 @@ mod tests {
         // 1.0 closes unless the client opts in
         assert!(!parse_bytes(b"GET / HTTP/1.0\r\n\r\n").unwrap().keep_alive);
         assert!(parse_bytes(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().keep_alive);
+    }
+
+    #[test]
+    fn single_row_infer_answers_bare_object_without_panicking() {
+        // regression for the old `.expect("one row")` on the request
+        // path: the single-row branch must produce the bare output object
+        // through fallible code only (a lost row answers 500, it can
+        // never panic the connection handler)
+        use crate::nn::matrix::Matrix;
+        use crate::nn::network::mnist_mlp;
+
+        let net = mnist_mlp(0, 4, &[3], 2);
+        let batcher = Arc::new(MicroBatcher::new(BatchPolicy::new(4, 50)));
+        let stats = ServeStats::new();
+        let exec_net = net.clone();
+        let exec_batcher = Arc::clone(&batcher);
+        let exec = std::thread::spawn(move || {
+            while let Some(batch) = exec_batcher.next_batch() {
+                for job in batch {
+                    let x = Matrix::from_vec(1, job.input.len(), job.input.clone());
+                    let _ = job.tx.send(exec_net.forward(&x).data);
+                }
+            }
+        });
+        let req = HttpRequest {
+            method: "POST".into(),
+            path: "/infer".into(),
+            body: "{\"input\":[0.0,1.0,2.0,3.0]}".into(),
+            keep_alive: false,
+        };
+        let (status, body) = infer(&req, &net, &batcher, &stats);
+        assert_eq!(status, 200, "{body}");
+        assert!(body.get("logits").as_f32_vec().is_some(), "{body}");
+        assert!(matches!(body.get("outputs"), Json::Null), "single row is bare: {body}");
+        batcher.shutdown();
+        exec.join().unwrap();
     }
 
     #[test]

@@ -25,6 +25,8 @@
 //!
 //! CLI: `gpfq serve --model m.gpfq` and `gpfq bench-serve`.
 
+#![deny(missing_docs)]
+
 pub mod batch;
 pub mod bench;
 pub mod http;

@@ -69,6 +69,7 @@ impl Default for ServeStats {
 }
 
 impl ServeStats {
+    /// Fresh counters; the QPS window starts now.
     pub fn new() -> ServeStats {
         ServeStats {
             latencies_us: Mutex::new(Reservoir::new()),
@@ -95,6 +96,7 @@ impl ServeStats {
         *self.batch_sizes.lock().unwrap().entry(size).or_insert(0) += 1;
     }
 
+    /// Requests served so far.
     pub fn requests(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
     }
@@ -149,15 +151,23 @@ fn sorted_quantile(sorted: &[f64], q: f64) -> f64 {
 /// Frozen metrics summary (`GET /stats`, `BENCH_serve.json`).
 #[derive(Debug, Clone)]
 pub struct StatsSnapshot {
+    /// Requests served over the recording window.
     pub requests: u64,
+    /// Requests that failed (parse error, width mismatch, ...).
     pub errors: u64,
+    /// Length of the recording window, seconds.
     pub elapsed_seconds: f64,
     /// served requests / elapsed seconds over the recording window
     pub qps: f64,
+    /// Mean service latency, µs.
     pub mean_us: f64,
+    /// Median service latency, µs.
     pub p50_us: f64,
+    /// 95th-percentile service latency, µs.
     pub p95_us: f64,
+    /// 99th-percentile service latency, µs.
     pub p99_us: f64,
+    /// Worst sampled service latency, µs.
     pub max_us: f64,
     /// mean released batch size (1.0 = the batcher never coalesced)
     pub mean_batch: f64,
@@ -166,6 +176,7 @@ pub struct StatsSnapshot {
 }
 
 impl StatsSnapshot {
+    /// The snapshot as the `GET /stats` JSON object.
     pub fn to_json(&self) -> Json {
         let mut hist = BTreeMap::new();
         for (&size, &count) in &self.batch_hist {

@@ -1,0 +1,16 @@
+//! Fixture: the identical reductions are legal here — `nn/kernels.rs` is
+//! where the frozen, reviewed summation trees live (float-exempt file).
+
+/// Sum a residual vector with the iterator adapter.
+pub fn residual_norm(u: &[f32]) -> f32 {
+    u.iter().map(|x| x * x).sum::<f32>()
+}
+
+/// Hand-rolled accumulator loop.
+pub fn residual_sum(u: &[f32]) -> f64 {
+    let mut acc = 0.0;
+    for x in u {
+        acc += f64::from(*x);
+    }
+    acc
+}

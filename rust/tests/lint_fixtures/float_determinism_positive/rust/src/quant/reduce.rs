@@ -1,0 +1,16 @@
+//! Fixture: float reductions outside the frozen kernel files.
+
+/// Sum a residual vector with the iterator adapter — the summation tree is
+/// whatever the implementation picks, not a reviewed, frozen order.
+pub fn residual_norm(u: &[f32]) -> f32 {
+    u.iter().map(|x| x * x).sum::<f32>()
+}
+
+/// Hand-rolled accumulator loop, same problem.
+pub fn residual_sum(u: &[f32]) -> f64 {
+    let mut acc = 0.0;
+    for x in u {
+        acc += f64::from(*x);
+    }
+    acc
+}

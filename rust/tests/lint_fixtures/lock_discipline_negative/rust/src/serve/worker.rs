@@ -1,0 +1,58 @@
+//! Fixture: the same worker written with clean lock discipline.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Condvar, Mutex};
+
+/// Shared worker state behind two locks and a condvar.
+pub struct Worker {
+    /// Pending job queue.
+    pub queue: Mutex<Vec<u32>>,
+    /// Completed-job counter.
+    pub done: Mutex<u32>,
+    /// Signalled when the queue gains work.
+    pub available: Condvar,
+}
+
+impl Worker {
+    /// One lock at a time: read the queue length, release, then update.
+    pub fn drain_into_done(&self) {
+        let n = {
+            let guard = match self.queue.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            guard.len() as u32
+        };
+        if let Ok(mut done) = self.done.lock() {
+            *done += n;
+        }
+    }
+
+    /// Condvar wait inside a predicate loop, tolerant of spurious wakeups.
+    pub fn wait_for_work(&self) {
+        let mut guard = match self.queue.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        while guard.is_empty() {
+            guard = match self.available.wait(guard) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    /// Copy what the report needs, drop the guard, then touch the socket.
+    pub fn report(&self, stream: &mut TcpStream) {
+        let pending;
+        {
+            let guard = match self.queue.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            pending = guard.len();
+        }
+        stream.write_all(format!("{pending} pending\n").as_bytes()).ok();
+    }
+}

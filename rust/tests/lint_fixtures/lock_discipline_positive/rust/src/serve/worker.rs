@@ -1,0 +1,34 @@
+//! Fixture: lock-discipline violations in a serve-side worker.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Condvar, Mutex};
+
+/// Shared worker state behind two locks and a condvar.
+pub struct Worker {
+    /// Pending job queue.
+    pub queue: Mutex<Vec<u32>>,
+    /// Completed-job counter.
+    pub done: Mutex<u32>,
+    /// Signalled when the queue gains work.
+    pub available: Condvar,
+}
+
+impl Worker {
+    /// Nested `.lock()` acquisitions in one expression: lock-order hazard.
+    pub fn drain_into_done(&self) {
+        *self.done.lock().unwrap() += self.queue.lock().unwrap().len() as u32;
+    }
+
+    /// Condvar wait with no predicate loop: spurious wakeups break it.
+    pub fn wait_once(&self) {
+        let guard = self.queue.lock().unwrap();
+        let _guard = self.available.wait(guard).unwrap();
+    }
+
+    /// Socket write while the queue guard is still live.
+    pub fn report(&self, stream: &mut TcpStream) {
+        let guard = self.queue.lock().unwrap();
+        stream.write_all(format!("{} pending\n", guard.len()).as_bytes()).ok();
+    }
+}

@@ -1,0 +1,27 @@
+//! Fixture copy of the frozen naive-matmul oracle (lint corpus only).
+
+/// Minimal row-major matrix, just enough surface for the fixture.
+pub struct Matrix {
+    /// Row-major element storage.
+    pub data: Vec<f32>,
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+}
+
+impl Matrix {
+    /// Frozen reference: naive i-k-j triple loop, fixed summation order.
+    pub fn matmul_naive(&self, b: &Matrix) -> Matrix {
+        let mut out = vec![0.0f32; self.rows * b.cols];
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a_ik = self.data[i * self.cols + k];
+                for j in 0..b.cols {
+                    out[i * b.cols + j] += a_ik * b.data[k * b.cols + j];
+                }
+            }
+        }
+        Matrix { data: out, rows: self.rows, cols: b.cols }
+    }
+}

@@ -1,0 +1,13 @@
+//! Fixture: the same request handling written panic-free.
+
+/// Parse the Content-Length header out of a raw request head.
+pub fn content_length(head: &str) -> Option<usize> {
+    let line = head.lines().find(|l| l.starts_with("Content-Length:"))?;
+    let value = line.split(':').nth(1)?;
+    value.trim().parse().ok()
+}
+
+/// Return the first byte of the body, if any.
+pub fn first_body_byte(body: &[u8]) -> Option<u8> {
+    body.first().copied()
+}

@@ -1,0 +1,16 @@
+//! Fixture: panic-prone request handling on the untrusted surface.
+
+/// Parse the Content-Length header out of a raw request head.
+pub fn content_length(head: &str) -> usize {
+    let line = head
+        .lines()
+        .find(|l| l.starts_with("Content-Length:"))
+        .unwrap();
+    let value = line.split(':').nth(1).expect("header value");
+    value.trim().parse().unwrap()
+}
+
+/// Return the first byte of the body — indexes without a bounds check.
+pub fn first_body_byte(body: &[u8]) -> u8 {
+    body[0]
+}

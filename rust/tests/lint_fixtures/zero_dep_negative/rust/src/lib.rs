@@ -1,0 +1,6 @@
+//! Fixture: a clean zero-dep crate root.
+
+/// Reads a byte safely, if there is one.
+pub fn peek(bytes: &[u8]) -> Option<u8> {
+    bytes.first().copied()
+}

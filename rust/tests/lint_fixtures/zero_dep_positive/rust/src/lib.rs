@@ -1,0 +1,6 @@
+//! Fixture: `unsafe` is banned crate-wide.
+
+/// Reads a byte through a raw pointer — forbidden in this codebase.
+pub fn peek(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,127 @@
+//! Integration tests for the `gpfq lint` engine (`analysis` module): the
+//! real repo must lint clean, every positive fixture must trip exactly its
+//! own rule, every negative fixture must be silent, and the committed
+//! `rust/oracles.lock` must agree with hashes recomputed from the live
+//! sources — which also pins the Rust runner to the Python-generated
+//! manifest byte-for-byte.
+
+use std::path::{Path, PathBuf};
+
+use gpfq::analysis::{manifest, run_lint, ALLOWLIST_PATH, MANIFEST_PATH};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+fn fixture(name: &str) -> PathBuf {
+    repo_root().join("rust/tests/lint_fixtures").join(name)
+}
+
+#[test]
+fn full_repo_lints_clean() {
+    let report = run_lint(&repo_root());
+    let msgs: Vec<String> = report
+        .active
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.message))
+        .collect();
+    assert!(report.ok(), "lint findings on the real repo:\n{}", msgs.join("\n"));
+    assert!(
+        report.stale_allowlist_lines.is_empty(),
+        "stale {ALLOWLIST_PATH} entries at lines {:?}",
+        report.stale_allowlist_lines
+    );
+    assert!(!report.allowed.is_empty(), "allowlist should be exercising");
+}
+
+#[test]
+fn positive_fixtures_trip_their_rule() {
+    for (case, rule) in [
+        ("oracle_freeze_positive", "oracle-freeze"),
+        ("panic_path_positive", "panic-path"),
+        ("lock_discipline_positive", "lock-discipline"),
+        ("float_determinism_positive", "float-determinism"),
+        ("zero_dep_positive", "zero-dep"),
+    ] {
+        let report = run_lint(&fixture(case));
+        assert!(!report.active.is_empty(), "{case}: expected findings, got none");
+        for f in &report.active {
+            assert_eq!(f.rule, rule, "{case}: unexpected rule {} ({})", f.rule, f.message);
+        }
+    }
+}
+
+#[test]
+fn negative_fixtures_are_clean() {
+    for case in [
+        "oracle_freeze_negative",
+        "panic_path_negative",
+        "lock_discipline_negative",
+        "float_determinism_negative",
+        "zero_dep_negative",
+    ] {
+        let report = run_lint(&fixture(case));
+        let msgs: Vec<String> = report
+            .active
+            .iter()
+            .map(|f| format!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.message))
+            .collect();
+        assert!(report.ok(), "{case}:\n{}", msgs.join("\n"));
+    }
+}
+
+#[test]
+fn lock_positive_covers_all_three_shapes() {
+    let report = run_lint(&fixture("lock_discipline_positive"));
+    let all: String =
+        report.active.iter().map(|f| f.message.as_str()).collect::<Vec<_>>().join(" | ");
+    assert!(all.contains("nested .lock()"));
+    assert!(all.contains("condvar wait outside a predicate loop"));
+    assert!(all.contains("I/O while lock guard"));
+}
+
+#[test]
+fn oracle_manifest_matches_current_sources() {
+    let root = repo_root();
+    let pinned = manifest::parse_manifest(&root.join(MANIFEST_PATH)).unwrap();
+    let current = manifest::compute_manifest(&root);
+    assert_eq!(
+        pinned, current,
+        "{MANIFEST_PATH} disagrees with the frozen oracle sources; if the \
+         oracle edit is intentional run `gpfq lint --fix-manifest` (or the \
+         Python mirror) in the same change"
+    );
+    // every declared oracle item resolved to an actual source span
+    assert_eq!(current.len(), manifest::ORACLE_ITEMS.len());
+}
+
+#[test]
+fn one_char_tamper_is_caught() {
+    // copy the pristine oracle fixture, flip one character in matmul_naive,
+    // and the oracle-freeze rule must fire (the acceptance criterion)
+    let dir = std::env::temp_dir().join(format!("gpfq_lint_tamper_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    copy_tree(&fixture("oracle_freeze_negative"), &dir);
+    let target = dir.join("rust/src/nn/matrix.rs");
+    let text = std::fs::read_to_string(&target).unwrap();
+    assert!(text.contains("+="));
+    std::fs::write(&target, text.replacen("+=", "-=", 1)).unwrap();
+    let report = run_lint(&dir);
+    assert_eq!(report.active.len(), 1, "expected exactly the drift finding");
+    assert_eq!(report.active[0].rule, "oracle-freeze");
+    assert!(report.active[0].message.contains("drifted"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn copy_tree(from: &Path, to: &Path) {
+    std::fs::create_dir_all(to).unwrap();
+    for entry in std::fs::read_dir(from).unwrap() {
+        let entry = entry.unwrap();
+        let dest = to.join(entry.file_name());
+        if entry.path().is_dir() {
+            copy_tree(&entry.path(), &dest);
+        } else {
+            std::fs::copy(entry.path(), &dest).unwrap();
+        }
+    }
+}

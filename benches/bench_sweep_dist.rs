@@ -1,0 +1,44 @@
+//! Distributed-sweep wall-clock bench: 1 in-process sweep vs N worker
+//! processes sharding the same (trial x chunk) work units on loopback.
+//!
+//! Delegates to `gpfq bench-sweep-dist`, which trains once per process,
+//! times both runs, pins the merged artifact bit-identical to the
+//! in-process `sweep_trials` artifact, and writes `BENCH_sweep_dist.json`.
+//! The CLI exits non-zero on any parity divergence (after writing the
+//! JSON), and this harness propagates that failure.
+//!
+//! `BENCH_FAST=1` shrinks the spec to CI seconds-scale sizes; the env var
+//! is inherited by the spawned worker processes, so coordinator and
+//! workers always resolve the same spec (a fingerprint handshake
+//! double-checks).
+//!
+//! Run with: `cargo bench --bench bench_sweep_dist`
+
+use std::process::Command;
+
+fn main() {
+    // cargo passes harness flags like --bench; ignore them.
+    let exe = env!("CARGO_BIN_EXE_gpfq");
+    if std::env::var("BENCH_FAST").is_ok() {
+        eprintln!("[bench_sweep_dist] BENCH_FAST=1: shrunk sizes");
+    }
+    let status = Command::new(exe)
+        .args([
+            "bench-sweep-dist",
+            "--preset",
+            "mnist",
+            "--trials",
+            "2",
+            "--chunk-cells",
+            "2",
+            "--dist",
+            "2",
+            "--json",
+            "BENCH_sweep_dist.json",
+        ])
+        .status()
+        .expect("spawning gpfq bench-sweep-dist");
+    if !status.success() {
+        panic!("bench-sweep-dist failed (parity divergence or worker fault): {status}");
+    }
+}

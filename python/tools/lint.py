@@ -59,6 +59,7 @@ PANIC_PATH_FILES = [
 
 # files holding locks near I/O / condvars
 LOCK_FILES_PREFIXES = [
+    "rust/src/coordinator/dist.rs",
     "rust/src/coordinator/scheduler.rs",
     "rust/src/serve/",
 ]

@@ -55,8 +55,11 @@ pub const PANIC_PATH_FILES: &[&str] =
     &["rust/src/nn/serialize.rs", "rust/src/serve/http.rs"];
 
 /// Files (or `/`-terminated prefixes) holding locks near I/O and condvars.
-pub const LOCK_FILES_PREFIXES: &[&str] =
-    &["rust/src/coordinator/scheduler.rs", "rust/src/serve/"];
+pub const LOCK_FILES_PREFIXES: &[&str] = &[
+    "rust/src/coordinator/dist.rs",
+    "rust/src/coordinator/scheduler.rs",
+    "rust/src/serve/",
+];
 
 /// The frozen summation trees live here; float reductions are legal inside.
 pub const FLOAT_EXEMPT_FILES: &[&str] =

@@ -11,7 +11,15 @@ commands:
   info                       show runtime/artifact status
   train                      train a float network on a synthetic dataset
   quantize                   quantize a trained network once
-  sweep                      cross-validate (M, C_alpha) grids (paper Sec. 6)
+  sweep                      cross-validate (M, C_alpha) grids (paper Sec. 6);
+                             add --dist N to shard (trial x chunk) work units
+                             across N worker processes (bit-identical merge)
+  sweep-worker               serve sweep work units to a distributed
+                             coordinator (spawned by sweep --dist, or started
+                             by hand and listed via --dist-addrs)
+  bench-sweep-dist           1-process vs N-worker-process sweep wall-clock;
+                             fails on parity divergence and writes
+                             BENCH_sweep_dist.json
   eval                       evaluate a saved .gpfq model (--model path)
   serve                      serve a .gpfq model over HTTP (--model path)
   bench-serve                loopback load test of the serving stack; checks
@@ -56,6 +64,24 @@ serving flags (serve, bench-serve):
                              replay runs twice: keep-alive, then one
                              connection per request for the latency delta)
   --clients <n>              bench-serve: concurrent client threads
+
+distributed sweep flags (sweep, bench-sweep-dist, sweep-worker):
+  --dist <n>                 spawn n sweep-worker processes on loopback and
+                             shard the sweep's (trial x chunk) units across
+                             them; the merged artifact is bit-identical to
+                             the in-process sweep
+  --dist-addrs <a,b,..>      use externally started sweep-workers at these
+                             host:port addresses instead of spawning
+  --dist-timeout <secs>      per-unit response timeout before the unit is
+                             re-queued elsewhere (default 120)
+  --dist-retries <n>         max re-queues per unit before the sweep fails
+                             loudly (default 2)
+  --addr-file <path>         sweep-worker: write the bound address here once
+                             listening (used by the spawning coordinator)
+  --fail-after <n>           sweep-worker: exit without replying after n
+                             served units (failure injection)
+  --hang-unit <n>            sweep-worker: stall before serving unit index n
+  --hang-ms <ms>             sweep-worker: stall duration (default 10000)
 
 lint flags:
   --root <path>              repo root to lint (default: current directory)

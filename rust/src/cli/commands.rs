@@ -1,15 +1,21 @@
 //! CLI subcommand implementations.
 
+use std::net::{SocketAddr, TcpListener};
+use std::time::{Duration, Instant};
+
 use crate::error::{bail, Result};
 
 use crate::cli::args::{Args, USAGE};
 use crate::config::{preset_cifar, preset_imagenet, preset_mnist, preset_mnist_paper, ExperimentSpec};
 use crate::coordinator::activation::TrialSet;
+use crate::coordinator::dist::{dist_sweep_trials, run_worker, DistConfig, DistOutcome, WorkerFault};
 use crate::coordinator::pipeline::{quantize_network, Method, PipelineConfig};
 use crate::coordinator::sweep::{sweep_trials, SweepConfig, SweepPoint, SweepResult};
 use crate::data::synth;
+use crate::data::Dataset;
 use crate::eval::metrics::accuracy;
 use crate::eval::report::acc;
+use crate::nn::network::Network;
 use crate::runtime::{Manifest, Runtime};
 use crate::serve::{bench_serve, BatchPolicy, BenchServeConfig, ServeConfig, Server};
 use crate::train::train;
@@ -25,6 +31,8 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "quantize" => cmd_quantize(args),
         "sweep" => cmd_sweep(args),
+        "sweep-worker" => cmd_sweep_worker(args),
+        "bench-sweep-dist" => cmd_bench_sweep_dist(args),
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
         "bench-serve" => cmd_bench_serve(args),
@@ -404,8 +412,43 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &Args) -> Result<()> {
-    let spec = resolve_spec(args)?;
+/// Everything the sweep family of commands (`sweep`, `sweep-worker`,
+/// `bench-sweep-dist`) stages before any grid work: the resolved spec
+/// (with `BENCH_FAST` shrink applied uniformly, so a coordinator and its
+/// workers always agree), the trained network, both datasets and the
+/// sweep/trial configuration.  The [`TrialSet`] itself is built by the
+/// caller (it borrows the training pool).
+struct SweepSetup {
+    spec: ExperimentSpec,
+    net: Network,
+    tr: Dataset,
+    te: Dataset,
+    cfg: SweepConfig,
+    n_quant: usize,
+    trials_n: usize,
+}
+
+impl SweepSetup {
+    /// Trial draw recipe over this setup's training pool (trial 0 is the
+    /// deterministic prefix).
+    fn trials(&self) -> TrialSet<'_> {
+        TrialSet::draw(&self.tr.x, self.n_quant, self.trials_n, self.spec.seed)
+    }
+}
+
+/// Resolve spec → synthesize datasets → train — identically for every
+/// sweep-family command, so a `sweep --dist` coordinator, its spawned
+/// `sweep-worker`s and `bench-sweep-dist` all hold bit-identical
+/// networks and trial recipes (the distributed handshake fingerprint
+/// double-checks this).
+fn sweep_setup(args: &Args) -> Result<SweepSetup> {
+    let mut spec = resolve_spec(args)?;
+    if std::env::var("BENCH_FAST").is_ok() {
+        spec.dataset.n_train = spec.dataset.n_train.min(400);
+        spec.dataset.n_test = spec.dataset.n_test.min(200);
+        spec.dataset.n_quant = spec.dataset.n_quant.min(64);
+        spec.train.epochs = spec.train.epochs.min(2);
+    }
     let (tr, te) = make_datasets(&spec);
     let mut net = spec.build_network();
     println!("training {} ...", spec.name);
@@ -427,16 +470,29 @@ fn cmd_sweep(args: &Args) -> Result<()> {
              every trial draws the whole pool, so the error bars will be exactly zero"
         );
     }
+    Ok(SweepSetup { spec, net, tr, te, cfg, n_quant, trials_n })
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let setup = sweep_setup(args)?;
     // trial 0 is the training prefix (the pre-trial engine's sample set);
     // further trials draw distinct rows from the whole training pool
-    let trials = TrialSet::draw(&tr.x, n_quant, trials_n, spec.seed);
+    let trials = setup.trials();
     println!(
         "sweeping {} x {} grid over {} trial(s) on the memory-bounded engine ...",
-        cfg.levels.len(),
-        cfg.c_alphas.len(),
+        setup.cfg.levels.len(),
+        setup.cfg.c_alphas.len(),
         trials.len()
     );
-    let res = sweep_trials(&net, &trials, &te, &cfg);
+    let res = match dist_workers_requested(args)? {
+        Some(req) => {
+            let (out, _) = run_dist_sweep(args, &setup, &trials, req)?;
+            print_dist_summary(&out);
+            out.result
+        }
+        None => sweep_trials(&setup.net, &trials, &setup.te, &setup.cfg),
+    };
+    let spec = &setup.spec;
     let multi = res.trials > 1;
     let mut headers = vec!["method", "M", "C_alpha", "top1", "top5", "cell secs"];
     if multi {
@@ -507,6 +563,391 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         std::fs::write(path, format!("{doc}\n"))
             .map_err(|e| crate::error::format_err!("could not write {path}: {e}"))?;
         println!("(json written to {path})");
+    }
+    Ok(())
+}
+
+/// What `--dist` / `--dist-addrs` asked for: self-spawned worker
+/// processes, or externally started workers at fixed addresses.
+enum DistRequest {
+    SpawnN(usize),
+    Addrs(Vec<SocketAddr>),
+}
+
+/// Parse the distributed-sweep selection flags (`None` = in-process).
+fn dist_workers_requested(args: &Args) -> Result<Option<DistRequest>> {
+    if let Some(list) = args.get("dist-addrs") {
+        let mut addrs = Vec::new();
+        for a in list.split(',').filter(|s| !s.trim().is_empty()) {
+            let addr = a.trim().parse().map_err(|_| {
+                crate::error::format_err!("bad worker address {a:?} in --dist-addrs")
+            })?;
+            addrs.push(addr);
+        }
+        if addrs.is_empty() {
+            bail!("--dist-addrs was empty");
+        }
+        return Ok(Some(DistRequest::Addrs(addrs)));
+    }
+    match args.usize("dist")? {
+        Some(0) => bail!("--dist expects at least 1 worker"),
+        Some(n) => Ok(Some(DistRequest::SpawnN(n))),
+        None => Ok(None),
+    }
+}
+
+/// Coordinator knobs from `--dist-timeout` / `--dist-retries`.
+fn dist_config_from_args(args: &Args, addrs: Vec<SocketAddr>) -> Result<DistConfig> {
+    let mut d = DistConfig::new(addrs);
+    if let Some(secs) = args.usize("dist-timeout")? {
+        d.unit_timeout = Duration::from_secs(secs as u64);
+    }
+    if let Some(r) = args.usize("dist-retries")? {
+        d.max_retries = r;
+    }
+    Ok(d)
+}
+
+/// Flags a spawned worker must share with its coordinator for the sweep
+/// spec to resolve identically on both sides (the distributed handshake
+/// fingerprint verifies the result, so a drift here fails loudly).
+const MIRRORED_FLAGS: &[&str] =
+    &["preset", "config", "seed", "epochs", "workers", "quant-samples", "trials", "chunk-cells"];
+
+/// Spawn `n` `gpfq sweep-worker` child processes mirroring this
+/// command's spec flags, and wait for each to advertise its bound
+/// address through a temp `--addr-file`.
+fn spawn_workers(args: &Args, n: usize) -> Result<(Vec<std::process::Child>, Vec<SocketAddr>)> {
+    let exe = std::env::current_exe().map_err(|e| {
+        crate::error::format_err!("cannot locate the gpfq binary to spawn workers: {e}")
+    })?;
+    let mut children: Vec<std::process::Child> = Vec::with_capacity(n);
+    let spawned = spawn_and_collect(args, &exe, n, &mut children);
+    match spawned {
+        Ok(addrs) => Ok((children, addrs)),
+        Err(e) => {
+            reap_workers(children, false);
+            Err(e)
+        }
+    }
+}
+
+fn spawn_and_collect(
+    args: &Args,
+    exe: &std::path::Path,
+    n: usize,
+    children: &mut Vec<std::process::Child>,
+) -> Result<Vec<SocketAddr>> {
+    let mut addr_files = Vec::with_capacity(n);
+    for i in 0..n {
+        let addr_file = std::env::temp_dir()
+            .join(format!("gpfq_sweep_worker_{}_{i}.addr", std::process::id()));
+        let _ = std::fs::remove_file(&addr_file);
+        let mut cmd = std::process::Command::new(exe);
+        cmd.arg("sweep-worker");
+        for flag in MIRRORED_FLAGS {
+            if let Some(v) = args.get(flag) {
+                cmd.arg(format!("--{flag}")).arg(v);
+            }
+        }
+        cmd.arg("--addr").arg("127.0.0.1:0").arg("--addr-file").arg(&addr_file);
+        let child = cmd
+            .spawn()
+            .map_err(|e| crate::error::format_err!("could not spawn sweep-worker {i}: {e}"))?;
+        children.push(child);
+        addr_files.push(addr_file);
+    }
+    // each worker trains its own copy of the network before it binds, so
+    // give the polls a deadline generous enough for full presets
+    let deadline = Instant::now() + Duration::from_secs(600);
+    let mut addrs = Vec::with_capacity(n);
+    for file in &addr_files {
+        loop {
+            let text = std::fs::read_to_string(file).unwrap_or_default();
+            let text = text.trim();
+            if !text.is_empty() {
+                let addr = text.parse().map_err(|_| {
+                    crate::error::format_err!(
+                        "worker wrote malformed address {text:?} to {}",
+                        file.display()
+                    )
+                })?;
+                addrs.push(addr);
+                break;
+            }
+            if Instant::now() >= deadline {
+                bail!("sweep-worker did not report an address within 600s");
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let _ = std::fs::remove_file(file);
+    }
+    Ok(addrs)
+}
+
+/// Wait for spawned workers to exit.  After a clean distributed run every
+/// worker was shut down over HTTP, so `graceful` briefly waits for those
+/// exits; anything still running after the grace period (or on the error
+/// path) is killed.
+fn reap_workers(mut children: Vec<std::process::Child>, graceful: bool) {
+    let deadline = Instant::now() + Duration::from_secs(if graceful { 10 } else { 0 });
+    loop {
+        children.retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
+        if children.is_empty() {
+            return;
+        }
+        if Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    for c in &mut children {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Run the distributed sweep against `req`'s workers (spawning them if
+/// asked), reaping spawned processes on every path.  Returns the outcome
+/// plus the worker count used.
+fn run_dist_sweep(
+    args: &Args,
+    setup: &SweepSetup,
+    trials: &TrialSet,
+    req: DistRequest,
+) -> Result<(DistOutcome, usize)> {
+    let (children, addrs) = match req {
+        DistRequest::SpawnN(n) => {
+            println!("spawning {n} sweep-worker process(es) ...");
+            spawn_workers(args, n)?
+        }
+        DistRequest::Addrs(a) => (Vec::new(), a),
+    };
+    let n_workers = addrs.len();
+    let dcfg = dist_config_from_args(args, addrs)?;
+    let outcome = dist_sweep_trials(&setup.net, trials, &setup.te, &setup.cfg, &dcfg);
+    reap_workers(children, outcome.is_ok());
+    Ok((outcome?, n_workers))
+}
+
+fn print_dist_summary(out: &DistOutcome) {
+    let units: usize = out.worker_units.iter().sum();
+    println!(
+        "distributed: {} unit(s) over {} worker(s) [{}]{}",
+        units,
+        out.worker_units.len(),
+        out.worker_units.iter().map(|u| u.to_string()).collect::<Vec<_>>().join("/"),
+        if out.requeues > 0 {
+            format!(", {} re-queue(s)", out.requeues)
+        } else {
+            String::new()
+        }
+    );
+}
+
+/// Serve sweep work units to a distributed coordinator: train the same
+/// spec the coordinator resolves, bind, advertise the bound address via
+/// `--addr-file`, then answer `/unit` requests until `/shutdown`.  The
+/// `--fail-after` / `--hang-unit` flags inject deterministic worker
+/// faults for the failure-injection tests.
+fn cmd_sweep_worker(args: &Args) -> Result<()> {
+    let setup = sweep_setup(args)?;
+    let trials = setup.trials();
+    let bind = args.get("addr").unwrap_or("127.0.0.1:0");
+    let listener = TcpListener::bind(bind)
+        .map_err(|e| crate::error::format_err!("could not bind sweep-worker to {bind}: {e}"))?;
+    let local = listener
+        .local_addr()
+        .map_err(|e| crate::error::format_err!("could not read the bound address: {e}"))?;
+    if let Some(path) = args.get("addr-file") {
+        std::fs::write(path, format!("{local}\n"))
+            .map_err(|e| crate::error::format_err!("could not write {path}: {e}"))?;
+    }
+    let fault = WorkerFault {
+        fail_after: args.usize("fail-after")?,
+        hang: match (args.usize("hang-unit")?, args.usize("hang-ms")?) {
+            (Some(u), ms) => Some((u, Duration::from_millis(ms.unwrap_or(10_000) as u64))),
+            (None, _) => None,
+        },
+    };
+    println!("sweep-worker serving {} on http://{local}", setup.spec.name);
+    let served = run_worker(listener, &setup.net, &trials, &setup.te, &setup.cfg, fault)?;
+    println!("sweep-worker done: {served} unit(s) served");
+    Ok(())
+}
+
+/// First bit-level divergence between the in-process and distributed
+/// sweep artifacts, if any.  Wall-clock fields (`shared_seconds`,
+/// per-cell `seconds`) are exempt by contract — everything else must
+/// match exactly, including the best-cell choice per method.
+fn sweep_parity_diff(a: &SweepResult, b: &SweepResult) -> Option<String> {
+    fn bits(x: f64, y: f64) -> bool {
+        x.to_bits() == y.to_bits()
+    }
+    fn vec_bits(x: &[f64], y: &[f64]) -> bool {
+        x.len() == y.len() && x.iter().zip(y).all(|(p, q)| bits(*p, *q))
+    }
+    if !bits(a.analog_top1, b.analog_top1) || !bits(a.analog_top5, b.analog_top5) {
+        return Some("analog reference accuracy differs".into());
+    }
+    if a.trials != b.trials || a.chunk_cells != b.chunk_cells {
+        return Some("trial/chunk shape differs".into());
+    }
+    if a.peak_resident_bytes != b.peak_resident_bytes {
+        return Some(format!(
+            "peak_resident_bytes {} vs {}",
+            a.peak_resident_bytes, b.peak_resident_bytes
+        ));
+    }
+    if a.points.len() != b.points.len() {
+        return Some(format!("point count {} vs {}", a.points.len(), b.points.len()));
+    }
+    for (i, (p, q)) in a.points.iter().zip(&b.points).enumerate() {
+        let same = p.method == q.method
+            && p.levels == q.levels
+            && bits(p.c_alpha, q.c_alpha)
+            && bits(p.c_alpha_requested, q.c_alpha_requested)
+            && bits(p.top1, q.top1)
+            && bits(p.top5, q.top5)
+            && vec_bits(&p.top1_trials, &q.top1_trials)
+            && vec_bits(&p.top5_trials, &q.top5_trials)
+            && bits(p.top1_stats.mean, q.top1_stats.mean)
+            && bits(p.top1_stats.std, q.top1_stats.std)
+            && bits(p.top1_stats.min, q.top1_stats.min)
+            && bits(p.top1_stats.max, q.top1_stats.max)
+            && bits(p.top5_stats.mean, q.top5_stats.mean)
+            && bits(p.top5_stats.std, q.top5_stats.std)
+            && bits(p.top5_stats.min, q.top5_stats.min)
+            && bits(p.top5_stats.max, q.top5_stats.max);
+        if !same {
+            return Some(format!(
+                "cell {i} ({:?} M={} C_alpha={}) scores differ",
+                p.method, p.levels, p.c_alpha_requested
+            ));
+        }
+    }
+    for m in [Method::Gpfq, Method::Msq] {
+        let pick = |r: &SweepResult| r.best(m).map(|p| (p.levels, p.c_alpha_requested.to_bits()));
+        if pick(a) != pick(b) {
+            return Some(format!("best {m:?} cell differs"));
+        }
+    }
+    None
+}
+
+/// `BENCH_sweep_dist.json`: 1-vs-N-process sweep wall-clock plus the
+/// scheduling and parity evidence (schema documented in
+/// docs/BENCHMARKS.md).
+#[allow(clippy::too_many_arguments)]
+fn bench_sweep_dist_json(
+    name: &str,
+    baseline: &SweepResult,
+    out: &DistOutcome,
+    workers: usize,
+    units: usize,
+    in_process_seconds: f64,
+    dist_seconds: f64,
+    parity_ok: bool,
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let mut root = BTreeMap::new();
+    root.insert("experiment".into(), Json::Str(name.to_string()));
+    root.insert("bench".into(), Json::Str("sweep_dist".into()));
+    root.insert("grid_cells".into(), Json::Num(baseline.points.len() as f64));
+    root.insert("trials".into(), Json::Num(baseline.trials as f64));
+    root.insert("chunk_cells".into(), Json::Num(baseline.chunk_cells as f64));
+    root.insert("units".into(), Json::Num(units as f64));
+    root.insert("workers".into(), Json::Num(workers as f64));
+    root.insert("in_process_seconds".into(), Json::Num(in_process_seconds));
+    root.insert("dist_seconds".into(), Json::Num(dist_seconds));
+    root.insert(
+        "speedup".into(),
+        Json::Num(in_process_seconds / dist_seconds.max(1e-9)),
+    );
+    root.insert("requeues".into(), Json::Num(out.requeues as f64));
+    root.insert("assignments".into(), Json::Num(out.assignments.len() as f64));
+    root.insert(
+        "worker_units".into(),
+        Json::Arr(out.worker_units.iter().map(|&u| Json::Num(u as f64)).collect()),
+    );
+    root.insert(
+        "peak_resident_bytes".into(),
+        Json::Num(out.result.peak_resident_bytes as f64),
+    );
+    root.insert("parity_ok".into(), Json::Bool(parity_ok));
+    Json::Obj(root)
+}
+
+/// 1-process vs N-worker-process sweep wall-clock, with the distributed
+/// artifact pinned bit-identical to the in-process one (the bench FAILS
+/// on any divergence, after writing the JSON so the evidence survives).
+/// `BENCH_FAST=1` shrinks the spec to CI seconds-scale sizes — the env
+/// var is inherited by the spawned workers, so both sides agree.
+fn cmd_bench_sweep_dist(args: &Args) -> Result<()> {
+    let setup = sweep_setup(args)?;
+    let trials = setup.trials();
+    let grid = setup.cfg.cells().len();
+    let chunk = setup.cfg.resolved_chunk();
+    let units = trials.len() * grid.div_ceil(chunk);
+    println!(
+        "[bench-sweep-dist] {} cells x {} trial(s), chunk {} -> {} unit(s)",
+        grid,
+        trials.len(),
+        chunk,
+        units
+    );
+    let t0 = Instant::now();
+    let baseline = sweep_trials(&setup.net, &trials, &setup.te, &setup.cfg);
+    let in_process_seconds = t0.elapsed().as_secs_f64();
+
+    let req = dist_workers_requested(args)?.unwrap_or(DistRequest::SpawnN(2));
+    let t1 = Instant::now();
+    let (out, n_workers) = run_dist_sweep(args, &setup, &trials, req)?;
+    let dist_seconds = t1.elapsed().as_secs_f64();
+    print_dist_summary(&out);
+
+    let divergence = sweep_parity_diff(&baseline, &out.result);
+    let mut t = Table::new(
+        "bench-sweep-dist — 1 process vs N worker processes",
+        &["metric", "value"],
+    );
+    t.row(vec!["grid cells".into(), grid.to_string()]);
+    t.row(vec!["trials".into(), trials.len().to_string()]);
+    t.row(vec!["units".into(), units.to_string()]);
+    t.row(vec!["workers".into(), n_workers.to_string()]);
+    t.row(vec!["in-process".into(), format!("{in_process_seconds:.2} s")]);
+    t.row(vec!["distributed".into(), format!("{dist_seconds:.2} s")]);
+    t.row(vec![
+        "speedup".into(),
+        format!("{:.2}x", in_process_seconds / dist_seconds.max(1e-9)),
+    ]);
+    t.row(vec!["re-queues".into(), out.requeues.to_string()]);
+    t.row(vec![
+        "artifact parity".into(),
+        match &divergence {
+            None => "bit-identical".into(),
+            Some(d) => format!("DIVERGED: {d}"),
+        },
+    ]);
+    println!("{}", t.render());
+
+    let json_path = args.get("json").unwrap_or("BENCH_sweep_dist.json");
+    let doc = bench_sweep_dist_json(
+        &setup.spec.name,
+        &baseline,
+        &out,
+        n_workers,
+        units,
+        in_process_seconds,
+        dist_seconds,
+        divergence.is_none(),
+    );
+    std::fs::write(json_path, format!("{doc}\n"))
+        .map_err(|e| crate::error::format_err!("could not write {json_path}: {e}"))?;
+    println!("(json written to {json_path})");
+    if let Some(d) = divergence {
+        bail!("distributed sweep diverged from the in-process sweep: {d}");
     }
     Ok(())
 }

@@ -1,0 +1,791 @@
+//! Distributed sweep: shard (trial × chunk) work units across worker
+//! **processes** over loopback HTTP, merging partial results into ONE
+//! artifact bit-identical to the in-process [`sweep_trials`](crate::coordinator::sweep::sweep_trials).
+//!
+//! Topology: a coordinator ([`dist_sweep_trials`]) owns the canonical unit
+//! queue — every `(trial, chunk)` pair of the sweep, in trial-major order —
+//! and one driver thread per worker address.  Each worker
+//! ([`run_worker`]) is an independent process (or thread, in tests)
+//! holding its own copy of the trained network, the trial recipe and the
+//! test set; it binds a listener and serves units over the same
+//! hand-rolled HTTP/1.1 + JSON wire format the serving subsystem speaks
+//! (the parser/writer in [`crate::serve::http`] are literally reused, as
+//! is the keep-alive [`HttpClient`] — one persistent connection per
+//! worker for the whole sweep).
+//!
+//! Protocol (all POST, all JSON bodies):
+//!
+//! * `/hello {fingerprint}` → `200 {ok}` / `409` — the worker refuses to
+//!   serve a sweep whose [`sweep_fingerprint`] (network weights, trial-0
+//!   samples, grid, chunking) differs from its own, so a drifted worker
+//!   can never silently poison the merge.
+//! * `/unit {trial, chunk}` → `200` [`UnitResult`] — the worker runs that
+//!   chunk of the grid against that trial's sample set on its own
+//!   [`SweepSession`] (one long-lived [`SweepPool`] per worker process —
+//!   the in-process one-seeding DAG depth carries over unchanged).
+//! * `/shutdown` → `200` — the worker's accept loop returns.
+//!
+//! Fault model: a worker that dies or hangs mid-unit surfaces as a
+//! request error (connection drop or read timeout) on its driver thread.
+//! The driver records a receipt ([`UnitAssignment`]) with the observed
+//! [`UnitOutcome`], pushes the unit back onto the shared queue with its
+//! attempt count bumped (bounded by [`DistConfig::max_retries`]), and
+//! exits — the unit re-runs on whichever live worker pops it next.
+//! Every assignment ever made is kept, so a run's receipt log shows
+//! exactly which worker ran what, how often, and why.
+//!
+//! Parity contract: workers compute, the coordinator merges — strictly in
+//! canonical (trial, chunk) order, with the *same* accumulation
+//! statements as [`sweep_trials`](crate::coordinator::sweep::sweep_trials) — so trial-0 scores, per-trial score
+//! vectors, [`TrialStats`], best-cell selection and
+//! `peak_resident_bytes` are bit-identical to the in-process sweep for
+//! any worker count, any unit interleaving, and any number of re-queues.
+//! Only wall-clock timing fields (`shared_seconds`, per-cell `seconds`)
+//! differ, and even their merge *order* is deterministic.
+
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::analysis::sha256::hex_digest;
+use crate::coordinator::activation::TrialSet;
+use crate::coordinator::pipeline::Method;
+use crate::coordinator::sweep::{
+    SweepConfig, SweepPoint, SweepPool, SweepResult, SweepSession, TrialStats,
+};
+use crate::data::dataset::Dataset;
+use crate::error::{bail, format_err, Context, Result};
+use crate::eval::metrics::{accuracy, topk_accuracy};
+use crate::nn::network::Network;
+use crate::serve::http::{read_request, write_response, HttpClient};
+use crate::util::json::{parse as parse_json, Json};
+
+/// Unit request/result bodies are tiny; anything bigger is a protocol
+/// error, not a workload.
+const MAX_UNIT_BODY: usize = 1 << 20;
+
+/// How long a worker lets its coordinator connection sit idle before
+/// treating it as abandoned.  Generous on purpose: a driver legitimately
+/// goes quiet while the queue is drained by *other* workers, and a
+/// tripped idle timeout here would turn into a spurious re-queue there.
+const WORKER_IDLE_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// How long an idle driver sleeps between queue polls while other
+/// workers' units are still in flight (a re-queue may appear at any
+/// moment).
+const POLL_IDLE: Duration = Duration::from_millis(25);
+
+/// One shard of the sweep: chunk `chunk` of the grid, scored against
+/// trial `trial`'s quantization sample set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkUnit {
+    /// Trial index into the sweep's [`TrialSet`].
+    pub trial: usize,
+    /// Chunk index: cells `[chunk * resolved_chunk, ..)` of the grid.
+    pub chunk: usize,
+}
+
+/// How one assignment of a unit to a worker ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnitOutcome {
+    /// The worker returned a result that was merged (or superseded a
+    /// duplicate of an already-merged unit — bit-identical either way).
+    Done,
+    /// The connection failed before a result arrived (worker death,
+    /// dropped connection).
+    Failed,
+    /// No result within [`DistConfig::unit_timeout`] (worker hang).
+    TimedOut,
+}
+
+/// Receipt for one (unit, worker, attempt) assignment — the audit trail
+/// the failure-injection tests read to prove re-queues actually happened.
+#[derive(Debug, Clone, Copy)]
+pub struct UnitAssignment {
+    /// The unit that was assigned.
+    pub unit: WorkUnit,
+    /// Index into [`DistConfig::addrs`] of the worker it ran on.
+    pub worker: usize,
+    /// 0-based attempt number (0 = first assignment of this unit).
+    pub attempt: usize,
+    /// How the assignment ended.
+    pub outcome: UnitOutcome,
+}
+
+/// A worker's answer for one unit: per-cell scores for the chunk, in
+/// grid order, plus the session's timing/residency accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnitResult {
+    /// Per-cell top-1 accuracy, chunk-local grid order.
+    pub top1: Vec<f64>,
+    /// Per-cell top-5 accuracy (0.0 when the sweep's `topk` is off).
+    pub top5: Vec<f64>,
+    /// Per-cell seconds (quantize dispatches + quantized-stream advances).
+    pub cell_seconds: Vec<f64>,
+    /// Analog-stream + shared-view seconds for the chunk (wall-clock —
+    /// merged deterministically, but not bit-comparable across runs).
+    pub shared_seconds: f64,
+    /// Engine-accounted peak resident bytes of the worker's session —
+    /// deterministic (shapes only), so it IS bit-comparable.
+    pub peak_resident_bytes: usize,
+}
+
+fn nums(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&v| Json::Num(v)).collect())
+}
+
+/// Decode a numeric array field; `null` elements (the writer's encoding
+/// of NaN) come back as NaN, exactly inverting [`Json`]'s NaN policy.
+fn f64s(j: &Json, key: &str) -> Result<Vec<f64>> {
+    let arr = j
+        .get(key)
+        .as_arr()
+        .ok_or_else(|| format_err!("unit result missing array field {key:?}"))?;
+    Ok(arr.iter().map(|el| el.as_f64().unwrap_or(f64::NAN)).collect())
+}
+
+impl UnitResult {
+    /// Wire encoding (finite f64s round-trip exactly; NaN rides as null).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("top1", nums(&self.top1)),
+            ("top5", nums(&self.top5)),
+            ("cell_seconds", nums(&self.cell_seconds)),
+            ("shared_seconds", Json::Num(self.shared_seconds)),
+            ("peak_resident_bytes", Json::Num(self.peak_resident_bytes as f64)),
+        ])
+    }
+
+    /// Inverse of [`UnitResult::to_json`]; rejects structurally malformed
+    /// bodies (a malformed result is a protocol bug, never retried).
+    pub fn from_json(j: &Json) -> Result<UnitResult> {
+        let top1 = f64s(j, "top1")?;
+        let top5 = f64s(j, "top5")?;
+        let cell_seconds = f64s(j, "cell_seconds")?;
+        if top5.len() != top1.len() || cell_seconds.len() != top1.len() {
+            bail!(
+                "unit result field lengths disagree: top1 {} top5 {} cell_seconds {}",
+                top1.len(),
+                top5.len(),
+                cell_seconds.len()
+            );
+        }
+        let shared_seconds = j
+            .get("shared_seconds")
+            .as_f64()
+            .ok_or_else(|| format_err!("unit result missing shared_seconds"))?;
+        let peak_resident_bytes = j
+            .get("peak_resident_bytes")
+            .as_usize()
+            .ok_or_else(|| format_err!("unit result missing peak_resident_bytes"))?;
+        Ok(UnitResult { top1, top5, cell_seconds, shared_seconds, peak_resident_bytes })
+    }
+}
+
+/// Coordinator-side knobs for one distributed sweep.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Worker addresses — one driver thread (and one persistent
+    /// connection) per entry.
+    pub addrs: Vec<SocketAddr>,
+    /// How long a unit may run on a worker before its driver declares
+    /// the worker hung and re-queues the unit.
+    pub unit_timeout: Duration,
+    /// How many times ONE unit may be re-queued after failures/timeouts
+    /// before the sweep gives up (attempt count is per unit, so one
+    /// flaky worker cannot burn the whole budget).
+    pub max_retries: usize,
+    /// POST `/shutdown` to each worker after a clean drain (off when the
+    /// caller wants to reuse the workers for another sweep).
+    pub shutdown_workers: bool,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            addrs: Vec::new(),
+            unit_timeout: Duration::from_secs(120),
+            max_retries: 2,
+            shutdown_workers: true,
+        }
+    }
+}
+
+impl DistConfig {
+    /// Config for `addrs` with default timeout/retry/shutdown policy.
+    pub fn new(addrs: Vec<SocketAddr>) -> DistConfig {
+        DistConfig { addrs, ..DistConfig::default() }
+    }
+}
+
+/// What [`dist_sweep_trials`] hands back: the merged sweep artifact plus
+/// the scheduling evidence the parity and failure-injection tests pin.
+#[derive(Debug, Clone)]
+pub struct DistOutcome {
+    /// The merged sweep — bit-identical (scores, stats, best-cell,
+    /// `peak_resident_bytes`) to in-process [`sweep_trials`](crate::coordinator::sweep::sweep_trials).
+    pub result: SweepResult,
+    /// Every (unit, worker, attempt) assignment ever made, with outcome.
+    pub assignments: Vec<UnitAssignment>,
+    /// How many units were pushed back onto the queue after a failure or
+    /// timeout (0 on a healthy run).
+    pub requeues: usize,
+    /// Units successfully served per worker, indexed like
+    /// [`DistConfig::addrs`] — the load-balance evidence.
+    pub worker_units: Vec<usize>,
+}
+
+/// Deterministic fault injection for [`run_worker`] — how the
+/// failure-injection tests simulate worker death and hangs without
+/// OS-level process murder.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerFault {
+    /// Die (return without replying, dropping the connection) when a
+    /// unit request arrives after this many units were served.
+    pub fail_after: Option<usize>,
+    /// Sleep this long before serving the unit request that arrives
+    /// after `(index)` units were served — long enough and the
+    /// coordinator times the unit out and re-queues it.  One-shot.
+    pub hang: Option<(usize, Duration)>,
+}
+
+/// Hash everything that determines a sweep's bit-exact scores: network
+/// weights (shapes + f32 bits), the trial-0 sample set (trial sampling
+/// is deterministic in the recipe, so trial 0 pins the whole set), trial
+/// count, and the full grid/chunk configuration.  Workers refuse
+/// coordinators whose fingerprint differs — a drifted spec fails loudly
+/// at handshake instead of silently merging foreign numbers.
+pub fn sweep_fingerprint(net: &Network, trials: &TrialSet, cfg: &SweepConfig) -> String {
+    let mut bytes: Vec<u8> = Vec::new();
+    for layer in &net.layers {
+        if let Some(w) = layer.weights() {
+            bytes.extend_from_slice(&(w.rows as u64).to_le_bytes());
+            bytes.extend_from_slice(&(w.cols as u64).to_le_bytes());
+            for &v in &w.data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    if !trials.is_empty() {
+        let x0 = trials.sample_set(0);
+        bytes.extend_from_slice(&(x0.rows as u64).to_le_bytes());
+        bytes.extend_from_slice(&(x0.cols as u64).to_le_bytes());
+        for &v in &x0.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    bytes.extend_from_slice(&(trials.len() as u64).to_le_bytes());
+    bytes.extend_from_slice(&(trials.n_quant() as u64).to_le_bytes());
+    for &m in &cfg.levels {
+        bytes.extend_from_slice(&(m as u64).to_le_bytes());
+    }
+    for &c in &cfg.c_alphas {
+        bytes.extend_from_slice(&c.to_bits().to_le_bytes());
+    }
+    for &m in &cfg.methods {
+        bytes.push(match m {
+            Method::Gpfq => 0,
+            Method::Msq => 1,
+        });
+    }
+    bytes.push(cfg.fc_only as u8);
+    bytes.push(cfg.topk as u8);
+    bytes.extend_from_slice(&(cfg.resolved_chunk() as u64).to_le_bytes());
+    hex_digest(&bytes)
+}
+
+/// Serve sweep units off `listener` until `/shutdown` (or an injected
+/// fault) ends the loop; returns how many units this worker completed.
+/// One [`SweepPool`] lives for the whole worker — every unit's session
+/// shares it, so a worker process pays exactly one pool seeding no
+/// matter how many units it serves (the in-process DAG-depth contract,
+/// per process).
+pub fn run_worker(
+    listener: TcpListener,
+    net: &Network,
+    trials: &TrialSet,
+    test: &Dataset,
+    cfg: &SweepConfig,
+    fault: WorkerFault,
+) -> Result<usize> {
+    let fingerprint = sweep_fingerprint(net, trials, cfg);
+    let cells = cfg.cells();
+    let chunk = cfg.resolved_chunk();
+    let n_chunks = cells.len().div_ceil(chunk);
+    let pool = SweepPool::new(net, cfg.workers);
+    let test_owned = Arc::new(test.clone());
+    let topk = cfg.topk;
+    let mut units_done = 0usize;
+    let mut hang_armed = fault.hang.is_some();
+    loop {
+        let (mut stream, _peer) =
+            listener.accept().context("accepting coordinator connection")?;
+        stream.set_nodelay(true).context("configuring coordinator connection")?;
+        stream
+            .set_read_timeout(Some(WORKER_IDLE_TIMEOUT))
+            .context("configuring coordinator connection")?;
+        loop {
+            let req = match read_request(&mut stream, MAX_UNIT_BODY) {
+                Ok(req) => req,
+                Err(e) if e.quiet => break, // coordinator hung up; await the next
+                Err(e) => {
+                    let body = Json::obj([("error", Json::Str(e.msg.clone()))]);
+                    let _ = write_response(&mut stream, e.status, &body, false);
+                    break;
+                }
+            };
+            let keep = req.keep_alive;
+            let (status, body, done) = match (req.method.as_str(), req.path.as_str()) {
+                ("POST", "/hello") => {
+                    let theirs = parse_json(&req.body)
+                        .ok()
+                        .map(|j| j.get("fingerprint").as_str().unwrap_or("").to_string())
+                        .unwrap_or_default();
+                    if theirs == fingerprint {
+                        (200, Json::obj([("ok", Json::Bool(true))]), false)
+                    } else {
+                        let msg = format!(
+                            "sweep fingerprint mismatch: coordinator {theirs:.16} vs worker {fingerprint:.16}",
+                        );
+                        (409, Json::obj([("error", Json::Str(msg))]), false)
+                    }
+                }
+                ("POST", "/unit") => {
+                    if fault.fail_after == Some(units_done) {
+                        // simulated worker death: drop the connection with
+                        // the request unanswered, mid-unit
+                        return Ok(units_done);
+                    }
+                    if let Some((at, dur)) = fault.hang {
+                        if hang_armed && units_done == at {
+                            hang_armed = false;
+                            thread::sleep(dur);
+                        }
+                    }
+                    let parsed = parse_json(&req.body)
+                        .ok()
+                        .and_then(|j| Some((j.get("trial").as_usize()?, j.get("chunk").as_usize()?)));
+                    match parsed {
+                        Some((t, ci)) if t < trials.len() && ci < n_chunks => {
+                            let base = ci * chunk;
+                            let end = (base + chunk).min(cells.len());
+                            let x = trials.sample_set(t);
+                            let session = SweepSession::with_pool(
+                                &x,
+                                cells[base..end].to_vec(),
+                                cfg.fc_only,
+                                cfg.workers,
+                                &pool,
+                            );
+                            let te = test_owned.clone();
+                            match session.run_scored(move |qnet| {
+                                let top1 = accuracy(qnet, &te);
+                                let top5 =
+                                    if topk { topk_accuracy(qnet, &te, 5) } else { 0.0 };
+                                (top1, top5)
+                            }) {
+                                Ok(out) => {
+                                    let res = UnitResult {
+                                        top1: out.scored.iter().map(|(_, s, _)| s.0).collect(),
+                                        top5: out.scored.iter().map(|(_, s, _)| s.1).collect(),
+                                        cell_seconds: out
+                                            .scored
+                                            .iter()
+                                            .map(|(_, _, secs)| *secs)
+                                            .collect(),
+                                        shared_seconds: out.shared_seconds,
+                                        peak_resident_bytes: out.peak_resident_bytes,
+                                    };
+                                    units_done += 1;
+                                    (200, res.to_json(), false)
+                                }
+                                Err(e) => {
+                                    let msg = format!("unit ({t}, {ci}) failed: {e}");
+                                    (500, Json::obj([("error", Json::Str(msg))]), false)
+                                }
+                            }
+                        }
+                        _ => {
+                            let msg = format!("bad unit request body {:?}", req.body);
+                            (400, Json::obj([("error", Json::Str(msg))]), false)
+                        }
+                    }
+                }
+                ("POST", "/shutdown") => (200, Json::obj([("ok", Json::Bool(true))]), true),
+                _ => {
+                    let msg = format!("no route {} {}", req.method, req.path);
+                    (404, Json::obj([("error", Json::Str(msg))]), false)
+                }
+            };
+            let wrote = write_response(&mut stream, status, &body, keep).is_ok();
+            if done {
+                return Ok(units_done);
+            }
+            if !wrote || !keep {
+                break;
+            }
+        }
+    }
+}
+
+/// Coordinator-side shared scheduling state, one per distributed sweep.
+struct DriveState {
+    /// Units awaiting assignment, canonical order; re-queued units go to
+    /// the back with their attempt count bumped.
+    queue: Mutex<VecDeque<(WorkUnit, usize)>>,
+    /// Merge table, slot `trial * n_chunks + chunk`; first result wins
+    /// (duplicates after a re-queue race are bit-identical anyway).
+    results: Mutex<Vec<Option<UnitResult>>>,
+    completed: AtomicUsize,
+    /// First unrecoverable error; every driver drains out once set.
+    fatal: Mutex<Option<String>>,
+    log: Mutex<Vec<UnitAssignment>>,
+    requeues: AtomicUsize,
+}
+
+fn set_fatal(state: &DriveState, msg: String) {
+    let mut fatal = state.fatal.lock().unwrap();
+    if fatal.is_none() {
+        *fatal = Some(msg);
+    }
+}
+
+fn record(state: &DriveState, a: UnitAssignment) {
+    let mut log = state.log.lock().unwrap();
+    log.push(a);
+}
+
+/// One worker's driver: handshake, then pop-unit / post-unit / merge
+/// until the sweep completes or this worker faults (then: receipt,
+/// bounded re-queue, exit — the unit re-runs elsewhere).
+fn drive_worker(
+    worker: usize,
+    addr: SocketAddr,
+    fingerprint: &str,
+    total: usize,
+    n_chunks: usize,
+    dcfg: &DistConfig,
+    state: &DriveState,
+    units_served: &AtomicUsize,
+) {
+    let mut client = match HttpClient::connect(addr) {
+        Ok(c) => c,
+        // an unreachable worker contributes nothing; the sweep converges
+        // on the others (or stalls out loudly if there are none)
+        Err(_) => return,
+    };
+    if client.set_read_timeout(dcfg.unit_timeout).is_err() {
+        return;
+    }
+    let hello = Json::obj([("fingerprint", Json::Str(fingerprint.to_string()))]);
+    match client.request("POST", "/hello", Some(&hello)) {
+        Ok((200, _)) => {}
+        Ok((status, body)) => {
+            let detail = body.get("error").as_str().unwrap_or("").to_string();
+            set_fatal(
+                state,
+                format!("worker {worker} at {addr} refused handshake (HTTP {status}): {detail}"),
+            );
+            return;
+        }
+        Err(_) => return,
+    }
+    loop {
+        {
+            let fatal = state.fatal.lock().unwrap();
+            if fatal.is_some() {
+                break;
+            }
+        }
+        if state.completed.load(Ordering::SeqCst) >= total {
+            break;
+        }
+        let popped = {
+            let mut queue = state.queue.lock().unwrap();
+            queue.pop_front()
+        };
+        let Some((unit, attempt)) = popped else {
+            // everything is assigned but not all merged: a re-queue may
+            // still appear, so poll rather than exit
+            thread::sleep(POLL_IDLE);
+            continue;
+        };
+        let started = Instant::now();
+        let body = Json::obj([
+            ("trial", Json::Num(unit.trial as f64)),
+            ("chunk", Json::Num(unit.chunk as f64)),
+        ]);
+        match client.request("POST", "/unit", Some(&body)) {
+            Ok((200, json)) => match UnitResult::from_json(&json) {
+                Ok(res) => {
+                    let slot = unit.trial * n_chunks + unit.chunk;
+                    let fresh = {
+                        let mut results = state.results.lock().unwrap();
+                        if results[slot].is_none() {
+                            results[slot] = Some(res);
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    if fresh {
+                        state.completed.fetch_add(1, Ordering::SeqCst);
+                    }
+                    units_served.fetch_add(1, Ordering::SeqCst);
+                    record(
+                        state,
+                        UnitAssignment { unit, worker, attempt, outcome: UnitOutcome::Done },
+                    );
+                }
+                Err(e) => {
+                    // malformed 200 body = protocol bug, not a transient
+                    // worker fault — retrying cannot help
+                    set_fatal(state, format!("worker {worker} at {addr}: {e}"));
+                    break;
+                }
+            },
+            Ok((status, json)) => {
+                let detail = json.get("error").as_str().unwrap_or("").to_string();
+                set_fatal(
+                    state,
+                    format!(
+                        "worker {worker} at {addr} rejected unit ({}, {}) (HTTP {status}): {detail}",
+                        unit.trial, unit.chunk
+                    ),
+                );
+                break;
+            }
+            Err(_) => {
+                let outcome = if started.elapsed() >= dcfg.unit_timeout {
+                    UnitOutcome::TimedOut
+                } else {
+                    UnitOutcome::Failed
+                };
+                record(state, UnitAssignment { unit, worker, attempt, outcome });
+                if attempt >= dcfg.max_retries {
+                    set_fatal(
+                        state,
+                        format!(
+                            "unit ({}, {}) failed on attempt {} (> {} retries)",
+                            unit.trial, unit.chunk, attempt, dcfg.max_retries
+                        ),
+                    );
+                } else {
+                    {
+                        let mut queue = state.queue.lock().unwrap();
+                        queue.push_back((unit, attempt + 1));
+                    }
+                    state.requeues.fetch_add(1, Ordering::SeqCst);
+                }
+                // this worker is presumed dead (its connection broke);
+                // the re-queued unit runs elsewhere
+                return;
+            }
+        }
+    }
+    if dcfg.shutdown_workers {
+        let _ = client.request("POST", "/shutdown", None);
+    }
+}
+
+/// Run the sweep distributed across the workers in `dcfg.addrs` and
+/// merge their unit results into one [`SweepResult`] bit-identical
+/// (scores, trial vectors, [`TrialStats`], best-cell,
+/// `peak_resident_bytes`) to in-process [`sweep_trials`](crate::coordinator::sweep::sweep_trials) — see the
+/// module docs for the protocol, fault handling, and parity argument.
+pub fn dist_sweep_trials(
+    net: &Network,
+    trials: &TrialSet,
+    test: &Dataset,
+    cfg: &SweepConfig,
+    dcfg: &DistConfig,
+) -> Result<DistOutcome> {
+    if dcfg.addrs.is_empty() {
+        bail!("distributed sweep needs at least one worker address");
+    }
+    let fingerprint = sweep_fingerprint(net, trials, cfg);
+    let cells = cfg.cells();
+    let n_cells = cells.len();
+    let chunk = cfg.resolved_chunk();
+    let n_chunks = n_cells.div_ceil(chunk);
+    let n_trials = trials.len();
+    let total = n_trials * n_chunks;
+
+    let mut initial = VecDeque::with_capacity(total);
+    for t in 0..n_trials {
+        for ci in 0..n_chunks {
+            initial.push_back((WorkUnit { trial: t, chunk: ci }, 0usize));
+        }
+    }
+    let state = DriveState {
+        queue: Mutex::new(initial),
+        results: Mutex::new(vec![None; total]),
+        completed: AtomicUsize::new(0),
+        fatal: Mutex::new(None),
+        log: Mutex::new(Vec::new()),
+        requeues: AtomicUsize::new(0),
+    };
+    let per_worker: Vec<AtomicUsize> =
+        dcfg.addrs.iter().map(|_| AtomicUsize::new(0)).collect();
+
+    thread::scope(|s| {
+        for (wi, &addr) in dcfg.addrs.iter().enumerate() {
+            let state = &state;
+            let fingerprint = &fingerprint;
+            let units = &per_worker[wi];
+            s.spawn(move || {
+                drive_worker(wi, addr, fingerprint, total, n_chunks, dcfg, state, units)
+            });
+        }
+    });
+
+    if let Some(msg) = state.fatal.into_inner().unwrap() {
+        bail!("distributed sweep failed: {msg}");
+    }
+    let completed = state.completed.load(Ordering::SeqCst);
+    if completed != total {
+        bail!(
+            "distributed sweep stalled: {completed}/{total} units completed and no live workers remain"
+        );
+    }
+    let results = state.results.into_inner().unwrap();
+
+    // merge — the exact accumulation statements (and order) of
+    // `sweep_trials`, so every non-wall-clock field is bit-identical
+    let analog_top1 = accuracy(net, test);
+    let analog_top5 = if cfg.topk { topk_accuracy(net, test, 5) } else { 0.0 };
+    let mut top1s: Vec<Vec<f64>> = vec![Vec::with_capacity(n_trials); n_cells];
+    let mut top5s: Vec<Vec<f64>> = vec![Vec::with_capacity(n_trials); n_cells];
+    let mut secs = vec![0.0f64; n_cells];
+    let mut shared_seconds = 0.0;
+    let mut peak = 0usize;
+    for (slot, maybe) in results.into_iter().enumerate() {
+        let Some(r) = maybe else {
+            bail!("unit slot {slot} completed without a result (coordinator bug)");
+        };
+        let base = (slot % n_chunks) * chunk;
+        let expected = (n_cells - base).min(chunk);
+        if r.top1.len() != expected {
+            bail!(
+                "unit slot {slot} returned {} cells, expected {expected}",
+                r.top1.len()
+            );
+        }
+        shared_seconds += r.shared_seconds;
+        peak = peak.max(r.peak_resident_bytes);
+        for j in 0..expected {
+            top1s[base + j].push(r.top1[j]);
+            top5s[base + j].push(r.top5[j]);
+            secs[base + j] += r.cell_seconds[j];
+        }
+    }
+    let points: Vec<SweepPoint> = cells
+        .iter()
+        .zip(top1s)
+        .zip(top5s)
+        .zip(secs)
+        .map(|(((cell, t1), t5), seconds)| SweepPoint {
+            method: cell.method,
+            levels: cell.levels,
+            c_alpha: f64::from(cell.c_alpha),
+            c_alpha_requested: cell.c_alpha_requested,
+            top1: t1.first().copied().unwrap_or(f64::NAN),
+            top5: t5.first().copied().unwrap_or(0.0),
+            top1_stats: TrialStats::from_samples(&t1),
+            top5_stats: TrialStats::from_samples(&t5),
+            top1_trials: t1,
+            top5_trials: t5,
+            seconds,
+        })
+        .collect();
+    let result = SweepResult {
+        analog_top1,
+        analog_top5,
+        shared_seconds,
+        trials: n_trials,
+        chunk_cells: chunk,
+        peak_resident_bytes: peak,
+        points,
+    };
+    Ok(DistOutcome {
+        result,
+        assignments: state.log.into_inner().unwrap(),
+        requeues: state.requeues.load(Ordering::SeqCst),
+        worker_units: per_worker.into_iter().map(|c| c.into_inner()).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_result_round_trips_through_json_bit_exactly() {
+        let r = UnitResult {
+            top1: vec![0.971234567891234, 0.5, 1.0 / 3.0],
+            top5: vec![0.0, 0.25, f64::NAN],
+            cell_seconds: vec![1.5e-3, 2.25e-4, 0.0],
+            shared_seconds: 0.123456789012345,
+            peak_resident_bytes: 123_456_789,
+        };
+        let back = UnitResult::from_json(&parse_json(&r.to_json().to_string()).unwrap())
+            .unwrap();
+        for (a, b) in r.top1.iter().zip(&back.top1) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // NaN rides as null and comes back as canonical NaN
+        assert!(back.top5[2].is_nan());
+        assert_eq!(r.top5[0].to_bits(), back.top5[0].to_bits());
+        assert_eq!(r.shared_seconds.to_bits(), back.shared_seconds.to_bits());
+        assert_eq!(r.peak_resident_bytes, back.peak_resident_bytes);
+        assert_eq!(r.cell_seconds, back.cell_seconds);
+    }
+
+    #[test]
+    fn unit_result_rejects_malformed_bodies() {
+        let missing = Json::obj([("top1", Json::Arr(vec![]))]);
+        assert!(UnitResult::from_json(&missing).is_err());
+        let ragged = Json::obj([
+            ("top1", Json::Arr(vec![Json::Num(1.0)])),
+            ("top5", Json::Arr(vec![])),
+            ("cell_seconds", Json::Arr(vec![Json::Num(0.0)])),
+            ("shared_seconds", Json::Num(0.0)),
+            ("peak_resident_bytes", Json::Num(0.0)),
+        ]);
+        assert!(UnitResult::from_json(&ragged).is_err());
+    }
+
+    #[test]
+    fn fingerprint_pins_weights_and_grid() {
+        use crate::nn::network::mnist_mlp;
+        let net = mnist_mlp(0, 4, &[3], 2);
+        let x = crate::nn::matrix::Matrix::from_fn(5, 4, |i, j| (i + j) as f32 * 0.1);
+        let trials = TrialSet::single(&x);
+        let cfg = SweepConfig::default();
+        let a = sweep_fingerprint(&net, &trials, &cfg);
+        assert_eq!(a, sweep_fingerprint(&net, &trials, &cfg), "deterministic");
+
+        let cfg2 = SweepConfig { c_alphas: vec![1.0, 2.0], ..cfg.clone() };
+        assert_ne!(a, sweep_fingerprint(&net, &trials, &cfg2), "grid is pinned");
+
+        let mut net2 = net.clone();
+        if let Some(w) = net2.layers[0].weights_mut() {
+            w.data[0] += 0.5;
+        }
+        assert_ne!(a, sweep_fingerprint(&net2, &trials, &cfg), "weights are pinned");
+
+        let cfg3 = SweepConfig { chunk_cells: Some(2), ..cfg };
+        assert_ne!(a, sweep_fingerprint(&net, &trials, &cfg3), "chunking is pinned");
+    }
+
+    #[test]
+    fn dist_config_defaults_are_bounded() {
+        let d = DistConfig::default();
+        assert!(d.addrs.is_empty());
+        assert!(d.max_retries >= 1);
+        assert!(d.shutdown_workers);
+    }
+}

@@ -3,16 +3,20 @@
 //! [`activation::TrialSet`] layer above it) feeding a layer-sequential,
 //! neuron-parallel quantization [`pipeline`] (staged as a
 //! [`pipeline::QuantizeSession`]), a bounded worker-pool [`scheduler`]
-//! with fused two-stage job graphs ([`scheduler::run_chained_jobs`]) and a
+//! with fused two-stage job graphs ([`scheduler::run_chained_jobs`]), a
 //! reusable long-lived pool handle ([`scheduler::WorkerPool`], the serving
-//! subsystem's execution substrate),
+//! subsystem's execution substrate) with multi-wave fan-out
+//! ([`scheduler::pool_fan_out`]),
 //! dual execution backends ([`executor`]: PJRT artifacts / native Rust),
-//! the Section 6 memory-bounded multi-trial [`sweep`] orchestrator, and
+//! the Section 6 memory-bounded multi-trial [`sweep`] orchestrator, the
+//! [`dist`] multi-process sweep coordinator/worker pair that shards
+//! (trial × chunk) work units over loopback HTTP, and
 //! the frozen pre-refactor [`reference`] oracle that pins bit-parity.
 
 #![deny(missing_docs)]
 
 pub mod activation;
+pub mod dist;
 pub mod executor;
 pub mod pipeline;
 pub mod reference;
@@ -20,14 +24,21 @@ pub mod scheduler;
 pub mod sweep;
 
 pub use activation::{ActivationStore, AnalogStream, CellStream, StreamViews, TrialSet};
+pub use dist::{
+    dist_sweep_trials, run_worker, DistConfig, DistOutcome, UnitAssignment, UnitOutcome,
+    UnitResult, WorkUnit, WorkerFault,
+};
 pub use executor::{Executor, Path};
 pub use pipeline::{
     quantize_network, try_quantize_network, Method, PipelineConfig, QuantOutcome, QuantizeSession,
 };
 pub use reference::reference_quantize_network;
-pub use scheduler::{pool_seedings, run_chained_jobs, run_jobs, SchedulerConfig, WorkerPool};
+pub use scheduler::{
+    pool_fan_out, pool_fan_out_deferred, pool_seedings, run_chained_jobs, run_jobs, PendingWave,
+    SchedulerConfig, WorkerPool,
+};
 pub use sweep::{
     layer_count_sweep, layer_count_sweep_outcome, sweep, sweep_trials, LayerCountPoint,
-    ScoredOutcome, SweepCell, SweepConfig, SweepEngineStats, SweepOutcome, SweepPoint,
-    SweepResult, SweepSession, TrialStats,
+    PendingScored, ScoredOutcome, SweepCell, SweepConfig, SweepEngineStats, SweepOutcome,
+    SweepPoint, SweepPool, SweepResult, SweepSession, TrialStats,
 };

@@ -17,10 +17,18 @@
 //! the sweep engine chains each grid cell's scoring job behind its final
 //! quantization job this way).  [`pool_seedings`] counts actual thread-pool
 //! spawns so tests can pin "the pool was seeded once for both phases".
+//!
+//! For job graphs deeper than two stages there is the long-lived
+//! [`WorkerPool`] plus [`pool_fan_out`] / [`pool_fan_out_deferred`]: any
+//! number of dependent waves (analog advance, per-layer cell quantize
+//! waves, final fused quantize→score) run over ONE pool seeding, and a
+//! deferred wave can stay in flight while the caller submits the next
+//! trial's work — the overlap the sweep engine uses between a trial's tail
+//! cells and the next trial's analog stream advance.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 /// Process-wide count of worker-pool seedings (thread scopes actually
 /// spawned; the single-worker serial fast path never seeds a pool).  Tests
@@ -454,6 +462,107 @@ impl Drop for WorkerPool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// multi-wave fan-out on a long-lived pool
+// ---------------------------------------------------------------------------
+
+/// An in-flight [`pool_fan_out_deferred`] wave: the jobs are queued (or
+/// running) on the pool, and [`PendingWave::wait`] collects their results
+/// in submission order.  Holding a `PendingWave` while submitting *more*
+/// work to the same pool is the whole point — it is how the sweep engine
+/// overlaps trial t+1's analog advance with trial t's still-running tail
+/// cells without a second pool seeding.
+pub struct PendingWave<T, E> {
+    rx: mpsc::Receiver<(usize, Result<T, E>)>,
+    n: usize,
+}
+
+impl<T, E> PendingWave<T, E> {
+    /// Block until every job in the wave has reported, then return outputs
+    /// in submission order — or the **lowest-index** error (deterministic
+    /// regardless of completion order).  Unlike [`run_jobs`] there is no
+    /// cancellation: waves are small (grid-cell counts), so every job runs
+    /// to completion even when one fails.
+    pub fn wait(self) -> Result<Vec<T>, E> {
+        let mut slots: Vec<Option<Result<T, E>>> = (0..self.n).map(|_| None).collect();
+        for _ in 0..self.n {
+            let (idx, res) =
+                self.rx.recv().expect("pool wave job vanished (worker thread panicked)");
+            slots[idx] = Some(res);
+        }
+        let mut out = Vec::with_capacity(self.n);
+        for slot in slots {
+            match slot.expect("every wave index reports exactly once") {
+                Ok(v) => out.push(v),
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Jobs in the wave.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True for a zero-job wave.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+}
+
+/// Fan a wave of `jobs` out on an existing [`WorkerPool`] and wait for the
+/// results in submission order.  This is the N-wave generalization of
+/// [`run_chained_jobs`]: where the fused two-stage graph buys "one seeding
+/// for two phases" inside a single call, a caller holding a `WorkerPool`
+/// can drive an **arbitrary number of dependent waves** — advance, chained
+/// per-layer quantize waves, final score — over ONE [`pool_seedings`]
+/// increment for the pool's whole lifetime.  Per-item values are identical
+/// to running `work(i, job)` serially: fan-out changes scheduling, never
+/// bits.
+pub fn pool_fan_out<J, T, E, F>(pool: &WorkerPool, jobs: Vec<J>, work: F) -> Result<Vec<T>, E>
+where
+    J: Send + 'static,
+    T: Send + 'static,
+    E: Send + 'static,
+    F: Fn(usize, J) -> Result<T, E> + Send + Sync + 'static,
+{
+    pool_fan_out_deferred(pool, jobs, work).wait()
+}
+
+/// Like [`pool_fan_out`], but return immediately with a [`PendingWave`]
+/// instead of blocking: the caller may run (or submit) independent work
+/// while the wave executes, then [`PendingWave::wait`] when it needs the
+/// results.  The work closure is shared across jobs behind an [`Arc`], and
+/// each job sends its `(index, result)` through an [`mpsc`] channel — no
+/// locks beyond the pool's own queue, so deferred waves compose freely
+/// with concurrent submitters.
+pub fn pool_fan_out_deferred<J, T, E, F>(
+    pool: &WorkerPool,
+    jobs: Vec<J>,
+    work: F,
+) -> PendingWave<T, E>
+where
+    J: Send + 'static,
+    T: Send + 'static,
+    E: Send + 'static,
+    F: Fn(usize, J) -> Result<T, E> + Send + Sync + 'static,
+{
+    let n = jobs.len();
+    let (tx, rx) = mpsc::channel();
+    let work = Arc::new(work);
+    for (i, j) in jobs.into_iter().enumerate() {
+        let tx = tx.clone();
+        let work = work.clone();
+        pool.submit(move || {
+            let res = work(i, j);
+            // an abandoned wave (receiver dropped) is not a job failure
+            let _ = tx.send((i, res));
+        });
+    }
+    PendingWave { rx, n }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -712,6 +821,82 @@ mod tests {
         }
         pool.shutdown();
         assert_eq!(*order.lock().unwrap(), (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_fan_out_preserves_order_and_matches_serial() {
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            let out: Vec<usize> =
+                pool_fan_out(&pool, (0..64).collect(), |i, j: usize| Ok::<_, ()>(i * 1000 + j))
+                    .unwrap();
+            assert_eq!(out, (0..64).map(|j| j * 1001).collect::<Vec<_>>(), "workers={workers}");
+            pool.shutdown();
+        }
+    }
+
+    #[test]
+    fn pool_fan_out_returns_lowest_index_error() {
+        let pool = WorkerPool::new(4);
+        let res: Result<Vec<usize>, String> = pool_fan_out(&pool, (0..32).collect(), |_, j| {
+            if j == 19 || j == 3 {
+                Err(format!("job {j} failed"))
+            } else {
+                Ok(j)
+            }
+        });
+        // both jobs fail in some completion order; the reported error is
+        // deterministically the lowest-index one
+        assert_eq!(res.unwrap_err(), "job 3 failed");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_fan_out_many_waves_one_seeding() {
+        let before = pool_seedings();
+        let pool = WorkerPool::new(3);
+        // a deep dependent-wave graph: each wave's inputs are the previous
+        // wave's outputs — N waves, still ONE seeding
+        let mut vals: Vec<usize> = (0..16).collect();
+        for _ in 0..6 {
+            vals = pool_fan_out(&pool, vals, |_, v: usize| Ok::<_, ()>(v + 1)).unwrap();
+        }
+        assert_eq!(vals, (6..22).collect::<Vec<_>>());
+        pool.shutdown();
+        // lower-bounded pin (concurrent tests seed pools of their own); the
+        // exact pin lives in tests/test_sweep_grid.rs under its serial lock
+        assert!(pool_seedings() >= before + 1);
+    }
+
+    #[test]
+    fn deferred_wave_overlaps_with_later_submissions() {
+        let pool = WorkerPool::new(2);
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = gate.clone();
+        // wave A parks until the gate opens
+        let wave = pool_fan_out_deferred(&pool, vec![0usize], move |_, j| {
+            while !g.load(Ordering::Acquire) {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+            Ok::<_, ()>(j + 10)
+        });
+        // independent work submitted while A is in flight must complete on
+        // the second worker even though A still holds the first
+        let later: Vec<usize> =
+            pool_fan_out(&pool, vec![1usize, 2], |_, j| Ok::<_, ()>(j * 2)).unwrap();
+        assert_eq!(later, vec![2, 4]);
+        gate.store(true, Ordering::Release);
+        assert_eq!(wave.wait().unwrap(), vec![10]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn empty_wave_resolves_immediately() {
+        let pool = WorkerPool::new(2);
+        let wave: PendingWave<usize, ()> = pool_fan_out_deferred(&pool, Vec::new(), |_, j| Ok(j));
+        assert!(wave.is_empty());
+        assert_eq!(wave.wait().unwrap(), Vec::<usize>::new());
+        pool.shutdown();
     }
 
     #[test]

@@ -20,11 +20,18 @@
 //!   once, so peak resident bytes are O(chunk), not O(grid).  The measured
 //!   engine-accounted peak is surfaced in
 //!   [`SweepResult::peak_resident_bytes`].
-//! * **Fused fan-out** ([`SweepSession::run_scored`] on
-//!   [`crate::coordinator::scheduler::run_chained_jobs`]): each cell's
-//!   scoring job is chained behind its final quantization job on ONE
-//!   worker-pool seeding — the pool never drains between the quantize and
-//!   score phases, and a cell's network dies the moment its score exists.
+//! * **Fused fan-out on one pool** ([`SweepSession::run_scored`] on
+//!   [`crate::coordinator::scheduler::pool_fan_out`]): every wave a chunk
+//!   runs — diverged-cell stream advances, per-layer quantize fan-outs and
+//!   the final fused quantize→score jobs — rides ONE long-lived
+//!   [`crate::coordinator::scheduler::WorkerPool`] held by a sweep-wide
+//!   [`SweepPool`], so the whole sweep (all chunks, all trials) pays a
+//!   single pool seeding; a cell's network still dies the moment its score
+//!   exists.  The final wave is **deferred**
+//!   ([`SweepSession::run_scored_deferred`]): trial t's tail cells may
+//!   still be scoring while trial t+1's analog stream advances on the same
+//!   pool — merging stays in canonical (trial, chunk) order, so the
+//!   overlap changes wall-clock, never bits.
 //!
 //! Within one chunk the shared-session contract of PR 3 holds unchanged:
 //! every cell quantizes the *same* analog network against the *same* sample
@@ -49,7 +56,9 @@ use crate::coordinator::pipeline::{
     dispatch_layer_quantizer, layer_selected, Method, PipelineConfig, QuantOutcome,
     QuantizeSession,
 };
-use crate::coordinator::scheduler::{run_chained_jobs, run_jobs, SchedulerConfig};
+use crate::coordinator::scheduler::{
+    pool_fan_out, pool_fan_out_deferred, PendingWave, WorkerPool,
+};
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
 use crate::eval::metrics::{accuracy, topk_accuracy};
@@ -290,6 +299,16 @@ impl SweepConfig {
         }
         cells
     }
+
+    /// The chunk size the engine actually uses (the value
+    /// [`SweepResult::chunk_cells`] reports): `chunk_cells` clamped to
+    /// `[1, grid size]`, or the whole grid when unset.  The distributed
+    /// coordinator and its workers both derive their unit boundaries from
+    /// this, so (trial × chunk) units mean the same cells everywhere.
+    pub fn resolved_chunk(&self) -> usize {
+        let n_cells = self.cells().len();
+        self.chunk_cells.unwrap_or(n_cells).clamp(1, n_cells.max(1))
+    }
 }
 
 /// Counters the grid-parity tests pin: the point of the shared-session
@@ -316,6 +335,34 @@ struct CellState {
     /// engine-accounted weight bytes of `qnet` (constant per cell; the term
     /// that makes unchunked peak residency scale with the grid size)
     net_bytes: usize,
+}
+
+/// A sweep-wide execution context shared by every [`SweepSession`] a sweep
+/// creates: ONE long-lived [`WorkerPool`] — so the whole sweep (every wave
+/// of every chunk of every trial) pays a single
+/// [`crate::coordinator::scheduler::pool_seedings`] increment — plus one
+/// shared owned copy of the analog network for the pool's `'static` jobs.
+/// With `workers <= 1` no pool is built at all: sessions run their waves
+/// serially inline and seed nothing, exactly like the scoped schedulers'
+/// single-worker fast paths.
+pub struct SweepPool {
+    pool: Option<Arc<WorkerPool>>,
+    net: Arc<Network>,
+}
+
+impl SweepPool {
+    /// Build the context for `net` with `workers` threads (≤ 1 ⇒ serial).
+    pub fn new(net: &Network, workers: usize) -> SweepPool {
+        SweepPool {
+            pool: (workers > 1).then(|| Arc::new(WorkerPool::new(workers))),
+            net: Arc::new(net.clone()),
+        }
+    }
+
+    /// True when a real thread pool backs this context (`workers > 1`).
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
+    }
 }
 
 /// What a completed [`SweepSession::run`] hands back.
@@ -372,10 +419,13 @@ pub struct ScoredOutcome<S> {
 /// network's weights.  All of the per-cell terms scale with the session's
 /// cell count — which is exactly what [`sweep_trials`] bounds by handing
 /// the engine `chunk_cells`-sized slices of the grid at a time.
-pub struct SweepSession<'a> {
-    net: &'a Network,
+pub struct SweepSession {
+    net: Arc<Network>,
+    /// the long-lived pool every wave of this session runs on (`None` ⇒
+    /// serial inline execution, zero pool seedings); shared across sessions
+    /// when the sweep hands the same [`SweepPool`] to each chunk
+    pool: Option<Arc<WorkerPool>>,
     fc_only: bool,
-    sched: SchedulerConfig,
     /// worker threads each cell job's inner neuron-block dispatch gets:
     /// `workers / n_cells` (≥ 1), so a 1-cell grid keeps the full
     /// neuron-block parallelism a per-cell run would have had, while a
@@ -451,16 +501,34 @@ fn quantize_cell(
     Ok(())
 }
 
-impl<'a> SweepSession<'a> {
+impl SweepSession {
     /// Stage a session: one shared analog stream plus a `CellState` per
-    /// grid cell, nothing quantized until the first step.
+    /// grid cell, nothing quantized until the first step.  Builds its own
+    /// [`SweepPool`] (one seeding per session when `workers > 1`); a sweep
+    /// running many chunks shares ONE context via
+    /// [`SweepSession::with_pool`] instead.
     pub fn new(
-        net: &'a Network,
+        net: &Network,
         x_quant: &Matrix,
         cells: Vec<SweepCell>,
         fc_only: bool,
         workers: usize,
     ) -> Self {
+        SweepSession::with_pool(x_quant, cells, fc_only, workers, &SweepPool::new(net, workers))
+    }
+
+    /// Stage a session on a shared sweep-wide context: the session's waves
+    /// run on `pool`'s worker pool (serially when it has none) against
+    /// `pool`'s network — no per-session pool seeding, no per-session
+    /// network clone beyond the per-cell copies the engine always makes.
+    pub fn with_pool(
+        x_quant: &Matrix,
+        cells: Vec<SweepCell>,
+        fc_only: bool,
+        workers: usize,
+        pool: &SweepPool,
+    ) -> Self {
+        let net = pool.net.clone();
         assert_eq!(x_quant.cols, net.input.len(), "quantization data width mismatch");
         let cell_workers = (workers / cells.len().max(1)).max(1);
         let net_bytes: usize =
@@ -469,19 +537,20 @@ impl<'a> SweepSession<'a> {
             .into_iter()
             .map(|cell| CellState {
                 cell,
-                qnet: net.clone(),
+                qnet: net.as_ref().clone(),
                 stream: CellStream::shared(),
                 seconds: 0.0,
                 views_built: 0,
                 net_bytes,
             })
             .collect();
+        let analog = AnalogStream::new(x_quant);
         let mut session = SweepSession {
             net,
+            pool: pool.pool.clone(),
             fc_only,
-            sched: SchedulerConfig::with_workers(workers),
             cell_workers,
-            analog: AnalogStream::new(x_quant),
+            analog,
             cells,
             next_layer: 0,
             shared_seconds: 0.0,
@@ -489,6 +558,27 @@ impl<'a> SweepSession<'a> {
         };
         session.update_peak(0);
         session
+    }
+
+    /// Run one wave over every cell on the session pool (serially inline
+    /// when there is none), putting the cells back in grid order.  The
+    /// fan-out changes scheduling, never bits.
+    fn cell_wave<F>(&mut self, work: F) -> Result<()>
+    where
+        F: Fn(usize, CellState) -> Result<CellState, Error> + Send + Sync + 'static,
+    {
+        let cells = std::mem::take(&mut self.cells);
+        self.cells = match &self.pool {
+            Some(pool) => pool_fan_out(pool, cells, work)?,
+            None => {
+                let mut out = Vec::with_capacity(cells.len());
+                for (i, c) in cells.into_iter().enumerate() {
+                    out.push(work(i, c)?);
+                }
+                out
+            }
+        };
+        Ok(())
     }
 
     /// Stream/view counters so far.
@@ -529,7 +619,7 @@ impl<'a> SweepSession<'a> {
     /// them) — the same early-out [`QuantizeSession`] performs.
     fn has_more(&self) -> bool {
         (self.next_layer..self.net.layers.len())
-            .any(|i| layer_selected(self.net, i, self.fc_only))
+            .any(|i| layer_selected(&self.net, i, self.fc_only))
     }
 
     /// Advance every stream through the next layer, quantizing it in every
@@ -540,24 +630,22 @@ impl<'a> SweepSession<'a> {
             return Ok(false);
         }
         let i = self.next_layer;
-        if layer_selected(self.net, i, self.fc_only) {
+        if layer_selected(&self.net, i, self.fc_only) {
             self.quantize_layer(i)?;
         } else {
             // ONE analog advance serves every cell that still shares the
             // prefix; cells that already diverged follow concurrently on
-            // the worker pool.
+            // the session pool.
             let t = Instant::now();
-            self.analog.advance_plain(self.net, i);
+            self.analog.advance_plain(&self.net, i);
             self.shared_seconds += t.elapsed().as_secs_f64();
             if self.cells.iter().any(|c| c.stream.is_diverged()) {
-                let cells = std::mem::take(&mut self.cells);
-                self.cells =
-                    run_jobs(self.sched, cells, |_, mut c| -> Result<CellState, Error> {
-                        let t = Instant::now();
-                        c.stream.advance_plain(&c.qnet, i);
-                        c.seconds += t.elapsed().as_secs_f64();
-                        Ok(c)
-                    })?;
+                self.cell_wave(move |_, mut c| {
+                    let t = Instant::now();
+                    c.stream.advance_plain(&c.qnet, i);
+                    c.seconds += t.elapsed().as_secs_f64();
+                    Ok(c)
+                })?;
             }
             self.update_peak(0);
         }
@@ -566,32 +654,32 @@ impl<'a> SweepSession<'a> {
     }
 
     /// Quantization point: ONE analog view + at most ONE analog advance
-    /// serve the whole grid; the cells fan out as jobs on the worker pool,
+    /// serve the whole grid; the cells fan out as jobs on the session pool,
     /// each building at most its own quantized-stream view.
     fn quantize_layer(&mut self, i: usize) -> Result<()> {
         // at the LAST quantization point the post-install stream advances
         // are unread (scoring uses the cell networks, never the streams) —
         // skip them, the stream-level analogue of has_more()'s early-out
         let last = !((i + 1)..self.net.layers.len())
-            .any(|j| layer_selected(self.net, j, self.fc_only));
+            .any(|j| layer_selected(&self.net, j, self.fc_only));
         let t = Instant::now();
-        let ty = self.analog.view(self.net, i);
+        let ty = self.analog.view(&self.net, i);
         let batch = self.analog.batch();
         if !last {
-            self.analog.advance_from_view(self.net, i, &ty);
+            self.analog.advance_from_view(&self.net, i, &ty);
         }
         self.shared_seconds += t.elapsed().as_secs_f64();
-        self.update_peak(mat_bytes(&ty));
+        let ty_bytes = mat_bytes(&ty);
+        self.update_peak(ty_bytes);
 
-        let net = self.net;
-        let w = net.layers[i].weights().expect("selected layer has weights");
+        let net = self.net.clone();
         let cell_workers = self.cell_workers;
-        let cells = std::mem::take(&mut self.cells);
-        self.cells = run_jobs(self.sched, cells, |_, mut c| -> Result<CellState, Error> {
-            quantize_cell(net, i, w, cell_workers, &ty, batch, !last, &mut c)?;
+        self.cell_wave(move |_, mut c| {
+            let w = net.layers[i].weights().expect("selected layer has weights");
+            quantize_cell(&net, i, w, cell_workers, &ty, batch, !last, &mut c)?;
             Ok(c)
         })?;
-        self.update_peak(mat_bytes(&ty));
+        self.update_peak(ty_bytes);
         Ok(())
     }
 
@@ -611,32 +699,58 @@ impl<'a> SweepSession<'a> {
     }
 
     /// Drive the grid to completion with **fused scoring**: each cell's
-    /// scoring job (`score(&qnet)`) is chained behind its final
-    /// quantization job on the same worker-pool seeding
-    /// ([`run_chained_jobs`]), so the pool never drains between the
-    /// quantize and score phases and each cell's network is dropped the
-    /// moment its score exists — nothing outlives the chunk but the
-    /// scores.  Bit-identical to [`SweepSession::run`] followed by scoring
-    /// each network (the fusion changes scheduling, never values).
-    pub fn run_scored<S, F>(mut self, score: F) -> Result<ScoredOutcome<S>>
+    /// scoring job (`score(&qnet)`) runs immediately after its final
+    /// quantization job, on the same worker, on the session pool's single
+    /// seeding — the pool never drains between the quantize and score
+    /// phases and each cell's network is dropped the moment its score
+    /// exists; nothing outlives the chunk but the scores.  Bit-identical
+    /// to [`SweepSession::run`] followed by scoring each network (the
+    /// fusion changes scheduling, never values).
+    pub fn run_scored<S, F>(self, score: F) -> Result<ScoredOutcome<S>>
     where
-        S: Send,
-        F: Fn(&Network) -> S + Sync,
+        S: Send + 'static,
+        F: Fn(&Network) -> S + Send + Sync + 'static,
+    {
+        self.run_scored_deferred(score)?.wait()
+    }
+
+    /// Like [`SweepSession::run_scored`], but the final fused
+    /// quantize→score wave is left **in flight**: the returned
+    /// [`PendingScored`] resolves it on [`PendingScored::wait`].  A sweep
+    /// holding the shared [`SweepPool`] stages the next chunk (whose
+    /// analog-stream advance runs on the same pool) while this chunk's
+    /// tail cells are still scoring — the trial-overlap that hides the
+    /// scoring tail without changing any value: every per-chunk number
+    /// (scores, seconds, stream counters, peak) is fixed before this
+    /// returns or computed per cell, independent of what else the pool
+    /// runs.
+    pub fn run_scored_deferred<S, F>(mut self, score: F) -> Result<PendingScored<S>>
+    where
+        S: Send + 'static,
+        F: Fn(&Network) -> S + Send + Sync + 'static,
     {
         let last_q = (0..self.net.layers.len())
             .rev()
-            .find(|&i| layer_selected(self.net, i, self.fc_only));
+            .find(|&i| layer_selected(&self.net, i, self.fc_only));
         let (Some(last_q), false) = (last_q, self.cells.is_empty()) else {
-            // nothing to quantize (or no cells): one plain scoring fan-out
+            // nothing to quantize (or no cells): one plain scoring wave,
+            // resolved before returning — there is no tail to overlap
             let analog_stats = self.stats();
             let cells = std::mem::take(&mut self.cells);
-            let scored =
-                run_jobs(self.sched, cells, |_, c| -> Result<(SweepCell, S, f64), Error> {
-                    Ok((c.cell, score(&c.qnet), c.seconds))
-                })?;
-            return Ok(ScoredOutcome {
-                scored,
-                stats: analog_stats,
+            let resolved = match &self.pool {
+                Some(pool) => {
+                    pool_fan_out(pool, cells, move |_, c: CellState| -> Result<_, Error> {
+                        Ok((c.cell, score(&c.qnet), c.seconds))
+                    })?
+                }
+                None => cells.into_iter().map(|c| (c.cell, score(&c.qnet), c.seconds)).collect(),
+            };
+            return Ok(PendingScored {
+                wave: None,
+                resolved,
+                resolved_cell_views: analog_stats.cell_views,
+                analog_advances: analog_stats.analog_advances,
+                analog_views: analog_stats.analog_views,
                 shared_seconds: self.shared_seconds,
                 peak_resident_bytes: self.peak_bytes,
             });
@@ -646,48 +760,110 @@ impl<'a> SweepSession<'a> {
         }
         debug_assert_eq!(self.next_layer, last_q, "streams must stop at the last point");
 
-        // fused final fan-out: quantize the last layer and score, chained
+        // fused final fan-out: quantize the last layer and score, fused
         let t = Instant::now();
-        let ty = self.analog.view(self.net, last_q);
+        let ty = self.analog.view(&self.net, last_q);
         let batch = self.analog.batch();
         self.shared_seconds += t.elapsed().as_secs_f64();
         self.update_peak(mat_bytes(&ty));
 
-        let net = self.net;
-        let w = net.layers[last_q].weights().expect("selected layer has weights");
+        let analog_advances = self.analog.advances();
+        let analog_views = self.analog.views_built();
+        let shared_seconds = self.shared_seconds;
+        let peak_resident_bytes = self.peak_bytes;
+        let net = self.net.clone();
         let cell_workers = self.cell_workers;
         let cells = std::mem::take(&mut self.cells);
-        let score = &score;
-        let results = run_chained_jobs(
-            self.sched,
-            cells,
-            |_, mut c| -> Result<CellState, Error> {
-                quantize_cell(net, last_q, w, cell_workers, &ty, batch, false, &mut c)?;
-                Ok(c)
-            },
-            |_, c| -> Result<(SweepCell, S, f64, usize), Error> {
-                // the chained scoring job: the cell's network dies with `c`
-                // when this returns — only the score survives the chunk
-                let s = score(&c.qnet);
-                Ok((c.cell, s, c.seconds, c.views_built))
-            },
-        )?;
-
-        let mut scored = Vec::with_capacity(results.len());
-        let mut cell_views = 0;
-        for (cell, s, seconds, views) in results {
-            cell_views += views;
-            scored.push((cell, s, seconds));
+        match &self.pool {
+            Some(pool) => {
+                let wave = pool_fan_out_deferred(pool, cells, move |_, mut c| {
+                    let w =
+                        net.layers[last_q].weights().expect("selected layer has weights");
+                    quantize_cell(&net, last_q, w, cell_workers, &ty, batch, false, &mut c)?;
+                    // the fused scoring tail: the cell's network dies with
+                    // `c` when this returns — only the score survives
+                    let s = score(&c.qnet);
+                    Ok((c.cell, s, c.seconds, c.views_built))
+                });
+                Ok(PendingScored {
+                    wave: Some(wave),
+                    resolved: Vec::new(),
+                    resolved_cell_views: 0,
+                    analog_advances,
+                    analog_views,
+                    shared_seconds,
+                    peak_resident_bytes,
+                })
+            }
+            None => {
+                let w = net.layers[last_q].weights().expect("selected layer has weights");
+                let mut resolved = Vec::with_capacity(cells.len());
+                let mut cell_views = 0;
+                for mut c in cells {
+                    quantize_cell(&net, last_q, w, cell_workers, &ty, batch, false, &mut c)?;
+                    let s = score(&c.qnet);
+                    cell_views += c.views_built;
+                    resolved.push((c.cell, s, c.seconds));
+                }
+                Ok(PendingScored {
+                    wave: None,
+                    resolved,
+                    resolved_cell_views: cell_views,
+                    analog_advances,
+                    analog_views,
+                    shared_seconds,
+                    peak_resident_bytes,
+                })
+            }
         }
+    }
+}
+
+/// A chunk whose final fused quantize→score wave may still be in flight on
+/// the shared [`SweepPool`] — the handle [`SweepSession::run_scored_deferred`]
+/// returns.  Everything except the wave itself (analog counters, shared
+/// seconds, the engine-accounted peak) was already final at defer time;
+/// [`PendingScored::wait`] collects the per-cell scores in grid order and
+/// assembles the [`ScoredOutcome`].
+pub struct PendingScored<S> {
+    /// the in-flight wave (`None` when the session ran serially or had
+    /// nothing to quantize — then `resolved` already holds the scores)
+    wave: Option<PendingWave<(SweepCell, S, f64, usize), Error>>,
+    resolved: Vec<(SweepCell, S, f64)>,
+    resolved_cell_views: usize,
+    analog_advances: usize,
+    analog_views: usize,
+    shared_seconds: f64,
+    peak_resident_bytes: usize,
+}
+
+impl<S> PendingScored<S> {
+    /// Block until every tail cell has scored, then hand back the chunk's
+    /// [`ScoredOutcome`] — identical to what the non-deferred
+    /// [`SweepSession::run_scored`] returns.
+    pub fn wait(self) -> Result<ScoredOutcome<S>> {
+        let (scored, cell_views) = match self.wave {
+            Some(wave) => {
+                let results = wave.wait()?;
+                let mut scored = Vec::with_capacity(results.len());
+                let mut cell_views = 0;
+                for (cell, s, seconds, views) in results {
+                    cell_views += views;
+                    scored.push((cell, s, seconds));
+                }
+                (scored, cell_views)
+            }
+            None => (self.resolved, self.resolved_cell_views),
+        };
         Ok(ScoredOutcome {
             scored,
             stats: SweepEngineStats {
-                analog_advances: self.analog.advances(),
-                analog_views: self.analog.views_built(),
+                analog_advances: self.analog_advances,
+                analog_views: self.analog_views,
                 cell_views,
             },
             shared_seconds: self.shared_seconds,
-            peak_resident_bytes: self.peak_bytes,
+            peak_resident_bytes: self.peak_resident_bytes,
         })
     }
 }
@@ -698,13 +874,41 @@ struct CellScore {
     top5: f64,
 }
 
+/// Resolve one deferred chunk and fold its scores into the sweep
+/// accumulators at `base`.  Called strictly in canonical (trial, chunk)
+/// order, so the accumulation — including the order-sensitive f64 `+=`
+/// sums — is identical to a fully synchronous sweep.
+#[allow(clippy::too_many_arguments)]
+fn merge_chunk(
+    pending: PendingScored<CellScore>,
+    base: usize,
+    cells: &[SweepCell],
+    top1s: &mut [Vec<f64>],
+    top5s: &mut [Vec<f64>],
+    secs: &mut [f64],
+    shared_seconds: &mut f64,
+    peak: &mut usize,
+) {
+    let out = pending.wait().expect("sweep session failed");
+    *shared_seconds += out.shared_seconds;
+    *peak = (*peak).max(out.peak_resident_bytes);
+    for (j, (cell, s, cell_secs)) in out.scored.into_iter().enumerate() {
+        debug_assert_eq!(cell, cells[base + j], "grid order preserved");
+        top1s[base + j].push(s.top1);
+        top5s[base + j].push(s.top5);
+        secs[base + j] += cell_secs;
+    }
+}
+
 /// Run the full grid over every trial's sample set on the memory-bounded
 /// engine.  For each trial × chunk, a fresh [`SweepSession`] advances that
 /// trial's analog stream once and fans the chunk's cells out with fused
 /// quantize→score jobs; only the scores survive a chunk, so peak resident
 /// bytes are bounded by the chunk size (`test` scores every quantized
-/// network; scoring rides the same pool seeding as the final quantize
-/// jobs).
+/// network).  All chunks of all trials share ONE [`SweepPool`] — a single
+/// pool seeding for the whole sweep — and each chunk's scoring tail is
+/// deferred so the next chunk's analog advance overlaps it (merged in
+/// canonical order: bit-identical to the synchronous sweep).
 pub fn sweep_trials(
     net: &Network,
     trials: &TrialSet,
@@ -715,14 +919,26 @@ pub fn sweep_trials(
     let analog_top5 = if cfg.topk { topk_accuracy(net, test, 5) } else { 0.0 };
     let cells = cfg.cells();
     let n_cells = cells.len();
-    let chunk = cfg.chunk_cells.unwrap_or(n_cells).clamp(1, n_cells.max(1));
+    let chunk = cfg.resolved_chunk();
     let topk = cfg.topk;
+
+    // ONE pool seeding (and one shared owned network) for the whole sweep:
+    // every chunk of every trial runs its waves on this context
+    let pool = SweepPool::new(net, cfg.workers);
+    // owned test set for the 'static fused scoring jobs (one clone per sweep)
+    let test_owned = Arc::new(test.clone());
 
     let mut top1s: Vec<Vec<f64>> = vec![Vec::with_capacity(trials.len()); n_cells];
     let mut top5s: Vec<Vec<f64>> = vec![Vec::with_capacity(trials.len()); n_cells];
     let mut secs = vec![0.0f64; n_cells];
     let mut shared_seconds = 0.0;
     let mut peak = 0usize;
+    // the deferred tail: chunk k's fused quantize→score jobs stay in
+    // flight while chunk k+1 — possibly the next trial — advances its
+    // analog stream on the same pool.  Merging happens strictly in
+    // canonical (trial, chunk) order, so the overlap changes wall-clock,
+    // never bits.
+    let mut pending: Option<(usize, PendingScored<CellScore>)> = None;
     for t in 0..trials.len() {
         // lazy draw: trial t's sample set is materialized here, when its
         // trial starts, and dropped at the end of the iteration — resident
@@ -730,23 +946,46 @@ pub fn sweep_trials(
         let x = trials.sample_set(t);
         for (ci, chunk_cells) in cells.chunks(chunk).enumerate() {
             let base = ci * chunk;
-            let session =
-                SweepSession::new(net, &x, chunk_cells.to_vec(), cfg.fc_only, cfg.workers);
-            let out = session
-                .run_scored(|qnet| CellScore {
-                    top1: accuracy(qnet, test),
-                    top5: if topk { topk_accuracy(qnet, test, 5) } else { 0.0 },
+            let session = SweepSession::with_pool(
+                &x,
+                chunk_cells.to_vec(),
+                cfg.fc_only,
+                cfg.workers,
+                &pool,
+            );
+            let te = test_owned.clone();
+            let deferred = session
+                .run_scored_deferred(move |qnet| CellScore {
+                    top1: accuracy(qnet, &te),
+                    top5: if topk { topk_accuracy(qnet, &te, 5) } else { 0.0 },
                 })
                 .expect("sweep session failed");
-            shared_seconds += out.shared_seconds;
-            peak = peak.max(out.peak_resident_bytes);
-            for (j, (cell, s, cell_secs)) in out.scored.into_iter().enumerate() {
-                debug_assert_eq!(cell, cells[base + j], "grid order preserved");
-                top1s[base + j].push(s.top1);
-                top5s[base + j].push(s.top5);
-                secs[base + j] += cell_secs;
+            if let Some((pbase, prev)) = pending.take() {
+                merge_chunk(
+                    prev,
+                    pbase,
+                    &cells,
+                    &mut top1s,
+                    &mut top5s,
+                    &mut secs,
+                    &mut shared_seconds,
+                    &mut peak,
+                );
             }
+            pending = Some((base, deferred));
         }
+    }
+    if let Some((pbase, prev)) = pending.take() {
+        merge_chunk(
+            prev,
+            pbase,
+            &cells,
+            &mut top1s,
+            &mut top5s,
+            &mut secs,
+            &mut shared_seconds,
+            &mut peak,
+        );
     }
 
     let points = cells

@@ -313,24 +313,26 @@ fn run_batch(
 // connection handling
 // ---------------------------------------------------------------------------
 
-/// A parsed HTTP request (the subset the server speaks).
+/// A parsed HTTP request (the subset the server speaks).  `pub(crate)` so
+/// the distributed-sweep worker ([`crate::coordinator::dist`]) can reuse
+/// the exact same wire parser for its unit protocol.
 #[derive(Debug)]
-struct HttpRequest {
-    method: String,
-    path: String,
-    body: String,
+pub(crate) struct HttpRequest {
+    pub(crate) method: String,
+    pub(crate) path: String,
+    pub(crate) body: String,
     /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
     /// HTTP/1.0 defaults to close unless `Connection: keep-alive`.
-    keep_alive: bool,
+    pub(crate) keep_alive: bool,
 }
 
 /// Parse failure → HTTP status + message.  `quiet` marks a clean
 /// keep-alive close (EOF or idle timeout *between* requests) that
 /// deserves neither an error response nor an error stat.
-struct HttpError {
-    status: u16,
-    msg: String,
-    quiet: bool,
+pub(crate) struct HttpError {
+    pub(crate) status: u16,
+    pub(crate) msg: String,
+    pub(crate) quiet: bool,
 }
 
 impl HttpError {
@@ -351,8 +353,9 @@ const MAX_HEADER_BYTES: usize = 16 << 10;
 const KEEP_ALIVE_IDLE: Duration = Duration::from_secs(2);
 
 /// Read and parse one HTTP/1.1 request from `stream`.  Generic over
-/// `Read` so the parser is unit-testable on byte slices.
-fn read_request(
+/// `Read` so the parser is unit-testable on byte slices (and reusable by
+/// the distributed-sweep worker's accept loop).
+pub(crate) fn read_request(
     stream: &mut impl Read,
     max_body: usize,
 ) -> std::result::Result<HttpRequest, HttpError> {
@@ -466,7 +469,9 @@ fn status_reason(status: u16) -> &'static str {
     }
 }
 
-fn write_response(
+/// Serialize `body` as one keep-alive-framed JSON response (shared with
+/// the distributed-sweep worker, which speaks the same wire format).
+pub(crate) fn write_response(
     stream: &mut impl Write,
     status: u16,
     body: &Json,
@@ -610,6 +615,9 @@ fn infer(
         }
         receivers.push(rx);
     }
+    // backlog pressure right after this request's rows were queued — the
+    // gauge `GET /stats` exposes as queue_depth / queue_depth_max
+    stats.record_queue_depth(batcher.len());
     let mut outputs = Vec::with_capacity(receivers.len());
     for rx in receivers {
         let logits = match rx.recv() {
@@ -702,6 +710,14 @@ impl HttpClient {
         stream.set_read_timeout(Some(Duration::from_secs(30)))?;
         stream.set_nodelay(true)?;
         Ok(HttpClient { stream, addr, buf: Vec::new() })
+    }
+
+    /// Override the response read timeout (default 30 s).  The distributed
+    /// sweep coordinator uses this to bound how long a work unit may hang
+    /// on a worker before the unit is re-queued elsewhere.
+    pub fn set_read_timeout(&mut self, timeout: Duration) -> Result<()> {
+        self.stream.set_read_timeout(Some(timeout)).context("setting read timeout")?;
+        Ok(())
     }
 
     /// One request/response exchange on the persistent connection;

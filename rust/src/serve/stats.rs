@@ -59,6 +59,10 @@ pub struct ServeStats {
     batch_sizes: Mutex<BTreeMap<usize, u64>>,
     requests: AtomicU64,
     errors: AtomicU64,
+    /// last observed micro-batcher backlog (jobs queued, not yet released)
+    queue_depth: AtomicU64,
+    /// largest backlog ever observed (high-watermark)
+    queue_depth_max: AtomicU64,
     started: Instant,
 }
 
@@ -76,8 +80,20 @@ impl ServeStats {
             batch_sizes: Mutex::new(BTreeMap::new()),
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            queue_depth_max: AtomicU64::new(0),
             started: Instant::now(),
         }
+    }
+
+    /// Record the micro-batcher backlog observed after queueing a request's
+    /// rows: a point-in-time pressure gauge (`queue_depth`) plus its
+    /// high-watermark (`queue_depth_max`), both exposed by `GET /stats` so
+    /// operators can see backlog building before latency does.
+    pub fn record_queue_depth(&self, depth: usize) {
+        let depth = depth as u64;
+        self.queue_depth.store(depth, Ordering::Relaxed);
+        self.queue_depth_max.fetch_max(depth, Ordering::Relaxed);
     }
 
     /// Record one served inference request and its latency.
@@ -128,6 +144,8 @@ impl ServeStats {
             p99_us: sorted_quantile(&xs, 0.99),
             max_us: xs.last().copied().unwrap_or(0.0),
             mean_batch: if batches > 0 { batched_requests as f64 / batches as f64 } else { 0.0 },
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            queue_depth_max: self.queue_depth_max.load(Ordering::Relaxed),
             batch_hist,
         }
     }
@@ -171,6 +189,10 @@ pub struct StatsSnapshot {
     pub max_us: f64,
     /// mean released batch size (1.0 = the batcher never coalesced)
     pub mean_batch: f64,
+    /// micro-batcher backlog at the last queue-depth observation
+    pub queue_depth: u64,
+    /// largest micro-batcher backlog observed over the window
+    pub queue_depth_max: u64,
     /// batch size → number of batches released at that size
     pub batch_hist: BTreeMap<usize, u64>,
 }
@@ -193,6 +215,8 @@ impl StatsSnapshot {
         o.insert("latency_p99_us".into(), Json::Num(self.p99_us));
         o.insert("latency_max_us".into(), Json::Num(self.max_us));
         o.insert("mean_batch".into(), Json::Num(self.mean_batch));
+        o.insert("queue_depth".into(), Json::Num(self.queue_depth as f64));
+        o.insert("queue_depth_max".into(), Json::Num(self.queue_depth_max as f64));
         o.insert("batch_hist".into(), Json::Obj(hist));
         Json::Obj(o)
     }
@@ -284,11 +308,29 @@ mod tests {
         s.record_request(120);
         s.record_batch(2);
         s.record_error();
+        s.record_queue_depth(3);
         let doc = s.snapshot().to_json().to_string();
         let v = crate::util::json::parse(&doc).unwrap();
         assert_eq!(v.get("requests").as_f64(), Some(1.0));
         assert_eq!(v.get("errors").as_f64(), Some(1.0));
         assert_eq!(v.get("batch_hist").get("2").as_f64(), Some(1.0));
         assert_eq!(v.get("latency_p50_us").as_f64(), Some(120.0));
+        assert_eq!(v.get("queue_depth").as_f64(), Some(3.0));
+        assert_eq!(v.get("queue_depth_max").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn queue_depth_gauge_tracks_current_and_watermark() {
+        let s = ServeStats::new();
+        let snap = s.snapshot();
+        assert_eq!((snap.queue_depth, snap.queue_depth_max), (0, 0), "fresh gauge is zero");
+        s.record_queue_depth(5);
+        s.record_queue_depth(9);
+        // the gauge follows the latest observation down; the watermark
+        // never moves down
+        s.record_queue_depth(2);
+        let snap = s.snapshot();
+        assert_eq!(snap.queue_depth, 2);
+        assert_eq!(snap.queue_depth_max, 9);
     }
 }

@@ -1,0 +1,198 @@
+//! Distributed sweep parity, pinned hard: sharding (trial × chunk) work
+//! units across worker processes must be a pure scheduling change.  The
+//! merged artifact — trial-0 scores, per-trial vectors, `TrialStats`,
+//! best-cell selection, `peak_resident_bytes` — is compared **bit for
+//! bit** (`f64::to_bits`) against in-process [`sweep_trials`] for 1, 2
+//! and 4 workers; only wall-clock timing fields are exempt.  The workers
+//! here are threads holding their own copies of everything (network,
+//! trial recipe, test set), speaking the real loopback HTTP protocol —
+//! the same `run_worker` the `gpfq sweep-worker` process runs.
+
+use std::net::{SocketAddr, TcpListener};
+use std::thread::JoinHandle;
+
+use gpfq::coordinator::dist::sweep_fingerprint;
+use gpfq::coordinator::sweep::TrialStats;
+use gpfq::coordinator::{
+    dist_sweep_trials, run_worker, sweep_trials, DistConfig, Method, SweepConfig, SweepResult,
+    TrialSet, UnitOutcome, WorkerFault,
+};
+use gpfq::data::synth::{generate, SynthSpec};
+use gpfq::data::Dataset;
+use gpfq::nn::conv::ImgShape;
+use gpfq::nn::network::{mnist_mlp, Network};
+use gpfq::serve::HttpClient;
+use gpfq::train::{train, TrainConfig};
+
+/// The shared trial recipe — coordinator and every worker must agree on
+/// it (the fingerprint handshake enforces that they do).
+const N_QUANT: usize = 60;
+const N_TRIALS: usize = 2;
+const TRIAL_SEED: u64 = 7;
+
+fn trained_mlp() -> (Network, Dataset, Dataset) {
+    let spec = SynthSpec {
+        classes: 3,
+        shape: ImgShape { h: 8, w: 8, c: 1 },
+        blobs: 4,
+        noise: 0.15,
+        max_shift: 1,
+        seed: 21,
+    };
+    let tr = generate(&spec, 240, 0, false);
+    let te = generate(&spec, 120, 1, false);
+    let mut net = mnist_mlp(2, 64, &[32], 3);
+    train(
+        &mut net,
+        &tr,
+        &TrainConfig { epochs: 6, batch: 32, lr: 0.05, momentum: 0.9, seed: 2, verbose: false },
+    );
+    (net, tr, te)
+}
+
+fn grid() -> SweepConfig {
+    SweepConfig {
+        levels: vec![3],
+        c_alphas: vec![2.0, 4.0],
+        methods: vec![Method::Gpfq, Method::Msq],
+        fc_only: false,
+        topk: true,
+        workers: 2,
+        chunk_cells: Some(2),
+    }
+}
+
+/// Spawn one worker "process" (a thread with its own copies of
+/// everything) serving the given spec off an ephemeral loopback port.
+fn spawn_worker(
+    net: &Network,
+    tr: &Dataset,
+    te: &Dataset,
+    cfg: &SweepConfig,
+    fault: WorkerFault,
+) -> (SocketAddr, JoinHandle<usize>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (net, tr, te, cfg) = (net.clone(), tr.clone(), te.clone(), cfg.clone());
+    let handle = std::thread::spawn(move || {
+        let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+        run_worker(listener, &net, &trials, &te, &cfg, fault).expect("worker serves")
+    });
+    (addr, handle)
+}
+
+fn bits(x: f64, y: f64, what: &str) {
+    assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} vs {y}");
+}
+
+fn stats_bits(a: &TrialStats, b: &TrialStats, what: &str) {
+    bits(a.mean, b.mean, &format!("{what}.mean"));
+    bits(a.std, b.std, &format!("{what}.std"));
+    bits(a.min, b.min, &format!("{what}.min"));
+    bits(a.max, b.max, &format!("{what}.max"));
+}
+
+/// Every bit-comparable field of the sweep artifact; wall-clock fields
+/// (`shared_seconds`, per-cell `seconds`) are exempt by contract.
+fn assert_bit_identical(a: &SweepResult, b: &SweepResult, tag: &str) {
+    bits(a.analog_top1, b.analog_top1, &format!("{tag}: analog_top1"));
+    bits(a.analog_top5, b.analog_top5, &format!("{tag}: analog_top5"));
+    assert_eq!(a.trials, b.trials, "{tag}: trials");
+    assert_eq!(a.chunk_cells, b.chunk_cells, "{tag}: chunk_cells");
+    assert_eq!(a.peak_resident_bytes, b.peak_resident_bytes, "{tag}: peak_resident_bytes");
+    assert_eq!(a.points.len(), b.points.len(), "{tag}: point count");
+    for (i, (p, q)) in a.points.iter().zip(&b.points).enumerate() {
+        let what = format!("{tag}: cell {i}");
+        assert_eq!(p.method, q.method, "{what}: method");
+        assert_eq!(p.levels, q.levels, "{what}: levels");
+        bits(p.c_alpha, q.c_alpha, &format!("{what}: c_alpha"));
+        bits(p.c_alpha_requested, q.c_alpha_requested, &format!("{what}: c_alpha_requested"));
+        bits(p.top1, q.top1, &format!("{what}: trial-0 top1"));
+        bits(p.top5, q.top5, &format!("{what}: trial-0 top5"));
+        assert_eq!(p.top1_trials.len(), q.top1_trials.len(), "{what}: trial vector");
+        for (t, (x, y)) in p.top1_trials.iter().zip(&q.top1_trials).enumerate() {
+            bits(*x, *y, &format!("{what}: top1 trial {t}"));
+        }
+        for (t, (x, y)) in p.top5_trials.iter().zip(&q.top5_trials).enumerate() {
+            bits(*x, *y, &format!("{what}: top5 trial {t}"));
+        }
+        stats_bits(&p.top1_stats, &q.top1_stats, &format!("{what}: top1_stats"));
+        stats_bits(&p.top5_stats, &q.top5_stats, &format!("{what}: top5_stats"));
+    }
+    for m in [Method::Gpfq, Method::Msq] {
+        let pick = |r: &SweepResult| r.best(m).map(|p| (p.levels, p.c_alpha_requested.to_bits()));
+        assert_eq!(pick(a), pick(b), "{tag}: best {m:?} cell");
+    }
+}
+
+/// The tentpole acceptance pin: 1, 2 and 4 workers all merge to the
+/// exact in-process artifact, with zero re-queues and every assignment
+/// receipt `Done`.
+#[test]
+fn dist_sweep_bit_identical_to_in_process_for_1_2_4_workers() {
+    let (net, tr, te) = trained_mlp();
+    let cfg = grid();
+    let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+    let baseline = sweep_trials(&net, &trials, &te, &cfg);
+    let n_units = N_TRIALS * 2; // 4 cells / chunk 2 = 2 chunks per trial
+
+    for n_workers in [1usize, 2, 4] {
+        let spawned: Vec<_> =
+            (0..n_workers).map(|_| spawn_worker(&net, &tr, &te, &cfg, WorkerFault::default())).collect();
+        let dcfg = DistConfig::new(spawned.iter().map(|(a, _)| *a).collect());
+        let out = dist_sweep_trials(&net, &trials, &te, &cfg, &dcfg)
+            .expect("healthy distributed sweep");
+        assert_bit_identical(&baseline, &out.result, &format!("{n_workers} workers"));
+        assert_eq!(out.requeues, 0, "{n_workers} workers: healthy run never re-queues");
+        assert_eq!(
+            out.worker_units.iter().sum::<usize>(),
+            n_units,
+            "{n_workers} workers: every unit served exactly once"
+        );
+        assert_eq!(out.assignments.len(), n_units, "{n_workers} workers: one receipt per unit");
+        assert!(
+            out.assignments.iter().all(|a| a.outcome == UnitOutcome::Done),
+            "{n_workers} workers: all receipts Done"
+        );
+        for (i, (_, handle)) in spawned.into_iter().enumerate() {
+            let served = handle.join().expect("worker thread exits after /shutdown");
+            assert_eq!(
+                served, out.worker_units[i],
+                "worker {i}: served count agrees with the coordinator's receipt"
+            );
+        }
+    }
+}
+
+/// A worker whose spec drifted (different grid here) must refuse the
+/// handshake and fail the sweep loudly — never silently merge foreign
+/// numbers.
+#[test]
+fn fingerprint_mismatch_fails_the_handshake_loudly() {
+    let (net, tr, te) = trained_mlp();
+    let cfg = grid();
+    let drifted = SweepConfig { c_alphas: vec![1.0, 3.0], ..cfg.clone() };
+    assert_ne!(
+        {
+            let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+            sweep_fingerprint(&net, &trials, &cfg)
+        },
+        {
+            let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+            sweep_fingerprint(&net, &trials, &drifted)
+        },
+        "the drifted grid must change the fingerprint"
+    );
+    let (addr, handle) = spawn_worker(&net, &tr, &te, &drifted, WorkerFault::default());
+    let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+    let err = dist_sweep_trials(&net, &trials, &te, &cfg, &DistConfig::new(vec![addr]))
+        .expect_err("drifted worker must fail the sweep");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("fingerprint"), "error names the cause: {msg}");
+    // the refusing worker keeps serving (it never got a unit); shut it
+    // down by hand so the thread exits
+    let mut client = HttpClient::connect(addr).unwrap();
+    let (status, _) = client.request("POST", "/shutdown", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(handle.join().unwrap(), 0, "the drifted worker served nothing");
+}

@@ -138,3 +138,212 @@ fn model_file_corruption_detected() {
     assert!(load_file(&path).is_err());
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// Service-level failure injection for the distributed sweep: kill or
+/// hang a worker mid-unit and prove the coordinator re-queues the unit
+/// (with an explicit assignment receipt), converges on the survivors,
+/// and merges an artifact **bit-identical** to the healthy in-process
+/// sweep — or, when no worker can finish the work, fails loudly instead
+/// of silently returning partial numbers.
+mod dist_service {
+    use std::net::{SocketAddr, TcpListener};
+    use std::thread::JoinHandle;
+    use std::time::Duration;
+
+    use gpfq::coordinator::{
+        dist_sweep_trials, run_worker, sweep_trials, DistConfig, Method, SweepConfig,
+        SweepResult, TrialSet, UnitOutcome, WorkerFault,
+    };
+    use gpfq::data::synth::{generate, SynthSpec};
+    use gpfq::data::Dataset;
+    use gpfq::nn::conv::ImgShape;
+    use gpfq::nn::network::{mnist_mlp, Network};
+    use gpfq::serve::HttpClient;
+    use gpfq::train::{train, TrainConfig};
+
+    const N_QUANT: usize = 60;
+    const N_TRIALS: usize = 2;
+    const TRIAL_SEED: u64 = 7;
+
+    fn trained_mlp() -> (Network, Dataset, Dataset) {
+        let spec = SynthSpec {
+            classes: 3,
+            shape: ImgShape { h: 8, w: 8, c: 1 },
+            blobs: 4,
+            noise: 0.15,
+            max_shift: 1,
+            seed: 21,
+        };
+        let tr = generate(&spec, 240, 0, false);
+        let te = generate(&spec, 120, 1, false);
+        let mut net = mnist_mlp(2, 64, &[32], 3);
+        train(
+            &mut net,
+            &tr,
+            &TrainConfig { epochs: 6, batch: 32, lr: 0.05, momentum: 0.9, seed: 2, verbose: false },
+        );
+        (net, tr, te)
+    }
+
+    fn grid() -> SweepConfig {
+        SweepConfig {
+            levels: vec![3],
+            c_alphas: vec![2.0, 4.0],
+            methods: vec![Method::Gpfq, Method::Msq],
+            fc_only: false,
+            topk: false,
+            workers: 2,
+            chunk_cells: Some(2),
+        }
+    }
+
+    fn spawn_worker(
+        net: &Network,
+        tr: &Dataset,
+        te: &Dataset,
+        cfg: &SweepConfig,
+        fault: WorkerFault,
+    ) -> (SocketAddr, JoinHandle<usize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (net, tr, te, cfg) = (net.clone(), tr.clone(), te.clone(), cfg.clone());
+        let handle = std::thread::spawn(move || {
+            let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+            run_worker(listener, &net, &trials, &te, &cfg, fault).expect("worker serves")
+        });
+        (addr, handle)
+    }
+
+    /// Scores/stats/peak only — the wall-clock exemption is covered by
+    /// the full field-by-field pin in `test_dist_sweep.rs`.
+    fn assert_scores_bit_identical(a: &SweepResult, b: &SweepResult) {
+        assert_eq!(a.peak_resident_bytes, b.peak_resident_bytes);
+        assert_eq!(a.points.len(), b.points.len());
+        for (p, q) in a.points.iter().zip(&b.points) {
+            assert_eq!(p.top1.to_bits(), q.top1.to_bits(), "trial-0 top1");
+            assert_eq!(p.top1_trials.len(), q.top1_trials.len());
+            for (x, y) in p.top1_trials.iter().zip(&q.top1_trials) {
+                assert_eq!(x.to_bits(), y.to_bits(), "trial vector");
+            }
+            assert_eq!(p.top1_stats.mean.to_bits(), q.top1_stats.mean.to_bits(), "mean");
+            assert_eq!(p.top1_stats.std.to_bits(), q.top1_stats.std.to_bits(), "std");
+        }
+    }
+
+    /// Kill a worker on its FIRST unit (connection dropped mid-request):
+    /// the unit is re-queued with a `Failed` receipt and re-runs on the
+    /// survivor; the merged artifact is bit-identical to the healthy
+    /// in-process sweep.
+    #[test]
+    fn worker_death_mid_unit_requeues_and_converges_bit_identically() {
+        let (net, tr, te) = trained_mlp();
+        let cfg = grid();
+        let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+        let baseline = sweep_trials(&net, &trials, &te, &cfg);
+
+        let (addr_dying, h_dying) =
+            spawn_worker(&net, &tr, &te, &cfg, WorkerFault { fail_after: Some(0), hang: None });
+        // the survivor dwells 300ms on its first unit (well under the
+        // 120s timeout) so the dying worker's driver is guaranteed to
+        // pop a unit before the queue drains — the death always fires
+        let dwell = WorkerFault { fail_after: None, hang: Some((0, Duration::from_millis(300))) };
+        let (addr_ok, h_ok) = spawn_worker(&net, &tr, &te, &cfg, dwell);
+        let dcfg = DistConfig::new(vec![addr_dying, addr_ok]);
+        let out = dist_sweep_trials(&net, &trials, &te, &cfg, &dcfg)
+            .expect("the survivor finishes the sweep");
+
+        assert_scores_bit_identical(&baseline, &out.result);
+        assert_eq!(out.requeues, 1, "the dropped unit is re-queued exactly once");
+        let failed: Vec<_> = out
+            .assignments
+            .iter()
+            .filter(|a| a.outcome == UnitOutcome::Failed)
+            .collect();
+        assert_eq!(failed.len(), 1, "one explicit failure receipt");
+        assert_eq!(failed[0].worker, 0, "the receipt names the dead worker");
+        assert_eq!(failed[0].attempt, 0);
+        // the same unit later completed on a higher attempt
+        assert!(
+            out.assignments.iter().any(|a| a.unit == failed[0].unit
+                && a.outcome == UnitOutcome::Done
+                && a.attempt == 1),
+            "the re-queued unit must complete on attempt 1"
+        );
+        assert_eq!(out.worker_units, vec![0, 4], "the survivor served everything");
+        assert_eq!(h_dying.join().unwrap(), 0, "the dying worker completed nothing");
+        assert_eq!(h_ok.join().unwrap(), 4);
+    }
+
+    /// Hang a worker past the unit timeout: the unit is re-queued with a
+    /// `TimedOut` receipt and the sweep converges bit-identically on the
+    /// healthy worker.
+    #[test]
+    fn worker_hang_times_out_requeues_and_converges_bit_identically() {
+        let (net, tr, te) = trained_mlp();
+        let cfg = grid();
+        let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+        let baseline = sweep_trials(&net, &trials, &te, &cfg);
+
+        let hang = WorkerFault { fail_after: None, hang: Some((0, Duration::from_secs(4))) };
+        let (addr_hung, h_hung) = spawn_worker(&net, &tr, &te, &cfg, hang);
+        // the healthy worker dwells 300ms on its first unit so the hung
+        // worker's driver is guaranteed a unit before the queue drains
+        let dwell = WorkerFault { fail_after: None, hang: Some((0, Duration::from_millis(300))) };
+        let (addr_ok, h_ok) = spawn_worker(&net, &tr, &te, &cfg, dwell);
+        let mut dcfg = DistConfig::new(vec![addr_hung, addr_ok]);
+        dcfg.unit_timeout = Duration::from_secs(1);
+        let out = dist_sweep_trials(&net, &trials, &te, &cfg, &dcfg)
+            .expect("the healthy worker finishes the sweep");
+
+        assert_scores_bit_identical(&baseline, &out.result);
+        assert_eq!(out.requeues, 1, "the timed-out unit is re-queued exactly once");
+        assert!(
+            out.assignments
+                .iter()
+                .any(|a| a.worker == 0 && a.outcome == UnitOutcome::TimedOut),
+            "an explicit TimedOut receipt names the hung worker"
+        );
+        assert_eq!(out.worker_units, vec![0, 4], "the healthy worker served everything");
+        assert_eq!(h_ok.join().unwrap(), 4);
+        // the hung worker wakes up, finds its coordinator gone, and goes
+        // back to accepting; shut it down by hand so the thread exits
+        let mut client = HttpClient::connect(addr_hung).unwrap();
+        let (status, _) = client.request("POST", "/shutdown", None).unwrap();
+        assert_eq!(status, 200);
+        h_hung.join().unwrap();
+    }
+
+    /// Every worker dead with work remaining: the sweep must stall out
+    /// LOUDLY (completed != total), never return a partial artifact.
+    #[test]
+    fn all_workers_dead_stalls_loudly_not_silently() {
+        let (net, tr, te) = trained_mlp();
+        let cfg = grid();
+        let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+        let (addr, handle) =
+            spawn_worker(&net, &tr, &te, &cfg, WorkerFault { fail_after: Some(0), hang: None });
+        let err = dist_sweep_trials(&net, &trials, &te, &cfg, &DistConfig::new(vec![addr]))
+            .expect_err("no live workers must be an error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stalled"), "the stall is named: {msg}");
+        assert_eq!(handle.join().unwrap(), 0);
+    }
+
+    /// A unit that exhausts its retry budget fails the sweep loudly with
+    /// the unit named in the error.
+    #[test]
+    fn retry_budget_exhaustion_fails_loudly() {
+        let (net, tr, te) = trained_mlp();
+        let cfg = grid();
+        let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+        let (addr, handle) =
+            spawn_worker(&net, &tr, &te, &cfg, WorkerFault { fail_after: Some(0), hang: None });
+        let mut dcfg = DistConfig::new(vec![addr]);
+        dcfg.max_retries = 0;
+        let err = dist_sweep_trials(&net, &trials, &te, &cfg, &dcfg)
+            .expect_err("a zero-retry budget must fail on the first death");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("failed on attempt"), "the exhausted unit is named: {msg}");
+        assert_eq!(handle.join().unwrap(), 0);
+    }
+}

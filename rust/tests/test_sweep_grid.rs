@@ -408,8 +408,9 @@ fn fused_scoring_parity_with_two_phase_path() {
         SweepCell::new(Method::Msq, 3, 3.0),
     ];
     let two_phase = SweepSession::new(&net, &x, cells.clone(), false, 2).run().unwrap();
+    let te2 = te.clone();
     let fused = SweepSession::new(&net, &x, cells.clone(), false, 2)
-        .run_scored(|qnet| (accuracy(qnet, &te), topk_accuracy(qnet, &te, 5)))
+        .run_scored(move |qnet| (accuracy(qnet, &te2), topk_accuracy(qnet, &te2, 5)))
         .unwrap();
     assert_eq!(fused.scored.len(), two_phase.networks.len());
     for ((ca, (t1, t5), _), (cb, qnet, _)) in fused.scored.iter().zip(&two_phase.networks) {
@@ -424,13 +425,13 @@ fn fused_scoring_parity_with_two_phase_path() {
     );
 }
 
-/// Acceptance pin: ONE fused fan-out phase per chunk — each cell's scoring
-/// job is chained behind its final quantization job on the same pool
-/// seeding, so the pool is never re-seeded between the quantize and score
-/// phases.  trained_mlp has 3 dense quantization points and no plain
-/// layers, so with a threaded pool every chunk seeds exactly once per
-/// quantization point and NOTHING more: the scoring phase adds zero
-/// seedings (the unfused two-phase path pays one extra per chunk).
+/// Acceptance pin: a chunk seeds the pool ONCE for its whole per-layer DAG
+/// — every wave (stream advances, per-layer quantize fan-outs, the fused
+/// quantize→score tail) rides the sweep-wide [`SweepPool`]'s single
+/// long-lived seeding, and [`sweep_trials`] shares that one pool across
+/// every chunk of every trial.  So a whole sweep — any chunking, any trial
+/// count — pays exactly ONE seeding, and the scoring phase adds zero (the
+/// unfused two-phase path pays one extra for its scoring fan-out).
 #[test]
 fn fused_graph_never_reseeds_pool_between_quantize_and_score() {
     let _guard = SERIAL.lock().unwrap();
@@ -445,17 +446,17 @@ fn fused_graph_never_reseeds_pool_between_quantize_and_score() {
         workers: 2,
         chunk_cells: None,
     };
-    // unchunked, single trial: 3 quantization points → 3 seedings, the
-    // final one carrying both the quantize and the chained score jobs
+    // unchunked, single trial: one sweep-wide pool, every per-layer wave
+    // and the fused scoring tail chained onto it
     let before = pool_seedings();
     let res = sweep(&net, &trials.sample_set(0), &te, &grid);
     assert_eq!(res.points.len(), 4);
     assert_eq!(
         pool_seedings() - before,
-        3,
-        "one seeding per quantization point, score phase chained — not re-seeded"
+        1,
+        "one seeding for the whole sweep, score phase chained — never re-seeded"
     );
-    // chunked: one fused fan-out phase per chunk (2 chunks × 3 points)
+    // chunked: chunks share the sweep-wide pool — still one seeding
     let before = pool_seedings();
     let res = sweep(
         &net,
@@ -464,11 +465,11 @@ fn fused_graph_never_reseeds_pool_between_quantize_and_score() {
         &SweepConfig { chunk_cells: Some(2), ..grid.clone() },
     );
     assert_eq!(res.chunk_cells, 2);
-    assert_eq!(pool_seedings() - before, 6, "3 seedings per chunk, none between phases");
-    // trials multiply the whole schedule, never the per-chunk phase count
+    assert_eq!(pool_seedings() - before, 1, "chunks share the pool: still one seeding");
+    // trials multiply the schedule, never the seeding count
     let before = pool_seedings();
     let _ = sweep_trials(&net, &trials, &te, &SweepConfig { chunk_cells: Some(2), ..grid.clone() });
-    assert_eq!(pool_seedings() - before, 12, "2 trials x 2 chunks x 3 points");
+    assert_eq!(pool_seedings() - before, 1, "2 trials x 2 chunks: still one seeding");
     // counterfactual: the two-phase path (run, then score on a fresh pool)
     // pays one extra seeding for the scoring fan-out
     let before = pool_seedings();
@@ -480,7 +481,11 @@ fn fused_graph_never_reseeds_pool_between_quantize_and_score() {
         |_, (_, qnet, _)| Ok::<_, ()>(accuracy(&qnet, &te)),
     )
     .unwrap();
-    assert_eq!(pool_seedings() - before, 4, "unfused: 3 quantize + 1 score seeding");
+    assert_eq!(pool_seedings() - before, 2, "unfused: 1 session + 1 score seeding");
+    // a serial sweep (workers <= 1) builds no pool at all
+    let before = pool_seedings();
+    let _ = sweep(&net, &trials.sample_set(0), &te, &SweepConfig { workers: 1, ..grid.clone() });
+    assert_eq!(pool_seedings() - before, 0, "serial sweeps seed nothing");
 }
 
 /// Analog economy across trials: the analog stream is re-paid once per

@@ -136,6 +136,9 @@ fn main() {
     config.insert("workers".into(), Json::Num(spec.quant.workers as f64));
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("fig2_layers".into()));
+    // process-global metrics registry (pool seedings, im2col counts, ...)
+    // at bench exit — schema documented in docs/BENCHMARKS.md
+    root.insert("metrics".into(), gpfq::obs::registry().to_json());
     root.insert("fast".into(), Json::Bool(fast));
     root.insert("analog_top1".into(), Json::Num(analog));
     root.insert("peak_resident_bytes".into(), Json::Num(peak_resident as f64));

@@ -515,6 +515,9 @@ fn main() {
     lfs_j.insert("bit_identical".into(), Json::Bool(true));
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("runtime_cnn_pipeline".into()));
+    // process-global metrics registry (pool seedings, im2col counts, ...)
+    // at bench exit — schema documented in docs/BENCHMARKS.md
+    root.insert("metrics".into(), gpfq::obs::registry().to_json());
     root.insert("packed_kernels".into(), Json::Obj(packed_j));
     root.insert("lane_fused_sharded".into(), Json::Obj(lfs_j));
     root.insert("fast".into(), Json::Bool(fast));

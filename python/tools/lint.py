@@ -51,9 +51,15 @@ ORACLE_ITEMS = [
     ("rust/src/nn/network.rs", "forward_unfused"),
 ]
 
-# untrusted-input surfaces: requests off the wire, model files off disk
+# untrusted-input surfaces: requests off the wire, model files off disk;
+# plus the obs layer, which must never take a serving or sweep path down
 PANIC_PATH_FILES = [
     "rust/src/nn/serialize.rs",
+    "rust/src/obs/clock.rs",
+    "rust/src/obs/metrics.rs",
+    "rust/src/obs/mod.rs",
+    "rust/src/obs/span.rs",
+    "rust/src/obs/trace.rs",
     "rust/src/serve/http.rs",
 ]
 

@@ -50,9 +50,17 @@ pub const MANIFEST_PATH: &str = "rust/oracles.lock";
 /// Repo-relative path of the fixture corpus (excluded from the real scan).
 pub const FIXTURES_DIR: &str = "rust/tests/lint_fixtures";
 
-/// Untrusted-input surfaces: requests off the wire, model files off disk.
-pub const PANIC_PATH_FILES: &[&str] =
-    &["rust/src/nn/serialize.rs", "rust/src/serve/http.rs"];
+/// Untrusted-input surfaces: requests off the wire, model files off disk;
+/// plus the obs layer, which must never take a serving or sweep path down.
+pub const PANIC_PATH_FILES: &[&str] = &[
+    "rust/src/nn/serialize.rs",
+    "rust/src/obs/clock.rs",
+    "rust/src/obs/metrics.rs",
+    "rust/src/obs/mod.rs",
+    "rust/src/obs/span.rs",
+    "rust/src/obs/trace.rs",
+    "rust/src/serve/http.rs",
+];
 
 /// Files (or `/`-terminated prefixes) holding locks near I/O and condvars.
 pub const LOCK_FILES_PREFIXES: &[&str] = &[

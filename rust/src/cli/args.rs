@@ -25,6 +25,9 @@ commands:
   bench-serve                loopback load test of the serving stack; checks
                              served logits bit-identical to direct forward
                              and writes BENCH_serve.json
+  trace                      run a small traced quantize workload and write a
+                             Chrome trace_event JSON (--out, default
+                             trace.json); open in chrome://tracing / Perfetto
   lint                       repo-invariant static analysis (oracle-freeze,
                              panic-path, lock-discipline, float-determinism,
                              zero-dep); mirrored by python/tools/lint.py
@@ -49,6 +52,10 @@ common flags:
   --json <path.json>         write the sweep grid (Fig 1a / Table 1) as JSON
   --save <path.gpfq>         write the quantized model (bit-packed weights)
   --model <path.gpfq>        model file for eval / serve / bench-serve
+  --trace <path.json>        record spans while the command runs and write a
+                             Chrome trace_event JSON on exit (quantize, sweep,
+                             bench-serve, bench-sweep-dist; see
+                             docs/OBSERVABILITY.md)
   --verbose                  chatty output
 
 serving flags (serve, bench-serve):
@@ -76,12 +83,18 @@ distributed sweep flags (sweep, bench-sweep-dist, sweep-worker):
                              re-queued elsewhere (default 120)
   --dist-retries <n>         max re-queues per unit before the sweep fails
                              loudly (default 2)
+  --dist-keep-workers        skip the post-drain /shutdown POST so externally
+                             started workers survive for the next sweep
   --addr-file <path>         sweep-worker: write the bound address here once
                              listening (used by the spawning coordinator)
   --fail-after <n>           sweep-worker: exit without replying after n
                              served units (failure injection)
   --hang-unit <n>            sweep-worker: stall before serving unit index n
   --hang-ms <ms>             sweep-worker: stall duration (default 10000)
+
+trace flags:
+  --out <path.json>          where `gpfq trace` writes its Chrome trace
+                             (default trace.json)
 
 lint flags:
   --root <path>              repo root to lint (default: current directory)

@@ -22,6 +22,25 @@ use crate::train::train;
 use crate::util::bench::Table;
 
 pub fn dispatch(args: &Args) -> Result<()> {
+    // --trace <path>: record spans for the whole command and export a
+    // Chrome trace_event JSON on exit — even when the command failed,
+    // since the partial trace is exactly the evidence a failure needs
+    let trace_out = args.get("trace");
+    if trace_out.is_some() {
+        crate::obs::enable();
+        crate::obs::ensure_trace_id();
+    }
+    let result = dispatch_command(args);
+    if let Some(path) = trace_out {
+        match export_trace(path) {
+            Ok(n) => println!("(trace written to {path}: {n} span event(s))"),
+            Err(e) => eprintln!("warning: could not write trace {path}: {e:#}"),
+        }
+    }
+    result
+}
+
+fn dispatch_command(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -36,6 +55,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "serve" => cmd_serve(args),
         "bench-serve" => cmd_bench_serve(args),
+        "trace" => cmd_trace(args),
         "lint" => crate::analysis::cmd_lint(
             args.get("root"),
             args.has("json"),
@@ -43,6 +63,56 @@ pub fn dispatch(args: &Args) -> Result<()> {
         ),
         other => bail!("unknown command {other:?}\n{USAGE}"),
     }
+}
+
+/// Drain the recorder and the foreign-span store into a Chrome
+/// trace_event JSON at `path`; returns how many span events were written.
+/// File IO lives here, in the CLI — the `obs` modules never touch disk.
+fn export_trace(path: &str) -> Result<usize> {
+    let spans = crate::obs::take_spans();
+    let foreign = crate::obs::take_foreign();
+    let n = spans.len() + foreign.len();
+    let doc = crate::obs::chrome_trace(
+        &spans,
+        &foreign,
+        crate::obs::trace_id(),
+        crate::obs::dropped_spans(),
+    );
+    std::fs::write(path, format!("{doc}\n"))
+        .map_err(|e| crate::error::format_err!("could not write {path}: {e}"))?;
+    Ok(n)
+}
+
+/// `gpfq trace`: run a small traced quantize workload and write the
+/// Chrome trace (`--out`, default trace.json) — the one-command way to
+/// get a nested quantize span tree into chrome://tracing.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let out_path = args.get("out").unwrap_or("trace.json");
+    crate::obs::enable();
+    crate::obs::ensure_trace_id();
+    let mut spec = resolve_spec(args)?;
+    // seconds-scale on purpose: the subject is the trace, not the model
+    spec.dataset.n_train = spec.dataset.n_train.min(240);
+    spec.dataset.n_test = spec.dataset.n_test.min(120);
+    spec.dataset.n_quant = spec.dataset.n_quant.min(48);
+    spec.train.epochs = spec.train.epochs.min(1);
+    let (tr, _te) = make_datasets(&spec);
+    let mut net = spec.build_network();
+    println!("[trace] training {} (1 epoch) ...", spec.name);
+    train(&mut net, &tr, &spec.train);
+    let cfg = PipelineConfig {
+        levels: spec.quant.levels[0],
+        c_alpha: spec.quant.c_alphas[0] as f32,
+        fc_only: spec.quant.fc_only,
+        workers: spec.quant.workers,
+        ..Default::default()
+    };
+    let x_quant = tr.x.rows_slice(0, spec.dataset.n_quant.min(tr.len()));
+    println!("[trace] quantizing with spans on ...");
+    let _ = quantize_network(&net, &x_quant, &cfg);
+    let n = export_trace(out_path)?;
+    println!("trace written to {out_path}: {n} span event(s) — open in chrome://tracing or Perfetto");
+    Ok(())
 }
 
 /// Serving knobs shared by `serve` and `bench-serve`.
@@ -596,7 +666,8 @@ fn dist_workers_requested(args: &Args) -> Result<Option<DistRequest>> {
     }
 }
 
-/// Coordinator knobs from `--dist-timeout` / `--dist-retries`.
+/// Coordinator knobs from `--dist-timeout` / `--dist-retries` /
+/// `--dist-keep-workers`.
 fn dist_config_from_args(args: &Args, addrs: Vec<SocketAddr>) -> Result<DistConfig> {
     let mut d = DistConfig::new(addrs);
     if let Some(secs) = args.usize("dist-timeout")? {
@@ -604,6 +675,10 @@ fn dist_config_from_args(args: &Args, addrs: Vec<SocketAddr>) -> Result<DistConf
     }
     if let Some(r) = args.usize("dist-retries")? {
         d.max_retries = r;
+    }
+    if args.has("dist-keep-workers") {
+        // externally started workers survive the drain for the next sweep
+        d.shutdown_workers = false;
     }
     Ok(d)
 }
@@ -726,7 +801,9 @@ fn run_dist_sweep(
     let n_workers = addrs.len();
     let dcfg = dist_config_from_args(args, addrs)?;
     let outcome = dist_sweep_trials(&setup.net, trials, &setup.te, &setup.cfg, &dcfg);
-    reap_workers(children, outcome.is_ok());
+    // a graceful reap waits for the HTTP shutdowns to land; pointless (and
+    // 10s slow) when --dist-keep-workers skipped them
+    reap_workers(children, outcome.is_ok() && dcfg.shutdown_workers);
     Ok((outcome?, n_workers))
 }
 
@@ -876,6 +953,9 @@ fn bench_sweep_dist_json(
         Json::Num(out.result.peak_resident_bytes as f64),
     );
     root.insert("parity_ok".into(), Json::Bool(parity_ok));
+    // the process-global metrics registry (pool seedings, im2col counts,
+    // deferred waves) at bench exit — docs/BENCHMARKS.md documents it
+    root.insert("metrics".into(), crate::obs::registry().to_json());
     Json::Obj(root)
 }
 
@@ -1002,6 +1082,8 @@ fn sweep_json(name: &str, res: &SweepResult) -> crate::util::json::Json {
     );
     root.insert("points".into(), Json::Arr(res.points.iter().map(point_obj).collect()));
     root.insert("best".into(), Json::Obj(best));
+    // process-global metrics (pool seedings, im2col counts) at sweep exit
+    root.insert("metrics".into(), crate::obs::registry().to_json());
     Json::Obj(root)
 }
 
@@ -1082,6 +1164,21 @@ mod tests {
         assert_eq!(pts[0].get("top5_min").as_f64(), Some(0.8));
         assert_eq!(pts[0].get("top5_max").as_f64(), Some(0.85));
         assert_eq!(parsed.get("best").get("gpfq").get("top1").as_f64(), Some(0.8));
+        // the global metrics registry rides along as an object
+        assert!(
+            matches!(parsed.get("metrics"), crate::util::json::Json::Obj(_)),
+            "metrics key is an object"
+        );
+    }
+
+    #[test]
+    fn dist_keep_workers_flag_disables_shutdown() {
+        let keep = args(&["sweep", "--dist", "2", "--dist-keep-workers"]);
+        let d = dist_config_from_args(&keep, Vec::new()).unwrap();
+        assert!(!d.shutdown_workers, "--dist-keep-workers must skip the shutdown POST");
+        let plain = args(&["sweep", "--dist", "2"]);
+        let d = dist_config_from_args(&plain, Vec::new()).unwrap();
+        assert!(d.shutdown_workers, "default drains end with /shutdown");
     }
 
     #[test]

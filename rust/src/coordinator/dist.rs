@@ -42,6 +42,21 @@
 //! any worker count, any unit interleaving, and any number of re-queues.
 //! Only wall-clock timing fields (`shared_seconds`, per-cell `seconds`)
 //! differ, and even their merge *order* is deterministic.
+//!
+//! Trace propagation: when tracing is on ([`crate::obs::enabled`]), each
+//! driver stamps its `POST /unit` with the
+//! [`x-gpfq-trace`](crate::obs::TRACE_HEADER) header
+//! (`<trace_hex>/<span_hex>` — the sweep's trace id and the driver's
+//! `dist.drive_unit` span).  The worker adopts the trace id, roots a
+//! `dist.unit` span under the stamped parent, and returns its span tree
+//! in [`UnitResult::spans`]; the driver re-bases those onto its own
+//! clock (min start ↦ request-send time), assigns timeline lane
+//! `1 + worker`, and parks them in the foreign-span store
+//! ([`crate::obs::record_foreign`]) for the Chrome exporter.  Receipts
+//! become instant events (`dist.receipt_done` / `dist.receipt_failed` /
+//! `dist.receipt_timed_out`) on the coordinator lane.  All of it is
+//! observability only — spans ride *next to* the scores and never touch
+//! the merge.
 
 use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener};
@@ -60,6 +75,7 @@ use crate::data::dataset::Dataset;
 use crate::error::{bail, format_err, Context, Result};
 use crate::eval::metrics::{accuracy, topk_accuracy};
 use crate::nn::network::Network;
+use crate::obs::WireSpan;
 use crate::serve::http::{read_request, write_response, HttpClient};
 use crate::util::json::{parse as parse_json, Json};
 
@@ -131,6 +147,9 @@ pub struct UnitResult {
     /// Engine-accounted peak resident bytes of the worker's session —
     /// deterministic (shapes only), so it IS bit-comparable.
     pub peak_resident_bytes: usize,
+    /// The worker's span tree for this unit (empty when the request was
+    /// not traced) — observability sidecar, never part of the merge.
+    pub spans: Vec<WireSpan>,
 }
 
 fn nums(xs: &[f64]) -> Json {
@@ -156,6 +175,7 @@ impl UnitResult {
             ("cell_seconds", nums(&self.cell_seconds)),
             ("shared_seconds", Json::Num(self.shared_seconds)),
             ("peak_resident_bytes", Json::Num(self.peak_resident_bytes as f64)),
+            ("spans", Json::Arr(self.spans.iter().map(WireSpan::to_json).collect())),
         ])
     }
 
@@ -181,7 +201,13 @@ impl UnitResult {
             .get("peak_resident_bytes")
             .as_usize()
             .ok_or_else(|| format_err!("unit result missing peak_resident_bytes"))?;
-        Ok(UnitResult { top1, top5, cell_seconds, shared_seconds, peak_resident_bytes })
+        // spans are an optional observability sidecar: absent = untraced,
+        // and a malformed span is dropped rather than failing the unit
+        let spans = match j.get("spans") {
+            Json::Arr(arr) => arr.iter().filter_map(WireSpan::from_json).collect(),
+            _ => Vec::new(),
+        };
+        Ok(UnitResult { top1, top5, cell_seconds, shared_seconds, peak_resident_bytes, spans })
     }
 }
 
@@ -297,6 +323,48 @@ pub fn sweep_fingerprint(net: &Network, trials: &TrialSet, cfg: &SweepConfig) ->
     hex_digest(&bytes)
 }
 
+/// Drain the recorder and keep only the unit's own span tree — the
+/// `dist.unit` guard's record plus every descendant — re-parking the
+/// rest.  In the in-process test topology the recorder is shared with
+/// the coordinator (and sibling workers), whose in-flight spans must
+/// survive this worker's drain; records whose parent chain does not
+/// reach `unit_id` go straight back.
+fn take_unit_spans(unit_id: u64, trace: u64) -> Vec<WireSpan> {
+    let drained = crate::obs::take_spans();
+    let parents: std::collections::HashMap<u64, u64> =
+        drained.iter().map(|r| (r.id, r.parent)).collect();
+    let is_mine = |id: u64| {
+        let mut cur = id;
+        // parent chains are acyclic by construction; the map bound caps
+        // the walk anyway
+        for _ in 0..=parents.len() {
+            if cur == unit_id {
+                return true;
+            }
+            match parents.get(&cur) {
+                Some(&p) if p != 0 => cur = p,
+                _ => return false,
+            }
+        }
+        false
+    };
+    let mut mine = Vec::new();
+    let mut rest = Vec::new();
+    for rec in drained {
+        if is_mine(rec.id) {
+            mine.push(WireSpan::from_record(&rec, trace));
+        } else {
+            rest.push(rec);
+        }
+    }
+    if let Some(rec) = crate::obs::recorder() {
+        for r in rest {
+            rec.push(r);
+        }
+    }
+    mine
+}
+
 /// Serve sweep units off `listener` until `/shutdown` (or an injected
 /// fault) ends the loop; returns how many units this worker completed.
 /// One [`SweepPool`] lives for the whole worker — every unit's session
@@ -370,6 +438,22 @@ pub fn run_worker(
                         .and_then(|j| Some((j.get("trial").as_usize()?, j.get("chunk").as_usize()?)));
                     match parsed {
                         Some((t, ci)) if t < trials.len() && ci < n_chunks => {
+                            // a traced request carries the coordinator's
+                            // trace id and parent span: adopt both, so this
+                            // unit's whole span tree merges under them
+                            let unit_span = match req.trace {
+                                Some((trace, parent)) => {
+                                    crate::obs::enable();
+                                    crate::obs::set_trace_id(trace);
+                                    let guard = crate::obs::span_under("dist.unit", parent)
+                                        .field("trial", t as u64)
+                                        .field("chunk", ci as u64);
+                                    Some((trace, guard))
+                                }
+                                None => None,
+                            };
+                            let unit_id =
+                                unit_span.as_ref().map(|(_, g)| g.id()).unwrap_or(0);
                             let base = ci * chunk;
                             let end = (base + chunk).min(cells.len());
                             let x = trials.sample_set(t);
@@ -382,12 +466,24 @@ pub fn run_worker(
                             );
                             let te = test_owned.clone();
                             match session.run_scored(move |qnet| {
+                                // scoring runs on pool threads, whose
+                                // thread-local span stack is empty — root
+                                // explicitly under the unit span
+                                let _score = (unit_id != 0)
+                                    .then(|| crate::obs::span_under("sweep.score", unit_id));
                                 let top1 = accuracy(qnet, &te);
                                 let top5 =
                                     if topk { topk_accuracy(qnet, &te, 5) } else { 0.0 };
                                 (top1, top5)
                             }) {
                                 Ok(out) => {
+                                    let spans = match unit_span {
+                                        Some((trace, guard)) => {
+                                            drop(guard);
+                                            take_unit_spans(unit_id, trace)
+                                        }
+                                        None => Vec::new(),
+                                    };
                                     let res = UnitResult {
                                         top1: out.scored.iter().map(|(_, s, _)| s.0).collect(),
                                         top5: out.scored.iter().map(|(_, s, _)| s.1).collect(),
@@ -398,6 +494,7 @@ pub fn run_worker(
                                             .collect(),
                                         shared_seconds: out.shared_seconds,
                                         peak_resident_bytes: out.peak_resident_bytes,
+                                        spans,
                                     };
                                     units_done += 1;
                                     (200, res.to_json(), false)
@@ -518,9 +615,48 @@ fn drive_worker(
             ("trial", Json::Num(unit.trial as f64)),
             ("chunk", Json::Num(unit.chunk as f64)),
         ]);
-        match client.request("POST", "/unit", Some(&body)) {
+        // a traced sweep stamps every unit with the trace header so the
+        // worker can root its span tree under this driver's span; the
+        // guard lives across the request, timing the full round trip
+        let (response, started_us) = if crate::obs::enabled() {
+            let guard = crate::obs::span("dist.drive_unit")
+                .field("trial", unit.trial as u64)
+                .field("chunk", unit.chunk as u64)
+                .field("worker", worker as u64)
+                .field("attempt", attempt as u64);
+            let header = crate::obs::format_trace_header(crate::obs::trace_id(), guard.id());
+            let started_us = crate::obs::now_us();
+            let response = client.request_with_header(
+                "POST",
+                "/unit",
+                Some(&body),
+                Some((crate::obs::TRACE_HEADER, header.as_str())),
+            );
+            (response, started_us)
+        } else {
+            (client.request("POST", "/unit", Some(&body)), 0)
+        };
+        match response {
             Ok((200, json)) => match UnitResult::from_json(&json) {
                 Ok(res) => {
+                    // re-base worker spans onto this clock (their earliest
+                    // start ↦ the moment the request went out) and give the
+                    // worker its own timeline lane
+                    if !res.spans.is_empty() {
+                        let min_start =
+                            res.spans.iter().map(|s| s.start_us).min().unwrap_or(0);
+                        let shifted = res
+                            .spans
+                            .iter()
+                            .map(|s| {
+                                let mut s = s.clone();
+                                s.start_us = s.start_us - min_start + started_us;
+                                s.lane = worker as u64 + 1;
+                                s
+                            })
+                            .collect();
+                        crate::obs::record_foreign(shifted);
+                    }
                     let slot = unit.trial * n_chunks + unit.chunk;
                     let fresh = {
                         let mut results = state.results.lock().unwrap();
@@ -535,6 +671,15 @@ fn drive_worker(
                         state.completed.fetch_add(1, Ordering::SeqCst);
                     }
                     units_served.fetch_add(1, Ordering::SeqCst);
+                    crate::obs::event(
+                        "dist.receipt_done",
+                        &[
+                            ("trial", unit.trial as u64),
+                            ("chunk", unit.chunk as u64),
+                            ("worker", worker as u64),
+                            ("attempt", attempt as u64),
+                        ],
+                    );
                     record(
                         state,
                         UnitAssignment { unit, worker, attempt, outcome: UnitOutcome::Done },
@@ -564,6 +709,18 @@ fn drive_worker(
                 } else {
                     UnitOutcome::Failed
                 };
+                crate::obs::event(
+                    match outcome {
+                        UnitOutcome::TimedOut => "dist.receipt_timed_out",
+                        _ => "dist.receipt_failed",
+                    },
+                    &[
+                        ("trial", unit.trial as u64),
+                        ("chunk", unit.chunk as u64),
+                        ("worker", worker as u64),
+                        ("attempt", attempt as u64),
+                    ],
+                );
                 record(state, UnitAssignment { unit, worker, attempt, outcome });
                 if attempt >= dcfg.max_retries {
                     set_fatal(
@@ -605,6 +762,11 @@ pub fn dist_sweep_trials(
 ) -> Result<DistOutcome> {
     if dcfg.addrs.is_empty() {
         bail!("distributed sweep needs at least one worker address");
+    }
+    if crate::obs::enabled() {
+        // pin the trace id before any driver formats a header, so every
+        // worker's span tree lands under ONE trace
+        crate::obs::ensure_trace_id();
     }
     let fingerprint = sweep_fingerprint(net, trials, cfg);
     let cells = cfg.cells();
@@ -730,6 +892,18 @@ mod tests {
             cell_seconds: vec![1.5e-3, 2.25e-4, 0.0],
             shared_seconds: 0.123456789012345,
             peak_resident_bytes: 123_456_789,
+            spans: vec![WireSpan {
+                id: 7,
+                parent: 3,
+                name: "dist.unit".to_string(),
+                start_us: 10,
+                dur_us: 250,
+                tid: 1,
+                lane: 0,
+                trace: 0xABCD_EF01_2345,
+                instant: false,
+                fields: vec![("trial".to_string(), 0), ("chunk".to_string(), 2)],
+            }],
         };
         let back = UnitResult::from_json(&parse_json(&r.to_json().to_string()).unwrap())
             .unwrap();
@@ -742,6 +916,15 @@ mod tests {
         assert_eq!(r.shared_seconds.to_bits(), back.shared_seconds.to_bits());
         assert_eq!(r.peak_resident_bytes, back.peak_resident_bytes);
         assert_eq!(r.cell_seconds, back.cell_seconds);
+        assert_eq!(r.spans, back.spans, "span sidecar rides the wire intact");
+
+        // a span-less (pre-trace or untraced) body decodes to empty spans
+        let mut legacy = r.to_json();
+        if let Json::Obj(map) = &mut legacy {
+            map.remove("spans");
+        }
+        let no_spans = UnitResult::from_json(&legacy).unwrap();
+        assert!(no_spans.spans.is_empty());
     }
 
     #[test]

@@ -284,6 +284,9 @@ impl<'a> QuantizeSession<'a> {
             let i = self.next_layer;
             if !self.selected(i) {
                 // stage: stream advance through a non-quantized layer
+                let _adv = crate::obs::span_with("quantize.stream_advance", || {
+                    vec![("layer", i as u64)]
+                });
                 self.store.advance_plain(self.net, &self.qnet, i, sched)?;
                 self.next_layer += 1;
                 continue;
@@ -295,7 +298,13 @@ impl<'a> QuantizeSession<'a> {
     }
 
     /// Stages: layer-job build → dispatch → report/install → stream advance.
+    /// Traced as a `quantize.layer` span with `quantize.walk_view` /
+    /// `quantize.dispatch` / `quantize.stream_advance` children; the
+    /// `Instant`-based second-splits stay authoritative for the bench
+    /// schema (spans observe, they do not replace).
     fn quantize_layer(&mut self, i: usize) -> Result<()> {
+        let _layer_span =
+            crate::obs::span_with("quantize.layer", || vec![("layer", i as u64)]);
         let lt = Instant::now();
         let augment_bias =
             self.cfg.quantize_bias && matches!(self.net.layers[i], Layer::Dense { .. });
@@ -304,6 +313,7 @@ impl<'a> QuantizeSession<'a> {
         // ---- layer-job build: walk views (im2col once per stream), bias
         // augmentation (Section 4), alphabet ---------------------------------
         let tv = Instant::now();
+        let walk_span = crate::obs::span("quantize.walk_view");
         let views = self.store.take_views(self.net, i);
         // inside take_views the freshly built walk views coexist with the
         // standard-layout activations they were built from, so the true
@@ -329,6 +339,7 @@ impl<'a> QuantizeSession<'a> {
         } else {
             (views.ty.clone(), views.tyq.clone())
         };
+        drop(walk_span);
         let im2col_seconds = tv.elapsed().as_secs_f64();
         let m_samples = ty.cols;
 
@@ -346,6 +357,7 @@ impl<'a> QuantizeSession<'a> {
         // built only on the GPFQ path; error metrics below read the raw
         // views either way)
         let tq = Instant::now();
+        let dispatch_span = crate::obs::span("quantize.dispatch");
         let (q, paths, a) = dispatch_layer_quantizer(
             &self.executor,
             self.cfg.method,
@@ -355,6 +367,7 @@ impl<'a> QuantizeSession<'a> {
             &ty,
             &tyq,
         )?;
+        drop(dispatch_span);
         let quantize_seconds = tq.elapsed().as_secs_f64();
 
         // ---- report/install ------------------------------------------------
@@ -373,9 +386,11 @@ impl<'a> QuantizeSession<'a> {
 
         // ---- stream advance: shared patches → GEMM → next activations ------
         let tg = Instant::now();
+        let advance_span = crate::obs::span("quantize.stream_advance");
         drop((ty, tyq)); // keep only the unaugmented views resident for the GEMM
         let view_bytes = views.bytes();
         self.store.advance_from_views(self.net, &self.qnet, i, views, self.executor.scheduler)?;
+        drop(advance_span);
         let gemm_seconds = tg.elapsed().as_secs_f64();
         peak_bytes = peak_bytes.max(view_bytes + self.store.resident_bytes());
 

@@ -27,19 +27,39 @@
 //! cells and the next trial's analog stream advance.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+use crate::obs::metrics::Counter;
 
 /// Process-wide count of worker-pool seedings (thread scopes actually
-/// spawned; the single-worker serial fast path never seeds a pool).  Tests
-/// pin fused-graph behavior with deltas of this counter — e.g. "quantize
-/// and score ran on ONE seeding, the pool was not re-seeded between
-/// phases".  Monotonic, never reset.
-static POOL_SEEDINGS: AtomicUsize = AtomicUsize::new(0);
+/// spawned; the single-worker serial fast path never seeds a pool), now a
+/// handle on the global metrics registry under the name `pool_seedings` —
+/// same value, same increment sites, additionally visible via
+/// `GET /metrics` and the `BENCH_*` metric blocks.  Tests pin fused-graph
+/// behavior with deltas of this counter — e.g. "quantize and score ran on
+/// ONE seeding, the pool was not re-seeded between phases".  Monotonic,
+/// never reset.
+fn seedings_counter() -> &'static Counter {
+    static C: OnceLock<Counter> = OnceLock::new();
+    C.get_or_init(|| crate::obs::metrics::registry().counter("pool_seedings"))
+}
 
-/// Total pools seeded by this process so far (see [`POOL_SEEDINGS`]).
+/// Registry counter for deferred fan-out waves submitted via
+/// [`pool_fan_out_deferred`] (name: `pool_deferred_waves`).
+fn deferred_waves_counter() -> &'static Counter {
+    static C: OnceLock<Counter> = OnceLock::new();
+    C.get_or_init(|| crate::obs::metrics::registry().counter("pool_deferred_waves"))
+}
+
+/// Total pools seeded by this process so far (see [`seedings_counter`]).
 pub fn pool_seedings() -> usize {
-    POOL_SEEDINGS.load(Ordering::Relaxed)
+    seedings_counter().get() as usize
+}
+
+/// Total deferred waves fanned out by this process so far.
+pub fn pool_deferred_waves() -> usize {
+    deferred_waves_counter().get() as usize
 }
 
 /// Scheduler configuration.
@@ -99,7 +119,7 @@ where
         return Ok(out);
     }
 
-    POOL_SEEDINGS.fetch_add(1, Ordering::Relaxed);
+    seedings_counter().inc();
     let queue = Queue {
         jobs: Mutex::new(VecDeque::new()),
         available: Condvar::new(),
@@ -227,7 +247,7 @@ where
         return Ok(out);
     }
 
-    POOL_SEEDINGS.fetch_add(1, Ordering::Relaxed);
+    seedings_counter().inc();
     let queue = Queue {
         jobs: Mutex::new(VecDeque::new()),
         available: Condvar::new(),
@@ -369,7 +389,7 @@ impl WorkerPool {
     /// Spawn a pool of `workers` (≥ 1) threads, alive until shutdown/drop.
     pub fn new(workers: usize) -> WorkerPool {
         let workers = workers.max(1);
-        POOL_SEEDINGS.fetch_add(1, Ordering::Relaxed);
+        seedings_counter().inc();
         let shared = Arc::new(PoolShared {
             jobs: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
@@ -548,6 +568,7 @@ where
     E: Send + 'static,
     F: Fn(usize, J) -> Result<T, E> + Send + Sync + 'static,
 {
+    deferred_waves_counter().inc();
     let n = jobs.len();
     let (tx, rx) = mpsc::channel();
     let work = Arc::new(work);

@@ -940,11 +940,15 @@ pub fn sweep_trials(
     // never bits.
     let mut pending: Option<(usize, PendingScored<CellScore>)> = None;
     for t in 0..trials.len() {
+        let _trial_span = crate::obs::span_with("sweep.trial", || vec![("trial", t as u64)]);
         // lazy draw: trial t's sample set is materialized here, when its
         // trial starts, and dropped at the end of the iteration — resident
         // sample memory stays at ONE set however many trials run
         let x = trials.sample_set(t);
         for (ci, chunk_cells) in cells.chunks(chunk).enumerate() {
+            let _chunk_span = crate::obs::span_with("sweep.chunk", || {
+                vec![("trial", t as u64), ("chunk", ci as u64)]
+            });
             let base = ci * chunk;
             let session = SweepSession::with_pool(
                 &x,
@@ -955,9 +959,12 @@ pub fn sweep_trials(
             );
             let te = test_owned.clone();
             let deferred = session
-                .run_scored_deferred(move |qnet| CellScore {
-                    top1: accuracy(qnet, &te),
-                    top5: if topk { topk_accuracy(qnet, &te, 5) } else { 0.0 },
+                .run_scored_deferred(move |qnet| {
+                    let _score_span = crate::obs::span("sweep.score");
+                    CellScore {
+                        top1: accuracy(qnet, &te),
+                        top5: if topk { topk_accuracy(qnet, &te, 5) } else { 0.0 },
+                    }
                 })
                 .expect("sweep session failed");
             if let Some((pbase, prev)) = pending.take() {

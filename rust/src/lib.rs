@@ -12,7 +12,9 @@
 //!   ([`runtime`]), plus every substrate the paper's experiments assume:
 //!   networks ([`nn`]), training ([`train`]), datasets ([`data`]),
 //!   quantizers and baselines ([`quant`]), theory checks ([`theory`]),
-//!   and the batched HTTP inference service for packed models ([`serve`]).
+//!   the batched HTTP inference service for packed models ([`serve`]),
+//!   and cross-layer observability — spans, metrics, Chrome traces
+//!   ([`obs`]).
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained, loading the HLO-text artifacts through the
@@ -27,6 +29,7 @@ pub mod data;
 pub mod error;
 pub mod eval;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

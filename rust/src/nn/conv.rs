@@ -13,19 +13,25 @@
 //! patch flattens (dy, dx, channel) — identical to `python/compile/model.py
 //! ::im2col`, which pytest cross-checks against `lax.conv`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 use crate::nn::matrix::Matrix;
+use crate::obs::metrics::Counter;
 
-/// Global count of patch-matrix constructions (both layouts, process-wide).
-/// The activation engine's contract is "im2col at most once per conv layer
-/// per stream"; tests pin that by reading this counter around a pipeline
-/// run, and benches report it as coverage evidence.
-static IM2COL_INVOCATIONS: AtomicUsize = AtomicUsize::new(0);
+/// Global count of patch-matrix constructions (both layouts, process-wide),
+/// now a handle on the global metrics registry (name: `im2col_invocations`)
+/// so it also shows up in `GET /metrics` and `BENCH_*` metric blocks.  The
+/// activation engine's contract is "im2col at most once per conv layer per
+/// stream"; tests pin that by reading this counter around a pipeline run,
+/// and benches report it as coverage evidence.
+fn im2col_counter() -> &'static Counter {
+    static C: OnceLock<Counter> = OnceLock::new();
+    C.get_or_init(|| crate::obs::metrics::registry().counter("im2col_invocations"))
+}
 
 /// Total patch-matrix constructions ([`im2col`] + [`im2col_walk`]) so far.
 pub fn im2col_invocations() -> usize {
-    IM2COL_INVOCATIONS.load(Ordering::Relaxed)
+    im2col_counter().get() as usize
 }
 
 /// Spatial shape of conv activations.
@@ -57,7 +63,7 @@ pub fn conv_out(h: usize, k: usize, stride: usize) -> usize {
 
 /// Extract conv patches: input (batch, h*w*c) → (batch*oh*ow, kh*kw*c).
 pub fn im2col(x: &Matrix, shape: ImgShape, kh: usize, kw: usize, stride: usize) -> Matrix {
-    IM2COL_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
+    im2col_counter().inc();
     assert_eq!(x.cols, shape.len(), "activation width != shape");
     let oh = conv_out(shape.h, kh, stride);
     let ow = conv_out(shape.w, kw, stride);
@@ -98,7 +104,7 @@ pub fn im2col(x: &Matrix, shape: ImgShape, kh: usize, kw: usize, stride: usize) 
 /// the patch matrix exactly once per stream and shares it between the
 /// quantizer and the forward GEMM ([`Matrix::matmul_tn`]).
 pub fn im2col_walk(x: &Matrix, shape: ImgShape, kh: usize, kw: usize, stride: usize) -> Matrix {
-    IM2COL_INVOCATIONS.fetch_add(1, Ordering::Relaxed);
+    im2col_counter().inc();
     assert_eq!(x.cols, shape.len(), "activation width != shape");
     let oh = conv_out(shape.h, kh, stride);
     let ow = conv_out(shape.w, kw, stride);

@@ -1,0 +1,96 @@
+//! Microsecond clocks for the span recorder.
+//!
+//! The recorder never reads wall time directly — it asks a [`MicroClock`],
+//! the same inversion [`crate::serve::batch`] uses to drive its pure
+//! `BatchCore` state machine with explicit `now_us` values: production
+//! installs a [`WallClock`] (monotonic `Instant` epoch), deterministic
+//! tests install a [`ManualClock`] and advance it by hand, so span trees
+//! and durations are exact, not "roughly 10ms give or take scheduling".
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// A monotonic microsecond clock.  `now_us` must never decrease between
+/// calls on the same clock instance.
+pub trait MicroClock: Send + Sync {
+    /// Microseconds since this clock's epoch.
+    fn now_us(&self) -> u64;
+}
+
+/// Production clock: microseconds since the instant the clock was built
+/// (monotonic, immune to wall-clock steps).
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    /// A clock whose epoch is "now".
+    pub fn new() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl MicroClock for WallClock {
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+}
+
+/// Test clock: time is an atomic the test sets or advances explicitly.
+/// Shared freely (`Arc<ManualClock>`) between the test body and the
+/// recorder under test.
+pub struct ManualClock {
+    now: AtomicU64,
+}
+
+impl ManualClock {
+    /// A clock frozen at `start_us`.
+    pub fn new(start_us: u64) -> ManualClock {
+        ManualClock { now: AtomicU64::new(start_us) }
+    }
+
+    /// Jump to an absolute time.  Callers keep it monotonic.
+    pub fn set(&self, us: u64) {
+        self.now.store(us, Ordering::SeqCst);
+    }
+
+    /// Advance by `delta_us`; returns the new time.
+    pub fn advance(&self, delta_us: u64) -> u64 {
+        self.now.fetch_add(delta_us, Ordering::SeqCst) + delta_us
+    }
+}
+
+impl MicroClock for ManualClock {
+    fn now_us(&self) -> u64 {
+        self.now.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_sets_and_advances() {
+        let c = ManualClock::new(100);
+        assert_eq!(c.now_us(), 100);
+        assert_eq!(c.advance(25), 125);
+        assert_eq!(c.now_us(), 125);
+        c.set(1_000);
+        assert_eq!(c.now_us(), 1_000);
+    }
+
+    #[test]
+    fn wall_clock_is_monotonic() {
+        let c = WallClock::new();
+        let a = c.now_us();
+        let b = c.now_us();
+        assert!(b >= a);
+    }
+}

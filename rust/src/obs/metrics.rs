@@ -1,0 +1,351 @@
+//! Metrics registry: named counters, gauges, histograms and sampling
+//! reservoirs behind one [`Registry`].
+//!
+//! Two registries exist in practice: the process-global [`registry`]
+//! (scheduler pool seedings, im2col invocations, deferred waves) and a
+//! per-[`crate::serve::ServeStats`] instance one, so two servers in one
+//! process never cross their counters.  Handles are cheap `Arc` clones —
+//! fetch once, bump forever, no name lookup on the hot path.
+//!
+//! The flat JSON rendering ([`Registry::to_json`]) is what `GET /metrics`
+//! serves and every `BENCH_*.json` embeds: counters and gauges as
+//! `name → value`, histogram buckets as `name.bucket → count`, reservoirs
+//! as `name.seen` / `name.resident`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::data::rng::Pcg;
+use crate::util::json::Json;
+
+/// Monotonic counter.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge with a monotone high-watermark companion op.
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Overwrite with the latest observation.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise to `v` if larger (high-watermark use).
+    pub fn raise(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Exact-bucket histogram: `value → occurrence count` (the serve
+/// batch-size histogram shape; small discrete domains only).
+#[derive(Clone, Default)]
+pub struct Histogram(Arc<Mutex<BTreeMap<u64, u64>>>);
+
+impl Histogram {
+    /// Count one observation of `bucket`.
+    pub fn observe(&self, bucket: u64) {
+        if let Ok(mut map) = self.0.lock() {
+            *map.entry(bucket).or_insert(0) += 1;
+        }
+    }
+
+    /// A copy of the bucket map.
+    pub fn buckets(&self) -> BTreeMap<u64, u64> {
+        self.0.lock().map(|map| map.clone()).unwrap_or_default()
+    }
+}
+
+/// Samples a bounded uniform reservoir keeps resident.
+pub const RESERVOIR_CAP: usize = 65_536;
+
+/// Seed for the reservoir's deterministic eviction RNG — the exact value
+/// `serve::stats` has always used, so migrating the latency reservoir onto
+/// the registry changed no recorded sample.
+const RESERVOIR_SEED: u64 = 0x5EE0_57A7;
+
+struct ReservoirState {
+    samples: Vec<u64>,
+    seen: u64,
+    rng: Pcg,
+}
+
+impl ReservoirState {
+    fn record(&mut self, v: u64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.below(self.seen as usize);
+            if let Some(slot) = self.samples.get_mut(j) {
+                *slot = v;
+            }
+        }
+    }
+}
+
+/// Uniform sampling reservoir (Vitter's algorithm R): the first
+/// [`RESERVOIR_CAP`] samples verbatim, then each later sample replaces a
+/// uniformly random slot with probability cap/seen — every recorded value
+/// has equal probability of being resident, so quantiles over the resident
+/// set stay unbiased while memory stays O(cap) forever.
+#[derive(Clone)]
+pub struct Reservoir(Arc<Mutex<ReservoirState>>);
+
+impl Reservoir {
+    /// An empty reservoir with the deterministic eviction seed.
+    pub fn new() -> Reservoir {
+        Reservoir(Arc::new(Mutex::new(ReservoirState {
+            samples: Vec::new(),
+            seen: 0,
+            rng: Pcg::seed(RESERVOIR_SEED),
+        })))
+    }
+
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        if let Ok(mut state) = self.0.lock() {
+            state.record(v);
+        }
+    }
+
+    /// `(resident samples, total seen)` copied under ONE lock acquisition —
+    /// the consistent-snapshot primitive: a caller deriving "requests" from
+    /// `seen` and quantiles from the samples can never observe the two
+    /// mid-update relative to each other.
+    pub fn snapshot(&self) -> (Vec<u64>, u64) {
+        match self.0.lock() {
+            Ok(state) => (state.samples.clone(), state.seen),
+            Err(_) => (Vec::new(), 0),
+        }
+    }
+
+    /// Total samples ever recorded.
+    pub fn seen(&self) -> u64 {
+        self.0.lock().map(|state| state.seen).unwrap_or(0)
+    }
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir::new()
+    }
+}
+
+/// A namespace of named metrics.  Lookup registers on first use and
+/// returns a clone of the shared handle thereafter; names are `&'static
+/// str` so registration never allocates keys.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<&'static str, Counter>>,
+    gauges: Mutex<BTreeMap<&'static str, Gauge>>,
+    histograms: Mutex<BTreeMap<&'static str, Histogram>>,
+    reservoirs: Mutex<BTreeMap<&'static str, Reservoir>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The counter named `name`, registering it on first use.
+    pub fn counter(&self, name: &'static str) -> Counter {
+        match self.counters.lock() {
+            Ok(mut map) => map.entry(name).or_default().clone(),
+            Err(_) => Counter::default(),
+        }
+    }
+
+    /// The gauge named `name`, registering it on first use.
+    pub fn gauge(&self, name: &'static str) -> Gauge {
+        match self.gauges.lock() {
+            Ok(mut map) => map.entry(name).or_default().clone(),
+            Err(_) => Gauge::default(),
+        }
+    }
+
+    /// The histogram named `name`, registering it on first use.
+    pub fn histogram(&self, name: &'static str) -> Histogram {
+        match self.histograms.lock() {
+            Ok(mut map) => map.entry(name).or_default().clone(),
+            Err(_) => Histogram::default(),
+        }
+    }
+
+    /// The reservoir named `name`, registering it on first use.
+    pub fn reservoir(&self, name: &'static str) -> Reservoir {
+        match self.reservoirs.lock() {
+            Ok(mut map) => map.entry(name).or_insert_with(Reservoir::new).clone(),
+            Err(_) => Reservoir::new(),
+        }
+    }
+
+    /// Flat `key → value` view of every registered metric (see module docs
+    /// for the key scheme).  Deterministic order: BTreeMap all the way.
+    pub fn snapshot_flat(&self) -> BTreeMap<String, u64> {
+        let mut out = BTreeMap::new();
+        if let Ok(map) = self.counters.lock() {
+            for (name, c) in map.iter() {
+                out.insert((*name).to_string(), c.get());
+            }
+        }
+        if let Ok(map) = self.gauges.lock() {
+            for (name, g) in map.iter() {
+                out.insert((*name).to_string(), g.get());
+            }
+        }
+        let hists: Vec<(&'static str, Histogram)> = match self.histograms.lock() {
+            Ok(map) => map.iter().map(|(n, h)| (*n, h.clone())).collect(),
+            Err(_) => Vec::new(),
+        };
+        for (name, h) in hists {
+            for (bucket, count) in h.buckets() {
+                out.insert(format!("{name}.{bucket}"), count);
+            }
+        }
+        let ress: Vec<(&'static str, Reservoir)> = match self.reservoirs.lock() {
+            Ok(map) => map.iter().map(|(n, r)| (*n, r.clone())).collect(),
+            Err(_) => Vec::new(),
+        };
+        for (name, r) in ress {
+            let (samples, seen) = r.snapshot();
+            out.insert(format!("{name}.seen"), seen);
+            out.insert(format!("{name}.resident"), samples.len() as u64);
+        }
+        out
+    }
+
+    /// [`Registry::snapshot_flat`] as a flat JSON object.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (key, value) in self.snapshot_flat() {
+            obj.insert(key, Json::Num(value as f64));
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// The process-global registry: process-lifetime counters (pool seedings,
+/// im2col invocations, deferred waves) that pre-date the registry live
+/// here; per-server metrics live on their own [`Registry`] instances.
+pub fn registry() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_share_state() {
+        let reg = Registry::new();
+        let a = reg.counter("hits");
+        let b = reg.counter("hits");
+        a.inc();
+        b.add(4);
+        assert_eq!(reg.counter("hits").get(), 5);
+        assert_eq!(reg.counter("other").get(), 0);
+    }
+
+    #[test]
+    fn gauge_set_and_watermark() {
+        let g = Registry::new().gauge("depth");
+        g.set(5);
+        g.raise(3);
+        assert_eq!(g.get(), 5, "raise never lowers");
+        g.raise(9);
+        assert_eq!(g.get(), 9);
+        g.set(2);
+        assert_eq!(g.get(), 2, "set follows the latest observation down");
+    }
+
+    #[test]
+    fn histogram_counts_buckets() {
+        let h = Registry::new().histogram("batch");
+        h.observe(1);
+        h.observe(4);
+        h.observe(4);
+        let buckets = h.buckets();
+        assert_eq!(buckets.get(&4), Some(&2));
+        assert_eq!(buckets.get(&1), Some(&1));
+        assert_eq!(buckets.get(&2), None);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_counts_seen() {
+        let r = Reservoir::new();
+        for _ in 0..(2 * RESERVOIR_CAP) {
+            r.record(250);
+        }
+        let (samples, seen) = r.snapshot();
+        assert_eq!(samples.len(), RESERVOIR_CAP);
+        assert_eq!(seen, 2 * RESERVOIR_CAP as u64);
+        assert!(samples.iter().all(|&v| v == 250));
+    }
+
+    #[test]
+    fn reservoir_snapshot_is_internally_consistent() {
+        // seen and the resident count come from one lock acquisition:
+        // below the cap they must agree exactly, at any point
+        let r = Reservoir::new();
+        for i in 0..100 {
+            r.record(i);
+            let (samples, seen) = r.snapshot();
+            assert_eq!(samples.len() as u64, seen);
+        }
+    }
+
+    #[test]
+    fn flat_snapshot_covers_every_kind() {
+        let reg = Registry::new();
+        reg.counter("c").add(3);
+        reg.gauge("g").set(7);
+        reg.histogram("h").observe(4);
+        reg.histogram("h").observe(4);
+        reg.reservoir("r").record(11);
+        let flat = reg.snapshot_flat();
+        assert_eq!(flat.get("c"), Some(&3));
+        assert_eq!(flat.get("g"), Some(&7));
+        assert_eq!(flat.get("h.4"), Some(&2));
+        assert_eq!(flat.get("r.seen"), Some(&1));
+        assert_eq!(flat.get("r.resident"), Some(&1));
+        let json = reg.to_json().to_string();
+        let parsed = crate::util::json::parse(&json).unwrap();
+        assert_eq!(parsed.get("c").as_f64(), Some(3.0));
+        assert_eq!(parsed.get("h.4").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn global_registry_is_one_instance() {
+        let c = registry().counter("obs_test_global_counter");
+        let before = c.get();
+        registry().counter("obs_test_global_counter").inc();
+        assert_eq!(c.get(), before + 1);
+    }
+}

@@ -1,0 +1,40 @@
+//! Observability: zero-dependency spans + metrics across quantize, sweep,
+//! dist, and serve.
+//!
+//! Four pieces (see `docs/OBSERVABILITY.md` for the full vocabulary):
+//!
+//! - [`clock`] — the [`MicroClock`] injection point: [`WallClock`] in
+//!   production, [`ManualClock`] in deterministic tests (the same
+//!   synthetic-clock inversion `serve::batch` uses).
+//! - [`span`] (module) — bounded-ring span [`Recorder`], RAII guards
+//!   ([`span`](fn@span) / [`span_under`] / [`span_with`]), instant
+//!   [`event`]s, and the process globals ([`enable`] / [`disable`] /
+//!   [`enabled`]).  Disabled tracing costs one relaxed atomic load per
+//!   instrumentation site.
+//! - [`metrics`] — named [`Counter`]s/[`Gauge`]s/[`Histogram`]s/
+//!   [`Reservoir`]s behind a [`Registry`]; the process-global
+//!   [`registry`] plus per-instance registries (one per `ServeStats`).
+//! - [`trace`] — cross-process propagation ([`TRACE_HEADER`],
+//!   [`WireSpan`]) and the Chrome `trace_event` exporter
+//!   ([`chrome_trace`]), viewable in `chrome://tracing` / Perfetto.
+//!
+//! Instrumentation never moves a bit: spans observe timestamps and u64
+//! annotations only, and every parity pin (kernel, sweep, dist, serve)
+//! holds with tracing on.
+
+pub mod clock;
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+pub use clock::{ManualClock, MicroClock, WallClock};
+pub use metrics::{registry, Counter, Gauge, Histogram, Registry, Reservoir, RESERVOIR_CAP};
+pub use span::{
+    disable, dropped_spans, enable, enabled, ensure_trace_id, event, install_recorder, now_us,
+    record_span, recorder, set_trace_id, span, span_under, span_with, take_spans, trace_id,
+    Recorder, SpanGuard, SpanKind, SpanRecord, DEFAULT_SPAN_CAP,
+};
+pub use trace::{
+    chrome_trace, format_trace_header, parse_trace_header, record_foreign, take_foreign, WireSpan,
+    TRACE_HEADER,
+};

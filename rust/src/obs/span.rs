@@ -1,0 +1,460 @@
+//! Span recorder: bounded ring buffer + RAII guards + process globals.
+//!
+//! Design constraints (shared with the rest of the crate): zero
+//! dependencies, no `unsafe`, and — because this file sits on the lint's
+//! panic-path surface — no `unwrap`/`expect`/indexing outside tests.  A
+//! poisoned mutex degrades to "this span is lost", never to a panic on a
+//! serving thread.
+//!
+//! The global fast path is one relaxed atomic load: every entry point
+//! ([`span`], [`event`], [`record_span`]) checks [`enabled`] before it
+//! touches the clock, the thread-local parent cell or any allocation, so
+//! instrumented hot loops cost a branch when tracing is off.
+//!
+//! Parent/child nesting is per thread: a thread-local cell holds the id of
+//! the innermost live guard; a new guard records the previous value as its
+//! parent and restores it on drop.  Cross-process parents (the dist trace
+//! header) are attached explicitly with [`span_under`].
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::obs::clock::{MicroClock, WallClock};
+
+/// Spans kept resident before the ring starts evicting its oldest entry
+/// (~64k records; the same bound the serve latency reservoir uses).
+pub const DEFAULT_SPAN_CAP: usize = 65_536;
+
+/// What a record represents on the timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// A duration: `start_us ..= start_us + dur_us` (Chrome ph "X").
+    Complete,
+    /// A point event, `dur_us == 0` (Chrome ph "i") — e.g. dist receipts.
+    Instant,
+}
+
+/// One recorded span or instant event.  Names and field keys are
+/// `&'static str` by construction — recording never formats or allocates
+/// strings.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Recorder-unique id (> 0).
+    pub id: u64,
+    /// Enclosing span's id, 0 for roots.  May reference a span of another
+    /// process when the parent came off the dist trace header.
+    pub parent: u64,
+    /// Static span name (see docs/OBSERVABILITY.md for the vocabulary).
+    pub name: &'static str,
+    /// Start, µs on the recorder's clock.
+    pub start_us: u64,
+    /// Duration, µs (0 for [`SpanKind::Instant`]).
+    pub dur_us: u64,
+    /// Thread lane: a small per-thread ordinal, stable for a thread's life.
+    pub tid: u64,
+    /// Duration vs point event.
+    pub kind: SpanKind,
+    /// Numeric key/value annotations (layer index, batch size, ...).
+    pub fields: Vec<(&'static str, u64)>,
+}
+
+/// Bounded span storage: oldest records are evicted once the cap is hit,
+/// and the eviction count is kept so exporters can say "N spans dropped"
+/// instead of silently truncating the timeline.
+struct Ring {
+    buf: VecDeque<SpanRecord>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, rec: SpanRecord) {
+        if self.buf.len() >= self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(rec);
+    }
+}
+
+/// A span recorder: clock + id counter + bounded ring.  The process
+/// global installed by [`enable`] wraps one of these around a
+/// [`WallClock`]; deterministic tests build their own around a
+/// [`crate::obs::ManualClock`] and [`install_recorder`] it.
+pub struct Recorder {
+    ring: Mutex<Ring>,
+    next_id: AtomicU64,
+    clock: Arc<dyn MicroClock>,
+}
+
+impl Recorder {
+    /// A recorder with the given ring capacity (≥ 1) reading `clock`.
+    pub fn new(cap: usize, clock: Arc<dyn MicroClock>) -> Recorder {
+        Recorder {
+            ring: Mutex::new(Ring { buf: VecDeque::new(), cap: cap.max(1), dropped: 0 }),
+            next_id: AtomicU64::new(1),
+            clock,
+        }
+    }
+
+    /// Current time on the recorder's clock, µs.
+    pub fn now_us(&self) -> u64 {
+        self.clock.now_us()
+    }
+
+    /// Allocate a fresh span id (> 0, unique per recorder).
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Append a record; on a poisoned ring the record is dropped.
+    pub fn push(&self, rec: SpanRecord) {
+        if let Ok(mut ring) = self.ring.lock() {
+            ring.push(rec);
+        }
+    }
+
+    /// Drain every resident record (completion order).
+    pub fn take(&self) -> Vec<SpanRecord> {
+        match self.ring.lock() {
+            Ok(mut ring) => ring.buf.drain(..).collect(),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Resident record count.
+    pub fn len(&self) -> usize {
+        self.ring.lock().map(|ring| ring.buf.len()).unwrap_or(0)
+    }
+
+    /// True when nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Records evicted by the ring bound so far.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().map(|ring| ring.dropped).unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// process globals
+// ---------------------------------------------------------------------------
+
+/// Master switch: every recording entry point loads this before doing any
+/// other work, so disabled tracing costs one relaxed atomic read.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The installed recorder (None until [`enable`] / [`install_recorder`]).
+static RECORDER: Mutex<Option<Arc<Recorder>>> = Mutex::new(None);
+
+/// Trace id shared by every span this process records (0 = unset).  The
+/// dist coordinator generates one per sweep and stamps it on the wire;
+/// workers adopt the stamped id so merged timelines agree.
+static TRACE_ID: AtomicU64 = AtomicU64::new(0);
+
+/// Monotonic source for per-thread lane ordinals.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Monotonic low bits for generated trace ids.
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Innermost live guard's id on this thread (0 = no live span).
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+    /// This thread's lane ordinal (0 = not assigned yet).
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+fn thread_ordinal() -> u64 {
+    TID.with(|cell| {
+        let cur = cell.get();
+        if cur != 0 {
+            return cur;
+        }
+        let fresh = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        cell.set(fresh);
+        fresh
+    })
+}
+
+/// Is tracing on?  Checked before any field computation or allocation.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on, installing a [`WallClock`] recorder at
+/// [`DEFAULT_SPAN_CAP`] if none is installed yet.
+pub fn enable() {
+    if let Ok(mut slot) = RECORDER.lock() {
+        if slot.is_none() {
+            *slot = Some(Arc::new(Recorder::new(
+                DEFAULT_SPAN_CAP,
+                Arc::new(WallClock::new()),
+            )));
+        }
+    }
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn tracing off.  The installed recorder (and its records) stay put so
+/// an exporter can still drain them.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Replace the global recorder (tests: a [`crate::obs::ManualClock`]-backed
+/// one).  Does not flip [`enabled`].
+pub fn install_recorder(rec: Arc<Recorder>) {
+    if let Ok(mut slot) = RECORDER.lock() {
+        *slot = Some(rec);
+    }
+}
+
+/// The installed recorder, if any.
+pub fn recorder() -> Option<Arc<Recorder>> {
+    match RECORDER.lock() {
+        Ok(slot) => slot.clone(),
+        Err(_) => None,
+    }
+}
+
+/// Current time on the installed recorder's clock (0 when none).
+pub fn now_us() -> u64 {
+    recorder().map(|rec| rec.now_us()).unwrap_or(0)
+}
+
+/// This process's trace id (0 = unset).
+pub fn trace_id() -> u64 {
+    TRACE_ID.load(Ordering::Relaxed)
+}
+
+/// Adopt a trace id received over the wire.
+pub fn set_trace_id(id: u64) {
+    TRACE_ID.store(id, Ordering::Relaxed);
+}
+
+/// The current trace id, generating one (pid in the high bits, a process
+/// counter in the low) on first use.
+pub fn ensure_trace_id() -> u64 {
+    let cur = TRACE_ID.load(Ordering::Relaxed);
+    if cur != 0 {
+        return cur;
+    }
+    // 42-bit layout (pid<<20 | counter) keeps ids exact through f64 JSON.
+    let fresh = ((std::process::id() as u64) << 20)
+        | (NEXT_TRACE.fetch_add(1, Ordering::Relaxed) & 0xF_FFFF);
+    TRACE_ID.store(fresh, Ordering::Relaxed);
+    fresh
+}
+
+/// Drain every span the global recorder holds (no-op Vec when tracing was
+/// never enabled).
+pub fn take_spans() -> Vec<SpanRecord> {
+    recorder().map(|rec| rec.take()).unwrap_or_default()
+}
+
+/// Spans evicted by the ring bound so far.
+pub fn dropped_spans() -> u64 {
+    recorder().map(|rec| rec.dropped()).unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// guards
+// ---------------------------------------------------------------------------
+
+/// RAII span: records a [`SpanKind::Complete`] record when dropped.  An
+/// inactive guard (tracing disabled at construction) is inert — no clock
+/// reads, no allocation, nothing recorded.
+pub struct SpanGuard {
+    rec: Option<Arc<Recorder>>,
+    id: u64,
+    parent: u64,
+    /// CURRENT value to restore on drop (== `parent` for [`span`]; the
+    /// pre-existing local span for [`span_under`]).
+    prev: u64,
+    name: &'static str,
+    start_us: u64,
+    fields: Vec<(&'static str, u64)>,
+}
+
+impl SpanGuard {
+    fn inactive(name: &'static str) -> SpanGuard {
+        SpanGuard {
+            rec: None,
+            id: 0,
+            parent: 0,
+            prev: 0,
+            name,
+            start_us: 0,
+            fields: Vec::new(),
+        }
+    }
+
+    /// Attach a numeric field.  No-op (and no allocation) when inactive.
+    pub fn field(mut self, key: &'static str, value: u64) -> SpanGuard {
+        if self.rec.is_some() {
+            self.fields.push((key, value));
+        }
+        self
+    }
+
+    /// True when this guard will record a span on drop.
+    pub fn is_active(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// The span id (0 when inactive) — what [`span_under`] children and the
+    /// dist trace header reference.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(rec) = self.rec.take() else { return };
+        let end = rec.now_us();
+        CURRENT.with(|cell| cell.set(self.prev));
+        rec.push(SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            name: self.name,
+            start_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            tid: thread_ordinal(),
+            kind: SpanKind::Complete,
+            fields: std::mem::take(&mut self.fields),
+        });
+    }
+}
+
+fn start_guard(name: &'static str, parent: u64, explicit_parent: bool) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::inactive(name);
+    }
+    let Some(rec) = recorder() else { return SpanGuard::inactive(name) };
+    let id = rec.next_id();
+    let prev = CURRENT.with(|cell| cell.replace(id));
+    let parent = if explicit_parent { parent } else { prev };
+    let start_us = rec.now_us();
+    SpanGuard { rec: Some(rec), id, parent, prev, name, start_us, fields: Vec::new() }
+}
+
+/// Open a span nested under this thread's innermost live span.
+pub fn span(name: &'static str) -> SpanGuard {
+    start_guard(name, 0, false)
+}
+
+/// Open a span under an explicit parent id — how a dist worker roots its
+/// unit spans under the coordinator span stamped on the wire.
+pub fn span_under(name: &'static str, parent: u64) -> SpanGuard {
+    start_guard(name, parent, true)
+}
+
+/// Like [`span`], but fields come from a closure that is **only invoked
+/// when tracing is enabled** — the hook for fields that cost something to
+/// compute.
+pub fn span_with<F>(name: &'static str, fields: F) -> SpanGuard
+where
+    F: FnOnce() -> Vec<(&'static str, u64)>,
+{
+    let mut guard = start_guard(name, 0, false);
+    if guard.rec.is_some() {
+        guard.fields = fields();
+    }
+    guard
+}
+
+/// Record an instant event (a point on the timeline; dist receipts use
+/// these).  `fields` are copied only when tracing is enabled.
+pub fn event(name: &'static str, fields: &[(&'static str, u64)]) {
+    if !enabled() {
+        return;
+    }
+    let Some(rec) = recorder() else { return };
+    let ts = rec.now_us();
+    rec.push(SpanRecord {
+        id: rec.next_id(),
+        parent: CURRENT.with(|cell| cell.get()),
+        name,
+        start_us: ts,
+        dur_us: 0,
+        tid: thread_ordinal(),
+        kind: SpanKind::Instant,
+        fields: fields.to_vec(),
+    });
+}
+
+/// Record a complete span with explicit timestamps — for durations
+/// observed after the fact (the batcher queue wait: enqueue stamp to
+/// release), where no guard could straddle the region.
+pub fn record_span(
+    name: &'static str,
+    start_us: u64,
+    dur_us: u64,
+    fields: &[(&'static str, u64)],
+) {
+    if !enabled() {
+        return;
+    }
+    let Some(rec) = recorder() else { return };
+    rec.push(SpanRecord {
+        id: rec.next_id(),
+        parent: CURRENT.with(|cell| cell.get()),
+        name,
+        start_us,
+        dur_us,
+        tid: thread_ordinal(),
+        kind: SpanKind::Complete,
+        fields: fields.to_vec(),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::clock::ManualClock;
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let clock = Arc::new(ManualClock::new(0));
+        let rec = Recorder::new(2, clock);
+        for i in 0..5u64 {
+            rec.push(SpanRecord {
+                id: i + 1,
+                parent: 0,
+                name: "x",
+                start_us: i,
+                dur_us: 0,
+                tid: 1,
+                kind: SpanKind::Instant,
+                fields: Vec::new(),
+            });
+        }
+        assert_eq!(rec.dropped(), 3);
+        let kept = rec.take();
+        assert_eq!(kept.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 5]);
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn recorder_ids_are_unique_and_positive() {
+        let rec = Recorder::new(8, Arc::new(ManualClock::new(0)));
+        let a = rec.next_id();
+        let b = rec.next_id();
+        assert!(a > 0 && b > a);
+    }
+
+    #[test]
+    fn manual_clock_drives_recorder_time() {
+        let clock = Arc::new(ManualClock::new(7));
+        let rec = Recorder::new(8, clock.clone());
+        assert_eq!(rec.now_us(), 7);
+        clock.advance(10);
+        assert_eq!(rec.now_us(), 17);
+    }
+}

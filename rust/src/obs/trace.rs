@@ -1,0 +1,315 @@
+//! Cross-process trace plumbing + Chrome `trace_event` export.
+//!
+//! [`WireSpan`] is the owned, serializable twin of
+//! [`SpanRecord`](crate::obs::span::SpanRecord): worker processes drain
+//! their recorder after each dist unit, encode the spans into the
+//! `UnitResult` JSON, and the coordinator re-bases them onto its own
+//! clock, tags them with a per-worker lane and parks them in the
+//! [`record_foreign`] store until export.
+//!
+//! The trace id travels in the `x-gpfq-trace` request header as
+//! `<trace_hex>/<span_hex>` ([`format_trace_header`] /
+//! [`parse_trace_header`]); the span half is the coordinator-side span the
+//! worker roots its unit spans under.
+//!
+//! [`chrome_trace`] renders everything as Chrome `trace_event` JSON —
+//! complete events (`ph: "X"`, `ts`/`dur` in µs), instant events
+//! (`ph: "i"`) and process-name metadata per lane — loadable in
+//! `chrome://tracing` or Perfetto.  This module does no I/O; the CLI
+//! writes the rendered document.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::obs::span::{SpanKind, SpanRecord};
+use crate::util::json::Json;
+
+/// Request header carrying `<trace_hex>/<span_hex>` across processes.
+/// Lower-case: the serve parser folds header names to lower case.
+pub const TRACE_HEADER: &str = "x-gpfq-trace";
+
+/// A span in owned form: what rides the wire between dist workers and the
+/// coordinator, and what the exporter consumes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireSpan {
+    /// Span id, unique within its origin process.
+    pub id: u64,
+    /// Parent span id (may reference a span of another process).
+    pub parent: u64,
+    /// Span name.
+    pub name: String,
+    /// Start, µs (re-based onto the coordinator clock after merge).
+    pub start_us: u64,
+    /// Duration, µs.
+    pub dur_us: u64,
+    /// Origin thread ordinal within its process.
+    pub tid: u64,
+    /// Timeline lane (Chrome `pid`): 0 = this process, 1 + worker index
+    /// for merged dist workers.
+    pub lane: u64,
+    /// Trace id the span was recorded under (0 = none).
+    pub trace: u64,
+    /// True for instant events.
+    pub instant: bool,
+    /// Numeric annotations.
+    pub fields: Vec<(String, u64)>,
+}
+
+impl WireSpan {
+    /// Lift a local [`SpanRecord`] into wire form (lane 0).
+    pub fn from_record(rec: &SpanRecord, trace: u64) -> WireSpan {
+        WireSpan {
+            id: rec.id,
+            parent: rec.parent,
+            name: rec.name.to_string(),
+            start_us: rec.start_us,
+            dur_us: rec.dur_us,
+            tid: rec.tid,
+            lane: 0,
+            trace,
+            instant: rec.kind == SpanKind::Instant,
+            fields: rec.fields.iter().map(|(k, v)| ((*k).to_string(), *v)).collect(),
+        }
+    }
+
+    /// Wire encoding (u64s ride as JSON numbers — span ids and µs stamps
+    /// stay far below the 2^53 exact-integer ceiling; the trace id is hex
+    /// text for the same reason it is in the header).
+    pub fn to_json(&self) -> Json {
+        let mut fields = BTreeMap::new();
+        for (key, value) in &self.fields {
+            fields.insert(key.clone(), Json::Num(*value as f64));
+        }
+        Json::obj([
+            ("id", Json::Num(self.id as f64)),
+            ("parent", Json::Num(self.parent as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("start_us", Json::Num(self.start_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+            ("tid", Json::Num(self.tid as f64)),
+            ("lane", Json::Num(self.lane as f64)),
+            ("trace", Json::Str(format!("{:016x}", self.trace))),
+            ("instant", Json::Bool(self.instant)),
+            ("fields", Json::Obj(fields)),
+        ])
+    }
+
+    /// Inverse of [`WireSpan::to_json`]; `None` for structurally malformed
+    /// input (a malformed span is dropped, never a panic — these arrive
+    /// off the wire).
+    pub fn from_json(j: &Json) -> Option<WireSpan> {
+        let num = |key: &str| j.get(key).as_f64().map(|v| v as u64);
+        let fields = match j.get("fields") {
+            Json::Obj(map) => map
+                .iter()
+                .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n as u64)))
+                .collect(),
+            _ => Vec::new(),
+        };
+        Some(WireSpan {
+            id: num("id")?,
+            parent: num("parent")?,
+            name: j.get("name").as_str()?.to_string(),
+            start_us: num("start_us")?,
+            dur_us: num("dur_us")?,
+            tid: num("tid")?,
+            lane: num("lane").unwrap_or(0),
+            trace: j
+                .get("trace")
+                .as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .unwrap_or(0),
+            instant: matches!(j.get("instant"), Json::Bool(true)),
+            fields,
+        })
+    }
+}
+
+/// Encode a trace header value: `<trace_hex>/<span_hex>`.
+pub fn format_trace_header(trace: u64, span: u64) -> String {
+    format!("{trace:016x}/{span:016x}")
+}
+
+/// Decode a trace header value; `None` on any malformation.
+pub fn parse_trace_header(value: &str) -> Option<(u64, u64)> {
+    let (trace, span) = value.trim().split_once('/')?;
+    Some((u64::from_str_radix(trace, 16).ok()?, u64::from_str_radix(span, 16).ok()?))
+}
+
+// ---------------------------------------------------------------------------
+// foreign-span store (merged dist worker spans)
+// ---------------------------------------------------------------------------
+
+/// Worker spans merged by the dist coordinator, kept apart from the local
+/// recorder so a worker thread draining its own spans (the in-process test
+/// topology) can never steal already-merged ones.
+static FOREIGN: Mutex<Vec<WireSpan>> = Mutex::new(Vec::new());
+
+/// Park merged worker spans until export.
+pub fn record_foreign(spans: Vec<WireSpan>) {
+    if spans.is_empty() {
+        return;
+    }
+    if let Ok(mut store) = FOREIGN.lock() {
+        store.extend(spans);
+    }
+}
+
+/// Drain the foreign-span store.
+pub fn take_foreign() -> Vec<WireSpan> {
+    match FOREIGN.lock() {
+        Ok(mut store) => std::mem::take(&mut *store),
+        Err(_) => Vec::new(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace_event export
+// ---------------------------------------------------------------------------
+
+fn trace_event(span: &WireSpan) -> Json {
+    let mut args = BTreeMap::new();
+    for (key, value) in &span.fields {
+        args.insert(key.clone(), Json::Num(*value as f64));
+    }
+    args.insert("span_id".to_string(), Json::Num(span.id as f64));
+    if span.parent != 0 {
+        args.insert("parent_id".to_string(), Json::Num(span.parent as f64));
+    }
+    let mut obj = BTreeMap::new();
+    obj.insert("name".to_string(), Json::Str(span.name.clone()));
+    obj.insert("ph".to_string(), Json::Str(if span.instant { "i" } else { "X" }.to_string()));
+    obj.insert("ts".to_string(), Json::Num(span.start_us as f64));
+    if !span.instant {
+        obj.insert("dur".to_string(), Json::Num(span.dur_us as f64));
+    } else {
+        obj.insert("s".to_string(), Json::Str("t".to_string()));
+    }
+    obj.insert("pid".to_string(), Json::Num(span.lane as f64));
+    obj.insert("tid".to_string(), Json::Num(span.tid as f64));
+    obj.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(obj)
+}
+
+fn lane_name_event(lane: u64) -> Json {
+    let label = if lane == 0 {
+        "coordinator".to_string()
+    } else {
+        format!("worker {}", lane - 1)
+    };
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(label));
+    let mut obj = BTreeMap::new();
+    obj.insert("name".to_string(), Json::Str("process_name".to_string()));
+    obj.insert("ph".to_string(), Json::Str("M".to_string()));
+    obj.insert("pid".to_string(), Json::Num(lane as f64));
+    obj.insert("tid".to_string(), Json::Num(0.0));
+    obj.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(obj)
+}
+
+/// Render local records plus merged worker spans as one Chrome
+/// `trace_event` document.  `dropped` is the local ring's eviction count,
+/// surfaced in `otherData` so truncated timelines say so.
+pub fn chrome_trace(
+    local: &[SpanRecord],
+    foreign: &[WireSpan],
+    trace_id: u64,
+    dropped: u64,
+) -> Json {
+    let trace = trace_id;
+    let lifted: Vec<WireSpan> =
+        local.iter().map(|rec| WireSpan::from_record(rec, trace)).collect();
+    let mut lanes: Vec<u64> = lifted.iter().chain(foreign.iter()).map(|s| s.lane).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    let mut events: Vec<Json> = lanes.iter().map(|&lane| lane_name_event(lane)).collect();
+    events.extend(lifted.iter().map(trace_event));
+    events.extend(foreign.iter().map(trace_event));
+    let mut other = BTreeMap::new();
+    other.insert("trace_id".to_string(), Json::Str(format!("{trace:016x}")));
+    other.insert("dropped_spans".to_string(), Json::Num(dropped as f64));
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".to_string(), Json::Arr(events));
+    root.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    root.insert("otherData".to_string(), Json::Obj(other));
+    Json::Obj(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_span() -> WireSpan {
+        WireSpan {
+            id: 7,
+            parent: 3,
+            name: "dist.unit".to_string(),
+            start_us: 1_250,
+            dur_us: 400,
+            tid: 2,
+            lane: 1,
+            trace: 0xABCD_1234,
+            instant: false,
+            fields: vec![("trial".to_string(), 1), ("chunk".to_string(), 4)],
+        }
+    }
+
+    #[test]
+    fn wire_span_round_trips_through_json() {
+        let s = sample_span();
+        let doc = s.to_json().to_string();
+        let back = WireSpan::from_json(&crate::util::json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn wire_span_rejects_malformed_bodies() {
+        let missing = Json::obj([("id", Json::Num(1.0))]);
+        assert!(WireSpan::from_json(&missing).is_none());
+    }
+
+    #[test]
+    fn trace_header_round_trips() {
+        let h = format_trace_header(0xDEAD_BEEF, 42);
+        assert_eq!(parse_trace_header(&h), Some((0xDEAD_BEEF, 42)));
+        assert_eq!(parse_trace_header("nope"), None);
+        assert_eq!(parse_trace_header("zz/1"), None);
+    }
+
+    #[test]
+    fn chrome_trace_renders_complete_and_instant_events() {
+        let complete = sample_span();
+        let mut instant = sample_span();
+        instant.id = 9;
+        instant.instant = true;
+        instant.name = "dist.receipt_done".to_string();
+        let doc = chrome_trace(&[], &[complete, instant], 0xABCD_1234, 3).to_string();
+        let parsed = crate::util::json::parse(&doc).unwrap();
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        // 1 lane-metadata event + 2 span events
+        assert_eq!(events.len(), 3);
+        let phs: Vec<&str> =
+            events.iter().filter_map(|e| e.get("ph").as_str()).collect();
+        assert_eq!(phs, vec!["M", "X", "i"]);
+        let x = events.iter().find(|e| e.get("ph").as_str() == Some("X")).unwrap();
+        assert_eq!(x.get("ts").as_f64(), Some(1_250.0));
+        assert_eq!(x.get("dur").as_f64(), Some(400.0));
+        assert_eq!(x.get("pid").as_f64(), Some(1.0));
+        assert_eq!(x.get("args").get("trial").as_f64(), Some(1.0));
+        assert_eq!(x.get("args").get("parent_id").as_f64(), Some(3.0));
+        assert_eq!(parsed.get("otherData").get("trace_id").as_str(), Some("00000000abcd1234"));
+        assert_eq!(parsed.get("otherData").get("dropped_spans").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn foreign_store_parks_and_drains() {
+        // drain first: other tests in this binary may have parked spans
+        let _ = take_foreign();
+        record_foreign(vec![sample_span()]);
+        record_foreign(Vec::new()); // no-op
+        let got = take_foreign();
+        assert_eq!(got.len(), 1);
+        assert!(take_foreign().is_empty());
+    }
+}

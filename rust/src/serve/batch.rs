@@ -19,6 +19,12 @@
 //! [`MicroBatcher`] wraps the core with a mutex/condvar and real time for
 //! the server ([`crate::serve::http`]), whose batch-executor workers block
 //! in [`MicroBatcher::next_batch`].
+//!
+//! The same explicit-clock inversion is generalized by
+//! [`crate::obs::MicroClock`], which is how the span recorder's tests pin
+//! exact durations; on the serving side, time spent inside this queue is
+//! visible as the `serve.queue_wait` span (enqueue stamp → batch release)
+//! recorded by the batch executor when tracing is on.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};

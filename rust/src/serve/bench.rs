@@ -130,6 +130,11 @@ pub struct BenchServeReport {
     /// one-seeding-per-server contract, observable because the CLI runs
     /// this bench alone in its process
     pub pool_seedings_delta: usize,
+    /// flat metrics registry snapshot at shutdown (the server's `serve.*`
+    /// namespace merged with the process-global registry) — the same
+    /// object `GET /metrics` serves, embedded so `BENCH_serve.json`
+    /// carries the full counter state of the run
+    pub metrics: Json,
 }
 
 impl BenchServeReport {
@@ -164,6 +169,7 @@ impl BenchServeReport {
             ("keepalive_latency_ratio", Json::Num(self.keepalive_latency_ratio)),
             ("pool_seedings_delta", Json::Num(self.pool_seedings_delta as f64)),
             ("server", self.server.to_json()),
+            ("metrics", self.metrics.clone()),
         ])
     }
 }
@@ -373,6 +379,7 @@ pub fn bench_serve(
         lat_p99_us: quantile(&lat, 0.99),
         lat_max_us: lat.iter().copied().fold(0.0, f64::max),
         server: stats.snapshot(),
+        metrics: stats.metrics_json(),
         parity_ok: mismatches == 0,
         mismatches,
         packed_layers,

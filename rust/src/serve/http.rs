@@ -36,6 +36,16 @@
 //!   `{"outputs": [...]}` with one such object per row.
 //! * `GET /healthz` — liveness + model summary.
 //! * `GET /stats` — the [`crate::serve::stats::StatsSnapshot`] JSON.
+//! * `GET /metrics` — flat metrics JSON: this server's `serve.*` registry
+//!   merged with the process-global registry (`/stats` stays byte-
+//!   compatible; new fields land here instead).
+//!
+//! Observability: when tracing is enabled (`crate::obs`), each request is
+//! a `serve.request` span with `serve.parse` / `serve.enqueue` /
+//! `serve.respond` children on the connection thread, and each released
+//! batch is a `serve.batch` span with `serve.queue_wait` (enqueue stamp →
+//! release) and `serve.gemm` children on the executor thread.  Disabled
+//! tracing costs one atomic load per site.
 //!
 //! Determinism contract: `Network::forward` computes every output row from
 //! its input row alone, with a fixed per-row summation order — so logits
@@ -101,6 +111,10 @@ impl Default for ServeConfig {
 struct InferJob {
     input: Vec<f32>,
     tx: mpsc::SyncSender<Vec<f32>>,
+    /// obs clock stamp taken at submit (0 = tracing was off): the batch
+    /// executor turns the oldest stamp of a released batch into a
+    /// `serve.queue_wait` span
+    enqueued_us: u64,
 }
 
 /// Remote control for a running [`Server`] (cloneable across threads).
@@ -290,6 +304,23 @@ fn run_batch(
     batch: Vec<InferJob>,
     shard_threshold: usize,
 ) {
+    let batch_span =
+        crate::obs::span_with("serve.batch", || vec![("size", batch.len() as u64)]);
+    if batch_span.is_active() {
+        // the oldest enqueue stamp in the batch → one queue-wait span
+        // (enqueue → release), nested under serve.batch
+        let released_us = crate::obs::now_us();
+        if let Some(oldest) =
+            batch.iter().map(|j| j.enqueued_us).filter(|&e| e != 0).min()
+        {
+            crate::obs::record_span(
+                "serve.queue_wait",
+                oldest,
+                released_us.saturating_sub(oldest),
+                &[("size", batch.len() as u64)],
+            );
+        }
+    }
     stats.record_batch(batch.len());
     let d = net.input.len();
     let mut data = Vec::with_capacity(batch.len() * d);
@@ -298,11 +329,13 @@ fn run_batch(
         data.extend_from_slice(&job.input);
     }
     let x = Matrix::from_vec(batch.len(), d, data);
+    let gemm_span = crate::obs::span("serve.gemm");
     let logits = if batch.len() >= shard_threshold {
         forward_sharded_on(pool, net, &x, pool.workers())
     } else {
         net.forward(&x)
     };
+    drop(gemm_span);
     for (r, job) in batch.into_iter().enumerate() {
         // a dead receiver (client gone) is not an error worth crashing for
         let _ = job.tx.send(logits.row(r).to_vec());
@@ -324,6 +357,9 @@ pub(crate) struct HttpRequest {
     /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
     /// HTTP/1.0 defaults to close unless `Connection: keep-alive`.
     pub(crate) keep_alive: bool,
+    /// decoded `x-gpfq-trace` header, `(trace_id, parent_span_id)` — how
+    /// the dist coordinator roots a worker's unit spans under its own
+    pub(crate) trace: Option<(u64, u64)>,
 }
 
 /// Parse failure → HTTP status + message.  `quiet` marks a clean
@@ -409,6 +445,7 @@ pub(crate) fn read_request(
     let mut content_length = 0usize;
     // connection persistence: HTTP/1.1 keeps alive by default, 1.0 closes
     let mut keep_alive = version != "HTTP/1.0";
+    let mut trace = None;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
             let name = name.trim();
@@ -424,6 +461,8 @@ pub(crate) fn read_request(
                 } else if value.eq_ignore_ascii_case("keep-alive") {
                     keep_alive = true;
                 }
+            } else if name.eq_ignore_ascii_case(crate::obs::TRACE_HEADER) {
+                trace = crate::obs::parse_trace_header(value);
             }
         }
     }
@@ -447,7 +486,7 @@ pub(crate) fn read_request(
     }
     body.truncate(content_length);
     let body = String::from_utf8(body).map_err(|_| HttpError::new(400, "body is not utf-8"))?;
-    Ok(HttpRequest { method, path, body, keep_alive })
+    Ok(HttpRequest { method, path, body, keep_alive, trace })
 }
 
 fn find_header_end(buf: &[u8]) -> Option<usize> {
@@ -525,11 +564,17 @@ fn handle_connection(
         // honor the client's wish unless we are draining, in which case
         // the response carries `Connection: close` and the loop ends
         let keep = req.keep_alive && !stop.load(Ordering::Acquire);
+        let req_span = crate::obs::span("serve.request");
         let (status, body) = route(&req, net, batcher, stats);
         if status != 200 {
             stats.record_error();
         }
-        if write_response(&mut stream, status, &body, keep).is_err() || !keep {
+        let write_ok = {
+            let _respond = crate::obs::span("serve.respond");
+            write_response(&mut stream, status, &body, keep).is_ok()
+        };
+        drop(req_span);
+        if !write_ok || !keep {
             return;
         }
         if first {
@@ -557,6 +602,7 @@ fn route(
             ]),
         ),
         ("GET", "/stats") => (200, stats.snapshot().to_json()),
+        ("GET", "/metrics") => (200, stats.metrics_json()),
         ("POST", "/infer") => infer(req, net, batcher, stats),
         ("GET", "/infer") => (405, error_body("POST /infer")),
         _ => (404, error_body(&format!("no route {} {}", req.method, req.path))),
@@ -572,6 +618,7 @@ fn infer(
     stats: &ServeStats,
 ) -> (u16, Json) {
     let t0 = Instant::now();
+    let parse_span = crate::obs::span("serve.parse");
     let doc = match parse_json(&req.body) {
         Ok(d) => d,
         Err(e) => return (400, error_body(&format!("invalid json: {e}"))),
@@ -605,12 +652,16 @@ fn infer(
             );
         }
     }
+    drop(parse_span);
     // submit every row, then collect — rows of one request may land in
     // different batches (and that cannot change their logits)
+    let enqueue_span =
+        crate::obs::span_with("serve.enqueue", || vec![("rows", rows.len() as u64)]);
+    let enqueued_us = if enqueue_span.is_active() { crate::obs::now_us() } else { 0 };
     let mut receivers = Vec::with_capacity(rows.len());
     for row in rows {
         let (tx, rx) = mpsc::sync_channel(1);
-        if batcher.submit(InferJob { input: row, tx }).is_err() {
+        if batcher.submit(InferJob { input: row, tx, enqueued_us }).is_err() {
             return (503, error_body("server is shutting down"));
         }
         receivers.push(rx);
@@ -618,6 +669,7 @@ fn infer(
     // backlog pressure right after this request's rows were queued — the
     // gauge `GET /stats` exposes as queue_depth / queue_depth_max
     stats.record_queue_depth(batcher.len());
+    drop(enqueue_span);
     let mut outputs = Vec::with_capacity(receivers.len());
     for rx in receivers {
         let logits = match rx.recv() {
@@ -728,9 +780,26 @@ impl HttpClient {
         path: &str,
         body: Option<&Json>,
     ) -> Result<(u16, Json)> {
+        self.request_with_header(method, path, body, None)
+    }
+
+    /// [`Self::request`] with one extra `name: value` header — how the
+    /// dist coordinator stamps `x-gpfq-trace` onto `POST /unit`.  The
+    /// caller keeps name and value header-safe (no CR/LF).
+    pub fn request_with_header(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+        extra: Option<(&str, &str)>,
+    ) -> Result<(u16, Json)> {
         let payload = body.map(|b| b.to_string()).unwrap_or_default();
+        let extra_line = match extra {
+            Some((name, value)) => format!("{name}: {value}\r\n"),
+            None => String::new(),
+        };
         let head = format!(
-            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Length: {}\r\n{extra_line}Connection: keep-alive\r\n\r\n",
             self.addr,
             payload.len()
         );
@@ -906,6 +975,7 @@ mod tests {
             path: "/infer".into(),
             body: "{\"input\":[0.0,1.0,2.0,3.0]}".into(),
             keep_alive: false,
+            trace: None,
         };
         let (status, body) = infer(&req, &net, &batcher, &stats);
         assert_eq!(status, 200, "{body}");

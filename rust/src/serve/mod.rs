@@ -17,7 +17,9 @@
 //!   [`crate::coordinator::scheduler::WorkerPool`], graceful shutdown.
 //! * [`stats`] — the **metrics layer**: per-request latency p50/p95/p99,
 //!   QPS, and the batch-size histogram that shows whether coalescing is
-//!   actually happening (`GET /stats`).
+//!   actually happening — named metrics on a per-server
+//!   [`crate::obs::Registry`] instance, summarized by `GET /stats` and
+//!   rendered flat (with the process-global counters) by `GET /metrics`.
 //! * [`bench`] — the **loopback load generator** behind `gpfq
 //!   bench-serve`: replays a dataset through the full network path and
 //!   pins served logits **bit-identical** to in-process

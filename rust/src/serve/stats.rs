@@ -2,67 +2,49 @@
 //! batch-size histogram that shows whether the micro-batcher is actually
 //! coalescing.
 //!
-//! [`ServeStats`] is the live, thread-shared recorder (atomics + a mutexed
-//! latency reservoir); [`StatsSnapshot`] is the frozen summary it renders —
+//! [`ServeStats`] is the live, thread-shared recorder, now built on the
+//! [`crate::obs::metrics`] primitives: the latency reservoir, batch
+//! histogram, error counter and queue-depth gauges are named metrics on a
+//! **per-instance** [`Registry`] (two servers in one process never cross
+//! their counters), so `GET /metrics` can render them flat next to the
+//! process-global counters.  [`StatsSnapshot`] is the frozen summary —
 //! p50/p95/p99 latency, QPS over the recording window, and a batch-size →
 //! count histogram — exposed by the server's `GET /stats` endpoint and
 //! written into `BENCH_serve.json` by `gpfq bench-serve`.
+//!
+//! Consistency: a snapshot's `requests` count and its latency quantiles
+//! are derived from ONE [`Reservoir::snapshot`] call (samples + seen under
+//! a single lock acquisition), so `/stats` can never render a request
+//! count that disagrees with the histogram it sits next to — the skew the
+//! old separate-locks path allowed.  `queue_depth_max` is additionally
+//! clamped to ≥ `queue_depth` within the snapshot.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::data::rng::Pcg;
+use crate::obs::metrics::{Counter, Gauge, Histogram, Registry, Reservoir};
 use crate::util::json::Json;
 
-/// Latency samples kept resident for the quantile estimates.  Bounds the
-/// recorder for a server that runs indefinitely: ~512 KiB, never more.
-const RESERVOIR_CAP: usize = 65_536;
-
-/// Uniform latency reservoir (Vitter's algorithm R): the first
-/// `RESERVOIR_CAP` samples verbatim, then each later sample replaces a
-/// uniformly random slot with probability cap/seen — every recorded value
-/// has equal probability of being resident, so the quantiles stay unbiased
-/// while memory stays O(cap) however long the server runs.
-struct Reservoir {
-    samples: Vec<u64>,
-    seen: u64,
-    rng: Pcg,
-}
-
-impl Reservoir {
-    fn new() -> Reservoir {
-        Reservoir { samples: Vec::new(), seen: 0, rng: Pcg::seed(0x5EE0_57A7) }
-    }
-
-    fn record(&mut self, v: u64) {
-        self.seen += 1;
-        if self.samples.len() < RESERVOIR_CAP {
-            self.samples.push(v);
-        } else {
-            let j = self.rng.below(self.seen as usize);
-            if j < RESERVOIR_CAP {
-                self.samples[j] = v;
-            }
-        }
-    }
-}
-
 /// Live metrics recorder, shared (`Arc`) between connection handlers and
-/// batch-executor workers.
+/// batch-executor workers.  Handles are resolved once at construction —
+/// the hot path never does a name lookup.
 pub struct ServeStats {
+    /// this server's metric namespace (`serve.*` names)
+    registry: Registry,
     /// per-request service latency (request parsed → response ready), µs —
-    /// a bounded uniform reservoir, not the full history
-    latencies_us: Mutex<Reservoir>,
+    /// a bounded uniform reservoir, not the full history.  `seen` doubles
+    /// as the request count so count + quantiles come from one lock.
+    latencies_us: Reservoir,
     /// batch size → number of batches released at that size
-    batch_sizes: Mutex<BTreeMap<usize, u64>>,
-    requests: AtomicU64,
-    errors: AtomicU64,
+    batch_sizes: Histogram,
+    /// requests served (kept in lockstep with the reservoir's `seen`;
+    /// this handle is what `/metrics` renders)
+    requests: Counter,
+    errors: Counter,
     /// last observed micro-batcher backlog (jobs queued, not yet released)
-    queue_depth: AtomicU64,
+    queue_depth: Gauge,
     /// largest backlog ever observed (high-watermark)
-    queue_depth_max: AtomicU64,
+    queue_depth_max: Gauge,
     started: Instant,
 }
 
@@ -75,13 +57,21 @@ impl Default for ServeStats {
 impl ServeStats {
     /// Fresh counters; the QPS window starts now.
     pub fn new() -> ServeStats {
+        let registry = Registry::new();
+        let latencies_us = registry.reservoir("serve.latency_us");
+        let batch_sizes = registry.histogram("serve.batch_hist");
+        let requests = registry.counter("serve.requests");
+        let errors = registry.counter("serve.errors");
+        let queue_depth = registry.gauge("serve.queue_depth");
+        let queue_depth_max = registry.gauge("serve.queue_depth_max");
         ServeStats {
-            latencies_us: Mutex::new(Reservoir::new()),
-            batch_sizes: Mutex::new(BTreeMap::new()),
-            requests: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-            queue_depth: AtomicU64::new(0),
-            queue_depth_max: AtomicU64::new(0),
+            registry,
+            latencies_us,
+            batch_sizes,
+            requests,
+            errors,
+            queue_depth,
+            queue_depth_max,
             started: Instant::now(),
         }
     }
@@ -92,50 +82,81 @@ impl ServeStats {
     /// operators can see backlog building before latency does.
     pub fn record_queue_depth(&self, depth: usize) {
         let depth = depth as u64;
-        self.queue_depth.store(depth, Ordering::Relaxed);
-        self.queue_depth_max.fetch_max(depth, Ordering::Relaxed);
+        self.queue_depth.set(depth);
+        self.queue_depth_max.raise(depth);
     }
 
     /// Record one served inference request and its latency.
     pub fn record_request(&self, latency_us: u64) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        self.latencies_us.lock().unwrap().record(latency_us);
+        self.requests.inc();
+        self.latencies_us.record(latency_us);
     }
 
     /// Record one request that failed (parse error, width mismatch, ...).
     pub fn record_error(&self) {
-        self.errors.fetch_add(1, Ordering::Relaxed);
+        self.errors.inc();
     }
 
     /// Record one released batch of `size` requests.
     pub fn record_batch(&self, size: usize) {
-        *self.batch_sizes.lock().unwrap().entry(size).or_insert(0) += 1;
+        self.batch_sizes.observe(size as u64);
     }
 
     /// Requests served so far.
     pub fn requests(&self) -> u64 {
-        self.requests.load(Ordering::Relaxed)
+        self.requests.get()
+    }
+
+    /// This server's metric namespace (for `/metrics` and bench embeds).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Flat metrics JSON for `GET /metrics`: this server's `serve.*`
+    /// metrics merged with the process-global registry (scheduler / im2col
+    /// counters).  Namespaces are disjoint by convention, and BTreeMap
+    /// ordering keeps the rendering deterministic.
+    pub fn metrics_json(&self) -> Json {
+        let mut flat = self.registry.snapshot_flat();
+        flat.extend(crate::obs::metrics::registry().snapshot_flat());
+        let mut obj = BTreeMap::new();
+        for (key, value) in flat {
+            obj.insert(key, Json::Num(value as f64));
+        }
+        Json::Obj(obj)
     }
 
     /// Freeze the counters into a summary.
+    ///
+    /// The request count is the reservoir's `seen` — copied in the SAME
+    /// lock acquisition as the resident samples — so the count, the
+    /// quantiles and `resident_samples` always describe one instant.
     pub fn snapshot(&self) -> StatsSnapshot {
-        // copy the (bounded) reservoir out under the lock, sort ONCE
+        // copy the (bounded) reservoir out under one lock, sort ONCE
         // outside it, and read every quantile off the sorted copy —
         // record_request is never blocked behind the sorting
-        let mut xs: Vec<f64> = {
-            let lat = self.latencies_us.lock().unwrap();
-            lat.samples.iter().map(|&v| v as f64).collect()
-        };
+        let (samples, seen) = self.latencies_us.snapshot();
+        let resident_samples = samples.len();
+        let mut xs: Vec<f64> = samples.into_iter().map(|v| v as f64).collect();
         xs.sort_by(|a, b| a.total_cmp(b));
         let elapsed = self.started.elapsed().as_secs_f64();
-        let requests = self.requests.load(Ordering::Relaxed);
-        let batch_hist = self.batch_sizes.lock().unwrap().clone();
+        let requests = seen;
+        let batch_hist: BTreeMap<usize, u64> = self
+            .batch_sizes
+            .buckets()
+            .into_iter()
+            .map(|(size, n)| (size as usize, n))
+            .collect();
         let batches: u64 = batch_hist.values().sum();
         let batched_requests: u64 =
             batch_hist.iter().map(|(&size, &n)| size as u64 * n).sum();
+        let queue_depth = self.queue_depth.get();
+        // the watermark write (`raise`) races the gauge write (`set`) by a
+        // hair; clamp so a snapshot never claims max < current
+        let queue_depth_max = self.queue_depth_max.get().max(queue_depth);
         StatsSnapshot {
             requests,
-            errors: self.errors.load(Ordering::Relaxed),
+            errors: self.errors.get(),
             elapsed_seconds: elapsed,
             qps: if elapsed > 0.0 { requests as f64 / elapsed } else { 0.0 },
             mean_us: crate::util::stats::mean(&xs),
@@ -144,8 +165,9 @@ impl ServeStats {
             p99_us: sorted_quantile(&xs, 0.99),
             max_us: xs.last().copied().unwrap_or(0.0),
             mean_batch: if batches > 0 { batched_requests as f64 / batches as f64 } else { 0.0 },
-            queue_depth: self.queue_depth.load(Ordering::Relaxed),
-            queue_depth_max: self.queue_depth_max.load(Ordering::Relaxed),
+            queue_depth,
+            queue_depth_max,
+            resident_samples,
             batch_hist,
         }
     }
@@ -191,8 +213,14 @@ pub struct StatsSnapshot {
     pub mean_batch: f64,
     /// micro-batcher backlog at the last queue-depth observation
     pub queue_depth: u64,
-    /// largest micro-batcher backlog observed over the window
+    /// largest micro-batcher backlog observed over the window (≥
+    /// `queue_depth` by construction)
     pub queue_depth_max: u64,
+    /// latency samples resident in the reservoir when the snapshot froze —
+    /// == min(requests, reservoir cap) because count and samples come from
+    /// one lock.  Diagnostic only: NOT part of the `/stats` JSON (that
+    /// surface is byte-compatible across releases).
+    pub resident_samples: usize,
     /// batch size → number of batches released at that size
     pub batch_hist: BTreeMap<usize, u64>,
 }
@@ -225,6 +253,8 @@ impl StatsSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::metrics::RESERVOIR_CAP;
+    use std::sync::Arc;
 
     #[test]
     fn quantiles_over_recorded_latencies() {
@@ -266,16 +296,54 @@ mod tests {
         for _ in 0..(3 * RESERVOIR_CAP) {
             s.record_request(250);
         }
-        {
-            let lat = s.latencies_us.lock().unwrap();
-            assert_eq!(lat.samples.len(), RESERVOIR_CAP, "reservoir must not grow past cap");
-            assert_eq!(lat.seen, 3 * RESERVOIR_CAP as u64);
-        }
         let snap = s.snapshot();
+        assert_eq!(snap.resident_samples, RESERVOIR_CAP, "reservoir must not grow past cap");
         assert_eq!(snap.requests, 3 * RESERVOIR_CAP as u64);
         assert_eq!(snap.p50_us, 250.0);
         assert_eq!(snap.p99_us, 250.0);
         assert_eq!(snap.max_us, 250.0);
+    }
+
+    #[test]
+    fn snapshot_is_internally_consistent_under_racing_writers() {
+        // The skew this pins: the old recorder read the request counter and
+        // the latency reservoir under separate locks, so a snapshot taken
+        // mid-flight could render requests = N with a histogram of N-1 (or
+        // N+k) samples.  Now both come from one lock acquisition, so EVERY
+        // snapshot — no matter how it races the writers — satisfies
+        // resident_samples == min(requests, cap) exactly.
+        let s = Arc::new(ServeStats::new());
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    for i in 0..2_000u64 {
+                        s.record_request(w * 10 + i % 7);
+                        s.record_queue_depth((i % 13) as usize);
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..200 {
+            let snap = s.snapshot();
+            assert_eq!(
+                snap.resident_samples as u64,
+                snap.requests.min(RESERVOIR_CAP as u64),
+                "requests and resident samples must come from one instant"
+            );
+            assert!(
+                snap.queue_depth_max >= snap.queue_depth,
+                "watermark below current depth: {} < {}",
+                snap.queue_depth_max,
+                snap.queue_depth
+            );
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 8_000);
+        assert_eq!(snap.resident_samples, 8_000);
     }
 
     #[test]
@@ -299,6 +367,7 @@ mod tests {
         assert_eq!(snap.requests, 0);
         assert_eq!(snap.p50_us, 0.0);
         assert_eq!(snap.mean_batch, 0.0);
+        assert_eq!(snap.resident_samples, 0);
         assert!(snap.batch_hist.is_empty());
     }
 
@@ -317,6 +386,55 @@ mod tests {
         assert_eq!(v.get("latency_p50_us").as_f64(), Some(120.0));
         assert_eq!(v.get("queue_depth").as_f64(), Some(3.0));
         assert_eq!(v.get("queue_depth_max").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn stats_json_surface_is_byte_stable() {
+        // /stats keys are a compatibility surface: migrating the recorder
+        // onto the metrics registry must not add, drop or rename one.
+        let doc = ServeStats::new().snapshot().to_json().to_string();
+        let v = crate::util::json::parse(&doc).unwrap();
+        let keys: Vec<&str> = match &v {
+            Json::Obj(map) => map.keys().map(|k| k.as_str()).collect(),
+            _ => Vec::new(),
+        };
+        assert_eq!(
+            keys,
+            vec![
+                "batch_hist",
+                "elapsed_seconds",
+                "errors",
+                "latency_max_us",
+                "latency_mean_us",
+                "latency_p50_us",
+                "latency_p95_us",
+                "latency_p99_us",
+                "mean_batch",
+                "qps",
+                "queue_depth",
+                "queue_depth_max",
+                "requests",
+            ],
+        );
+    }
+
+    #[test]
+    fn metrics_json_merges_instance_and_global_registries() {
+        let s = ServeStats::new();
+        s.record_request(10);
+        s.record_batch(2);
+        s.record_queue_depth(1);
+        let doc = s.metrics_json().to_string();
+        let v = crate::util::json::parse(&doc).unwrap();
+        assert_eq!(v.get("serve.requests").as_f64(), Some(1.0));
+        assert_eq!(v.get("serve.latency_us.seen").as_f64(), Some(1.0));
+        assert_eq!(v.get("serve.latency_us.resident").as_f64(), Some(1.0));
+        assert_eq!(v.get("serve.batch_hist.2").as_f64(), Some(1.0));
+        assert_eq!(v.get("serve.queue_depth").as_f64(), Some(1.0));
+        // a second server's metrics are independent
+        let other = ServeStats::new();
+        let v2 = crate::util::json::parse(&other.metrics_json().to_string()).unwrap();
+        assert_eq!(v2.get("serve.requests").as_f64(), Some(0.0));
     }
 
     #[test]

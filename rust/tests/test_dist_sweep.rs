@@ -164,6 +164,39 @@ fn dist_sweep_bit_identical_to_in_process_for_1_2_4_workers() {
     }
 }
 
+/// `shutdown_workers: false` (the CLI's `--dist-keep-workers`) must skip
+/// the post-drain `/shutdown` POST: the workers stay up for the next
+/// sweep, and the same addresses serve a second run bit-identically.
+#[test]
+fn keep_workers_skips_the_shutdown_post() {
+    let (net, tr, te) = trained_mlp();
+    let cfg = grid();
+    let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+    let spawned: Vec<_> =
+        (0..2).map(|_| spawn_worker(&net, &tr, &te, &cfg, WorkerFault::default())).collect();
+    let dcfg = DistConfig {
+        addrs: spawned.iter().map(|(a, _)| *a).collect(),
+        shutdown_workers: false,
+        ..DistConfig::default()
+    };
+    let first = dist_sweep_trials(&net, &trials, &te, &cfg, &dcfg).expect("first sweep");
+    // the workers were NOT shut down: the same addresses serve a whole
+    // second sweep (a fresh handshake + every unit), bit-identically
+    let second = dist_sweep_trials(&net, &trials, &te, &cfg, &dcfg).expect("workers still up");
+    assert_bit_identical(&first.result, &second.result, "reused workers");
+    // now shut them down by hand; the threads exit with BOTH sweeps'
+    // units on their ledger — proof the first drain left them serving
+    let mut total_served = 0;
+    for (addr, handle) in spawned {
+        let mut client = HttpClient::connect(addr).expect("worker still accepting");
+        let (status, _) = client.request("POST", "/shutdown", None).unwrap();
+        assert_eq!(status, 200);
+        total_served += handle.join().expect("worker exits only on explicit shutdown");
+    }
+    let n_units = N_TRIALS * 2;
+    assert_eq!(total_served, 2 * n_units, "both sweeps' units served by the kept workers");
+}
+
 /// A worker whose spec drifted (different grid here) must refuse the
 /// handshake and fail the sweep loudly — never silently merge foreign
 /// numbers.

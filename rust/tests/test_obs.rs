@@ -1,0 +1,312 @@
+//! Observability integration pins: deterministic span trees on a synthetic
+//! clock, the disabled-path zero-work contract, and the full distributed
+//! round trip — worker spans riding `UnitResult` back to the coordinator,
+//! re-based onto its clock and merged into per-worker timeline lanes.
+//!
+//! Every test here mutates the process-global obs state (the installed
+//! recorder, the enabled flag, the trace id, the foreign-span store), so
+//! the whole binary serializes on one mutex and each test starts from a
+//! drained, disabled recorder.
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use gpfq::coordinator::{
+    dist_sweep_trials, run_worker, DistConfig, Method, SweepConfig, TrialSet, WorkerFault,
+};
+use gpfq::data::synth::{generate, SynthSpec};
+use gpfq::data::Dataset;
+use gpfq::nn::conv::ImgShape;
+use gpfq::nn::network::{mnist_mlp, Network};
+use gpfq::obs::{self, ManualClock, Recorder, SpanKind, WallClock, DEFAULT_SPAN_CAP};
+use gpfq::train::{train, TrainConfig};
+
+/// One lock for the whole binary: obs state is process-global.
+static TEST_GUARD: Mutex<()> = Mutex::new(());
+
+/// Take the serial lock and reset every piece of global obs state so the
+/// test observes only its own spans.
+fn serial() -> MutexGuard<'static, ()> {
+    let guard = TEST_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    obs::disable();
+    let _ = obs::take_spans();
+    let _ = obs::take_foreign();
+    obs::set_trace_id(0);
+    guard
+}
+
+// ---------------------------------------------------------------------------
+// deterministic span trees (ManualClock)
+// ---------------------------------------------------------------------------
+
+/// The RAII nesting contract, byte-exact on a synthetic clock: parents via
+/// the thread-local cell, durations from clock deltas, completion-order
+/// draining, instant events parented under the innermost live span.
+#[test]
+fn span_tree_nests_and_times_deterministically() {
+    let _serial = serial();
+    let clock = Arc::new(ManualClock::new(1_000));
+    obs::install_recorder(Arc::new(Recorder::new(1024, clock.clone())));
+    obs::enable();
+
+    let (request_id, batch_id, gemm_id) = {
+        let request = obs::span("serve.request").field("bytes", 42);
+        let request_id = request.id();
+        assert!(request.is_active() && request_id > 0);
+        clock.advance(5);
+        let (batch_id, gemm_id) = {
+            let batch = obs::span_with("serve.batch", || vec![("batch_size", 8)]);
+            let batch_id = batch.id();
+            clock.advance(7);
+            let gemm_id = {
+                let gemm = obs::span("serve.gemm");
+                clock.advance(3);
+                gemm.id()
+            };
+            obs::event("serve.flush", &[("rows", 8)]);
+            clock.advance(2);
+            (batch_id, gemm_id)
+        };
+        clock.advance(4);
+        (request_id, batch_id, gemm_id)
+    };
+    obs::disable();
+
+    let spans = obs::take_spans();
+    // drop order: gemm, flush event, batch, request
+    assert_eq!(spans.len(), 4, "exactly the four records above");
+    let by_name = |n: &str| spans.iter().find(|s| s.name == n).expect("span recorded");
+
+    let request = by_name("serve.request");
+    assert_eq!((request.id, request.parent), (request_id, 0));
+    assert_eq!((request.start_us, request.dur_us), (1_000, 21));
+    assert_eq!(request.fields, vec![("bytes", 42)]);
+    assert_eq!(request.kind, SpanKind::Complete);
+
+    let batch = by_name("serve.batch");
+    assert_eq!((batch.id, batch.parent), (batch_id, request_id));
+    assert_eq!((batch.start_us, batch.dur_us), (1_005, 12));
+    assert_eq!(batch.fields, vec![("batch_size", 8)]);
+
+    let gemm = by_name("serve.gemm");
+    assert_eq!((gemm.id, gemm.parent), (gemm_id, batch_id));
+    assert_eq!((gemm.start_us, gemm.dur_us), (1_012, 3));
+
+    let flush = by_name("serve.flush");
+    assert_eq!(flush.parent, batch_id, "instant parents under the live span");
+    assert_eq!((flush.start_us, flush.dur_us), (1_015, 0));
+    assert_eq!(flush.kind, SpanKind::Instant);
+
+    // completion order is drain order
+    let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+    assert_eq!(names, vec!["serve.gemm", "serve.flush", "serve.batch", "serve.request"]);
+}
+
+/// `span_under` roots a span beneath an explicit (possibly cross-process)
+/// parent id while leaving the thread-local nesting cell untouched for
+/// siblings opened after it.
+#[test]
+fn span_under_attaches_to_the_explicit_parent() {
+    let _serial = serial();
+    let clock = Arc::new(ManualClock::new(0));
+    obs::install_recorder(Arc::new(Recorder::new(64, clock.clone())));
+    obs::enable();
+
+    let wire_parent = 0xBEEF; // "coordinator-side" id off the trace header
+    {
+        let unit = obs::span_under("dist.unit", wire_parent);
+        let unit_id = unit.id();
+        clock.advance(10);
+        {
+            let _score = obs::span("sweep.score");
+            clock.advance(1);
+        }
+        drop(unit);
+        let spans = obs::take_spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[1].parent, wire_parent, "explicit parent wins");
+        assert_eq!(spans[0].parent, unit_id, "children still nest locally");
+    }
+    obs::disable();
+}
+
+// ---------------------------------------------------------------------------
+// disabled path: zero work
+// ---------------------------------------------------------------------------
+
+/// With tracing off, guards are inert: ids are 0, `span_with` never invokes
+/// its field closure, events and explicit records vanish, and nothing
+/// reaches the ring — the contract that keeps instrumented hot loops at one
+/// relaxed atomic load.
+#[test]
+fn disabled_tracing_does_no_work() {
+    let _serial = serial();
+    obs::install_recorder(Arc::new(Recorder::new(64, Arc::new(ManualClock::new(0)))));
+    // NOT enabled
+    let mut closure_ran = false;
+    {
+        let g = obs::span_with("quantize.layer", || {
+            closure_ran = true;
+            vec![("layer", 3)]
+        });
+        assert!(!g.is_active());
+        assert_eq!(g.id(), 0, "inactive guards have the sentinel id");
+        let g = g.field("rows", 128); // builder stays a no-op
+        assert!(!g.is_active());
+    }
+    {
+        let _child = obs::span("sweep.chunk");
+        obs::event("dist.receipt_done", &[("unit", 1)]);
+    }
+    obs::record_span("serve.queue_wait", 5, 9, &[("jobs", 2)]);
+    assert!(!closure_ran, "span_with must not evaluate fields when disabled");
+    assert!(obs::take_spans().is_empty(), "nothing may reach the ring");
+    assert_eq!(obs::dropped_spans(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// distributed round trip: worker spans merge into coordinator lanes
+// ---------------------------------------------------------------------------
+
+const N_QUANT: usize = 40;
+const N_TRIALS: usize = 1;
+const TRIAL_SEED: u64 = 7;
+
+fn trained_mlp() -> (Network, Dataset, Dataset) {
+    let spec = SynthSpec {
+        classes: 3,
+        shape: ImgShape { h: 8, w: 8, c: 1 },
+        blobs: 4,
+        noise: 0.15,
+        max_shift: 1,
+        seed: 21,
+    };
+    let tr = generate(&spec, 160, 0, false);
+    let te = generate(&spec, 80, 1, false);
+    let mut net = mnist_mlp(2, 64, &[24], 3);
+    train(
+        &mut net,
+        &tr,
+        &TrainConfig { epochs: 3, batch: 32, lr: 0.05, momentum: 0.9, seed: 2, verbose: false },
+    );
+    (net, tr, te)
+}
+
+fn spawn_worker(
+    net: &Network,
+    tr: &Dataset,
+    te: &Dataset,
+    cfg: &SweepConfig,
+) -> (SocketAddr, JoinHandle<usize>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let (net, tr, te, cfg) = (net.clone(), tr.clone(), te.clone(), cfg.clone());
+    let handle = std::thread::spawn(move || {
+        let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+        run_worker(listener, &net, &trials, &te, &cfg, WorkerFault::default())
+            .expect("worker serves")
+    });
+    (addr, handle)
+}
+
+/// The tentpole dist pin: with tracing on, each worker's `dist.unit` span
+/// tree rides its `UnitResult` back, gets re-based onto the coordinator
+/// clock, tagged with lane `1 + worker`, and parents under the
+/// coordinator's `dist.drive_unit` span stamped on the `x-gpfq-trace`
+/// header — while the merged artifact still matches the traced run's own
+/// receipts (the parity pin itself lives in test_dist_sweep.rs; here the
+/// workers are threads sharing one recorder, the worst-case topology for
+/// span attribution).
+#[test]
+fn dist_round_trip_merges_worker_spans_into_lanes() {
+    let _serial = serial();
+    let (net, tr, te) = trained_mlp();
+    let cfg = SweepConfig {
+        levels: vec![3],
+        c_alphas: vec![2.0, 4.0],
+        methods: vec![Method::Gpfq],
+        fc_only: false,
+        topk: false,
+        workers: 2,
+        chunk_cells: Some(1), // 2 cells / chunk 1 = 2 units
+    };
+    let trials = TrialSet::draw(&tr.x, N_QUANT, N_TRIALS, TRIAL_SEED);
+    let n_units = N_TRIALS * 2;
+
+    obs::install_recorder(Arc::new(Recorder::new(DEFAULT_SPAN_CAP, Arc::new(WallClock::new()))));
+    obs::enable();
+    obs::set_trace_id(0x00AB_CDEF);
+
+    let spawned: Vec<_> = (0..2).map(|_| spawn_worker(&net, &tr, &te, &cfg)).collect();
+    let dcfg = DistConfig::new(spawned.iter().map(|(a, _)| *a).collect());
+    let out = dist_sweep_trials(&net, &trials, &te, &cfg, &dcfg).expect("traced sweep");
+    for (_, handle) in spawned {
+        handle.join().expect("worker exits after /shutdown");
+    }
+    obs::disable();
+    let local = obs::take_spans();
+    let foreign = obs::take_foreign();
+
+    // coordinator side: one drive span + one done-receipt event per unit
+    let drive_ids: Vec<u64> =
+        local.iter().filter(|s| s.name == "dist.drive_unit").map(|s| s.id).collect();
+    assert_eq!(drive_ids.len(), n_units, "one dist.drive_unit per unit");
+    let receipts = local
+        .iter()
+        .filter(|s| s.name == "dist.receipt_done" && s.kind == SpanKind::Instant)
+        .count();
+    assert_eq!(receipts, n_units, "one dist.receipt_done event per unit");
+
+    // worker side, after the merge
+    assert!(!foreign.is_empty(), "worker spans must ride UnitResult back");
+    for s in &foreign {
+        assert_eq!(s.trace, 0x00AB_CDEF, "{}: workers adopt the wire trace id", s.name);
+        assert!(
+            (1..=2).contains(&s.lane),
+            "{}: merged spans sit on worker lanes, got {}",
+            s.name,
+            s.lane
+        );
+    }
+    let units: Vec<_> = foreign.iter().filter(|s| s.name == "dist.unit").collect();
+    assert_eq!(units.len(), n_units, "each unit roots one dist.unit span");
+    for u in &units {
+        assert!(
+            drive_ids.contains(&u.parent),
+            "dist.unit parents under a coordinator dist.drive_unit span (got {})",
+            u.parent
+        );
+        assert!(!u.instant && u.dur_us > 0, "dist.unit is a real duration");
+    }
+    assert!(
+        foreign.iter().any(|s| s.name == "sweep.score"),
+        "worker-side child spans survive the merge"
+    );
+    // both receipts and the merged artifact agree the run was healthy
+    assert_eq!(out.requeues, 0, "tracing must not perturb scheduling");
+    assert_eq!(out.worker_units.iter().sum::<usize>(), n_units);
+
+    // the exporter renders one timeline: coordinator lane 0 plus a named
+    // lane per worker, every worker event on its own lane
+    let doc = obs::chrome_trace(&local, &foreign, 0x00AB_CDEF, 0);
+    let parsed = gpfq::util::json::parse(&doc.to_string()).expect("valid JSON");
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents");
+    let lane_of = |e: &gpfq::util::json::Json| e.get("pid").as_f64().map(|p| p as u64);
+    let mut lanes: Vec<u64> = events.iter().filter_map(lane_of).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    // which workers served units is a scheduling race; the document must
+    // carry lane 0 plus exactly the lanes the merged spans landed on
+    let mut expected: Vec<u64> = foreign.iter().map(|s| s.lane).collect();
+    expected.push(0);
+    expected.sort_unstable();
+    expected.dedup();
+    assert_eq!(lanes, expected, "coordinator lane + every merged worker lane");
+    assert!(lanes.len() >= 2, "at least one worker lane in the timeline");
+    assert_eq!(
+        parsed.get("otherData").get("trace_id").as_str(),
+        Some("0000000000abcdef"),
+        "the document is stamped with the shared trace id"
+    );
+}
